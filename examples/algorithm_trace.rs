@@ -1,0 +1,87 @@
+//! Algorithm trace: a step-by-step view of the wavelength-oblivious
+//! RS/SSM pipeline on one sampled system — the runnable version of the
+//! paper's Figs 9–13.
+//!
+//! ```bash
+//! cargo run --release --example algorithm_trace -- [seed] [mean_tr_nm]
+//! ```
+
+use wdm_arbiter::arbiter::{distance, ideal, Policy};
+use wdm_arbiter::config::SystemConfig;
+use wdm_arbiter::model::SystemUnderTest;
+use wdm_arbiter::oblivious::outcome::classify;
+use wdm_arbiter::oblivious::relation::{full_record_phase, ProbeSet, RelationOutcome};
+use wdm_arbiter::oblivious::ssm::match_phase;
+use wdm_arbiter::rng::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let seed: u64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(7);
+    let tr: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(6.0);
+
+    let cfg = SystemConfig::default();
+    let mut rng = Rng::seed_from(seed);
+    let sut = SystemUnderTest::sample(&cfg, &mut rng);
+
+    println!("=== system (seed {seed}, λ̄_TR = {tr} nm) ===");
+    println!("lasers: {:?}", round2(&sut.laser.tones_nm));
+    println!("rings:  {:?}", round2(&sut.rings.resonance_nm));
+
+    // --- record phase (paper §V-B) --------------------------------------
+    let rec = full_record_phase(&sut.laser, &sut.rings, &cfg.target_order, tr, ProbeSet::FirstLastSecond);
+    println!("\n=== record phase: search tables (tuner code → hidden tone) ===");
+    for (i, st) in rec.tables.iter().enumerate() {
+        let entries: Vec<String> = st
+            .entries
+            .iter()
+            .map(|e| format!("{}→λ{}", e.code, e.tone))
+            .collect();
+        println!("  ST({i}): [{}]", entries.join(", "));
+    }
+    println!("\nrelation searches along the target chain {:?}:", rec.chain);
+    for (k, rel) in rec.relations.iter().enumerate() {
+        let a = rec.chain[k];
+        let b = rec.chain[(k + 1) % rec.chain.len()];
+        let desc = match rel {
+            RelationOutcome::Found(d) => format!("RI delta {d}"),
+            RelationOutcome::Null => "φ (clustered)".to_string(),
+            RelationOutcome::Failed => "FAILED (probes disagreed)".to_string(),
+        };
+        println!("  (R{a} → R{b}): {desc}");
+    }
+
+    // --- matching phase (paper §V-C) -------------------------------------
+    let plan = match_phase(&rec);
+    println!("\n=== matching phase: single-step lock plan ===");
+    let heats: Vec<Option<f64>> = plan
+        .iter()
+        .enumerate()
+        .map(|(i, e)| e.map(|idx| rec.tables[i].entries[idx].heat_nm))
+        .collect();
+    for (i, e) in plan.iter().enumerate() {
+        match e {
+            Some(idx) => println!(
+                "  R{i}: entry #{idx} (code {}, heat {:.2} nm)",
+                rec.tables[i].entries[*idx].code, rec.tables[i].entries[*idx].heat_nm
+            ),
+            None => println!("  R{i}: NO LOCK"),
+        }
+    }
+
+    // --- adjudication vs the ideal model ---------------------------------
+    let res = classify(&sut.laser, &sut.rings, &heats, &cfg.target_order);
+    let dist = distance::scaled_distance_matrix(&sut);
+    let ideal_out = ideal::arbitrate(Policy::LtC, &dist, cfg.target_order.as_slice());
+    println!("\n=== adjudication ===");
+    println!("oblivious outcome: {} — tones {:?}", res.class.name(), res.assignment);
+    println!(
+        "ideal LtC:         min TR {:.2} nm (feasible: {}) — tones {:?}",
+        ideal_out.min_tr_nm,
+        ideal_out.min_tr_nm <= tr,
+        ideal_out.assignment
+    );
+}
+
+fn round2(v: &[f64]) -> Vec<f64> {
+    v.iter().map(|x| (x * 100.0).round() / 100.0).collect()
+}

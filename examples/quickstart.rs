@@ -1,0 +1,58 @@
+//! Quickstart: sample one DWDM transceiver system (Table I defaults),
+//! arbitrate it with every policy (ideal model) and every wavelength-
+//! oblivious scheme, and print what happened.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use wdm_arbiter::arbiter::{distance, ideal, Policy};
+use wdm_arbiter::config::SystemConfig;
+use wdm_arbiter::model::SystemUnderTest;
+use wdm_arbiter::oblivious::{run_scheme, Scheme};
+use wdm_arbiter::rng::Rng;
+
+fn main() {
+    // Table I defaults: 8-channel, 200 GHz grid, 15 nm grid offset, 2.24 nm
+    // local resonance variation, 10 % tuning-range variation.
+    let cfg = SystemConfig::default();
+    let mean_tr_nm = 6.0;
+
+    let mut rng = Rng::seed_from(2024);
+    let sut = SystemUnderTest::sample(&cfg, &mut rng);
+
+    println!("sampled multi-wavelength laser (center-relative nm):");
+    println!("  {:?}", round2(&sut.laser.tones_nm));
+    println!("sampled microring row resonances:");
+    println!("  {:?}\n", round2(&sut.rings.resonance_nm));
+
+    // The ideal, wavelength-aware arbitration model (paper §III-A): what a
+    // policy *could* achieve if the arbiter knew every wavelength.
+    let dist = distance::scaled_distance_matrix(&sut);
+    println!("ideal wavelength-aware arbitration:");
+    for policy in Policy::all() {
+        let out = ideal::arbitrate(policy, &dist, cfg.target_order.as_slice());
+        println!(
+            "  {policy}: needs ≥{:5.2} nm mean tuning range; assignment {:?}",
+            out.min_tr_nm, out.assignment
+        );
+    }
+
+    // The wavelength-oblivious algorithms (paper §V): what the real
+    // transceiver does with only tuner codes and aggressor injection.
+    println!("\nwavelength-oblivious arbitration at λ̄_TR = {mean_tr_nm} nm:");
+    for scheme in Scheme::all() {
+        let res = run_scheme(scheme, &sut.laser, &sut.rings, &cfg.target_order, mean_tr_nm);
+        println!(
+            "  {:<10} -> {:<10} tones {:?}",
+            scheme.name(),
+            res.class.name(),
+            res.assignment.iter().map(|a| a.map(|t| t as i64).unwrap_or(-1)).collect::<Vec<_>>()
+        );
+    }
+    println!("\n(success = complete, collision-free, cyclic order preserved — the LtC contract)");
+}
+
+fn round2(v: &[f64]) -> Vec<f64> {
+    v.iter().map(|x| (x * 100.0).round() / 100.0).collect()
+}

@@ -1,0 +1,83 @@
+"""AOT export: lower the Layer-2 model to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the text
+with ``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU
+client. HLO text (NOT ``lowered.compile().serialize()`` and NOT serialized
+HloModuleProto bytes) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (one per channel-count variant; batch is fixed, Rust pads):
+  artifacts/ideal_n8.hlo.txt    B=512, N=8
+  artifacts/ideal_n16.hlo.txt   B=512, N=16
+  artifacts/manifest.json       shapes + input order for the Rust loader
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ideal_eval
+
+BATCH = 512
+CHANNEL_COUNTS = (8, 16)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_ideal(n_ch: int, batch: int = BATCH, block_b=None):
+    """Lower ideal_eval for one (batch, n_ch) shape.
+
+    block_b tunes the Pallas batch tile (L1 optimization knob, §Perf);
+    None = the kernel's default policy.
+    """
+    import functools
+
+    row = jax.ShapeDtypeStruct((batch, n_ch), jnp.float32)
+    order = jax.ShapeDtypeStruct((n_ch,), jnp.int32)
+    fn = functools.partial(ideal_eval, block_b=block_b)
+    return jax.jit(fn).lower(row, row, row, row, order)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=BATCH)
+    ap.add_argument("--block-b", type=int, default=None,
+                    help="Pallas batch tile override (perf tuning)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {
+        "batch": args.batch,
+        "inputs": ["laser", "ring", "fsr", "trscale", "s_order"],
+        "outputs": ["dist", "smax", "ltc_min", "ltd"],
+        "wavelength_frame": "center_relative_nm",
+        "artifacts": {},
+    }
+    for n in CHANNEL_COUNTS:
+        text = to_hlo_text(lower_ideal(n, args.batch, args.block_b))
+        name = f"ideal_n{n}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][str(n)] = name
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Layer-1 Pallas kernel: fused scaled-distance + cyclic-shift-max.
+
+The Monte-Carlo hot-spot of the paper's evaluation is the per-trial ideal
+arbitration check: an [N, N] wavelength-domain distance computation plus a
+reduction over the N cyclic shifts of the target spectral ordering. This
+kernel fuses both over a batch tile of trials.
+
+TPU adaptation notes (DESIGN.md "Hardware-Adaptation"):
+  * Batch is tiled with a BlockSpec grid so one (BLOCK_B, N, N) f32 distance
+    tile plus the (N, N, N) one-hot shift tensor stay resident in VMEM
+    (~1.1 MB for BLOCK_B=128, N=16).
+  * The shift reduction is expressed as a masked max over a one-hot
+    permutation tensor instead of a gather: gathers lower poorly through
+    Mosaic, elementwise+reduce maps directly onto the VPU.
+  * MUST be lowered with interpret=True in this environment: the CPU PJRT
+    plugin cannot execute Mosaic custom-calls (see /opt/xla-example/README).
+
+Semantics are pinned to kernels/ref.py by python/tests/test_kernel.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default batch tile. 128 trials x N=16: inputs 4*[128,16] f32 = 32 KiB,
+# distance tile [128,16,16] f32 = 128 KiB, masked intermediate broadcast is
+# reduced per-shift, keeping live VMEM well under 1 MiB.
+BLOCK_B = 128
+
+_BIG = 1e30
+
+
+def _fused_kernel(laser_ref, ring_ref, fsr_ref, trs_ref, mask_ref, dist_ref, smax_ref):
+    """One batch tile: D'[b,i,j] and smax[b,c] = max_{(i,j) in shift c} D'."""
+    laser = laser_ref[...]  # [Bb, N]
+    ring = ring_ref[...]  # [Bb, N]
+    fsr = fsr_ref[...]  # [Bb, N]
+    trs = trs_ref[...]  # [Bb, N]
+    mask = mask_ref[...]  # [N(shift), N(ring), N(laser)] one-hot
+
+    d = laser[:, None, :] - ring[:, :, None]  # [Bb, N, N]
+    f = fsr[:, :, None]
+    r = d - f * jnp.floor(d / f)  # positive mod: [0, f)
+    dist = r / trs[:, :, None]
+    dist_ref[...] = dist
+
+    # Masked max instead of gather: (mask - 1) * BIG sends non-selected
+    # entries to -inf territory; max over (ring, laser) axes leaves the
+    # worst-case scaled distance of each cyclic shift.
+    masked = dist[:, None, :, :] + (mask[None, :, :, :] - 1.0) * _BIG
+    smax_ref[...] = jnp.max(masked, axis=(2, 3))
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def fused_distance_shift_max(laser, ring, fsr, trscale, mask, *, block_b=BLOCK_B, interpret=True):
+    """Pallas-tiled fused evaluation.
+
+    Args:
+      laser, ring, fsr, trscale: f32[B, N] (see kernels/ref.py).
+      mask: f32[N, N, N] one-hot cyclic-shift tensor (kernels/ref.shift_mask).
+      block_b: batch tile size; must divide B.
+      interpret: run the kernel in interpret mode (required on CPU PJRT).
+
+    Returns:
+      (dist f32[B, N, N], smax f32[B, N]).
+    """
+    b, n = laser.shape
+    if b % block_b != 0:
+        raise ValueError(f"batch {b} not divisible by block_b {block_b}")
+    grid = (b // block_b,)
+
+    row_spec = pl.BlockSpec((block_b, n), lambda i: (i, 0))
+    mask_spec = pl.BlockSpec((n, n, n), lambda i: (0, 0, 0))
+
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec, row_spec, row_spec, mask_spec],
+        out_specs=[
+            pl.BlockSpec((block_b, n, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(laser, ring, fsr, trscale, mask)

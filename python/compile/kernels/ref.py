@@ -1,0 +1,88 @@
+"""Pure-jnp oracle for the ideal wavelength-arbitration evaluation.
+
+This module is the *reference semantics* for Layer-1 (the Pallas kernel in
+``distance.py``) and Layer-2 (``model.py``). Everything operates in the
+wavelength domain, center-relative (lambda - lambda_center), in nanometers,
+matching Section II-C of the paper.
+
+Definitions (paper Eq. (5) + Section III):
+  The i-th microring can red-shift its resonance by heat h in [0, TR_i]; the
+  resonance comb is lambda_ring_i + h + k*FSR_i for all integers k. The
+  minimal non-negative tuning distance from ring i to laser tone j is
+  therefore
+
+      D[b, i, j] = (laser[b, j] - ring[b, i]) mod fsr[b, i]       (>= 0)
+
+  Tuning-range variation is multiplicative (TR_i = mean_TR * trscale_i with
+  trscale_i = 1 + u_i * sigma_TR), so feasibility "D <= TR_i" is equivalent
+  to a *scalar* threshold on the mean tuning range when distances are scaled:
+
+      D'[b, i, j] = D[b, i, j] / trscale[b, i]   feasible iff D' <= mean_TR
+
+  The per-trial minimum mean tuning ranges follow directly:
+
+      LtD:  max_i D'[b, i, s_i]
+      LtC:  min_c max_i D'[b, i, (s_i + c) mod N]
+      LtA:  bottleneck assignment over D' (done on the Rust side; the
+            artifact only exports D' and the cyclic-shift maxima).
+"""
+
+import jax.numpy as jnp
+
+
+def scaled_distance_ref(laser, ring, fsr, trscale):
+    """Scaled mod-FSR red-shift distance tensor.
+
+    Args:
+      laser:   f32[B, N] laser tone wavelengths (center-relative, nm).
+      ring:    f32[B, N] microring resonance wavelengths (center-relative, nm).
+      fsr:     f32[B, N] per-ring free spectral range (nm).
+      trscale: f32[B, N] per-ring tuning-range scale factor (1 + u*sigma_TR).
+
+    Returns:
+      f32[B, N, N] with [b, i, j] = ((laser[b,j] - ring[b,i]) mod fsr[b,i])
+      / trscale[b,i].
+    """
+    d = laser[:, None, :] - ring[:, :, None]  # [B, N(ring i), N(laser j)]
+    f = fsr[:, :, None]
+    r = d - f * jnp.floor(d / f)  # positive remainder in [0, f)
+    return r / trscale[:, :, None]
+
+
+def shift_mask(s, n):
+    """One-hot cyclic-shift assignment masks.
+
+    P[c, i, j] = 1.0 where ring i is assigned laser j = (s_i + c) mod n,
+    else 0.0. Shape f32[n, n, n].
+    """
+    s = jnp.asarray(s, dtype=jnp.int32)
+    c = jnp.arange(n, dtype=jnp.int32)[:, None]  # [n(shift), 1]
+    idx = (s[None, :] + c) % n  # [n(shift), n(ring)]
+    return (idx[:, :, None] == jnp.arange(n, dtype=jnp.int32)[None, None, :]).astype(
+        jnp.float32
+    )
+
+
+def shift_max_ref(dist, mask):
+    """Per-cyclic-shift worst-case scaled tuning distance.
+
+    Args:
+      dist: f32[B, N, N] scaled distances (output of scaled_distance_ref).
+      mask: f32[N(shift), N, N] one-hot masks (output of shift_mask).
+
+    Returns:
+      f32[B, N] with [b, c] = max_i dist[b, i, (s_i + c) mod N].
+    """
+    big = jnp.float32(1e30)
+    masked = dist[:, None, :, :] + (mask[None, :, :, :] - 1.0) * big
+    return jnp.max(masked, axis=(2, 3))
+
+
+def ideal_eval_ref(laser, ring, fsr, trscale, s):
+    """Full reference evaluation: distances + shift maxima + LtC/LtD min-TR."""
+    n = laser.shape[-1]
+    dist = scaled_distance_ref(laser, ring, fsr, trscale)
+    smax = shift_max_ref(dist, shift_mask(s, n))
+    ltc_min = jnp.min(smax, axis=1)
+    ltd = smax[:, 0]
+    return dist, smax, ltc_min, ltd

@@ -1,0 +1,51 @@
+"""Layer-2 JAX model: batched ideal wavelength-aware arbitration evaluation.
+
+``ideal_eval`` is the computation the Rust coordinator executes on the
+request path (via the AOT artifact, never via Python): given a batch of
+sampled systems-under-test it returns everything needed to score arbitration
+policies:
+
+  dist[B,N,N]  scaled mod-FSR tuning distances (LtA bottleneck matching is
+               finished on the Rust side from this tensor),
+  smax[B,N]    worst-case distance per cyclic shift of the target ordering,
+  ltc_min[B]   per-trial minimum mean tuning range under Lock-to-Cyclic,
+  ltd[B]       per-trial minimum mean tuning range under Lock-to-Deterministic.
+
+Wavelengths are center-relative nm (f32-safe; see DESIGN.md).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.distance import fused_distance_shift_max
+
+
+def ideal_eval(laser, ring, fsr, trscale, s, block_b=None):
+    """Batched ideal-model evaluation using the Pallas kernel.
+
+    Args:
+      laser, ring, fsr, trscale: f32[B, N] (see kernels/ref.py).
+      s: i32[N] target post-arbitration spectral ordering (s_i = spectral
+         position of the i-th physical ring).
+
+    Returns:
+      (dist f32[B,N,N], smax f32[B,N], ltc_min f32[B], ltd f32[B]).
+    """
+    b, n = laser.shape
+    mask = ref.shift_mask(s, n)  # built at trace time from the s input
+    if block_b is None:
+        # One tile when the batch does not divide the default block (tiny
+        # batches in tests / ad-hoc lowerings); BLOCK_B for production.
+        from .kernels.distance import BLOCK_B
+        block_b = BLOCK_B if b % BLOCK_B == 0 else b
+    dist, smax = fused_distance_shift_max(
+        laser, ring, fsr, trscale, mask, block_b=block_b
+    )
+    ltc_min = jnp.min(smax, axis=1)
+    ltd = smax[:, 0]
+    return dist, smax, ltc_min, ltd
+
+
+def ideal_eval_ref(laser, ring, fsr, trscale, s):
+    """Pure-jnp reference of ideal_eval (no Pallas), for tests."""
+    return ref.ideal_eval_ref(laser, ring, fsr, trscale, s)

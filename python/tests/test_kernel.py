@@ -1,0 +1,125 @@
+"""Kernel-vs-oracle correctness: the core Layer-1 signal.
+
+Hypothesis sweeps batch sizes, channel counts, orderings and wavelength
+regimes; every case asserts the Pallas kernel (interpret=True) matches the
+pure-jnp oracle bit-for-bit up to f32 tolerance, plus hand-computed cases
+pinning the *semantics* (mod-FSR red-shift distance, TR scaling, shift max).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.distance import fused_distance_shift_max
+from compile.model import ideal_eval, ideal_eval_ref
+
+
+def _assert_mod_close(actual, desired, fsr_scaled, atol=2e-5):
+    """allclose up to mod-FSR circularity.
+
+    Near an exact mod boundary the kernel and the oracle may round the
+    floor() to different sides, making the remainders differ by one full
+    (scaled) FSR. Both answers describe the same physical resonance image,
+    so compare circularly.
+    """
+    actual = np.asarray(actual, np.float64)
+    desired = np.asarray(desired, np.float64)
+    diff = np.abs(actual - desired)
+    circ = np.minimum(diff, np.abs(diff - fsr_scaled))
+    bad = circ > atol
+    assert not bad.any(), (
+        f"{bad.sum()} mismatches; worst {circ.max()} at {np.unravel_index(circ.argmax(), circ.shape)}"
+    )
+
+
+def _system(rng, b, n):
+    laser = np.sort(rng.uniform(-20.0, 20.0, (b, n)).astype(np.float32), axis=1)
+    ring = rng.uniform(-25.0, 15.0, (b, n)).astype(np.float32)
+    fsr = (8.96 * (1.0 + 0.05 * rng.uniform(-1, 1, (b, n)))).astype(np.float32)
+    trs = (1.0 + 0.2 * rng.uniform(-1, 1, (b, n))).astype(np.float32)
+    return laser, ring, fsr, trs
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b_blocks=st.integers(1, 3),
+    block=st.sampled_from([8, 32, 128]),
+    n=st.sampled_from([2, 4, 8, 16]),
+    permuted=st.booleans(),
+)
+def test_kernel_matches_ref(seed, b_blocks, block, n, permuted):
+    rng = np.random.default_rng(seed)
+    b = b_blocks * block
+    laser, ring, fsr, trs = _system(rng, b, n)
+    if permuted:
+        s = np.empty(n, np.int32)
+        s[0::2] = np.arange((n + 1) // 2)
+        s[1::2] = np.arange(n // 2) + n // 2
+    else:
+        s = np.arange(n, dtype=np.int32)
+    mask = ref.shift_mask(s, n)
+    dist_k, smax_k = fused_distance_shift_max(
+        jnp.asarray(laser), jnp.asarray(ring), jnp.asarray(fsr), jnp.asarray(trs),
+        mask, block_b=block,
+    )
+    dist_r = ref.scaled_distance_ref(laser, ring, fsr, trs)
+    smax_r = ref.shift_max_ref(dist_r, mask)
+    fsr_scaled = (fsr / trs)[:, :, None]  # per-(b, i) circular period
+    _assert_mod_close(dist_k, dist_r, fsr_scaled)
+    # smax inherits at most one boundary flip; bound by the max scaled FSR.
+    _assert_mod_close(smax_k, smax_r, float((fsr / trs).max()))
+
+
+def test_distance_semantics_hand_case():
+    # One trial, two channels. Ring at -1.0 nm and 3.0 nm, lasers at 0 and 2,
+    # FSR 10, no TR scaling.
+    laser = jnp.asarray([[0.0, 2.0]], jnp.float32)
+    ring = jnp.asarray([[-1.0, 3.0]], jnp.float32)
+    fsr = jnp.full((1, 2), 10.0, jnp.float32)
+    trs = jnp.ones((1, 2), jnp.float32)
+    d = np.asarray(ref.scaled_distance_ref(laser, ring, fsr, trs))[0]
+    # ring0 (-1): to laser0 (0) = 1; to laser1 (2) = 3
+    # ring1 (3): red-shift only => to laser0 (0) wraps: (0-3) mod 10 = 7; to laser1: (2-3) mod 10 = 9
+    np.testing.assert_allclose(d, [[1.0, 3.0], [7.0, 9.0]], atol=1e-6)
+
+
+def test_tr_scaling_divides_distance():
+    laser = jnp.asarray([[1.0]], jnp.float32)
+    ring = jnp.asarray([[0.0]], jnp.float32)
+    fsr = jnp.full((1, 1), 8.96, jnp.float32)
+    trs = jnp.asarray([[2.0]], jnp.float32)
+    d = np.asarray(ref.scaled_distance_ref(laser, ring, fsr, trs))
+    np.testing.assert_allclose(d, [[[0.5]]], atol=1e-7)
+
+
+def test_shift_mask_is_permutation():
+    for n in (2, 4, 8, 16):
+        s = np.arange(n, dtype=np.int32)
+        m = np.asarray(ref.shift_mask(s, n))
+        assert m.shape == (n, n, n)
+        # Every shift is a permutation matrix: rows/cols sum to 1.
+        np.testing.assert_array_equal(m.sum(axis=1), np.ones((n, n)))
+        np.testing.assert_array_equal(m.sum(axis=2), np.ones((n, n)))
+        # Shift 0 of the natural ordering is the identity.
+        np.testing.assert_array_equal(m[0], np.eye(n))
+
+
+def test_shift_max_hand_case():
+    # Natural ordering, N=2: shift 0 assigns ring i -> laser i,
+    # shift 1 assigns ring i -> laser (i+1) % 2.
+    dist = jnp.asarray([[[1.0, 5.0], [2.0, 3.0]]], jnp.float32)
+    mask = ref.shift_mask(np.arange(2, dtype=np.int32), 2)
+    smax = np.asarray(ref.shift_max_ref(dist, mask))[0]
+    np.testing.assert_allclose(smax, [3.0, 5.0], atol=1e-6)  # max(1,3), max(5,2)
+
+
+def test_block_size_must_divide_batch():
+    laser = jnp.zeros((100, 8), jnp.float32)
+    with pytest.raises(ValueError):
+        fused_distance_shift_max(
+            laser, laser, laser + 8.96, laser + 1.0,
+            ref.shift_mask(np.arange(8, dtype=np.int32), 8), block_b=64,
+        )

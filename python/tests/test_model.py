@@ -1,0 +1,91 @@
+"""Layer-2 model semantics: ltc/ltd reductions + artifact lowering shape."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.model import ideal_eval, ideal_eval_ref
+from compile import aot
+
+
+def _permuted(n):
+    s = np.empty(n, np.int32)
+    s[0::2] = np.arange((n + 1) // 2)
+    s[1::2] = np.arange(n // 2) + n // 2
+    return s
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([4, 8, 16]), permuted=st.booleans())
+def test_model_matches_ref(seed, n, permuted):
+    rng = np.random.default_rng(seed)
+    b = 128
+    laser = np.sort(rng.uniform(-10, 10, (b, n)).astype(np.float32), axis=1)
+    ring = rng.uniform(-15, 5, (b, n)).astype(np.float32)
+    fsr = (8.96 * (1 + 0.01 * rng.uniform(-1, 1, (b, n)))).astype(np.float32)
+    trs = (1 + 0.1 * rng.uniform(-1, 1, (b, n))).astype(np.float32)
+    s = _permuted(n) if permuted else np.arange(n, dtype=np.int32)
+    got = ideal_eval(laser, ring, fsr, trs, s)
+    want = ideal_eval_ref(laser, ring, fsr, trs, s)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-6, atol=1e-6)
+
+
+def test_ltc_is_min_over_shifts_and_ltd_is_shift0():
+    rng = np.random.default_rng(7)
+    b, n = 128, 8
+    laser = np.sort(rng.uniform(-5, 5, (b, n)).astype(np.float32), axis=1)
+    ring = rng.uniform(-10, 2, (b, n)).astype(np.float32)
+    fsr = np.full((b, n), 8.96, np.float32)
+    trs = np.ones((b, n), np.float32)
+    s = np.arange(n, dtype=np.int32)
+    dist, smax, ltc, ltd = [np.asarray(x) for x in ideal_eval(laser, ring, fsr, trs, s)]
+    np.testing.assert_allclose(ltc, smax.min(axis=1), atol=0)
+    np.testing.assert_allclose(ltd, smax[:, 0], atol=0)
+    assert (ltc <= ltd + 1e-7).all()  # LtC is never harder than LtD
+
+
+def test_zero_variation_natural_order_needs_bias_only():
+    # Pre-fab rings sit exactly lambda_rB below their lasers; with no
+    # variation, LtD needs exactly the bias, and LtC needs the best cyclic
+    # re-centering of it: min_c (rb + c*gs) mod FSR. rb is chosen away from
+    # a grid multiple so no distance sits on the 0/FSR boundary (exact
+    # boundaries are measure-zero in the Monte Carlo and fp-sensitive).
+    n, b = 8, 128
+    gs, rb = 1.12, 4.3
+    lam = (np.arange(n) - (n - 1) / 2) * gs
+    laser = np.tile(lam, (b, 1)).astype(np.float32)
+    ring = (laser - rb).astype(np.float32)
+    fsr = np.full((b, n), n * gs, np.float32)
+    trs = np.ones((b, n), np.float32)
+    s = np.arange(n, dtype=np.int32)
+    _, _, ltc, ltd = ideal_eval(laser, ring, fsr, trs, s)
+    expect_ltc = min((rb + c * gs) % (n * gs) for c in range(n))
+    np.testing.assert_allclose(np.asarray(ltd), rb, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ltc), expect_ltc, atol=1e-4)
+
+
+def test_global_offset_cancelled_by_cyclic_shift():
+    # Shifting the whole laser grid by exactly one grid spacing leaves the
+    # LtC minimum tuning range unchanged (barrel-shift re-centering,
+    # Section IV-C / Fig 7(a)) when FSR = N * gS exactly.
+    n, b = 8, 128
+    gs = 1.12
+    lam = (np.arange(n) - (n - 1) / 2) * gs
+    laser = np.tile(lam, (b, 1)).astype(np.float32)
+    ring = (laser - 4.3).astype(np.float32)  # bias off-grid: no fp boundary
+    fsr = np.full((b, n), n * gs, np.float32)
+    trs = np.ones((b, n), np.float32)
+    s = np.arange(n, dtype=np.int32)
+    _, _, ltc0, _ = ideal_eval(laser, ring, fsr, trs, s)
+    _, _, ltc1, _ = ideal_eval(laser + gs, ring, fsr, trs, s)
+    np.testing.assert_allclose(np.asarray(ltc0), np.asarray(ltc1), atol=1e-4)
+
+
+def test_aot_lowering_has_expected_signature():
+    for n in (8, 16):
+        text = aot.to_hlo_text(aot.lower_ideal(n, batch=64))
+        assert f"f32[64,{n}]" in text
+        assert f"f32[64,{n},{n}]" in text
+        assert text.startswith("HloModule")

@@ -1,0 +1,112 @@
+//! End-to-end benches: one timed regeneration per paper table/figure (at
+//! reduced Monte-Carlo resolution so the whole suite stays minutes, not
+//! hours), plus the two ablations DESIGN.md calls out.
+//!
+//! ```bash
+//! cargo bench --offline -- figures
+//! ```
+
+use wdm_arbiter::config::SystemConfig;
+use wdm_arbiter::coordinator::{Backend, RunOptions};
+use wdm_arbiter::experiments::all_experiments;
+use wdm_arbiter::metrics::TrialTally;
+use wdm_arbiter::model::system::SystemSampler;
+use wdm_arbiter::montecarlo::cafp_tally;
+use wdm_arbiter::oblivious::outcome::classify;
+use wdm_arbiter::oblivious::relation::{full_record_phase, ProbeSet};
+use wdm_arbiter::oblivious::ssm::match_phase;
+use wdm_arbiter::oblivious::Scheme;
+
+fn main() {
+    let filter = std::env::args().nth(1).unwrap_or_default();
+    let opts = RunOptions {
+        out_dir: std::env::temp_dir().join("wdm-bench-figures"),
+        n_lasers: 8,
+        n_rows: 8,
+        fast: true,
+        backend: Backend::Rust,
+        ..RunOptions::fast()
+    };
+    std::fs::create_dir_all(&opts.out_dir).ok();
+
+    println!("{:<10} {:>12} {:>16}", "figure", "wall [s]", "trials/point");
+    for exp in all_experiments() {
+        if !(filter.is_empty() || filter == "--bench" || exp.id().contains(&filter)) {
+            continue;
+        }
+        let t0 = std::time::Instant::now();
+        let rep = exp.run(&opts);
+        let dt = t0.elapsed().as_secs_f64();
+        match rep {
+            Ok(_) => println!("{:<10} {:>12.2} {:>16}", exp.id(), dt, opts.trials_per_point()),
+            Err(e) => println!("{:<10} FAILED: {e:#}", exp.id()),
+        }
+    }
+
+    if filter.is_empty() || filter == "--bench" || "ablation".contains(&filter) {
+        ablation_rs_probes();
+        ablation_ssm_anchors();
+    }
+    std::fs::remove_dir_all(&opts.out_dir).ok();
+}
+
+/// Ablation 1 (DESIGN.md): relation-search probe sets. Compares CAFP of
+/// RS (First+Last) vs VT-RS (adds Lock-to-Second) under harsh variations —
+/// the value of the extra probe.
+fn ablation_rs_probes() {
+    println!("\nablation: relation-search probe set (sigma_FSR=5%, sigma_TR=20%, TR=3 nm)");
+    let mut cfg = SystemConfig::default();
+    cfg.variation.fsr_frac = 0.05;
+    cfg.variation.tr_frac = 0.20;
+    for (name, scheme) in [("first+last (RS)", Scheme::RsSsm), ("+second (VT-RS)", Scheme::VtRsSsm)] {
+        let tally: TrialTally = cafp_tally(&cfg, scheme, 3.0, 20, 20, 777, 0);
+        println!("  {:<18} CAFP {:.4}", name, tally.cafp());
+    }
+}
+
+/// Ablation 2 (DESIGN.md): SSM cluster anchoring. Compares the paper's
+/// first/last-entry anchors + relation-indexed diagonal against a naive
+/// Lock-to-First-everywhere assignment, conditioned on ideal-LtC-feasible
+/// trials (where success is actually attainable).
+fn ablation_ssm_anchors() {
+    use wdm_arbiter::arbiter::{distance, ideal, Policy};
+    const TR: f64 = 4.5;
+    println!("\nablation: SSM vs naive first-entry-everywhere (TR={TR} nm, ideal-feasible trials)");
+    let cfg = SystemConfig::default();
+    let sampler = SystemSampler::new(&cfg, 30, 30, 4242);
+    let (mut anchored_ok, mut naive_ok, mut n) = (0usize, 0usize, 0usize);
+    for t in 0..sampler.n_trials() {
+        let (laser, rings) = sampler.trial(t);
+        let dist = distance::scaled_distance_parts(laser, rings);
+        if !ideal::succeeds(Policy::LtC, &dist, cfg.target_order.as_slice(), TR) {
+            continue; // condition on policy-level feasibility (CAFP-style)
+        }
+        let rec = full_record_phase(laser, rings, &cfg.target_order, TR, ProbeSet::FirstLastSecond);
+        // Paper's SSM (anchored).
+        let plan = match_phase(&rec);
+        let heats: Vec<Option<f64>> = plan
+            .iter()
+            .enumerate()
+            .map(|(i, e)| e.map(|idx| rec.tables[i].entries[idx].heat_nm))
+            .collect();
+        if classify(laser, rings, &heats, &cfg.target_order).succeeded() {
+            anchored_ok += 1;
+        }
+        // Naive: every ring takes its first entry (Lock-to-First
+        // everywhere), ignoring relations entirely.
+        let heats_naive: Vec<Option<f64>> = rec
+            .tables
+            .iter()
+            .map(|st| st.first().map(|e| e.heat_nm))
+            .collect();
+        if classify(laser, rings, &heats_naive, &cfg.target_order).succeeded() {
+            naive_ok += 1;
+        }
+        n += 1;
+    }
+    println!(
+        "  SSM success {:.3}, naive first-entry success {:.3} ({n} feasible trials)",
+        anchored_ok as f64 / n.max(1) as f64,
+        naive_ok as f64 / n.max(1) as f64
+    );
+}

@@ -1,0 +1,119 @@
+//! Hot-path micro-benchmarks: the per-trial operations every experiment is
+//! built from, plus the PJRT batch round-trip and backend comparison.
+//!
+//! ```bash
+//! cargo bench --offline            # runs this via `harness = false`
+//! cargo bench -- hotpath           # name filter (substring)
+//! ```
+
+use std::time::Duration;
+
+use wdm_arbiter::arbiter::{distance, ideal, matching, Policy};
+use wdm_arbiter::config::SystemConfig;
+use wdm_arbiter::model::system::SystemSampler;
+use wdm_arbiter::model::{DwdmGrid, SystemUnderTest};
+use wdm_arbiter::montecarlo::{IdealEvaluator, RustIdeal};
+use wdm_arbiter::oblivious::relation::{full_record_phase, ProbeSet};
+use wdm_arbiter::oblivious::search::initial_tables;
+use wdm_arbiter::oblivious::ssm::match_phase;
+use wdm_arbiter::oblivious::{run_scheme, Scheme};
+use wdm_arbiter::rng::Rng;
+use wdm_arbiter::runtime::accel::XlaIdeal;
+use wdm_arbiter::testkit::benchkit::{bench, black_box, header, BenchResult};
+
+const TARGET: Duration = Duration::from_millis(300);
+
+fn main() {
+    let filter = std::env::args().nth(1).unwrap_or_default();
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut run = |name: &str, f: &mut dyn FnMut()| {
+        if name.contains(&filter) || filter.is_empty() || filter == "--bench" {
+            results.push(bench(name, TARGET, f));
+        }
+    };
+
+    let cfg8 = SystemConfig::default();
+    let cfg16 = SystemConfig::table1(DwdmGrid::wdm16_g200());
+    let mut rng = Rng::seed_from(99);
+    let sut8 = SystemUnderTest::sample(&cfg8, &mut rng);
+    let sut16 = SystemUnderTest::sample(&cfg16, &mut rng);
+    let dist8 = distance::scaled_distance_matrix(&sut8);
+    let dist16 = distance::scaled_distance_matrix(&sut16);
+    let order8: Vec<usize> = (0..8).collect();
+    let order16: Vec<usize> = (0..16).collect();
+
+    // --- L3 per-trial primitives ---------------------------------------
+    run("distance_matrix_n8", &mut || {
+        black_box(distance::scaled_distance_matrix(black_box(&sut8)));
+    });
+    run("distance_matrix_n16", &mut || {
+        black_box(distance::scaled_distance_matrix(black_box(&sut16)));
+    });
+    run("ideal_ltc_n8", &mut || {
+        black_box(ideal::min_tuning_range(Policy::LtC, black_box(&dist8), &order8));
+    });
+    run("ideal_ltd_n8", &mut || {
+        black_box(ideal::min_tuning_range(Policy::LtD, black_box(&dist8), &order8));
+    });
+    run("ideal_lta_bottleneck_n8", &mut || {
+        black_box(matching::bottleneck_assignment(black_box(&dist8.d), 8));
+    });
+    run("ideal_lta_bottleneck_n16", &mut || {
+        black_box(matching::bottleneck_assignment(black_box(&dist16.d), 16));
+    });
+    run("ideal_ltc_n16", &mut || {
+        black_box(ideal::min_tuning_range(Policy::LtC, black_box(&dist16), &order16));
+    });
+
+    // --- oblivious substrate --------------------------------------------
+    run("wavelength_search_tables_n8", &mut || {
+        black_box(initial_tables(&sut8.laser, &sut8.rings, 6.0));
+    });
+    run("record_phase_rs_n8", &mut || {
+        black_box(full_record_phase(
+            &sut8.laser,
+            &sut8.rings,
+            &cfg8.target_order,
+            6.0,
+            ProbeSet::FirstLast,
+        ));
+    });
+    {
+        let rec = full_record_phase(&sut8.laser, &sut8.rings, &cfg8.target_order, 6.0, ProbeSet::FirstLast);
+        run("ssm_match_phase_n8", &mut || {
+            black_box(match_phase(black_box(&rec)));
+        });
+    }
+    for scheme in Scheme::all() {
+        run(&format!("full_trial_{}_n8", scheme.name()), &mut || {
+            black_box(run_scheme(scheme, &sut8.laser, &sut8.rings, &cfg8.target_order, 6.0));
+        });
+    }
+
+    // --- population evaluation: rust vs PJRT artifact --------------------
+    let sampler = SystemSampler::new(&cfg8, 16, 32, 1234); // 512 = one batch
+    let rust = RustIdeal { threads: 1 };
+    run("population512_rust_ltc_n8", &mut || {
+        black_box(rust.min_trs(&cfg8, &sampler, Policy::LtC));
+    });
+    run("population512_rust_multi3_n8", &mut || {
+        black_box(rust.min_trs_multi(&cfg8, &sampler, &[Policy::LtA, Policy::LtC, Policy::LtD]));
+    });
+    if let Ok(xla) = XlaIdeal::discover() {
+        // Warm the compile cache outside the timed region.
+        let _ = xla.min_trs(&cfg8, &sampler, Policy::LtC);
+        run("population512_xla_ltc_n8", &mut || {
+            black_box(xla.min_trs(&cfg8, &sampler, Policy::LtC));
+        });
+        run("population512_xla_multi3_n8", &mut || {
+            black_box(xla.min_trs_multi(&cfg8, &sampler, &[Policy::LtA, Policy::LtC, Policy::LtD]));
+        });
+    } else {
+        eprintln!("note: artifacts not built; skipping PJRT benches");
+    }
+
+    println!("\n{}", header());
+    for r in &results {
+        println!("{}", r.row());
+    }
+}

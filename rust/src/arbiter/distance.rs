@@ -1,0 +1,193 @@
+//! Scaled mod-FSR tuning-distance matrix — the f64 oracle twin of the
+//! Layer-1 Pallas kernel (`python/compile/kernels/distance.py`).
+//!
+//! `D'[i][j] = ((λ_laser,j − λ_ring,i) mod FSR_i) / tr_scale_i`
+//!
+//! Feasibility of assigning laser `j` to ring `i` at mean tuning range
+//! `λ̄_TR` is exactly `D'[i][j] ≤ λ̄_TR` — TR variation is multiplicative,
+//! so scaling the distances turns feasibility into a scalar threshold
+//! (see `python/compile/kernels/ref.py` for the derivation).
+
+use crate::model::ring::red_shift_distance;
+use crate::model::{MwlSample, RingRowSample, SystemUnderTest};
+
+/// Row-major `n × n` distance matrix. `mat[i * n + j]` = scaled distance of
+/// physical ring `i` to laser tone `j`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DistanceMatrix {
+    pub n: usize,
+    pub d: Vec<f64>,
+}
+
+impl DistanceMatrix {
+    #[inline]
+    pub fn at(&self, ring: usize, laser: usize) -> f64 {
+        self.d[ring * self.n + laser]
+    }
+}
+
+/// Compute the scaled distance matrix for one system-under-test.
+pub fn scaled_distance_matrix(sut: &SystemUnderTest) -> DistanceMatrix {
+    scaled_distance_parts(&sut.laser, &sut.rings)
+}
+
+/// Same, from borrowed parts (the Monte-Carlo executor iterates the
+/// laser×row cross product without materializing `SystemUnderTest`s).
+pub fn scaled_distance_parts(laser: &MwlSample, rings: &RingRowSample) -> DistanceMatrix {
+    let n = laser.n_ch();
+    debug_assert_eq!(rings.n_rings(), n);
+    let mut d = Vec::with_capacity(n * n);
+    for i in 0..n {
+        let res = rings.resonance_nm[i];
+        let fsr = rings.fsr_nm[i];
+        let inv_scale = 1.0 / rings.tr_scale[i];
+        for j in 0..n {
+            d.push(red_shift_distance(laser.tones_nm[j] - res, fsr) * inv_scale);
+        }
+    }
+    DistanceMatrix { n, d }
+}
+
+/// Sentinel distance for assignments invalidated by resonance aliasing:
+/// effectively infeasible at any realistic tuning range.
+pub const ALIASED: f64 = f64::INFINITY;
+
+/// Default aliasing tolerance (nm): if a ring comb image sits within this
+/// distance of a *second* laser tone, the channel is considered collided.
+pub const ALIAS_EPS_NM: f64 = 0.1;
+
+/// Alias-aware scaled distance matrix (paper §IV-D / Fig 8).
+///
+/// When the FSR under-fills the grid (λ̄_FSR < N_ch·λ_gS), a microring tuned
+/// onto laser `j` may have another comb image land on laser `j'` —
+/// "a single microring aligning with multiple laser wavelengths". Such an
+/// assignment collides two channels, so it is marked [`ALIASED`]
+/// (infeasible) rather than given its mod-FSR distance. The check is
+/// heat-independent: image collision ⟺ `(λ_j' − λ_j) mod FSR_i` within
+/// `eps_nm` of 0 (cyclically).
+///
+/// The nominal design (FSR = N_ch·λ_gS) and over-designed FSRs are immune:
+/// every other tone sits ≥ one grid spacing away in comb space. This
+/// evaluation is a Rust-side extension — the AOT artifact covers the
+/// nominal-FSR regime where aliasing cannot occur.
+pub fn alias_aware_distance_parts(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    eps_nm: f64,
+) -> DistanceMatrix {
+    let mut m = scaled_distance_parts(laser, rings);
+    let n = m.n;
+    for i in 0..n {
+        let fsr = rings.fsr_nm[i];
+        for j in 0..n {
+            let lj = laser.tones_nm[j];
+            let aliased = (0..n).any(|jp| {
+                if jp == j {
+                    return false;
+                }
+                let r = red_shift_distance(laser.tones_nm[jp] - lj, fsr);
+                r < eps_nm || (fsr - r) < eps_nm
+            });
+            if aliased {
+                m.d[i * n + j] = ALIASED;
+            }
+        }
+    }
+    m
+}
+
+/// In-place variant: reuses `out.d`'s allocation (hot-loop friendly).
+pub fn scaled_distance_into(laser: &MwlSample, rings: &RingRowSample, out: &mut DistanceMatrix) {
+    let n = laser.n_ch();
+    out.n = n;
+    out.d.clear();
+    out.d.reserve(n * n);
+    for i in 0..n {
+        let res = rings.resonance_nm[i];
+        let fsr = rings.fsr_nm[i];
+        let inv_scale = 1.0 / rings.tr_scale[i];
+        for j in 0..n {
+            out.d.push(red_shift_distance(laser.tones_nm[j] - res, fsr) * inv_scale);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::model::{MwlSample, RingRowSample, SpectralOrdering};
+    use crate::rng::Rng;
+
+    #[test]
+    fn hand_case_matches_python_oracle() {
+        // Mirrors python/tests/test_kernel.py::test_distance_semantics_hand_case.
+        let laser = MwlSample { tones_nm: vec![0.0, 2.0], grid_offset_nm: 0.0 };
+        let rings = RingRowSample {
+            resonance_nm: vec![-1.0, 3.0],
+            fsr_nm: vec![10.0, 10.0],
+            tr_scale: vec![1.0, 1.0],
+        };
+        let m = scaled_distance_parts(&laser, &rings);
+        let want = [1.0, 3.0, 7.0, 9.0];
+        for (got, want) in m.d.iter().zip(want) {
+            assert!((got - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn tr_scale_divides() {
+        let laser = MwlSample { tones_nm: vec![1.0], grid_offset_nm: 0.0 };
+        let rings = RingRowSample {
+            resonance_nm: vec![0.0],
+            fsr_nm: vec![8.96],
+            tr_scale: vec![2.0],
+        };
+        let m = scaled_distance_parts(&laser, &rings);
+        assert!((m.at(0, 0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distances_nonnegative_and_below_scaled_fsr() {
+        let cfg = SystemConfig::default();
+        let mut rng = Rng::seed_from(3);
+        for _ in 0..50 {
+            let sut = crate::model::SystemUnderTest::sample(&cfg, &mut rng);
+            let m = scaled_distance_matrix(&sut);
+            for i in 0..m.n {
+                for j in 0..m.n {
+                    let lim = sut.rings.fsr_nm[i] / sut.rings.tr_scale[i];
+                    assert!(m.at(i, j) >= 0.0);
+                    assert!(m.at(i, j) < lim + 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn into_variant_matches() {
+        let cfg = SystemConfig::table1(crate::model::DwdmGrid::wdm16_g200());
+        let mut rng = Rng::seed_from(8);
+        let sut = crate::model::SystemUnderTest::sample(&cfg, &mut rng);
+        let a = scaled_distance_matrix(&sut);
+        let mut b = DistanceMatrix { n: 0, d: Vec::new() };
+        scaled_distance_into(&sut.laser, &sut.rings, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn nominal_system_distance_is_bias() {
+        let cfg = SystemConfig::default();
+        let laser = MwlSample::nominal(&cfg.grid);
+        let rings = RingRowSample::nominal(
+            &cfg.grid,
+            &SpectralOrdering::natural(8),
+            cfg.ring_bias_nm,
+            cfg.fsr_mean_nm,
+        );
+        let m = scaled_distance_parts(&laser, &rings);
+        for i in 0..8 {
+            assert!((m.at(i, i) - 4.48).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Arbitration policies and the ideal wavelength-aware arbitration model
+//! (paper §II-B, §III-A, §IV).
+
+pub mod distance;
+pub mod ideal;
+pub mod matching;
+pub mod power;
+
+use std::fmt;
+
+/// Arbitration policy = spectral-ordering enforcement level (paper Fig 1(b)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Policy {
+    /// Lock-to-Deterministic: exactly the target ordering.
+    LtD,
+    /// Lock-to-Cyclic: any cyclic equivalent of the target ordering.
+    LtC,
+    /// Lock-to-Any: any complete one-to-one assignment.
+    LtA,
+}
+
+impl Policy {
+    pub fn all() -> [Policy; 3] {
+        [Policy::LtA, Policy::LtC, Policy::LtD]
+    }
+
+    pub fn by_name(name: &str) -> Option<Policy> {
+        match name.to_ascii_lowercase().as_str() {
+            "ltd" => Some(Policy::LtD),
+            "ltc" => Some(Policy::LtC),
+            "lta" => Some(Policy::LtA),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Policy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Policy::LtD => write!(f, "LtD"),
+            Policy::LtC => write!(f, "LtC"),
+            Policy::LtA => write!(f, "LtA"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_names() {
+        assert_eq!(Policy::by_name("ltc"), Some(Policy::LtC));
+        assert_eq!(Policy::by_name("LtA"), Some(Policy::LtA));
+        assert_eq!(Policy::by_name("nope"), None);
+        assert_eq!(format!("{}", Policy::LtD), "LtD");
+    }
+}

@@ -1,0 +1,242 @@
+//! Tuning-power analysis — the Lock-to-Any optimization opportunity the
+//! paper points at (§II-B: LtA is "most amenable to tuning power
+//! optimization techniques [24], [26]"; §V-E lists LtA power-minimizing
+//! algorithms as future work).
+//!
+//! Thermal tuning power is proportional to the applied red-shift heat, so
+//! the wavelength-domain proxy for a trial's tuning power is the **sum of
+//! assigned scaled distances**. Under LtA any perfect matching is legal, so
+//! the optimum is a minimum-cost assignment (Hungarian / Jonker-Volgenant);
+//! under LtC only the N cyclic shifts are legal; under LtD there is no
+//! freedom at all.
+
+use crate::arbiter::distance::DistanceMatrix;
+
+/// Minimum-cost perfect assignment (Hungarian algorithm, O(n³)) over
+/// `cost[i*n + j]`, subject to `cost ≤ max_edge` (edges above it are
+/// infeasible). Returns `(total_cost, assignment)` or `None` when no
+/// feasible perfect matching exists.
+pub fn min_cost_assignment(cost: &[f64], n: usize, max_edge: f64) -> Option<(f64, Vec<usize>)> {
+    debug_assert_eq!(cost.len(), n * n);
+    const BIG: f64 = 1e18;
+    let at = |i: usize, j: usize| {
+        let c = cost[i * n + j];
+        if c <= max_edge && c.is_finite() {
+            c
+        } else {
+            BIG
+        }
+    };
+
+    // Jonker-Volgenant style shortest augmenting path with potentials.
+    // 1-based internal arrays per the classic formulation.
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; n + 1];
+    let mut p = vec![0usize; n + 1]; // p[j] = row matched to column j (0 = none)
+    let mut way = vec![0usize; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![f64::INFINITY; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = f64::INFINITY;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if used[j] {
+                    continue;
+                }
+                let cur = at(i0 - 1, j - 1) - u[i0] - v[j];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut assignment = vec![0usize; n];
+    let mut total = 0.0f64;
+    for j in 1..=n {
+        let i = p[j];
+        assignment[i - 1] = j - 1;
+        let c = cost[(i - 1) * n + (j - 1)];
+        if !(c <= max_edge && c.is_finite()) {
+            return None; // optimum uses an infeasible edge: no feasible matching
+        }
+        total += c;
+    }
+    Some((total, assignment))
+}
+
+/// Total tuning power proxy (sum of scaled distances) of an assignment.
+pub fn assignment_power(dist: &DistanceMatrix, assignment: &[usize]) -> f64 {
+    assignment
+        .iter()
+        .enumerate()
+        .map(|(i, &j)| dist.at(i, j))
+        .sum()
+}
+
+/// Per-trial power comparison at mean tuning range `tr`:
+/// * `lta_min_power` — optimal LtA assignment (Hungarian), if feasible;
+/// * `ltc_best_shift` — minimum-power *feasible* cyclic shift, if any;
+/// * `lta_bottleneck` — power of the bottleneck-witness assignment (what a
+///   robustness-first arbiter would pick).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerBreakdown {
+    pub lta_min_power: Option<f64>,
+    pub ltc_best_shift: Option<f64>,
+    pub lta_bottleneck: Option<f64>,
+}
+
+pub fn power_breakdown(dist: &DistanceMatrix, target_order: &[usize], tr: f64) -> PowerBreakdown {
+    let n = dist.n;
+    let lta_min_power = min_cost_assignment(&dist.d, n, tr).map(|(c, _)| c);
+
+    // LtC: all shifts whose worst edge fits, minimized by total power.
+    let mut ltc_best_shift: Option<f64> = None;
+    for c in 0..n {
+        let mut total = 0.0;
+        let mut feasible = true;
+        for i in 0..n {
+            let d = dist.at(i, (target_order[i] + c) % n);
+            if d > tr {
+                feasible = false;
+                break;
+            }
+            total += d;
+        }
+        if feasible {
+            ltc_best_shift = Some(match ltc_best_shift {
+                Some(best) => best.min(total),
+                None => total,
+            });
+        }
+    }
+
+    let bn = crate::arbiter::matching::bottleneck_assignment(&dist.d, n);
+    let lta_bottleneck = (bn.0 <= tr).then(|| assignment_power(dist, &bn.1));
+
+    PowerBreakdown { lta_min_power, ltc_best_shift, lta_bottleneck }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arbiter::distance::scaled_distance_matrix;
+    use crate::config::SystemConfig;
+    use crate::model::SystemUnderTest;
+    use crate::rng::Rng;
+
+    #[test]
+    fn hungarian_hand_case() {
+        // cost = [[4, 1], [1, 4]]: anti-diagonal total 2.
+        let (c, a) = min_cost_assignment(&[4.0, 1.0, 1.0, 4.0], 2, f64::INFINITY).unwrap();
+        assert_eq!(c, 2.0);
+        assert_eq!(a, vec![1, 0]);
+    }
+
+    #[test]
+    fn hungarian_respects_max_edge() {
+        // Only the diagonal is allowed at threshold 5.
+        let cost = vec![4.0, 9.0, 9.0, 4.0];
+        let (c, a) = min_cost_assignment(&cost, 2, 5.0).unwrap();
+        assert_eq!(a, vec![0, 1]);
+        assert_eq!(c, 8.0);
+        // Threshold 3: nothing feasible.
+        assert!(min_cost_assignment(&cost, 2, 3.0).is_none());
+    }
+
+    #[test]
+    fn hungarian_matches_bruteforce_on_random_systems() {
+        fn brute(cost: &[f64], n: usize, max_edge: f64) -> Option<f64> {
+            fn rec(cost: &[f64], n: usize, i: usize, used: &mut [bool], cur: f64, max_edge: f64, best: &mut f64) {
+                if i == n {
+                    *best = best.min(cur);
+                    return;
+                }
+                for j in 0..n {
+                    if !used[j] && cost[i * n + j] <= max_edge {
+                        used[j] = true;
+                        rec(cost, n, i + 1, used, cur + cost[i * n + j], max_edge, best);
+                        used[j] = false;
+                    }
+                }
+            }
+            let mut best = f64::INFINITY;
+            rec(cost, n, 0, &mut vec![false; n], 0.0, max_edge, &mut best);
+            best.is_finite().then_some(best)
+        }
+        let cfg = SystemConfig::default();
+        let mut rng = Rng::seed_from(4141);
+        for _ in 0..100 {
+            let sut = SystemUnderTest::sample(&cfg, &mut rng);
+            let dist = scaled_distance_matrix(&sut);
+            for tr in [4.0, 6.0, 9.0] {
+                let hung = min_cost_assignment(&dist.d, 8, tr).map(|(c, _)| c);
+                let want = brute(&dist.d, 8, tr);
+                match (hung, want) {
+                    (Some(a), Some(b)) => assert!((a - b).abs() < 1e-9, "{a} vs {b}"),
+                    (None, None) => {}
+                    other => panic!("feasibility mismatch {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn power_ordering_lta_opt_le_others() {
+        // The LtA optimum can never use more power than the LtC best shift
+        // or the bottleneck witness (strictly larger feasible sets).
+        let cfg = SystemConfig::default();
+        let mut rng = Rng::seed_from(4242);
+        for _ in 0..100 {
+            let sut = SystemUnderTest::sample(&cfg, &mut rng);
+            let dist = scaled_distance_matrix(&sut);
+            let pb = power_breakdown(&dist, cfg.target_order.as_slice(), 7.0);
+            if let (Some(opt), Some(ltc)) = (pb.lta_min_power, pb.ltc_best_shift) {
+                assert!(opt <= ltc + 1e-9, "opt {opt} > ltc {ltc}");
+            }
+            if let (Some(opt), Some(bn)) = (pb.lta_min_power, pb.lta_bottleneck) {
+                assert!(opt <= bn + 1e-9, "opt {opt} > bottleneck {bn}");
+            }
+            // Feasibility consistency: LtC feasible ⇒ LtA feasible.
+            if pb.ltc_best_shift.is_some() {
+                assert!(pb.lta_min_power.is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn assignment_power_sums() {
+        let dist = DistanceMatrix { n: 2, d: vec![1.0, 2.0, 3.0, 4.0] };
+        assert_eq!(assignment_power(&dist, &[0, 1]), 5.0);
+        assert_eq!(assignment_power(&dist, &[1, 0]), 5.0);
+    }
+}

@@ -1,0 +1,96 @@
+//! System configuration (Table I) and experiment presets (Table II).
+
+pub mod presets;
+pub mod toml;
+
+use crate::model::{DwdmGrid, SpectralOrdering, VariationConfig};
+
+/// Complete description of one system-under-test *population*: everything
+/// needed to sample MWL + MRR-row pairs and arbitrate them.
+///
+/// Defaults are the paper's Table I (wdm8 / 200 GHz).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    pub grid: DwdmGrid,
+    pub variation: VariationConfig,
+    /// Microring resonance blue-bias λ_rB, nm (Table I: 4.48 nm).
+    pub ring_bias_nm: f64,
+    /// FSR mean λ̄_FSR, nm (Table I: 8.96 nm = N_ch · λ_gS).
+    pub fsr_mean_nm: f64,
+    /// Pre-fabrication spectral ordering `r_i`.
+    pub pre_fab_order: SpectralOrdering,
+    /// Post-arbitration target spectral ordering `s_i` (the paper assumes
+    /// `s_i = r_i` for LtC/LtD; "Any" for LtA is expressed at policy level).
+    pub target_order: SpectralOrdering,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self::table1(DwdmGrid::wdm8_g200())
+    }
+}
+
+impl SystemConfig {
+    /// Table I defaults for an arbitrary grid: λ_rB = 4 · λ_gS,
+    /// λ̄_FSR = N_ch · λ_gS, natural orderings.
+    ///
+    /// The paper gives absolute values for wdm8-200g (λ_rB = 4.48 nm,
+    /// λ̄_FSR = 8.96 nm); for the other Fig-5 grids we keep the same
+    /// *relative* design rules (bias = 4 grid steps, FSR tiles the grid)
+    /// and scale σ_rLV's default with the grid spacing.
+    pub fn table1(grid: DwdmGrid) -> Self {
+        let mut variation = VariationConfig::default();
+        variation.ring_local_nm = 2.0 * grid.spacing_nm;
+        Self {
+            ring_bias_nm: 4.0 * grid.spacing_nm,
+            fsr_mean_nm: grid.nominal_fsr_nm(),
+            pre_fab_order: SpectralOrdering::natural(grid.n_ch),
+            target_order: SpectralOrdering::natural(grid.n_ch),
+            grid,
+            variation,
+        }
+    }
+
+    /// Switch both `r_i` and `s_i` to the permuted ordering (Table II
+    /// "P/P" cases; the paper always evaluates with `s_i = r_i`).
+    pub fn with_permuted_orders(mut self) -> Self {
+        self.pre_fab_order = SpectralOrdering::permuted(self.grid.n_ch);
+        self.target_order = SpectralOrdering::permuted(self.grid.n_ch);
+        self
+    }
+
+    pub fn n_ch(&self) -> usize {
+        self.grid.n_ch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_table1() {
+        let c = SystemConfig::default();
+        assert_eq!(c.grid.n_ch, 8);
+        assert!((c.grid.spacing_nm - 1.12).abs() < 1e-12);
+        assert!((c.ring_bias_nm - 4.48).abs() < 1e-12);
+        assert!((c.fsr_mean_nm - 8.96).abs() < 1e-12);
+        assert!((c.variation.ring_local_nm - 2.24).abs() < 1e-12);
+        assert_eq!(c.pre_fab_order, SpectralOrdering::natural(8));
+    }
+
+    #[test]
+    fn permuted_builder() {
+        let c = SystemConfig::default().with_permuted_orders();
+        assert_eq!(c.pre_fab_order.as_slice(), &[0, 4, 1, 5, 2, 6, 3, 7]);
+        assert_eq!(c.target_order, c.pre_fab_order);
+    }
+
+    #[test]
+    fn wdm16_scales_design_rules() {
+        let c = SystemConfig::table1(DwdmGrid::wdm16_g400());
+        assert!((c.fsr_mean_nm - 35.84).abs() < 1e-12);
+        assert!((c.ring_bias_nm - 8.96).abs() < 1e-12);
+        assert!((c.variation.ring_local_nm - 4.48).abs() < 1e-12);
+    }
+}

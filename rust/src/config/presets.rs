@@ -1,0 +1,156 @@
+//! Named presets: Table I (defaults), Table II (arbitration test cases),
+//! Fig 5 DWDM configs, and TOML-file loading.
+
+use crate::arbiter::Policy;
+use crate::config::toml::TomlDoc;
+use crate::config::SystemConfig;
+use crate::model::{DwdmGrid, SpectralOrdering};
+
+/// One Table II column: policy + pre-fab/target spectral orderings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArbitrationCase {
+    pub name: &'static str,
+    pub policy: Policy,
+    /// "natural" or "permuted" pre-fabrication ordering r_i.
+    pub pre_fab: &'static str,
+    /// "natural", "permuted" or "any" target ordering s_i.
+    pub target: &'static str,
+}
+
+/// Table II: the four main policy-evaluation cases.
+pub fn table2_cases() -> Vec<ArbitrationCase> {
+    vec![
+        ArbitrationCase { name: "LtA-N/A", policy: Policy::LtA, pre_fab: "natural", target: "any" },
+        ArbitrationCase { name: "LtA-P/A", policy: Policy::LtA, pre_fab: "permuted", target: "any" },
+        ArbitrationCase { name: "LtC-N/N", policy: Policy::LtC, pre_fab: "natural", target: "natural" },
+        ArbitrationCase { name: "LtC-P/P", policy: Policy::LtC, pre_fab: "permuted", target: "permuted" },
+    ]
+}
+
+impl ArbitrationCase {
+    /// Apply this case's orderings to a base config (target "any" keeps the
+    /// natural target ordering — LtA ignores it).
+    pub fn configure(&self, mut cfg: SystemConfig) -> SystemConfig {
+        let n = cfg.grid.n_ch;
+        cfg.pre_fab_order = SpectralOrdering::by_name(self.pre_fab, n).expect("preset ordering");
+        cfg.target_order = match self.target {
+            "any" => cfg.pre_fab_order.clone(),
+            t => SpectralOrdering::by_name(t, n).expect("preset ordering"),
+        };
+        cfg
+    }
+}
+
+/// The four Fig 5 DWDM configurations.
+pub fn fig5_grids() -> Vec<DwdmGrid> {
+    vec![
+        DwdmGrid::wdm8_g200(),
+        DwdmGrid::wdm8_g400(),
+        DwdmGrid::wdm16_g200(),
+        DwdmGrid::wdm16_g400(),
+    ]
+}
+
+/// Load a `SystemConfig` from a TOML-subset file. Unspecified keys fall
+/// back to Table I defaults for the configured grid.
+///
+/// ```toml
+/// [grid]
+/// n_ch = 8
+/// spacing_nm = 1.12
+/// [variation]
+/// grid_offset_nm = 15.0
+/// laser_local_frac = 0.25
+/// ring_local_nm = 2.24
+/// fsr_frac = 0.01
+/// tr_frac = 0.10
+/// [design]
+/// ring_bias_nm = 4.48
+/// fsr_mean_nm = 8.96
+/// [orders]
+/// pre_fab = "natural"      # or "permuted" or explicit [0, 4, 1, …]
+/// target = "natural"
+/// ```
+pub fn system_config_from_toml(text: &str) -> Result<SystemConfig, String> {
+    let doc = TomlDoc::parse(text)?;
+    let grid = DwdmGrid {
+        n_ch: doc.get_usize("grid.n_ch", 8),
+        spacing_nm: doc.get_f64("grid.spacing_nm", 1.12),
+    };
+    let mut cfg = SystemConfig::table1(grid);
+    cfg.variation.grid_offset_nm = doc.get_f64("variation.grid_offset_nm", cfg.variation.grid_offset_nm);
+    cfg.variation.laser_local_frac = doc.get_f64("variation.laser_local_frac", cfg.variation.laser_local_frac);
+    cfg.variation.ring_local_nm = doc.get_f64("variation.ring_local_nm", cfg.variation.ring_local_nm);
+    cfg.variation.fsr_frac = doc.get_f64("variation.fsr_frac", cfg.variation.fsr_frac);
+    cfg.variation.tr_frac = doc.get_f64("variation.tr_frac", cfg.variation.tr_frac);
+    cfg.ring_bias_nm = doc.get_f64("design.ring_bias_nm", cfg.ring_bias_nm);
+    cfg.fsr_mean_nm = doc.get_f64("design.fsr_mean_nm", cfg.fsr_mean_nm);
+
+    cfg.pre_fab_order = parse_order(&doc, "orders.pre_fab", grid.n_ch)?;
+    cfg.target_order = parse_order(&doc, "orders.target", grid.n_ch)?;
+    Ok(cfg)
+}
+
+fn parse_order(doc: &TomlDoc, key: &str, n: usize) -> Result<SpectralOrdering, String> {
+    match doc.get(key) {
+        None => Ok(SpectralOrdering::natural(n)),
+        Some(v) => {
+            if let Some(name) = v.as_str() {
+                SpectralOrdering::by_name(name, n).ok_or_else(|| format!("{key}: unknown ordering '{name}'"))
+            } else if let Some(arr) = v.as_int_array() {
+                SpectralOrdering::from_vec(arr.iter().map(|&x| x as usize).collect())
+                    .ok_or_else(|| format!("{key}: not a permutation"))
+            } else {
+                Err(format!("{key}: expected string or int array"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_has_four_cases() {
+        let cases = table2_cases();
+        assert_eq!(cases.len(), 4);
+        assert_eq!(cases[0].name, "LtA-N/A");
+        let cfg = cases[3].configure(SystemConfig::default());
+        assert_eq!(cfg.pre_fab_order, SpectralOrdering::permuted(8));
+        assert_eq!(cfg.target_order, SpectralOrdering::permuted(8));
+    }
+
+    #[test]
+    fn toml_round_trip_defaults() {
+        let cfg = system_config_from_toml("").unwrap();
+        assert_eq!(cfg, SystemConfig::default());
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let cfg = system_config_from_toml(
+            r#"
+[grid]
+n_ch = 16
+spacing_nm = 2.24
+[variation]
+ring_local_nm = 1.0
+[orders]
+pre_fab = "permuted"
+target = [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15]
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.grid.n_ch, 16);
+        assert_eq!(cfg.variation.ring_local_nm, 1.0);
+        assert_eq!(cfg.pre_fab_order, SpectralOrdering::permuted(16));
+        assert_eq!(cfg.target_order, SpectralOrdering::natural(16));
+    }
+
+    #[test]
+    fn bad_order_rejected() {
+        assert!(system_config_from_toml("[orders]\npre_fab = \"zigzag\"").is_err());
+        assert!(system_config_from_toml("[orders]\npre_fab = [0, 0, 1]").is_err());
+    }
+}

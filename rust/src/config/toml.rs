@@ -1,0 +1,202 @@
+//! Minimal TOML-subset parser for experiment config files (no serde/toml
+//! crates offline — DESIGN.md "Substitutions").
+//!
+//! Supported: `[section]` headers, `key = value` with string (`"…"`),
+//! number, boolean and flat integer-array (`[1, 2, 3]`) values, `#`
+//! comments, blank lines. This covers everything in `configs/*.toml`.
+
+use std::collections::HashMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    IntArray(Vec<i64>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Num(x) if *x >= 0.0 && x.trunc() == *x => Some(*x as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_int_array(&self) -> Option<&[i64]> {
+        match self {
+            TomlValue::IntArray(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section.key -> value` (top-level keys use section "").
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: HashMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            doc.entries
+                .insert(full_key, parse_value(value.trim(), lineno + 1)?);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings is respected.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str, lineno: usize) -> Result<TomlValue, String> {
+    if let Some(rest) = v.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| format!("line {lineno}: unterminated string"))?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if v == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| format!("line {lineno}: unterminated array"))?;
+        let mut out = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            out.push(
+                part.parse::<i64>()
+                    .map_err(|_| format!("line {lineno}: bad array int '{part}'"))?,
+            );
+        }
+        return Ok(TomlValue::IntArray(out));
+    }
+    v.parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|_| format!("line {lineno}: cannot parse value '{v}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+# experiment config
+name = "fig4"
+trials = 10000   # comment
+[grid]
+n_ch = 8
+spacing_nm = 1.12
+[orders]
+pre_fab = [0, 4, 1, 5]
+fast = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name", ""), "fig4");
+        assert_eq!(doc.get_usize("trials", 0), 10000);
+        assert_eq!(doc.get_usize("grid.n_ch", 0), 8);
+        assert!((doc.get_f64("grid.spacing_nm", 0.0) - 1.12).abs() < 1e-12);
+        assert_eq!(
+            doc.get("orders.pre_fab").unwrap().as_int_array().unwrap(),
+            &[0, 4, 1, 5]
+        );
+        assert_eq!(doc.get("orders.fast").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("key").is_err());
+        assert!(TomlDoc::parse("x = \"unterminated").is_err());
+        assert!(TomlDoc::parse("x = [1, oops]").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = TomlDoc::parse("x = \"a#b\"").unwrap();
+        assert_eq!(doc.get_str("x", ""), "a#b");
+    }
+}

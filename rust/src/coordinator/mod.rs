@@ -1,0 +1,192 @@
+//! Experiment coordinator: the leader that runs paper experiments,
+//! dispatches Monte-Carlo work to the evaluator backends, and writes
+//! reports.
+
+pub mod report;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::montecarlo::{IdealEvaluator, RustIdeal};
+use crate::runtime::accel::XlaIdeal;
+use crate::util::json::Json;
+
+/// Which ideal-model backend evaluates policy experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust f64 oracle, thread-pool parallel.
+    Rust,
+    /// AOT JAX/Pallas artifact on PJRT CPU.
+    Xla,
+}
+
+impl Backend {
+    pub fn by_name(name: &str) -> Option<Backend> {
+        match name {
+            "rust" => Some(Backend::Rust),
+            "xla" | "pjrt" => Some(Backend::Xla),
+            _ => None,
+        }
+    }
+
+    /// Instantiate the evaluator. XLA falls back to Rust (with a warning)
+    /// when artifacts are missing so experiments stay runnable.
+    pub fn evaluator(&self, threads: usize) -> Box<dyn IdealEvaluator> {
+        match self {
+            Backend::Rust => Box::new(RustIdeal { threads }),
+            Backend::Xla => match XlaIdeal::discover() {
+                Ok(x) => Box::new(x),
+                Err(e) => {
+                    eprintln!("warning: XLA backend unavailable ({e}); using rust backend");
+                    Box::new(RustIdeal { threads })
+                }
+            },
+        }
+    }
+}
+
+/// Options shared by every experiment run.
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    pub out_dir: PathBuf,
+    /// Lasers × rows per Monte-Carlo point (paper: 100 × 100).
+    pub n_lasers: usize,
+    pub n_rows: usize,
+    pub seed: u64,
+    pub threads: usize,
+    pub backend: Backend,
+    /// Reduced sweep resolution + population for quick runs / CI.
+    pub fast: bool,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        Self {
+            out_dir: PathBuf::from("out"),
+            n_lasers: 100,
+            n_rows: 100,
+            seed: 0xC0FFEE,
+            threads: 0,
+            backend: Backend::Rust,
+            fast: false,
+        }
+    }
+}
+
+impl RunOptions {
+    /// Fast preset: 30×30 population (900 trials/point).
+    pub fn fast() -> Self {
+        Self { n_lasers: 30, n_rows: 30, fast: true, ..Self::default() }
+    }
+
+    pub fn trials_per_point(&self) -> usize {
+        self.n_lasers * self.n_rows
+    }
+
+    /// Sweep stride multiplier: fast runs coarsen grids by 2×.
+    pub fn stride(&self) -> f64 {
+        if self.fast {
+            0.5
+        } else {
+            0.25
+        }
+    }
+}
+
+/// What an experiment hands back to the coordinator.
+#[derive(Debug, Clone)]
+pub struct ExperimentReport {
+    pub id: &'static str,
+    /// Human-readable result summary incl. paper-shape checks (printed and
+    /// recorded in EXPERIMENTS.md).
+    pub summary: String,
+    /// Files written (CSV/JSON).
+    pub files: Vec<PathBuf>,
+    /// Machine-readable result payload.
+    pub json: Json,
+}
+
+/// An experiment that regenerates one paper table/figure.
+pub trait Experiment {
+    fn id(&self) -> &'static str;
+    fn title(&self) -> &'static str;
+    fn run(&self, opts: &RunOptions) -> Result<ExperimentReport>;
+}
+
+/// Run one experiment: execute, persist its JSON, print the summary.
+pub fn run_experiment(exp: &dyn Experiment, opts: &RunOptions) -> Result<ExperimentReport> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let started = std::time::Instant::now();
+    let mut rep = exp.run(opts)?;
+    let elapsed = started.elapsed();
+    let json_path = opts.out_dir.join(format!("{}.json", exp.id()));
+    std::fs::write(
+        &json_path,
+        Json::obj(vec![
+            ("id", Json::str(exp.id())),
+            ("title", Json::str(exp.title())),
+            ("elapsed_s", Json::num(elapsed.as_secs_f64())),
+            ("trials_per_point", Json::num(opts.trials_per_point() as f64)),
+            ("backend", Json::str(match opts.backend {
+                Backend::Rust => "rust",
+                Backend::Xla => "xla",
+            })),
+            ("data", rep.json.clone()),
+        ])
+        .to_pretty(),
+    )?;
+    rep.files.push(json_path);
+    println!("== {} — {} ({:.1}s)", exp.id(), exp.title(), elapsed.as_secs_f64());
+    println!("{}", rep.summary);
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_names() {
+        assert_eq!(Backend::by_name("rust"), Some(Backend::Rust));
+        assert_eq!(Backend::by_name("xla"), Some(Backend::Xla));
+        assert_eq!(Backend::by_name("gpu"), None);
+    }
+
+    #[test]
+    fn fast_preset() {
+        let o = RunOptions::fast();
+        assert_eq!(o.trials_per_point(), 900);
+        assert_eq!(o.stride(), 0.5);
+        assert_eq!(RunOptions::default().trials_per_point(), 10_000);
+    }
+
+    struct Dummy;
+    impl Experiment for Dummy {
+        fn id(&self) -> &'static str {
+            "dummy"
+        }
+        fn title(&self) -> &'static str {
+            "dummy experiment"
+        }
+        fn run(&self, _opts: &RunOptions) -> Result<ExperimentReport> {
+            Ok(ExperimentReport {
+                id: "dummy",
+                summary: "ok".into(),
+                files: vec![],
+                json: Json::num(1.0),
+            })
+        }
+    }
+
+    #[test]
+    fn run_experiment_writes_json() {
+        let dir = std::env::temp_dir().join(format!("wdm-coord-test-{}", std::process::id()));
+        let opts = RunOptions { out_dir: dir.clone(), ..RunOptions::fast() };
+        let rep = run_experiment(&Dummy, &opts).unwrap();
+        assert!(rep.files[0].is_file());
+        let text = std::fs::read_to_string(&rep.files[0]).unwrap();
+        assert!(text.contains("\"id\": \"dummy\""));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

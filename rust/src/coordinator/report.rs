@@ -1,0 +1,147 @@
+//! Report writers: CSV files, ASCII shmoo heatmaps and curve tables.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::montecarlo::sweep::{Series, Shmoo};
+
+/// Write labelled series sharing an x-axis as CSV:
+/// `x, <label1>, <label2>, …`.
+pub fn write_csv_series(path: &Path, x_label: &str, series: &[Series]) -> Result<PathBuf> {
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "{x_label}")?;
+    for s in series {
+        write!(f, ",{}", s.label)?;
+    }
+    writeln!(f)?;
+    let n = series.first().map(|s| s.x.len()).unwrap_or(0);
+    for i in 0..n {
+        write!(f, "{}", series[0].x[i])?;
+        for s in series {
+            write!(f, ",{}", s.y[i])?;
+        }
+        writeln!(f)?;
+    }
+    Ok(path.to_path_buf())
+}
+
+/// Write a shmoo grid as CSV: header = x values, rows = `y, cells…`.
+pub fn write_csv_shmoo(path: &Path, s: &Shmoo) -> Result<PathBuf> {
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "y\\x")?;
+    for x in &s.x {
+        write!(f, ",{x}")?;
+    }
+    writeln!(f)?;
+    for (iy, y) in s.y.iter().enumerate() {
+        write!(f, "{y}")?;
+        for ix in 0..s.x.len() {
+            write!(f, ",{}", s.at(ix, iy))?;
+        }
+        writeln!(f)?;
+    }
+    Ok(path.to_path_buf())
+}
+
+/// ASCII heatmap of a shmoo grid (values expected in [0, 1]; darker =
+/// higher, mirroring the paper's colormap). y grows upward.
+pub fn ascii_heatmap(s: &Shmoo) -> String {
+    const RAMP: &[u8] = b" .:-=+*#%@"; // 0.0 .. 1.0
+    let mut out = String::new();
+    out.push_str(&format!("{} (rows: y desc, cols: x asc)\n", s.label));
+    for iy in (0..s.y.len()).rev() {
+        out.push_str(&format!("{:7.2} |", s.y[iy]));
+        for ix in 0..s.x.len() {
+            let v = s.at(ix, iy).clamp(0.0, 1.0);
+            let idx = ((v * (RAMP.len() - 1) as f64).round() as usize).min(RAMP.len() - 1);
+            out.push(RAMP[idx] as char);
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!("{:7} +{}\n", "", "-".repeat(s.x.len())));
+    out.push_str(&format!(
+        "{:8} x: {:.2} .. {:.2}\n",
+        "", s.x.first().unwrap_or(&0.0), s.x.last().unwrap_or(&0.0)
+    ));
+    out
+}
+
+/// Compact text table of curves for terminal summaries: one row per x.
+pub fn curve_table(x_label: &str, series: &[Series], max_rows: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{x_label:>10}"));
+    for s in series {
+        out.push_str(&format!(" {:>12}", truncate(&s.label, 12)));
+    }
+    out.push('\n');
+    let n = series.first().map(|s| s.x.len()).unwrap_or(0);
+    let stride = n.div_ceil(max_rows.max(1)).max(1);
+    for i in (0..n).step_by(stride) {
+        out.push_str(&format!("{:>10.3}", series[0].x[i]));
+        for s in series {
+            out.push_str(&format!(" {:>12.3}", s.y[i]));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        s[..n].to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_series_round_trip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("wdm-report-{}.csv", std::process::id()));
+        let s1 = Series::new("a", vec![1.0, 2.0], vec![0.1, 0.2]);
+        let s2 = Series::new("b", vec![1.0, 2.0], vec![0.3, 0.4]);
+        write_csv_series(&path, "x", &[s1, s2]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("x,a,b\n"));
+        assert!(text.contains("1,0.1,0.3"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn heatmap_shape() {
+        let mut s = Shmoo::new("afp", vec![0.0, 1.0, 2.0], vec![0.0, 1.0]);
+        s.set(0, 0, 0.0);
+        s.set(2, 1, 1.0);
+        let art = ascii_heatmap(&s);
+        let lines: Vec<&str> = art.lines().collect();
+        assert!(lines[0].contains("afp"));
+        // 2 data rows + header + 2 footer lines.
+        assert_eq!(lines.len(), 5);
+        assert!(lines[1].contains('@') || lines[2].contains('@'));
+    }
+
+    #[test]
+    fn shmoo_csv_dims() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("wdm-shmoo-{}.csv", std::process::id()));
+        let s = Shmoo::new("t", vec![0.0, 1.0], vec![5.0, 6.0, 7.0]);
+        write_csv_shmoo(&path, &s).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 4);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn curve_table_strides() {
+        let x: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let y = x.clone();
+        let t = curve_table("x", &[Series::new("y", x, y)], 10);
+        assert!(t.lines().count() <= 12);
+    }
+}

@@ -1,0 +1,101 @@
+//! Fig 4 — AFP shmoo over σ_rLV × λ̄_TR for the three arbitration policies.
+//!
+//! Paper shape: a shmoo pattern — low tuning range + high resonance
+//! variation fails; LtA needs the least tuning range, then LtC, then LtD
+//! (which mostly fails at the default 15 nm grid offset).
+
+use anyhow::Result;
+
+use crate::arbiter::Policy;
+use crate::config::SystemConfig;
+use crate::coordinator::report::{ascii_heatmap, write_csv_shmoo};
+use crate::coordinator::{Experiment, ExperimentReport, RunOptions};
+use crate::experiments::{afp_shmoos, rlv_sweep, tr_sweep};
+use crate::util::json::Json;
+
+pub struct Fig4;
+
+impl Experiment for Fig4 {
+    fn id(&self) -> &'static str {
+        "fig4"
+    }
+
+    fn title(&self) -> &'static str {
+        "Fig 4 — AFP shmoo per arbitration policy"
+    }
+
+    fn run(&self, opts: &RunOptions) -> Result<ExperimentReport> {
+        let cfg = SystemConfig::default();
+        let eval = opts.backend.evaluator(opts.threads);
+        let rlv = rlv_sweep(cfg.grid.spacing_nm, opts.stride());
+        let tr = tr_sweep(cfg.grid.spacing_nm, opts.stride());
+        let policies = [Policy::LtA, Policy::LtC, Policy::LtD];
+        let shmoos = afp_shmoos(&cfg, &policies, &rlv, &tr, opts, eval.as_ref(), self.id());
+
+        let mut summary = String::new();
+        let mut files = Vec::new();
+        let mut json_panels = Vec::new();
+        for (p, s) in policies.iter().zip(&shmoos) {
+            summary.push_str(&ascii_heatmap(s));
+            summary.push('\n');
+            let path = opts.out_dir.join(format!("fig4_{}.csv", p.to_string().to_lowercase()));
+            files.push(write_csv_shmoo(&path, s)?);
+            json_panels.push(Json::obj(vec![
+                ("policy", Json::str(format!("{p}"))),
+                ("x_sigma_rlv_nm", Json::arr_f64(&s.x)),
+                ("y_tr_nm", Json::arr_f64(&s.y)),
+                ("afp", Json::arr_f64(&s.cells)),
+            ]));
+        }
+        // Shape check: at each σ_rLV column the per-policy "minimum TR for
+        // complete success" must be ordered LtA ≤ LtC ≤ LtD.
+        let min_tr_of = |s: &crate::montecarlo::sweep::Shmoo, ix: usize| -> f64 {
+            (0..s.y.len())
+                .find(|&iy| s.at(ix, iy) == 0.0)
+                .map(|iy| s.y[iy])
+                .unwrap_or(f64::INFINITY)
+        };
+        let mut ordered = true;
+        for ix in 0..rlv.len() {
+            let a = min_tr_of(&shmoos[0], ix);
+            let c = min_tr_of(&shmoos[1], ix);
+            let d = min_tr_of(&shmoos[2], ix);
+            if !(a <= c && c <= d) {
+                ordered = false;
+            }
+        }
+        summary.push_str(&format!(
+            "shape check: min-TR ordering LtA <= LtC <= LtD holds at every sigma_rLV: {ordered}\n"
+        ));
+
+        Ok(ExperimentReport {
+            id: self.id(),
+            summary,
+            files,
+            json: Json::Arr(json_panels),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_fast_run() {
+        let dir = std::env::temp_dir().join(format!("wdm-fig4-{}", std::process::id()));
+        let opts = RunOptions {
+            out_dir: dir.clone(),
+            n_lasers: 6,
+            n_rows: 6,
+            fast: true,
+            ..RunOptions::fast()
+        };
+        std::fs::create_dir_all(&dir).unwrap();
+        let rep = Fig4.run(&opts).unwrap();
+        assert!(rep.summary.contains("LtA"));
+        assert!(rep.summary.contains("shape check"));
+        assert_eq!(rep.files.len(), 3);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,129 @@
+//! Fig 5 — minimum tuning range vs σ_rLV across DWDM configurations
+//! (wdm8/16 × 200/400 GHz) and arbitration cases (Table II).
+//!
+//! Paper shapes: pre-saturation ramp slope ≈ 2; LtC saturates at ~FSR; LtA
+//! saturates once 2·σ_rLV covers the FSR; wdm16-400g needs the most range;
+//! N vs P orderings show no significant difference. Panels (e–h) are the
+//! same data normalized by the grid spacing.
+
+use anyhow::Result;
+
+use crate::config::presets::{fig5_grids, table2_cases};
+use crate::config::SystemConfig;
+use crate::coordinator::report::{curve_table, write_csv_series};
+use crate::coordinator::{Experiment, ExperimentReport, RunOptions};
+use crate::experiments::min_tr_curve;
+use crate::montecarlo::sweep::Series;
+use crate::util::json::Json;
+
+pub struct Fig5;
+
+impl Experiment for Fig5 {
+    fn id(&self) -> &'static str {
+        "fig5"
+    }
+
+    fn title(&self) -> &'static str {
+        "Fig 5 — minimum tuning range vs sigma_rLV (DWDM configs x Table II cases)"
+    }
+
+    fn run(&self, opts: &RunOptions) -> Result<ExperimentReport> {
+        let eval = opts.backend.evaluator(opts.threads);
+        let mut files = Vec::new();
+        let mut json_panels = Vec::new();
+        let mut summary = String::new();
+
+        for (ci, case) in table2_cases().iter().enumerate() {
+            let mut panel: Vec<Series> = Vec::new();
+            let mut panel_norm: Vec<Series> = Vec::new();
+            for (gi, grid) in fig5_grids().iter().enumerate() {
+                let base = case.configure(SystemConfig::table1(*grid));
+                // σ_rLV in multiples of THIS grid's spacing (paper normalizes
+                // per configuration).
+                let values =
+                    crate::montecarlo::sweep::unit_multiples(grid.spacing_nm, 0.25, 8.0, opts.stride());
+                let series = min_tr_curve(
+                    &grid.name(),
+                    &values,
+                    |rlv| {
+                        let mut c = base.clone();
+                        c.variation.ring_local_nm = rlv;
+                        c
+                    },
+                    case.policy,
+                    opts,
+                    eval.as_ref(),
+                    self.id(),
+                    ci * 10 + gi,
+                );
+                // Normalized panel (e–h): both axes in grid-spacing units.
+                panel_norm.push(Series::new(
+                    grid.name(),
+                    series.x.iter().map(|v| v / grid.spacing_nm).collect(),
+                    series.y.iter().map(|v| v / grid.spacing_nm).collect(),
+                ));
+                panel.push(series);
+            }
+            let path = opts.out_dir.join(format!("fig5_{}.csv", sanitize(case.name)));
+            files.push(write_csv_series(&path, "sigma_rlv_nm", &panel)?);
+            let path_n = opts.out_dir.join(format!("fig5_{}_norm.csv", sanitize(case.name)));
+            files.push(write_csv_series(&path_n, "sigma_rlv_gs", &panel_norm)?);
+
+            summary.push_str(&format!("panel {} (min TR [nm]):\n", case.name));
+            summary.push_str(&curve_table("sigma_rlv", &panel, 8));
+            // Pre-saturation ramp slope (paper: ≈ 2), measured on the
+            // normalized wdm8-200g curve below 2·λ_gS.
+            let slope = panel_norm[0].slope_in(0.25, 2.0);
+            summary.push_str(&format!("  pre-saturation slope (wdm8-200g, <=2 gS): {slope:.2}\n\n"));
+
+            json_panels.push(Json::obj(vec![
+                ("case", Json::str(case.name)),
+                (
+                    "series",
+                    Json::Arr(
+                        panel
+                            .iter()
+                            .map(|s| {
+                                Json::obj(vec![
+                                    ("grid", Json::str(s.label.clone())),
+                                    ("x_nm", Json::arr_f64(&s.x)),
+                                    ("min_tr_nm", Json::arr_f64(&s.y)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("ramp_slope_wdm8_200g", Json::num(slope)),
+            ]));
+        }
+        Ok(ExperimentReport { id: self.id(), summary, files, json: Json::Arr(json_panels) })
+    }
+}
+
+fn sanitize(name: &str) -> String {
+    name.to_lowercase().replace('/', "-")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_fast_run_has_all_panels() {
+        let dir = std::env::temp_dir().join(format!("wdm-fig5-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let opts = RunOptions {
+            out_dir: dir.clone(),
+            n_lasers: 4,
+            n_rows: 4,
+            fast: true,
+            ..RunOptions::fast()
+        };
+        let rep = Fig5.run(&opts).unwrap();
+        for name in ["LtA-N/A", "LtA-P/A", "LtC-N/N", "LtC-P/P"] {
+            assert!(rep.summary.contains(name), "missing {name}");
+        }
+        assert_eq!(rep.files.len(), 8); // 4 cases x (raw + normalized)
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,176 @@
+//! Fig 7 — local sensitivity of the minimum tuning range to laser and
+//! microring variabilities, at σ_rLV = 2.24 nm.
+//!
+//! Panels: (a) grid offset σ_gO 0–1.12 nm, (b) laser local variation
+//! σ_lLV 1–45 %, (c) tuning-range variation σ_TR 0–20 %, (d) FSR variation
+//! σ_FSR 0–5 %. Series: LtA/LtC × Natural/Permuted orderings.
+//!
+//! Paper shapes: σ_rLV and policy dominate; ∂(minTR)/∂(σ_lLV) ≈
+//! 0.56 nm / 25 %; LtC is additionally sensitive to σ_TR and σ_FSR while
+//! LtA absorbs them; offsets beyond λ_gS don't matter (cyclic re-centering).
+
+use anyhow::Result;
+
+use crate::arbiter::Policy;
+use crate::config::SystemConfig;
+use crate::coordinator::report::{curve_table, write_csv_series};
+use crate::coordinator::{Experiment, ExperimentReport, RunOptions};
+use crate::experiments::min_tr_curve;
+use crate::montecarlo::sweep::{linspace, Series};
+use crate::montecarlo::IdealEvaluator;
+use crate::util::json::Json;
+
+pub struct Fig7;
+
+struct Panel {
+    name: &'static str,
+    x_label: &'static str,
+    values: Vec<f64>,
+    apply: fn(&mut SystemConfig, f64),
+}
+
+fn panels(fast: bool) -> Vec<Panel> {
+    let steps = if fast { 5 } else { 9 };
+    vec![
+        Panel {
+            name: "a_grid_offset",
+            x_label: "sigma_gO_nm",
+            values: linspace(0.0, 2.24, steps),
+            apply: |c, v| c.variation.grid_offset_nm = v,
+        },
+        Panel {
+            name: "b_laser_local",
+            x_label: "sigma_lLV_frac",
+            values: linspace(0.01, 0.45, steps),
+            apply: |c, v| c.variation.laser_local_frac = v,
+        },
+        Panel {
+            name: "c_tr_variation",
+            x_label: "sigma_TR_frac",
+            values: linspace(0.0, 0.20, steps),
+            apply: |c, v| c.variation.tr_frac = v,
+        },
+        Panel {
+            name: "d_fsr_variation",
+            x_label: "sigma_FSR_frac",
+            values: linspace(0.0, 0.05, steps),
+            apply: |c, v| c.variation.fsr_frac = v,
+        },
+    ]
+}
+
+fn case_configs() -> Vec<(&'static str, Policy, SystemConfig)> {
+    vec![
+        ("LtA-N", Policy::LtA, SystemConfig::default()),
+        ("LtA-P", Policy::LtA, SystemConfig::default().with_permuted_orders()),
+        ("LtC-N", Policy::LtC, SystemConfig::default()),
+        ("LtC-P", Policy::LtC, SystemConfig::default().with_permuted_orders()),
+    ]
+}
+
+impl Experiment for Fig7 {
+    fn id(&self) -> &'static str {
+        "fig7"
+    }
+
+    fn title(&self) -> &'static str {
+        "Fig 7 — local sensitivity analysis (sigma_gO, sigma_lLV, sigma_TR, sigma_FSR)"
+    }
+
+    fn run(&self, opts: &RunOptions) -> Result<ExperimentReport> {
+        let eval = opts.backend.evaluator(opts.threads);
+        let mut summary = String::new();
+        let mut files = Vec::new();
+        let mut json_panels = Vec::new();
+
+        for (pi, panel) in panels(opts.fast).iter().enumerate() {
+            let series = run_panel(panel, opts, eval.as_ref(), self.id(), pi);
+            let path = opts.out_dir.join(format!("fig7_{}.csv", panel.name));
+            files.push(write_csv_series(&path, panel.x_label, &series)?);
+            summary.push_str(&format!("panel {} (min TR [nm]):\n", panel.name));
+            summary.push_str(&curve_table(panel.x_label, &series, 6));
+            if panel.name == "b_laser_local" {
+                // Sensitivity in nm per 25 % of λ_gS (paper ≈ 0.56 nm/25%).
+                let sens = series[2].slope() * 0.25;
+                summary.push_str(&format!(
+                    "  d(minTR)/d(sigma_lLV) (LtC-N): {sens:.2} nm per 25% (paper ~0.56)\n"
+                ));
+            }
+            summary.push('\n');
+            json_panels.push(Json::obj(vec![
+                ("panel", Json::str(panel.name)),
+                (
+                    "series",
+                    Json::Arr(
+                        series
+                            .iter()
+                            .map(|s| {
+                                Json::obj(vec![
+                                    ("case", Json::str(s.label.clone())),
+                                    ("x", Json::arr_f64(&s.x)),
+                                    ("min_tr_nm", Json::arr_f64(&s.y)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]));
+        }
+        Ok(ExperimentReport { id: self.id(), summary, files, json: Json::Arr(json_panels) })
+    }
+}
+
+fn run_panel(
+    panel: &Panel,
+    opts: &RunOptions,
+    eval: &dyn IdealEvaluator,
+    exp_id: &str,
+    pi: usize,
+) -> Vec<Series> {
+    case_configs()
+        .into_iter()
+        .enumerate()
+        .map(|(ci, (label, policy, base))| {
+            min_tr_curve(
+                label,
+                &panel.values,
+                |v| {
+                    let mut c = base.clone();
+                    // σ_rLV fixed at the Table I default 2.24 nm.
+                    c.variation.ring_local_nm = 2.24;
+                    (panel.apply)(&mut c, v);
+                    c
+                },
+                policy,
+                opts,
+                eval,
+                exp_id,
+                pi * 100 + ci,
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_fast_run_all_panels() {
+        let dir = std::env::temp_dir().join(format!("wdm-fig7-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let opts = RunOptions {
+            out_dir: dir.clone(),
+            n_lasers: 4,
+            n_rows: 4,
+            fast: true,
+            ..RunOptions::fast()
+        };
+        let rep = Fig7.run(&opts).unwrap();
+        for p in ["a_grid_offset", "b_laser_local", "c_tr_variation", "d_fsr_variation"] {
+            assert!(rep.summary.contains(p), "missing {p}");
+        }
+        assert_eq!(rep.files.len(), 4);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,133 @@
+//! Fig 8 — impact of the FSR mean on the minimum tuning range (under- and
+//! over-designed FSR), for LtA and LtC.
+//!
+//! Paper shapes: a ±0.5 nm tolerance band around the nominal
+//! FSR = N_ch · λ_gS; under-design degrades sharply (resonance aliasing
+//! under 25 % laser local variation); over-design degrades gradually (the
+//! gap to the next FSR's first grid grows).
+
+use anyhow::Result;
+
+use crate::arbiter::distance::ALIAS_EPS_NM;
+use crate::arbiter::Policy;
+use crate::config::SystemConfig;
+use crate::coordinator::report::{curve_table, write_csv_series};
+use crate::coordinator::{Experiment, ExperimentReport, RunOptions};
+use crate::experiments::point_seed;
+use crate::model::system::SystemSampler;
+use crate::montecarlo::sweep::{unit_multiples, Series};
+use crate::montecarlo::{alias_aware_min_trs, min_tr_complete};
+use crate::util::json::Json;
+
+pub struct Fig8;
+
+impl Experiment for Fig8 {
+    fn id(&self) -> &'static str {
+        "fig8"
+    }
+
+    fn title(&self) -> &'static str {
+        "Fig 8 — FSR mean design space (under-/over-design)"
+    }
+
+    fn run(&self, opts: &RunOptions) -> Result<ExperimentReport> {
+        let base = SystemConfig::default();
+        // 6×λ_gS … 14×λ_gS (paper: 6.72 nm to 15.68 nm).
+        let fsr_values = unit_multiples(base.grid.spacing_nm, 6.0, 14.0, opts.stride());
+        // Under-designed FSRs collide channels (resonance aliasing), so
+        // this experiment uses the alias-aware ideal evaluation — a
+        // Rust-side extension of the mod-FSR distance; see
+        // arbiter::distance::alias_aware_distance_parts. Trials with no
+        // collision-free assignment are clipped to CLIP for plotting.
+        const CLIP: f64 = 18.0;
+
+        let mut series = Vec::new();
+        for (k, policy) in [Policy::LtA, Policy::LtC].into_iter().enumerate() {
+            let y: Vec<f64> = fsr_values
+                .iter()
+                .enumerate()
+                .map(|(i, &fsr)| {
+                    let mut cfg = base.clone();
+                    cfg.fsr_mean_nm = fsr;
+                    let sampler = SystemSampler::new(
+                        &cfg,
+                        opts.n_lasers,
+                        opts.n_rows,
+                        point_seed(opts, self.id(), k * 10_000 + i),
+                    );
+                    let trs =
+                        alias_aware_min_trs(&cfg, &sampler, policy, ALIAS_EPS_NM, opts.threads);
+                    min_tr_complete(&trs).min(CLIP)
+                })
+                .collect();
+            series.push(Series::new(format!("{policy}"), fsr_values.clone(), y));
+        }
+        let path = opts.out_dir.join("fig8_fsr_design.csv");
+        let files = vec![write_csv_series(&path, "fsr_mean_nm", &series)?];
+
+        let mut summary = String::from("min TR [nm] vs FSR mean:\n");
+        summary.push_str(&curve_table("fsr_nm", &series, 10));
+
+        // Shape check: value at nominal vs ±0.56 nm vs strong under-design.
+        let nominal = base.grid.nominal_fsr_nm();
+        let y_at = |s: &crate::montecarlo::sweep::Series, x0: f64| -> f64 {
+            s.x.iter()
+                .enumerate()
+                .min_by(|a, b| {
+                    (a.1 - x0).abs().partial_cmp(&(b.1 - x0).abs()).unwrap()
+                })
+                .map(|(i, _)| s.y[i])
+                .unwrap_or(f64::NAN)
+        };
+        let ltc_nom = y_at(&series[1], nominal);
+        // Tolerance band (paper: ≈ ±0.5 nm). Our binary aliasing model makes
+        // the under-design side slightly stricter (≈ −0.3 nm before the
+        // first comb collision becomes samplable), the over-design side
+        // matches (+0.56 nm still < 0.5 nm increase).
+        let ltc_tol = y_at(&series[1], nominal - 0.28).max(y_at(&series[1], nominal + 0.56));
+        let ltc_under = y_at(&series[1], nominal - 2.24);
+        summary.push_str(&format!(
+            "  LtC: nominal {ltc_nom:.2} nm, band [-0.28,+0.56] max {ltc_tol:.2} nm \
+             (within 0.5 nm of nominal: {}), under-designed by 2 gS {ltc_under:.2} nm \
+             (sharp penalty: {})\n",
+            ltc_tol < ltc_nom + 0.5,
+            ltc_under > ltc_nom + 1.0
+        ));
+
+        let json = Json::Arr(
+            series
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("policy", Json::str(s.label.clone())),
+                        ("fsr_nm", Json::arr_f64(&s.x)),
+                        ("min_tr_nm", Json::arr_f64(&s.y)),
+                    ])
+                })
+                .collect(),
+        );
+        Ok(ExperimentReport { id: self.id(), summary, files, json })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8_fast_run() {
+        let dir = std::env::temp_dir().join(format!("wdm-fig8-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let opts = RunOptions {
+            out_dir: dir.clone(),
+            n_lasers: 4,
+            n_rows: 4,
+            fast: true,
+            ..RunOptions::fast()
+        };
+        let rep = Fig8.run(&opts).unwrap();
+        assert!(rep.summary.contains("FSR") || rep.summary.contains("fsr"));
+        assert_eq!(rep.files.len(), 1);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

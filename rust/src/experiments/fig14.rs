@@ -1,0 +1,108 @@
+//! Fig 14 — CAFP shmoos comparing the wavelength-oblivious schemes
+//! (sequential tuning, RS/SSM, VT-RS/SSM) under Natural and Permuted
+//! target orderings.
+//!
+//! Paper shapes: the proposed schemes beat sequential tuning everywhere;
+//! VT-RS/SSM ≈ ideal (CAFP ≈ 0); RS/SSM shows residual errors around
+//! λ̄_TR ≈ 8 nm caused by the 10 % tuning-range variation.
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::coordinator::report::{ascii_heatmap, write_csv_shmoo};
+use crate::coordinator::{Experiment, ExperimentReport, RunOptions};
+use crate::experiments::{cafp_shmoo, rlv_sweep, tr_sweep};
+use crate::oblivious::Scheme;
+use crate::util::json::Json;
+
+pub struct Fig14;
+
+impl Experiment for Fig14 {
+    fn id(&self) -> &'static str {
+        "fig14"
+    }
+
+    fn title(&self) -> &'static str {
+        "Fig 14 — CAFP shmoo: seq-tuning vs RS/SSM vs VT-RS/SSM (N/N and P/P)"
+    }
+
+    fn run(&self, opts: &RunOptions) -> Result<ExperimentReport> {
+        run_cafp_grid(self.id(), opts, SystemConfig::default(), Scheme::all().to_vec())
+    }
+}
+
+/// Shared CAFP-shmoo driver (Fig 16 reuses it with a harsher config).
+pub fn run_cafp_grid(
+    exp_id: &'static str,
+    opts: &RunOptions,
+    base_cfg: SystemConfig,
+    schemes: Vec<Scheme>,
+) -> Result<ExperimentReport> {
+    // CAFP cells need a full oblivious simulation per (cell, trial): use a
+    // coarser grid than the ideal-model shmoo (stride 0.5 gS; 1.0 in fast).
+    let stride = if opts.fast { 1.0 } else { 0.5 };
+    let rlv = rlv_sweep(base_cfg.grid.spacing_nm, stride);
+    let tr = tr_sweep(base_cfg.grid.spacing_nm, stride);
+
+    let mut summary = String::new();
+    let mut files = Vec::new();
+    let mut json_panels = Vec::new();
+    let mut peak_cafp: Vec<(String, f64)> = Vec::new();
+
+    for (oi, (order_tag, cfg)) in [
+        ("nn", base_cfg.clone()),
+        ("pp", base_cfg.clone().with_permuted_orders()),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        for (si, &scheme) in schemes.iter().enumerate() {
+            let shmoo = cafp_shmoo(&cfg, scheme, &rlv, &tr, opts, exp_id, oi * 10 + si);
+            let peak = shmoo.cells.iter().cloned().fold(0.0f64, f64::max);
+            peak_cafp.push((format!("{}-{}", scheme.name(), order_tag), peak));
+            summary.push_str(&format!("panel {} / {}:\n", scheme.name(), order_tag));
+            summary.push_str(&ascii_heatmap(&shmoo));
+            summary.push('\n');
+            let path = opts
+                .out_dir
+                .join(format!("{exp_id}_{}_{}.csv", scheme.name(), order_tag));
+            files.push(write_csv_shmoo(&path, &shmoo)?);
+            json_panels.push(Json::obj(vec![
+                ("scheme", Json::str(scheme.name())),
+                ("ordering", Json::str(order_tag)),
+                ("x_sigma_rlv_nm", Json::arr_f64(&shmoo.x)),
+                ("y_tr_nm", Json::arr_f64(&shmoo.y)),
+                ("cafp", Json::arr_f64(&shmoo.cells)),
+                ("peak_cafp", Json::num(peak)),
+            ]));
+        }
+    }
+    summary.push_str("peak CAFP per panel:\n");
+    for (name, peak) in &peak_cafp {
+        summary.push_str(&format!("  {name:<16} {peak:.4}\n"));
+    }
+    Ok(ExperimentReport { id: exp_id, summary, files, json: Json::Arr(json_panels) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig14_fast_run_ranks_schemes() {
+        let dir = std::env::temp_dir().join(format!("wdm-fig14-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let opts = RunOptions {
+            out_dir: dir.clone(),
+            n_lasers: 5,
+            n_rows: 5,
+            fast: true,
+            ..RunOptions::fast()
+        };
+        let rep = Fig14.run(&opts).unwrap();
+        assert!(rep.summary.contains("seq-tuning"));
+        assert!(rep.summary.contains("vt-rs-ssm"));
+        assert_eq!(rep.files.len(), 6);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,135 @@
+//! Fig 15 — sequential-tuning CAFP broken down into Lock Errors
+//! (zero/duplicate) and Wrong Order (lane-order mismatch), under ideal and
+//! nominal laser/ring variations.
+//!
+//! Paper shapes: above the FSR (~8.96 nm) lane-order errors dominate;
+//! below it the scheme shows significant lock errors *even under ideal
+//! variations* (early rings steal tones from later ones).
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::coordinator::report::{curve_table, write_csv_series};
+use crate::coordinator::{Experiment, ExperimentReport, RunOptions};
+use crate::experiments::{point_seed, tr_sweep};
+use crate::model::VariationConfig;
+use crate::montecarlo::sweep::Series;
+use crate::montecarlo::cafp_tally;
+use crate::oblivious::Scheme;
+use crate::util::json::Json;
+
+pub struct Fig15;
+
+impl Experiment for Fig15 {
+    fn id(&self) -> &'static str {
+        "fig15"
+    }
+
+    fn title(&self) -> &'static str {
+        "Fig 15 — seq-tuning CAFP breakdown: lock errors vs wrong order"
+    }
+
+    fn run(&self, opts: &RunOptions) -> Result<ExperimentReport> {
+        let base = SystemConfig::default();
+        let tr_values = tr_sweep(base.grid.spacing_nm, if opts.fast { 0.5 } else { 0.25 });
+
+        let mut summary = String::new();
+        let mut files = Vec::new();
+        let mut json_panels = Vec::new();
+
+        let panels: Vec<(&str, SystemConfig)> = vec![
+            ("a_ideal_nn", with_var(&base, VariationConfig::ideal_fig15(2.24)), ),
+            ("b_ideal_pp", with_var(&base.clone().with_permuted_orders(), VariationConfig::ideal_fig15(2.24))),
+            ("c_nominal_nn", base.clone()),
+            ("d_nominal_pp", base.clone().with_permuted_orders()),
+        ];
+
+        for (pi, (tag, cfg)) in panels.into_iter().enumerate() {
+            let mut lock = Vec::with_capacity(tr_values.len());
+            let mut order = Vec::with_capacity(tr_values.len());
+            let mut total = Vec::with_capacity(tr_values.len());
+            for (i, &tr) in tr_values.iter().enumerate() {
+                let tally = cafp_tally(
+                    &cfg,
+                    Scheme::Sequential,
+                    tr,
+                    opts.n_lasers,
+                    opts.n_rows,
+                    point_seed(opts, self.id(), pi * 10_000 + i),
+                    opts.threads,
+                );
+                lock.push(tally.lock_error_rate());
+                order.push(tally.lane_order_rate());
+                total.push(tally.cafp());
+            }
+            let series = vec![
+                Series::new("lock_error", tr_values.clone(), lock),
+                Series::new("wrong_order", tr_values.clone(), order),
+                Series::new("cafp_total", tr_values.clone(), total),
+            ];
+            let path = opts.out_dir.join(format!("fig15_{tag}.csv"));
+            files.push(write_csv_series(&path, "tr_nm", &series)?);
+            summary.push_str(&format!("panel {tag}:\n"));
+            summary.push_str(&curve_table("tr_nm", &series, 10));
+
+            // Shape check: lane-order dominance above the FSR.
+            let fsr = cfg.fsr_mean_nm;
+            let above: Vec<usize> = tr_values
+                .iter()
+                .enumerate()
+                .filter(|(_, &t)| t > fsr + 0.5)
+                .map(|(i, _)| i)
+                .collect();
+            if !above.is_empty() {
+                let lane_dom = above
+                    .iter()
+                    .filter(|&&i| series[1].y[i] >= series[0].y[i])
+                    .count();
+                summary.push_str(&format!(
+                    "  wrong-order >= lock-error above FSR: {}/{} points\n",
+                    lane_dom,
+                    above.len()
+                ));
+            }
+            summary.push('\n');
+            json_panels.push(Json::obj(vec![
+                ("panel", Json::str(tag)),
+                ("tr_nm", Json::arr_f64(&tr_values)),
+                ("lock_error", Json::arr_f64(&series[0].y)),
+                ("wrong_order", Json::arr_f64(&series[1].y)),
+                ("cafp_total", Json::arr_f64(&series[2].y)),
+            ]));
+        }
+        Ok(ExperimentReport { id: self.id(), summary, files, json: Json::Arr(json_panels) })
+    }
+}
+
+fn with_var(cfg: &SystemConfig, var: VariationConfig) -> SystemConfig {
+    let mut c = cfg.clone();
+    c.variation = var;
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig15_fast_run() {
+        let dir = std::env::temp_dir().join(format!("wdm-fig15-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let opts = RunOptions {
+            out_dir: dir.clone(),
+            n_lasers: 5,
+            n_rows: 5,
+            fast: true,
+            ..RunOptions::fast()
+        };
+        let rep = Fig15.run(&opts).unwrap();
+        for p in ["a_ideal_nn", "b_ideal_pp", "c_nominal_nn", "d_nominal_pp"] {
+            assert!(rep.summary.contains(p), "missing {p}");
+        }
+        assert_eq!(rep.files.len(), 4);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

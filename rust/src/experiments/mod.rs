@@ -1,0 +1,212 @@
+//! Paper experiments: one module per evaluation table/figure
+//! (DESIGN.md "Experiment index").
+
+pub mod fig04;
+pub mod fig05;
+pub mod fig06;
+pub mod fig07;
+pub mod fig08;
+pub mod fig14;
+pub mod fig15;
+pub mod fig16;
+pub mod power;
+pub mod tables;
+
+use crate::arbiter::Policy;
+use crate::config::SystemConfig;
+use crate::coordinator::{Experiment, RunOptions};
+use crate::model::system::SystemSampler;
+use crate::montecarlo::sweep::{Series, Shmoo};
+use crate::montecarlo::{afp_at, min_tr_complete, IdealEvaluator};
+use crate::oblivious::Scheme;
+use crate::rng::derive_seed;
+
+/// All registered experiments, in paper order.
+pub fn all_experiments() -> Vec<Box<dyn Experiment>> {
+    vec![
+        Box::new(tables::Table1),
+        Box::new(tables::Table2),
+        Box::new(fig04::Fig4),
+        Box::new(fig05::Fig5),
+        Box::new(fig06::Fig6),
+        Box::new(fig07::Fig7),
+        Box::new(fig08::Fig8),
+        Box::new(fig14::Fig14),
+        Box::new(fig15::Fig15),
+        Box::new(fig16::Fig16),
+        Box::new(power::PowerAnalysis),
+    ]
+}
+
+/// Find an experiment by id (`fig4`, `table1`, …).
+pub fn by_id(id: &str) -> Option<Box<dyn Experiment>> {
+    all_experiments().into_iter().find(|e| e.id() == id)
+}
+
+/// Deterministic seed for one sweep point of one experiment.
+pub fn point_seed(opts: &RunOptions, exp_id: &str, point: usize) -> u64 {
+    let tag = exp_id.bytes().fold(0u64, |acc, b| acc.wrapping_mul(131).wrapping_add(b as u64));
+    derive_seed(opts.seed, &[tag, point as u64])
+}
+
+/// Minimum tuning range for complete success, swept over configurations.
+///
+/// `make_cfg(v)` builds the system configuration at sweep value `v`; each
+/// point uses an independent derived population.
+pub fn min_tr_curve(
+    label: &str,
+    values: &[f64],
+    make_cfg: impl Fn(f64) -> SystemConfig,
+    policy: Policy,
+    opts: &RunOptions,
+    eval: &dyn IdealEvaluator,
+    exp_id: &str,
+    lane: usize,
+) -> Series {
+    let y: Vec<f64> = values
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            let cfg = make_cfg(v);
+            let sampler = SystemSampler::new(
+                &cfg,
+                opts.n_lasers,
+                opts.n_rows,
+                point_seed(opts, exp_id, lane * 10_000 + i),
+            );
+            min_tr_complete(&eval.min_trs(&cfg, &sampler, policy))
+        })
+        .collect();
+    Series::new(label, values.to_vec(), y)
+}
+
+/// AFP shmoo grids for several policies over σ_rLV × λ̄_TR, sharing one
+/// population (and one distance evaluation) per σ_rLV column.
+pub fn afp_shmoos(
+    cfg_base: &SystemConfig,
+    policies: &[Policy],
+    rlv_values: &[f64],
+    tr_values: &[f64],
+    opts: &RunOptions,
+    eval: &dyn IdealEvaluator,
+    exp_id: &str,
+) -> Vec<Shmoo> {
+    let mut shmoos: Vec<Shmoo> = policies
+        .iter()
+        .map(|p| Shmoo::new(format!("{p}"), rlv_values.to_vec(), tr_values.to_vec()))
+        .collect();
+    for (ix, &rlv) in rlv_values.iter().enumerate() {
+        let mut cfg = cfg_base.clone();
+        cfg.variation.ring_local_nm = rlv;
+        let sampler =
+            SystemSampler::new(&cfg, opts.n_lasers, opts.n_rows, point_seed(opts, exp_id, ix));
+        let min_trs = eval.min_trs_multi(&cfg, &sampler, policies);
+        for (k, trs) in min_trs.iter().enumerate() {
+            for (iy, &tr) in tr_values.iter().enumerate() {
+                shmoos[k].set(ix, iy, afp_at(trs, tr));
+            }
+        }
+    }
+    shmoos
+}
+
+/// CAFP shmoo of one scheme over σ_rLV × λ̄_TR (paper Figs 14/16).
+pub fn cafp_shmoo(
+    cfg_base: &SystemConfig,
+    scheme: Scheme,
+    rlv_values: &[f64],
+    tr_values: &[f64],
+    opts: &RunOptions,
+    exp_id: &str,
+    lane: usize,
+) -> Shmoo {
+    let mut shmoo = Shmoo::new(
+        format!("{} cafp", scheme.name()),
+        rlv_values.to_vec(),
+        tr_values.to_vec(),
+    );
+    for (ix, &rlv) in rlv_values.iter().enumerate() {
+        let mut cfg = cfg_base.clone();
+        cfg.variation.ring_local_nm = rlv;
+        for (iy, &tr) in tr_values.iter().enumerate() {
+            let tally = crate::montecarlo::cafp_tally(
+                &cfg,
+                scheme,
+                tr,
+                opts.n_lasers,
+                opts.n_rows,
+                point_seed(opts, exp_id, lane * 1_000_000 + ix * 1000 + iy),
+                opts.threads,
+            );
+            shmoo.set(ix, iy, tally.cafp());
+        }
+    }
+    shmoo
+}
+
+/// The paper's standard σ_rLV sweep: 0.25·λ_gS … 8·λ_gS.
+pub fn rlv_sweep(spacing_nm: f64, stride: f64) -> Vec<f64> {
+    crate::montecarlo::sweep::unit_multiples(spacing_nm, 0.25, 8.0, stride)
+}
+
+/// The paper's standard λ̄_TR sweep: 0.25·λ_gS … 9·λ_gS.
+pub fn tr_sweep(spacing_nm: f64, stride: f64) -> Vec<f64> {
+    crate::montecarlo::sweep::unit_multiples(spacing_nm, 0.25, 9.0, stride)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::montecarlo::RustIdeal;
+
+    #[test]
+    fn registry_contains_all_paper_artifacts() {
+        let ids: Vec<&str> = all_experiments().iter().map(|e| e.id()).collect();
+        for want in [
+            "table1", "table2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig14", "fig15", "fig16",
+        ] {
+            assert!(ids.contains(&want), "missing {want}");
+        }
+        assert!(by_id("fig4").is_some());
+        assert!(by_id("fig99").is_none());
+    }
+
+    #[test]
+    fn point_seed_distinct() {
+        let opts = RunOptions::fast();
+        assert_ne!(point_seed(&opts, "fig4", 0), point_seed(&opts, "fig4", 1));
+        assert_ne!(point_seed(&opts, "fig4", 0), point_seed(&opts, "fig5", 0));
+    }
+
+    #[test]
+    fn afp_shmoo_monotone_in_tr() {
+        // AFP can only decrease as the tuning range grows (same population).
+        let opts = RunOptions { n_lasers: 8, n_rows: 8, ..RunOptions::fast() };
+        let cfg = SystemConfig::default();
+        let eval = RustIdeal::default();
+        let shmoos = afp_shmoos(
+            &cfg,
+            &[Policy::LtC],
+            &[1.12, 2.24],
+            &[2.0, 4.0, 6.0, 9.0],
+            &opts,
+            &eval,
+            "test",
+        );
+        let s = &shmoos[0];
+        for ix in 0..2 {
+            for iy in 1..4 {
+                assert!(s.at(ix, iy) <= s.at(ix, iy - 1) + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn sweeps_match_paper_ranges() {
+        let r = rlv_sweep(1.12, 0.25);
+        assert!((r[0] - 0.28).abs() < 1e-12);
+        assert!((r.last().unwrap() - 8.96).abs() < 1e-9);
+        let t = tr_sweep(1.12, 0.25);
+        assert!((t.last().unwrap() - 10.08).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,108 @@
+//! Table I (model parameters) and Table II (arbitration test cases).
+
+use anyhow::Result;
+
+use crate::config::presets::table2_cases;
+use crate::config::SystemConfig;
+use crate::coordinator::{Experiment, ExperimentReport, RunOptions};
+use crate::util::json::Json;
+
+/// Table I: the default model parameters, as loaded by the code.
+pub struct Table1;
+
+impl Experiment for Table1 {
+    fn id(&self) -> &'static str {
+        "table1"
+    }
+
+    fn title(&self) -> &'static str {
+        "Table I — summary of model parameters"
+    }
+
+    fn run(&self, _opts: &RunOptions) -> Result<ExperimentReport> {
+        let c = SystemConfig::default();
+        let rows = vec![
+            ("N_ch", format!("{}", c.grid.n_ch), "Number of DWDM channels"),
+            ("lambda_gS", format!("{:.2} nm", c.grid.spacing_nm), "Grid spacing"),
+            ("lambda_rB", format!("{:.2} nm", c.ring_bias_nm), "Ring resonance bias (blue)"),
+            ("sigma_gO", format!("{:.1} nm", c.variation.grid_offset_nm), "Grid offset (laser+ring global)"),
+            ("sigma_lLV", format!("{:.0} %", c.variation.laser_local_frac * 100.0), "Laser local variation (of gS)"),
+            ("sigma_rLV", format!("{:.2} nm", c.variation.ring_local_nm), "Ring local resonance variation"),
+            ("fsr_mean", format!("{:.2} nm", c.fsr_mean_nm), "FSR mean"),
+            ("sigma_FSR", format!("{:.0} %", c.variation.fsr_frac * 100.0), "FSR variation"),
+            ("sigma_TR", format!("{:.0} %", c.variation.tr_frac * 100.0), "Tuning range variation"),
+            ("r_i", format!("{}", c.pre_fab_order), "Pre-fabrication spectral ordering"),
+            ("s_i", format!("{}", c.target_order), "Post-arbitration target ordering"),
+        ];
+        let mut summary = String::new();
+        for (sym, val, desc) in &rows {
+            summary.push_str(&format!("  {sym:>10} = {val:<10} {desc}\n"));
+        }
+        let json = Json::Obj(
+            rows.iter()
+                .map(|(sym, val, _)| (sym.to_string(), Json::str(val.clone())))
+                .collect(),
+        );
+        Ok(ExperimentReport { id: self.id(), summary, files: vec![], json })
+    }
+}
+
+/// Table II: the four arbitration test cases.
+pub struct Table2;
+
+impl Experiment for Table2 {
+    fn id(&self) -> &'static str {
+        "table2"
+    }
+
+    fn title(&self) -> &'static str {
+        "Table II — arbitration test parameters"
+    }
+
+    fn run(&self, _opts: &RunOptions) -> Result<ExperimentReport> {
+        let cases = table2_cases();
+        let mut summary = format!(
+            "  {:<10} {:<8} {:<10} {:<10}\n",
+            "case", "policy", "r_i", "s_i"
+        );
+        for c in &cases {
+            summary.push_str(&format!(
+                "  {:<10} {:<8} {:<10} {:<10}\n",
+                c.name,
+                format!("{}", c.policy),
+                c.pre_fab,
+                c.target
+            ));
+        }
+        let json = Json::Arr(
+            cases
+                .iter()
+                .map(|c| {
+                    Json::obj(vec![
+                        ("name", Json::str(c.name)),
+                        ("policy", Json::str(format!("{}", c.policy))),
+                        ("pre_fab", Json::str(c.pre_fab)),
+                        ("target", Json::str(c.target)),
+                    ])
+                })
+                .collect(),
+        );
+        Ok(ExperimentReport { id: self.id(), summary, files: vec![], json })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render() {
+        let opts = RunOptions::fast();
+        let t1 = Table1.run(&opts).unwrap();
+        assert!(t1.summary.contains("sigma_rLV"));
+        assert!(t1.summary.contains("2.24"));
+        let t2 = Table2.run(&opts).unwrap();
+        assert!(t2.summary.contains("LtA-N/A"));
+        assert!(t2.summary.contains("LtC-P/P"));
+    }
+}

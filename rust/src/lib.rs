@@ -1,0 +1,61 @@
+//! # wdm-arbiter
+//!
+//! Full-system reproduction of *"Scalable Wavelength Arbitration for
+//! Microring-based DWDM Transceivers"* (Choi & Stojanović, IEEE JLT,
+//! DOI 10.1109/JLT.2025.3549686).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer Rust + JAX + Pallas
+//! stack (see `DESIGN.md`):
+//!
+//! * [`model`] — wavelength-domain device models: DWDM grid, multi-wavelength
+//!   laser, microring row, uniform half-range variation sampling (paper §II-C,
+//!   Table I).
+//! * [`arbiter`] — the **ideal wavelength-aware arbitration model** (paper
+//!   §III-A): scaled mod-FSR distance matrix, per-policy minimum tuning range
+//!   (LtD / LtC / LtA incl. bottleneck bipartite matching).
+//! * [`oblivious`] — the **wavelength-oblivious substrate and algorithms**
+//!   (paper §V): tuner + optical-bus masking, wavelength-search tables,
+//!   Relation Search (RS), Variation-Tolerant RS, Single-Step Matching (SSM)
+//!   and the sequential Lock-to-Nearest baseline.
+//! * [`metrics`] — AFP / CAFP accumulators and failure classification
+//!   (paper §III, Fig 9(d–f)).
+//! * [`montecarlo`] — the 100×100 laser/ring-row cross sampler, parameter
+//!   sweeps and the thread-pool trial executor.
+//! * [`runtime`] — PJRT CPU runtime: loads the AOT-compiled JAX/Pallas ideal
+//!   model (`artifacts/ideal_n{8,16}.hlo.txt`) and batch-executes it from the
+//!   Rust hot path (Python is never on the request path).
+//! * [`experiments`] + [`coordinator`] — one module per paper figure/table,
+//!   an experiment registry, report writers (CSV / JSON / ASCII shmoo) and
+//!   the launcher used by the `wdm-arbiter` binary.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use wdm_arbiter::config::SystemConfig;
+//! use wdm_arbiter::model::SystemUnderTest;
+//! use wdm_arbiter::arbiter::{ideal, Policy};
+//! use wdm_arbiter::rng::Rng;
+//!
+//! let cfg = SystemConfig::default(); // Table I defaults (wdm8, 200 GHz)
+//! let mut rng = Rng::seed_from(42);
+//! let sut = SystemUnderTest::sample(&cfg, &mut rng);
+//! let dist = wdm_arbiter::arbiter::distance::scaled_distance_matrix(&sut);
+//! let min_tr = ideal::min_tuning_range(Policy::LtC, &dist, cfg.target_order.as_slice());
+//! println!("this trial needs a {min_tr:.2} nm mean tuning range under LtC");
+//! ```
+
+pub mod arbiter;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod montecarlo;
+pub mod oblivious;
+pub mod rng;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+
+/// Crate version, surfaced by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,184 @@
+//! `wdm-arbiter` — launcher for the wavelength-arbitration simulator.
+//!
+//! ```text
+//! wdm-arbiter list
+//! wdm-arbiter run <experiment|all> [--out DIR] [--fast] [--lasers N]
+//!                 [--rows N] [--seed S] [--threads T] [--backend rust|xla]
+//! wdm-arbiter arbitrate [--scheme seq|rs|vt-rs] [--tr NM] [--seed S]
+//!                       [--config FILE.toml] [--permuted]
+//! wdm-arbiter show-config [--cases] [--config FILE.toml]
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use wdm_arbiter::arbiter::{distance, ideal, Policy};
+use wdm_arbiter::config::presets::system_config_from_toml;
+use wdm_arbiter::config::SystemConfig;
+use wdm_arbiter::coordinator::{run_experiment, Backend, RunOptions};
+use wdm_arbiter::experiments::{all_experiments, by_id};
+use wdm_arbiter::model::SystemUnderTest;
+use wdm_arbiter::oblivious::{run_scheme, Scheme};
+use wdm_arbiter::rng::Rng;
+use wdm_arbiter::util::cli::Args;
+
+const USAGE: &str = "\
+wdm-arbiter — wavelength arbitration for microring-based DWDM transceivers
+(reproduction of Choi & Stojanovic, IEEE JLT 2025)
+
+USAGE:
+  wdm-arbiter list
+      List all reproducible paper experiments.
+  wdm-arbiter run <id|all> [--out DIR] [--fast] [--lasers N] [--rows N]
+                  [--seed S] [--threads T] [--backend rust|xla]
+      Regenerate a paper table/figure (default 100x100 trials per point).
+  wdm-arbiter arbitrate [--scheme seq|rs-ssm|vt-rs-ssm] [--tr NM] [--seed S]
+                  [--config FILE.toml] [--permuted]
+      Run a single arbitration trial end-to-end and print the outcome.
+  wdm-arbiter show-config [--cases] [--config FILE.toml]
+      Print the resolved system configuration (Table I) / test cases (Table II).
+";
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&argv) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn dispatch(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::parse(argv, &["fast", "cases", "permuted", "help"])
+        .map_err(|e| anyhow::anyhow!(e))?;
+    if args.flag("help") || args.positionals.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.positionals[0].as_str() {
+        "list" => cmd_list(),
+        "run" => cmd_run(&args),
+        "arbitrate" => cmd_arbitrate(&args),
+        "show-config" => cmd_show_config(&args),
+        other => {
+            println!("{USAGE}");
+            Err(anyhow::anyhow!("unknown subcommand '{other}'"))
+        }
+    }
+}
+
+fn cmd_list() -> anyhow::Result<()> {
+    println!("{:<8} {}", "id", "title");
+    for e in all_experiments() {
+        println!("{:<8} {}", e.id(), e.title());
+    }
+    Ok(())
+}
+
+fn options_from(args: &Args) -> anyhow::Result<RunOptions> {
+    let mut opts = if args.flag("fast") { RunOptions::fast() } else { RunOptions::default() };
+    opts.out_dir = PathBuf::from(args.get_or("out", "out"));
+    opts.n_lasers = args.get_usize("lasers", opts.n_lasers).map_err(anyhow::Error::msg)?;
+    opts.n_rows = args.get_usize("rows", opts.n_rows).map_err(anyhow::Error::msg)?;
+    opts.seed = args.get_u64("seed", opts.seed).map_err(anyhow::Error::msg)?;
+    opts.threads = args.get_usize("threads", opts.threads).map_err(anyhow::Error::msg)?;
+    if let Some(b) = args.get("backend") {
+        opts.backend =
+            Backend::by_name(b).ok_or_else(|| anyhow::anyhow!("unknown backend '{b}'"))?;
+    }
+    Ok(opts)
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let target = args
+        .positionals
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("run: expected an experiment id (see `list`)"))?;
+    let opts = options_from(args)?;
+    if target == "all" {
+        for e in all_experiments() {
+            run_experiment(e.as_ref(), &opts)?;
+        }
+        return Ok(());
+    }
+    let exp = by_id(target)
+        .ok_or_else(|| anyhow::anyhow!("unknown experiment '{target}' (see `list`)"))?;
+    run_experiment(exp.as_ref(), &opts)?;
+    Ok(())
+}
+
+fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            system_config_from_toml(&text).map_err(anyhow::Error::msg)?
+        }
+        None => SystemConfig::default(),
+    };
+    if args.flag("permuted") {
+        cfg = cfg.with_permuted_orders();
+    }
+    Ok(cfg)
+}
+
+fn cmd_arbitrate(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let scheme_name = args.get_or("scheme", "vt-rs-ssm");
+    let scheme = Scheme::by_name(scheme_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown scheme '{scheme_name}'"))?;
+    let tr = args.get_f64("tr", 6.0).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
+
+    let mut rng = Rng::seed_from(seed);
+    let sut = SystemUnderTest::sample(&cfg, &mut rng);
+    println!("system-under-test (center-relative nm):");
+    println!("  lasers: {:?}", rounded(&sut.laser.tones_nm));
+    println!("  rings:  {:?}", rounded(&sut.rings.resonance_nm));
+
+    let dist = distance::scaled_distance_matrix(&sut);
+    for policy in Policy::all() {
+        let out = ideal::arbitrate(policy, &dist, cfg.target_order.as_slice());
+        println!(
+            "ideal {policy}: min TR {:.2} nm -> assignment {:?} (feasible at {tr} nm: {})",
+            out.min_tr_nm,
+            out.assignment,
+            out.min_tr_nm <= tr
+        );
+    }
+    let res = run_scheme(scheme, &sut.laser, &sut.rings, &cfg.target_order, tr);
+    println!(
+        "oblivious {} at TR {tr} nm: {} -> {:?}",
+        scheme.name(),
+        res.class.name(),
+        res.assignment
+    );
+    Ok(())
+}
+
+fn cmd_show_config(args: &Args) -> anyhow::Result<()> {
+    if args.flag("cases") {
+        let exp = by_id("table2").expect("registered");
+        let rep = exp.run(&RunOptions::fast())?;
+        println!("{}", rep.summary);
+        return Ok(());
+    }
+    let cfg = load_config(args)?;
+    println!("grid:        {} ({} ch, {:.2} nm spacing)", cfg.grid.name(), cfg.grid.n_ch, cfg.grid.spacing_nm);
+    println!("ring bias:   {:.2} nm   fsr mean: {:.2} nm", cfg.ring_bias_nm, cfg.fsr_mean_nm);
+    println!(
+        "variation:   gO ±{} nm, lLV ±{}%, rLV ±{} nm, FSR ±{}%, TR ±{}%",
+        cfg.variation.grid_offset_nm,
+        cfg.variation.laser_local_frac * 100.0,
+        cfg.variation.ring_local_nm,
+        cfg.variation.fsr_frac * 100.0,
+        cfg.variation.tr_frac * 100.0,
+    );
+    println!("orders:      r_i = {}  s_i = {}", cfg.pre_fab_order, cfg.target_order);
+    Ok(())
+}
+
+fn rounded(v: &[f64]) -> Vec<f64> {
+    v.iter().map(|x| (x * 100.0).round() / 100.0).collect()
+}

@@ -1,0 +1,163 @@
+//! Robustness metrics (paper §III): Arbitration Failure Probability (AFP)
+//! and Conditional Arbitration Failure Probability (CAFP), plus the
+//! Fig 15 failure breakdown.
+
+use crate::oblivious::outcome::OutcomeClass;
+use crate::util::stats::wilson_interval;
+
+/// Tally of one experiment point (one policy/scheme at one parameter set).
+///
+/// AFP (Eq. §III-A) counts *policy-level* failures of the ideal
+/// wavelength-aware model; CAFP (Eq. 6) counts *algorithmic* failures given
+/// ideal success, with the total trial count as denominator for sampling
+/// stability. Total failure probability = AFP + CAFP (Eq. 7).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TrialTally {
+    pub trials: usize,
+    /// Ideal (policy-level) failures — AFP numerator.
+    pub policy_failures: usize,
+    /// Algorithm failed while ideal succeeded — CAFP numerator.
+    pub conditional_failures: usize,
+    /// Breakdown of conditional failures (Fig 15 buckets).
+    pub lock_errors: usize,
+    pub lane_order_errors: usize,
+}
+
+impl TrialTally {
+    /// Record one trial: did the ideal model succeed, and (if the algorithm
+    /// ran) how did it classify?
+    pub fn record(&mut self, ideal_success: bool, algorithm: Option<OutcomeClass>) {
+        self.trials += 1;
+        if !ideal_success {
+            self.policy_failures += 1;
+            return;
+        }
+        if let Some(class) = algorithm {
+            if class.is_failure() {
+                self.conditional_failures += 1;
+                if class.is_lock_error() {
+                    self.lock_errors += 1;
+                } else {
+                    self.lane_order_errors += 1;
+                }
+            }
+        }
+    }
+
+    /// Arbitration Failure Probability.
+    pub fn afp(&self) -> f64 {
+        ratio(self.policy_failures, self.trials)
+    }
+
+    /// Conditional Arbitration Failure Probability (total-trials
+    /// denominator, per paper Eq. 6 discussion).
+    pub fn cafp(&self) -> f64 {
+        ratio(self.conditional_failures, self.trials)
+    }
+
+    /// Total failure probability = AFP + CAFP (paper Eq. 7).
+    pub fn total_failure(&self) -> f64 {
+        self.afp() + self.cafp()
+    }
+
+    /// Fig 15 buckets, as probabilities over all trials.
+    pub fn lock_error_rate(&self) -> f64 {
+        ratio(self.lock_errors, self.trials)
+    }
+
+    pub fn lane_order_rate(&self) -> f64 {
+        ratio(self.lane_order_errors, self.trials)
+    }
+
+    /// 95 % Wilson interval on CAFP.
+    pub fn cafp_interval(&self) -> (f64, f64) {
+        wilson_interval(self.conditional_failures, self.trials)
+    }
+
+    /// 95 % Wilson interval on AFP.
+    pub fn afp_interval(&self) -> (f64, f64) {
+        wilson_interval(self.policy_failures, self.trials)
+    }
+
+    /// Merge tallies from parallel workers.
+    pub fn merge(&mut self, other: &TrialTally) {
+        self.trials += other.trials;
+        self.policy_failures += other.policy_failures;
+        self.conditional_failures += other.conditional_failures;
+        self.lock_errors += other.lock_errors;
+        self.lane_order_errors += other.lane_order_errors;
+    }
+}
+
+fn ratio(num: usize, den: usize) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn afp_cafp_decomposition() {
+        let mut t = TrialTally::default();
+        // 2 policy failures, 3 conditional failures, 5 clean successes.
+        for _ in 0..2 {
+            t.record(false, None);
+        }
+        for _ in 0..3 {
+            t.record(true, Some(OutcomeClass::DuplLock));
+        }
+        for _ in 0..5 {
+            t.record(true, Some(OutcomeClass::Success));
+        }
+        assert_eq!(t.trials, 10);
+        assert!((t.afp() - 0.2).abs() < 1e-12);
+        assert!((t.cafp() - 0.3).abs() < 1e-12);
+        assert!((t.total_failure() - 0.5).abs() < 1e-12);
+        assert!((t.lock_error_rate() - 0.3).abs() < 1e-12);
+        assert_eq!(t.lane_order_rate(), 0.0);
+    }
+
+    #[test]
+    fn policy_failure_not_double_counted() {
+        // When the ideal model fails, the algorithm inevitably fails too
+        // (P_alg|fail = 1, Eq. 7) but must NOT count toward CAFP.
+        let mut t = TrialTally::default();
+        t.record(false, Some(OutcomeClass::ZeroLock));
+        assert_eq!(t.policy_failures, 1);
+        assert_eq!(t.conditional_failures, 0);
+    }
+
+    #[test]
+    fn lane_order_bucket() {
+        let mut t = TrialTally::default();
+        t.record(true, Some(OutcomeClass::LaneOrder));
+        assert_eq!(t.lane_order_errors, 1);
+        assert_eq!(t.lock_errors, 0);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = TrialTally::default();
+        a.record(true, Some(OutcomeClass::Success));
+        let mut b = TrialTally::default();
+        b.record(false, None);
+        a.merge(&b);
+        assert_eq!(a.trials, 2);
+        assert_eq!(a.policy_failures, 1);
+    }
+
+    #[test]
+    fn intervals_bracket_estimates() {
+        let mut t = TrialTally::default();
+        for i in 0..100 {
+            t.record(true, Some(if i < 30 { OutcomeClass::ZeroLock } else { OutcomeClass::Success }));
+        }
+        let (lo, hi) = t.cafp_interval();
+        assert!(lo < 0.3 && 0.3 < hi);
+    }
+}

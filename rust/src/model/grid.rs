@@ -1,0 +1,99 @@
+//! DWDM grid geometry (paper Eq. (1): uniformly spaced tones around a
+//! center wavelength).
+
+/// DWDM grid: channel count and spacing. The grid center is the origin of
+/// the center-relative wavelength frame, so it never appears numerically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DwdmGrid {
+    /// Number of DWDM channels (`N_ch`, Table I default 8).
+    pub n_ch: usize,
+    /// Grid spacing `λ_gS` in nm (Table I default 1.12 nm ≈ 200 GHz O-band).
+    pub spacing_nm: f64,
+}
+
+impl DwdmGrid {
+    /// 8 channels at 200 GHz (1.12 nm) — Table I default.
+    pub fn wdm8_g200() -> Self {
+        Self { n_ch: 8, spacing_nm: 1.12 }
+    }
+
+    /// 16 channels at 200 GHz.
+    pub fn wdm16_g200() -> Self {
+        Self { n_ch: 16, spacing_nm: 1.12 }
+    }
+
+    /// 8 channels at 400 GHz (2.24 nm).
+    pub fn wdm8_g400() -> Self {
+        Self { n_ch: 8, spacing_nm: 2.24 }
+    }
+
+    /// 16 channels at 400 GHz.
+    pub fn wdm16_g400() -> Self {
+        Self { n_ch: 16, spacing_nm: 2.24 }
+    }
+
+    /// Named config used in Fig 5 legends ("wdm8-200g" etc.).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "wdm8-200g" => Some(Self::wdm8_g200()),
+            "wdm8-400g" => Some(Self::wdm8_g400()),
+            "wdm16-200g" => Some(Self::wdm16_g200()),
+            "wdm16-400g" => Some(Self::wdm16_g400()),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        let g = if (self.spacing_nm - 1.12).abs() < 1e-9 {
+            "200g"
+        } else if (self.spacing_nm - 2.24).abs() < 1e-9 {
+            "400g"
+        } else {
+            return format!("wdm{}-{:.2}nm", self.n_ch, self.spacing_nm);
+        };
+        format!("wdm{}-{}", self.n_ch, g)
+    }
+
+    /// Center-relative position of grid slot `i` (paper Eq. (1) without the
+    /// center term): `(i − (N_ch − 1)/2) · λ_gS`.
+    #[inline]
+    pub fn slot_nm(&self, i: usize) -> f64 {
+        (i as f64 - (self.n_ch as f64 - 1.0) / 2.0) * self.spacing_nm
+    }
+
+    /// Nominal FSR that exactly tiles the grid: `N_ch · λ_gS` (paper §II-C).
+    #[inline]
+    pub fn nominal_fsr_nm(&self) -> f64 {
+        self.n_ch as f64 * self.spacing_nm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slots_are_centered_and_spaced() {
+        let g = DwdmGrid::wdm8_g200();
+        let slots: Vec<f64> = (0..8).map(|i| g.slot_nm(i)).collect();
+        let sum: f64 = slots.iter().sum();
+        assert!(sum.abs() < 1e-12, "grid must be centered, sum={sum}");
+        for w in slots.windows(2) {
+            assert!((w[1] - w[0] - 1.12).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn nominal_fsr_tiles_grid() {
+        assert!((DwdmGrid::wdm8_g200().nominal_fsr_nm() - 8.96).abs() < 1e-12);
+        assert!((DwdmGrid::wdm16_g400().nominal_fsr_nm() - 35.84).abs() < 1e-12);
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for name in ["wdm8-200g", "wdm8-400g", "wdm16-200g", "wdm16-400g"] {
+            assert_eq!(DwdmGrid::by_name(name).unwrap().name(), name);
+        }
+        assert!(DwdmGrid::by_name("wdm4-100g").is_none());
+    }
+}

@@ -1,0 +1,90 @@
+//! Multi-wavelength-laser (MWL) model (paper Eq. (1) and (3)).
+
+use crate::model::{DwdmGrid, VariationConfig};
+use crate::rng::Rng;
+
+/// One sampled multi-wavelength laser: `N_ch` tone wavelengths,
+/// center-relative nm, index-ordered (tone `i` is the i-th grid slot; local
+/// variation is bounded by ±σ_lLV·λ_gS ≤ 0.45·λ_gS in all experiments, so
+/// index order equals wavelength order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MwlSample {
+    pub tones_nm: Vec<f64>,
+    /// The sampled grid offset Δ_gO that was applied (kept for diagnostics).
+    pub grid_offset_nm: f64,
+}
+
+impl MwlSample {
+    /// Paper Eq. (3): `λ_laser,i = slot_i + Δ_gO + Δ_lLV,i` (center-relative).
+    pub fn sample(grid: &DwdmGrid, var: &VariationConfig, rng: &mut Rng) -> Self {
+        let offset = rng.half_range(var.grid_offset_nm);
+        let local_half = var.laser_local_frac * grid.spacing_nm;
+        let tones_nm = (0..grid.n_ch)
+            .map(|i| grid.slot_nm(i) + offset + rng.half_range(local_half))
+            .collect();
+        Self { tones_nm, grid_offset_nm: offset }
+    }
+
+    /// Pre-fabrication / specification tones (paper Eq. (1)): no variation.
+    pub fn nominal(grid: &DwdmGrid) -> Self {
+        Self {
+            tones_nm: (0..grid.n_ch).map(|i| grid.slot_nm(i)).collect(),
+            grid_offset_nm: 0.0,
+        }
+    }
+
+    #[inline]
+    pub fn n_ch(&self) -> usize {
+        self.tones_nm.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tones_monotone_under_default_variation() {
+        let grid = DwdmGrid::wdm8_g200();
+        let var = VariationConfig::default();
+        let mut rng = Rng::seed_from(11);
+        for _ in 0..200 {
+            let mwl = MwlSample::sample(&grid, &var, &mut rng);
+            for w in mwl.tones_nm.windows(2) {
+                assert!(w[1] > w[0], "tones must stay index-ordered");
+            }
+        }
+    }
+
+    #[test]
+    fn offset_bounded() {
+        let grid = DwdmGrid::wdm8_g200();
+        let var = VariationConfig::default();
+        let mut rng = Rng::seed_from(12);
+        for _ in 0..200 {
+            let mwl = MwlSample::sample(&grid, &var, &mut rng);
+            assert!(mwl.grid_offset_nm.abs() <= var.grid_offset_nm);
+        }
+    }
+
+    #[test]
+    fn nominal_is_grid() {
+        let grid = DwdmGrid::wdm8_g200();
+        let mwl = MwlSample::nominal(&grid);
+        assert!((mwl.tones_nm[0] + 3.5 * 1.12).abs() < 1e-12);
+        assert!((mwl.tones_nm[7] - 3.5 * 1.12).abs() < 1e-12);
+    }
+
+    #[test]
+    fn local_variation_bounded() {
+        let grid = DwdmGrid::wdm8_g200();
+        let var = VariationConfig { grid_offset_nm: 0.0, ..VariationConfig::default() };
+        let mut rng = Rng::seed_from(13);
+        for _ in 0..500 {
+            let mwl = MwlSample::sample(&grid, &var, &mut rng);
+            for (i, &t) in mwl.tones_nm.iter().enumerate() {
+                assert!((t - grid.slot_nm(i)).abs() <= 0.25 * grid.spacing_nm + 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Wavelength-domain device models (paper §II, Fig 2, Table I).
+//!
+//! Everything is expressed **center-relative** (λ − λ_center) in nanometers:
+//! the paper notes only relative distances matter for arbitration, and the
+//! center-relative frame keeps f32 artifacts numerically safe (DESIGN.md).
+
+pub mod grid;
+pub mod laser;
+pub mod ordering;
+pub mod ring;
+pub mod system;
+pub mod variation;
+
+pub use grid::DwdmGrid;
+pub use laser::MwlSample;
+pub use ordering::SpectralOrdering;
+pub use ring::RingRowSample;
+pub use system::SystemUnderTest;
+pub use variation::VariationConfig;

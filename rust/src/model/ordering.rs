@@ -1,0 +1,182 @@
+//! Microring spectral orderings (paper §II-C, Table I/II).
+//!
+//! An ordering is a permutation `o` of `0..N`, where `o[i]` is the
+//! wavelength-domain (spectral) position of the *i*-th **physical** ring
+//! (ring `Ri` is the i-th closest to the light input). The paper uses two
+//! named instances: *Natural* `(0, 1, …, N−1)` and *Permuted*
+//! `(0, N/2, 1, N/2+1, …)`.
+
+use std::fmt;
+
+/// A spectral ordering: a permutation over `0..N`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpectralOrdering(Vec<usize>);
+
+impl SpectralOrdering {
+    /// Natural ordering `(0, 1, 2, …, N−1)`.
+    pub fn natural(n: usize) -> Self {
+        Self((0..n).collect())
+    }
+
+    /// Permuted ordering `(0, N/2, 1, N/2+1, …)` (paper §IV): physical ring
+    /// 2k sits at spectral slot k, ring 2k+1 at slot N/2 + k.
+    pub fn permuted(n: usize) -> Self {
+        let mut v = vec![0usize; n];
+        let half = n / 2;
+        for k in 0..n {
+            v[k] = if k % 2 == 0 { k / 2 } else { half + k / 2 };
+        }
+        Self(v)
+    }
+
+    /// Build from an explicit permutation; returns `None` if not a
+    /// permutation of `0..len`.
+    pub fn from_vec(v: Vec<usize>) -> Option<Self> {
+        let n = v.len();
+        let mut seen = vec![false; n];
+        for &x in &v {
+            if x >= n || seen[x] {
+                return None;
+            }
+            seen[x] = true;
+        }
+        Some(Self(v))
+    }
+
+    pub fn by_name(name: &str, n: usize) -> Option<Self> {
+        match name {
+            "natural" | "N" => Some(Self::natural(n)),
+            "permuted" | "P" => Some(Self::permuted(n)),
+            _ => None,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[usize] {
+        &self.0
+    }
+
+    /// Spectral slot of physical ring `i`.
+    #[inline]
+    pub fn slot_of(&self, ring: usize) -> usize {
+        self.0[ring]
+    }
+
+    /// Inverse permutation: `ring_at(k)` is the physical ring occupying
+    /// spectral slot `k`. Useful for walking rings in target-order
+    /// (paper §V-B pairs rings by spectral adjacency).
+    pub fn ring_at_slots(&self) -> Vec<usize> {
+        let mut inv = vec![0usize; self.0.len()];
+        for (ring, &slot) in self.0.iter().enumerate() {
+            inv[slot] = ring;
+        }
+        inv
+    }
+
+    /// Is `assignment` (laser index per physical ring) exactly this
+    /// ordering? (Lock-to-Deterministic check.)
+    pub fn matches_exact(&self, assignment: &[usize]) -> bool {
+        assignment.len() == self.0.len() && assignment == self.0.as_slice()
+    }
+
+    /// Is `assignment` a cyclic shift of this ordering, i.e.
+    /// `assignment[i] = (o[i] + c) mod N` for some constant `c`?
+    /// (Lock-to-Cyclic check, paper §II-B.)
+    pub fn matches_cyclic(&self, assignment: &[usize]) -> Option<usize> {
+        let n = self.0.len();
+        if assignment.len() != n || n == 0 {
+            return None;
+        }
+        let c = (assignment[0] + n - self.0[0]) % n;
+        for i in 0..n {
+            if assignment[i] != (self.0[i] + c) % n {
+                return None;
+            }
+        }
+        Some(c)
+    }
+
+    /// Is `assignment` *any* complete one-to-one assignment?
+    /// (Lock-to-Any check.)
+    pub fn matches_any(assignment: &[usize]) -> bool {
+        let n = assignment.len();
+        let mut seen = vec![false; n];
+        for &a in assignment {
+            if a >= n || seen[a] {
+                return false;
+            }
+            seen[a] = true;
+        }
+        true
+    }
+}
+
+impl fmt::Display for SpectralOrdering {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(")?;
+        for (k, v) in self.0.iter().enumerate() {
+            if k > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{v}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permuted_matches_paper_example() {
+        // Paper Fig 14 caption: P = (0, 4, 1, 5, 2, 6, 3, 7) for 8 channels.
+        assert_eq!(
+            SpectralOrdering::permuted(8).as_slice(),
+            &[0, 4, 1, 5, 2, 6, 3, 7]
+        );
+    }
+
+    #[test]
+    fn cyclic_equivalence() {
+        let nat = SpectralOrdering::natural(4);
+        assert_eq!(nat.matches_cyclic(&[2, 3, 0, 1]), Some(2));
+        assert_eq!(nat.matches_cyclic(&[0, 1, 2, 3]), Some(0));
+        assert_eq!(nat.matches_cyclic(&[2, 0, 1, 3]), None);
+    }
+
+    #[test]
+    fn exact_and_any() {
+        let nat = SpectralOrdering::natural(4);
+        assert!(nat.matches_exact(&[0, 1, 2, 3]));
+        assert!(!nat.matches_exact(&[1, 2, 3, 0]));
+        assert!(SpectralOrdering::matches_any(&[2, 0, 1, 3]));
+        assert!(!SpectralOrdering::matches_any(&[2, 0, 1, 1]));
+    }
+
+    #[test]
+    fn inverse_round_trips() {
+        let p = SpectralOrdering::permuted(8);
+        let inv = p.ring_at_slots();
+        for slot in 0..8 {
+            assert_eq!(p.slot_of(inv[slot]), slot);
+        }
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(SpectralOrdering::from_vec(vec![0, 2, 1]).is_some());
+        assert!(SpectralOrdering::from_vec(vec![0, 2, 2]).is_none());
+        assert!(SpectralOrdering::from_vec(vec![0, 3, 1]).is_none());
+    }
+}

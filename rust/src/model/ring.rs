@@ -1,0 +1,155 @@
+//! Microring-resonator row model (paper Eq. (2), (4), (5)).
+
+use crate::model::{DwdmGrid, SpectralOrdering, VariationConfig};
+use crate::rng::Rng;
+
+/// One sampled microring row.
+///
+/// `resonance_nm[i]` is the **post-fabrication, untuned** resonance of the
+/// i-th physical ring (center-relative nm, paper Eq. (4)); thermal tuning
+/// red-shifts it by a heat `h ∈ [0, TR_i]`, with FSR-periodic images
+/// (paper Eq. (5)). `TR_i = λ̄_TR · tr_scale[i]` where the mean tuning range
+/// `λ̄_TR` is a sweep parameter supplied at evaluation time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RingRowSample {
+    pub resonance_nm: Vec<f64>,
+    pub fsr_nm: Vec<f64>,
+    /// Multiplicative TR variation factor `1 + u_i · σ_TR`, `u ∈ [−1, 1)`.
+    pub tr_scale: Vec<f64>,
+}
+
+impl RingRowSample {
+    /// Paper Eq. (4): `λ_ring,i = slot(r_i) − λ_rB + Δ_rLV,i` plus sampled
+    /// per-ring FSR and TR-scale variation.
+    pub fn sample(
+        grid: &DwdmGrid,
+        pre_fab_order: &SpectralOrdering,
+        ring_bias_nm: f64,
+        fsr_mean_nm: f64,
+        var: &VariationConfig,
+        rng: &mut Rng,
+    ) -> Self {
+        let n = grid.n_ch;
+        assert_eq!(pre_fab_order.len(), n, "ordering must cover all rings");
+        let mut resonance_nm = Vec::with_capacity(n);
+        let mut fsr_nm = Vec::with_capacity(n);
+        let mut tr_scale = Vec::with_capacity(n);
+        for i in 0..n {
+            let slot = grid.slot_nm(pre_fab_order.slot_of(i));
+            resonance_nm.push(slot - ring_bias_nm + rng.half_range(var.ring_local_nm));
+            fsr_nm.push(fsr_mean_nm * (1.0 + rng.half_range(var.fsr_frac)));
+            tr_scale.push(1.0 + rng.half_range(var.tr_frac));
+        }
+        Self { resonance_nm, fsr_nm, tr_scale }
+    }
+
+    /// Pre-fabrication row (paper Eq. (2)): design intent, no variation.
+    pub fn nominal(
+        grid: &DwdmGrid,
+        pre_fab_order: &SpectralOrdering,
+        ring_bias_nm: f64,
+        fsr_mean_nm: f64,
+    ) -> Self {
+        let n = grid.n_ch;
+        Self {
+            resonance_nm: (0..n)
+                .map(|i| grid.slot_nm(pre_fab_order.slot_of(i)) - ring_bias_nm)
+                .collect(),
+            fsr_nm: vec![fsr_mean_nm; n],
+            tr_scale: vec![1.0; n],
+        }
+    }
+
+    #[inline]
+    pub fn n_rings(&self) -> usize {
+        self.resonance_nm.len()
+    }
+
+    /// Actual tuning range of ring `i` at mean tuning range `mean_tr_nm`.
+    #[inline]
+    pub fn tuning_range_nm(&self, i: usize, mean_tr_nm: f64) -> f64 {
+        mean_tr_nm * self.tr_scale[i]
+    }
+
+    /// Can ring `i` reach wavelength `lambda_nm` at `mean_tr_nm`?
+    /// Membership in the union-of-intervals Λ_TR,i of paper Eq. (5).
+    pub fn can_reach(&self, i: usize, lambda_nm: f64, mean_tr_nm: f64) -> bool {
+        let d = red_shift_distance(lambda_nm - self.resonance_nm[i], self.fsr_nm[i]);
+        d <= self.tuning_range_nm(i, mean_tr_nm)
+    }
+}
+
+/// Minimal non-negative red-shift distance modulo the FSR:
+/// `(delta mod fsr)` folded into `[0, fsr)`. This is the core wavelength
+/// arithmetic shared by the ideal arbiter and the oblivious substrate.
+#[inline]
+pub fn red_shift_distance(delta_nm: f64, fsr_nm: f64) -> f64 {
+    debug_assert!(fsr_nm > 0.0);
+    let r = delta_nm % fsr_nm;
+    if r < 0.0 {
+        r + fsr_nm
+    } else {
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid() -> DwdmGrid {
+        DwdmGrid::wdm8_g200()
+    }
+
+    #[test]
+    fn red_shift_distance_folds() {
+        assert!((red_shift_distance(1.0, 8.96) - 1.0).abs() < 1e-12);
+        assert!((red_shift_distance(-1.0, 8.96) - 7.96).abs() < 1e-12);
+        assert!((red_shift_distance(9.96, 8.96) - 1.0).abs() < 1e-12);
+        assert!(red_shift_distance(0.0, 8.96).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nominal_row_is_biased_blue() {
+        let row = RingRowSample::nominal(&grid(), &SpectralOrdering::natural(8), 4.48, 8.96);
+        for i in 0..8 {
+            assert!((row.resonance_nm[i] - (grid().slot_nm(i) - 4.48)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn permuted_pre_fab_order_places_rings() {
+        let ord = SpectralOrdering::permuted(8);
+        let row = RingRowSample::nominal(&grid(), &ord, 0.0, 8.96);
+        // Physical ring 1 sits at spectral slot 4.
+        assert!((row.resonance_nm[1] - grid().slot_nm(4)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampled_variations_bounded() {
+        let var = VariationConfig::default();
+        let mut rng = crate::rng::Rng::seed_from(5);
+        for _ in 0..100 {
+            let row = RingRowSample::sample(&grid(), &SpectralOrdering::natural(8), 4.48, 8.96, &var, &mut rng);
+            for i in 0..8 {
+                let nominal = grid().slot_nm(i) - 4.48;
+                assert!((row.resonance_nm[i] - nominal).abs() <= var.ring_local_nm + 1e-12);
+                assert!((row.fsr_nm[i] / 8.96 - 1.0).abs() <= var.fsr_frac + 1e-12);
+                assert!((row.tr_scale[i] - 1.0).abs() <= var.tr_frac + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn can_reach_respects_tr_and_fsr() {
+        let row = RingRowSample::nominal(&grid(), &SpectralOrdering::natural(8), 0.0, 8.96);
+        // Ring 0 at slot 0 (-3.92). Target 1 nm red: reachable iff TR >= 1.
+        let target = row.resonance_nm[0] + 1.0;
+        assert!(row.can_reach(0, target, 1.0));
+        assert!(!row.can_reach(0, target, 0.99));
+        // Blue target wraps around the FSR: needs fsr - 1 = 7.96.
+        let blue = row.resonance_nm[0] - 1.0;
+        assert!(!row.can_reach(0, blue, 7.0));
+        assert!(row.can_reach(0, blue, 7.97));
+    }
+}

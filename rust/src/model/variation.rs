@@ -1,0 +1,80 @@
+//! Device-variation model (paper §II-C, Fig 2, Table I).
+//!
+//! All variations are **uniform** with σ denoting the *half-range* of the
+//! distribution — the paper's conservative approximation of a trimmed
+//! Gaussian, chosen for sample-efficient exploration of statistical bounds.
+//!
+//! Global laser/ring variations are merged into a single *grid offset*
+//! (σ_gO = σ_lGV + σ_rGV, linear sum per the paper's footnote 4) applied to
+//! the laser grid without loss of generality.
+
+/// Variation half-ranges. Defaults are Table I.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VariationConfig {
+    /// Grid offset σ_gO between microring row and laser grid, nm
+    /// (Table I: 15 nm = 9 nm laser global + 6 nm ring global).
+    pub grid_offset_nm: f64,
+    /// Laser local variation σ_lLV as a *fraction of the grid spacing*
+    /// (Table I: 25 % of λ_gS — the CW-WDM MSA channel bandwidth).
+    pub laser_local_frac: f64,
+    /// Microring local resonance variation σ_rLV, nm (Table I default
+    /// 2.24 nm = 2 × λ_gS; swept 0.28–8.96 nm in most experiments).
+    pub ring_local_nm: f64,
+    /// FSR variation σ_FSR as a fraction of the FSR mean (Table I: 1 %).
+    pub fsr_frac: f64,
+    /// Tuning-range variation σ_TR as a fraction of the tuning-range mean
+    /// (Table I: 10 %, from tuner-circuit PVT).
+    pub tr_frac: f64,
+}
+
+impl Default for VariationConfig {
+    fn default() -> Self {
+        Self {
+            grid_offset_nm: 15.0,
+            laser_local_frac: 0.25,
+            ring_local_nm: 2.24,
+            fsr_frac: 0.01,
+            tr_frac: 0.10,
+        }
+    }
+}
+
+impl VariationConfig {
+    /// The paper's "ideal laser/microring" setting for Fig 15(a,b):
+    /// σ_gO = 0 and all other variations at 0.1 %.
+    pub fn ideal_fig15(ring_local_nm: f64) -> Self {
+        Self {
+            grid_offset_nm: 0.0,
+            laser_local_frac: 0.001,
+            ring_local_nm,
+            fsr_frac: 0.001,
+            tr_frac: 0.001,
+        }
+    }
+
+    /// No variation at all (unit tests / analytical checks).
+    pub fn zero() -> Self {
+        Self {
+            grid_offset_nm: 0.0,
+            laser_local_frac: 0.0,
+            ring_local_nm: 0.0,
+            fsr_frac: 0.0,
+            tr_frac: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_defaults() {
+        let v = VariationConfig::default();
+        assert_eq!(v.grid_offset_nm, 15.0);
+        assert_eq!(v.laser_local_frac, 0.25);
+        assert_eq!(v.ring_local_nm, 2.24);
+        assert_eq!(v.fsr_frac, 0.01);
+        assert_eq!(v.tr_frac, 0.10);
+    }
+}

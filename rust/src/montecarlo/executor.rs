@@ -1,0 +1,123 @@
+//! Leader/worker thread-pool execution for Monte-Carlo populations.
+//!
+//! The offline environment has no rayon/tokio (DESIGN.md "Substitutions"),
+//! so this is a small `std::thread::scope`-based fork-join: the leader
+//! splits the index range into contiguous chunks, workers fill disjoint
+//! slices, and results come back in deterministic index order regardless of
+//! scheduling.
+
+/// Number of workers to use: `threads` if nonzero, else all available cores.
+pub fn effective_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+}
+
+/// Map `f` over `0..n` in parallel, preserving index order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Send + Sync,
+{
+    let workers = effective_threads(threads).min(n.max(1));
+    let mut out = vec![T::default(); n];
+    if n == 0 {
+        return out;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (w, slice) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                let base = w * chunk;
+                for (i, slot) in slice.iter_mut().enumerate() {
+                    *slot = f(base + i);
+                }
+            });
+        }
+    });
+    out
+}
+
+/// Fold `0..n` into per-worker accumulators (one per chunk), returned in
+/// chunk order. Use when the reduction is cheap to merge (e.g.
+/// [`crate::metrics::TrialTally`]).
+pub fn parallel_map_chunked<A, I, F>(n: usize, threads: usize, init: I, fold: F) -> Vec<A>
+where
+    A: Send,
+    I: Fn() -> A + Send + Sync,
+    F: Fn(&mut A, usize) + Send + Sync,
+{
+    let workers = effective_threads(threads).min(n.max(1));
+    let chunk = n.div_ceil(workers);
+    let mut accs: Vec<A> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let lo = w * chunk;
+            let hi = ((w + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let init = &init;
+            let fold = &fold;
+            handles.push(scope.spawn(move || {
+                let mut acc = init();
+                for t in lo..hi {
+                    fold(&mut acc, t);
+                }
+                acc
+            }));
+        }
+        for h in handles {
+            accs.push(h.join().expect("worker panicked"));
+        }
+    });
+    accs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(1000, 4, |i| i * 2);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 2);
+        }
+    }
+
+    #[test]
+    fn map_single_thread_matches_parallel() {
+        let a = parallel_map(257, 1, |i| i as f64 * 0.5);
+        let b = parallel_map(257, 8, |i| i as f64 * 0.5);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn chunked_fold_covers_all_indices() {
+        let accs = parallel_map_chunked(1003, 5, Vec::new, |v: &mut Vec<usize>, i| v.push(i));
+        let mut all: Vec<usize> = accs.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..1003).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_range() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+        let accs = parallel_map_chunked(0, 4, || 0usize, |a, _| *a += 1);
+        assert!(accs.len() <= 1);
+    }
+
+    #[test]
+    fn effective_threads_positive() {
+        assert!(effective_threads(0) >= 1);
+        assert_eq!(effective_threads(3), 3);
+    }
+}

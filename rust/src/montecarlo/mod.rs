@@ -1,0 +1,266 @@
+//! Monte-Carlo trial engine (paper Fig 3 + §IV/§V-D methodology).
+//!
+//! Experiments sample `n_lasers × n_rows` systems-under-test (the paper uses
+//! 100 × 100 = 10,000 trials per point) and evaluate:
+//!
+//! * **policy robustness** — per-trial minimum mean tuning range under the
+//!   ideal wavelength-aware model ([`policy_min_trs`]); AFP at any swept
+//!   λ̄_TR then falls out by thresholding ([`afp_at`]), and the paper's
+//!   "minimum tuning range for complete arbitration success" is the
+//!   population max ([`min_tr_complete`]).
+//! * **algorithm robustness** — CAFP of a wavelength-oblivious scheme
+//!   against the ideal LtC condition ([`cafp_tally`]).
+
+pub mod executor;
+pub mod sweep;
+
+use crate::arbiter::distance::{scaled_distance_parts, DistanceMatrix};
+use crate::arbiter::{ideal, Policy};
+use crate::config::SystemConfig;
+use crate::metrics::TrialTally;
+use crate::model::system::SystemSampler;
+use crate::oblivious::{run_scheme, Scheme};
+
+/// Evaluates per-trial ideal-model minimum tuning ranges over a population.
+///
+/// Two implementations exist: the pure-Rust f64 oracle ([`RustIdeal`]) and
+/// the PJRT-backed accelerated model (`runtime::accel::XlaIdeal`) that runs
+/// the AOT-compiled JAX/Pallas artifact.
+///
+/// Deliberately NOT `Send`/`Sync`: the PJRT client is single-threaded
+/// (`Rc` internals); parallelism lives *inside* each implementation
+/// (thread-pool population loop for Rust, batched tensor execution for XLA).
+pub trait IdealEvaluator {
+    /// `out[t]` = minimum mean tuning range of trial `t` under `policy`.
+    fn min_trs(&self, cfg: &SystemConfig, sampler: &SystemSampler, policy: Policy) -> Vec<f64>;
+
+    /// Evaluate several policies over the *same* population, sharing the
+    /// per-trial distance computation where the backend allows.
+    fn min_trs_multi(
+        &self,
+        cfg: &SystemConfig,
+        sampler: &SystemSampler,
+        policies: &[Policy],
+    ) -> Vec<Vec<f64>> {
+        policies
+            .iter()
+            .map(|&p| self.min_trs(cfg, sampler, p))
+            .collect()
+    }
+
+    /// Human-readable backend name (reports/benches).
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust f64 reference implementation of the ideal model.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RustIdeal {
+    /// Worker threads for the population loop (0 = all cores).
+    pub threads: usize,
+}
+
+impl IdealEvaluator for RustIdeal {
+    fn min_trs(&self, cfg: &SystemConfig, sampler: &SystemSampler, policy: Policy) -> Vec<f64> {
+        let order = cfg.target_order.as_slice();
+        // Per-worker scratch distance matrix: no allocation in the trial
+        // loop (§Perf).
+        let chunks = executor::parallel_map_chunked(
+            sampler.n_trials(),
+            self.threads,
+            || (crate::arbiter::distance::DistanceMatrix { n: 0, d: Vec::new() }, Vec::new()),
+            |(scratch, out): &mut (crate::arbiter::distance::DistanceMatrix, Vec<f64>), t| {
+                let (laser, rings) = sampler.trial(t);
+                crate::arbiter::distance::scaled_distance_into(laser, rings, scratch);
+                out.push(ideal::min_tuning_range(policy, scratch, order));
+            },
+        );
+        chunks.into_iter().flat_map(|(_, out)| out).collect()
+    }
+
+    fn min_trs_multi(
+        &self,
+        cfg: &SystemConfig,
+        sampler: &SystemSampler,
+        policies: &[Policy],
+    ) -> Vec<Vec<f64>> {
+        let order = cfg.target_order.as_slice();
+        // One distance matrix per trial, all policy reductions on top.
+        let chunks = executor::parallel_map_chunked(
+            sampler.n_trials(),
+            self.threads,
+            || (crate::arbiter::distance::DistanceMatrix { n: 0, d: Vec::new() }, Vec::new()),
+            |(scratch, rows): &mut (crate::arbiter::distance::DistanceMatrix, Vec<Vec<f64>>), t| {
+                let (laser, rings) = sampler.trial(t);
+                crate::arbiter::distance::scaled_distance_into(laser, rings, scratch);
+                rows.push(
+                    policies
+                        .iter()
+                        .map(|&p| ideal::min_tuning_range(p, scratch, order))
+                        .collect(),
+                );
+            },
+        );
+        let rows: Vec<Vec<f64>> = chunks.into_iter().flat_map(|(_, rows)| rows).collect();
+        transpose(rows, policies.len())
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-f64"
+    }
+}
+
+fn transpose(rows: Vec<Vec<f64>>, width: usize) -> Vec<Vec<f64>> {
+    let mut out = vec![Vec::with_capacity(rows.len()); width];
+    for row in rows {
+        for (k, v) in row.into_iter().enumerate() {
+            out[k].push(v);
+        }
+    }
+    out
+}
+
+/// Alias-aware per-trial min tuning ranges (paper §IV-D / Fig 8): like
+/// [`RustIdeal`] but invalidating channel-colliding assignments via
+/// [`crate::arbiter::distance::alias_aware_distance_parts`]. Trials where
+/// no collision-free assignment exists return `f64::INFINITY` — complete
+/// arbitration success is unreachable at any tuning range.
+pub fn alias_aware_min_trs(
+    cfg: &SystemConfig,
+    sampler: &SystemSampler,
+    policy: Policy,
+    eps_nm: f64,
+    threads: usize,
+) -> Vec<f64> {
+    let order = cfg.target_order.as_slice();
+    executor::parallel_map(sampler.n_trials(), threads, |t| {
+        let (laser, rings) = sampler.trial(t);
+        let dist = crate::arbiter::distance::alias_aware_distance_parts(laser, rings, eps_nm);
+        ideal::min_tuning_range(policy, &dist, order)
+    })
+}
+
+/// Per-trial ideal min tuning ranges for `policy` over a fresh population.
+pub fn policy_min_trs(
+    cfg: &SystemConfig,
+    policy: Policy,
+    n_lasers: usize,
+    n_rows: usize,
+    seed: u64,
+    eval: &dyn IdealEvaluator,
+) -> Vec<f64> {
+    let sampler = SystemSampler::new(cfg, n_lasers, n_rows, seed);
+    eval.min_trs(cfg, &sampler, policy)
+}
+
+/// AFP at mean tuning range `tr`: fraction of trials needing more than `tr`.
+pub fn afp_at(min_trs: &[f64], tr: f64) -> f64 {
+    if min_trs.is_empty() {
+        return 0.0;
+    }
+    min_trs.iter().filter(|&&m| m > tr).count() as f64 / min_trs.len() as f64
+}
+
+/// Minimum mean tuning range achieving *complete* arbitration success
+/// (AFP = 0) over the population: the per-trial maximum (paper Fig 5).
+pub fn min_tr_complete(min_trs: &[f64]) -> f64 {
+    min_trs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// CAFP of `scheme` at mean tuning range `tr` against the ideal LtC
+/// condition, over an `n_lasers × n_rows` population.
+pub fn cafp_tally(
+    cfg: &SystemConfig,
+    scheme: Scheme,
+    tr: f64,
+    n_lasers: usize,
+    n_rows: usize,
+    seed: u64,
+    threads: usize,
+) -> TrialTally {
+    let sampler = SystemSampler::new(cfg, n_lasers, n_rows, seed);
+    let order = cfg.target_order.as_slice();
+    let tallies = executor::parallel_map_chunked(
+        sampler.n_trials(),
+        threads,
+        TrialTally::default,
+        |tally: &mut TrialTally, t: usize| {
+            let (laser, rings) = sampler.trial(t);
+            let dist: DistanceMatrix = scaled_distance_parts(laser, rings);
+            let ideal_ok = ideal::min_tuning_range(Policy::LtC, &dist, order) <= tr;
+            let class = if ideal_ok {
+                // Only pay for the oblivious simulation when the trial can
+                // conditionally fail (CAFP conditions on ideal success).
+                Some(run_scheme(scheme, laser, rings, &cfg.target_order, tr).class)
+            } else {
+                None
+            };
+            tally.record(ideal_ok, class);
+        },
+    );
+    let mut total = TrialTally::default();
+    for t in &tallies {
+        total.merge(t);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn afp_thresholding() {
+        let min_trs = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(afp_at(&min_trs, 2.5), 0.5);
+        assert_eq!(afp_at(&min_trs, 4.0), 0.0);
+        assert_eq!(afp_at(&min_trs, 0.5), 1.0);
+        assert_eq!(min_tr_complete(&min_trs), 4.0);
+    }
+
+    #[test]
+    fn rust_ideal_reproducible_and_policy_ordered() {
+        let cfg = SystemConfig::default();
+        let eval = RustIdeal { threads: 2 };
+        let a = policy_min_trs(&cfg, Policy::LtC, 5, 5, 7, &eval);
+        let b = policy_min_trs(&cfg, Policy::LtC, 5, 5, 7, &eval);
+        assert_eq!(a, b);
+        let lta = policy_min_trs(&cfg, Policy::LtA, 5, 5, 7, &eval);
+        let ltd = policy_min_trs(&cfg, Policy::LtD, 5, 5, 7, &eval);
+        for i in 0..a.len() {
+            assert!(lta[i] <= a[i] + 1e-12);
+            assert!(a[i] <= ltd[i] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn cafp_tally_consistency() {
+        let cfg = SystemConfig::default();
+        let tally = cafp_tally(&cfg, Scheme::VtRsSsm, 6.0, 10, 10, 3, 2);
+        assert_eq!(tally.trials, 100);
+        // Conditional failures cannot exceed ideal successes.
+        assert!(tally.conditional_failures <= tally.trials - tally.policy_failures);
+        // Probabilities in range.
+        assert!((0.0..=1.0).contains(&tally.total_failure()));
+    }
+
+    #[test]
+    fn vt_rs_ssm_tracks_ideal_closely() {
+        // The paper's headline: VT-RS/SSM approximates ideal LtC (CAFP ≈ 0
+        // under Table-I defaults).
+        let cfg = SystemConfig::default();
+        let tally = cafp_tally(&cfg, Scheme::VtRsSsm, 6.0, 20, 20, 11, 0);
+        assert!(
+            tally.cafp() < 0.01,
+            "VT-RS/SSM CAFP should be ~0, got {}",
+            tally.cafp()
+        );
+    }
+
+    #[test]
+    fn sequential_is_much_worse() {
+        let cfg = SystemConfig::default();
+        let vt = cafp_tally(&cfg, Scheme::VtRsSsm, 6.0, 15, 15, 13, 0);
+        let seq = cafp_tally(&cfg, Scheme::Sequential, 6.0, 15, 15, 13, 0);
+        assert!(seq.cafp() > vt.cafp() + 0.2, "seq {} vt {}", seq.cafp(), vt.cafp());
+    }
+}

@@ -1,0 +1,140 @@
+//! Parameter sweeps: 1-D curves and 2-D shmoo grids, matching the axes the
+//! paper uses (σ_rLV, λ̄_TR, σ_gO, σ_lLV, σ_TR, σ_FSR, λ̄_FSR).
+
+/// Inclusive linear sweep with `steps` points.
+pub fn linspace(lo: f64, hi: f64, steps: usize) -> Vec<f64> {
+    assert!(steps >= 1);
+    if steps == 1 {
+        return vec![lo];
+    }
+    (0..steps)
+        .map(|i| lo + (hi - lo) * i as f64 / (steps - 1) as f64)
+        .collect()
+}
+
+/// Sweep in integer multiples of a unit (the paper steps σ_rLV and λ̄_TR in
+/// multiples of λ_gS): `unit × {k_lo, …, k_hi}` with stride `k_step`.
+pub fn unit_multiples(unit: f64, k_lo: f64, k_hi: f64, k_step: f64) -> Vec<f64> {
+    let mut out = Vec::new();
+    let mut k = k_lo;
+    while k <= k_hi + 1e-9 {
+        out.push(unit * k);
+        k += k_step;
+    }
+    out
+}
+
+/// A labelled 1-D series: `y[i]` measured at `x[i]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Series {
+    pub label: String,
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>, x: Vec<f64>, y: Vec<f64>) -> Self {
+        assert_eq!(x.len(), y.len());
+        Self { label: label.into(), x, y }
+    }
+
+    /// Least-squares slope of y against x (used to verify the paper's
+    /// "ramp slope ≈ 2" / "≈ 1" claims).
+    pub fn slope(&self) -> f64 {
+        slope_of(&self.x, &self.y)
+    }
+
+    /// Slope restricted to points with `x` in `[lo, hi]`.
+    pub fn slope_in(&self, lo: f64, hi: f64) -> f64 {
+        let (xs, ys): (Vec<f64>, Vec<f64>) = self
+            .x
+            .iter()
+            .zip(&self.y)
+            .filter(|(x, _)| **x >= lo && **x <= hi)
+            .map(|(x, y)| (*x, *y))
+            .unzip();
+        slope_of(&xs, &ys)
+    }
+}
+
+fn slope_of(x: &[f64], y: &[f64]) -> f64 {
+    let n = x.len() as f64;
+    if x.len() < 2 {
+        return 0.0;
+    }
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let num: f64 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let den: f64 = x.iter().map(|a| (a - mx) * (a - mx)).sum();
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+/// A 2-D shmoo grid: `cell(ix, iy)` measured at `(x[ix], y[iy])`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Shmoo {
+    pub label: String,
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+    /// Row-major `[iy][ix]`, flattened.
+    pub cells: Vec<f64>,
+}
+
+impl Shmoo {
+    pub fn new(label: impl Into<String>, x: Vec<f64>, y: Vec<f64>) -> Self {
+        let cells = vec![0.0; x.len() * y.len()];
+        Self { label: label.into(), x, y, cells }
+    }
+
+    #[inline]
+    pub fn at(&self, ix: usize, iy: usize) -> f64 {
+        self.cells[iy * self.x.len() + ix]
+    }
+
+    #[inline]
+    pub fn set(&mut self, ix: usize, iy: usize, v: f64) {
+        let w = self.x.len();
+        self.cells[iy * w + ix] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linspace_endpoints() {
+        let v = linspace(1.0, 3.0, 5);
+        assert_eq!(v, vec![1.0, 1.5, 2.0, 2.5, 3.0]);
+        assert_eq!(linspace(2.0, 9.0, 1), vec![2.0]);
+    }
+
+    #[test]
+    fn unit_multiples_match_paper_sweeps() {
+        // σ_rLV default sweep: 0.25×λ_gS … 8×λ_gS.
+        let v = unit_multiples(1.12, 0.25, 8.0, 0.25);
+        assert!((v[0] - 0.28).abs() < 1e-12);
+        assert!((v.last().unwrap() - 8.96).abs() < 1e-9);
+        assert_eq!(v.len(), 32);
+    }
+
+    #[test]
+    fn slope_recovers_linear() {
+        let x = linspace(0.0, 10.0, 11);
+        let y: Vec<f64> = x.iter().map(|v| 2.0 * v + 1.0).collect();
+        let s = Series::new("lin", x, y);
+        assert!((s.slope() - 2.0).abs() < 1e-12);
+        assert!((s.slope_in(2.0, 8.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shmoo_indexing() {
+        let mut s = Shmoo::new("t", vec![0.0, 1.0], vec![0.0, 1.0, 2.0]);
+        s.set(1, 2, 7.0);
+        assert_eq!(s.at(1, 2), 7.0);
+        assert_eq!(s.cells.len(), 6);
+    }
+}

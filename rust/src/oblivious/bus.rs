@@ -1,0 +1,155 @@
+//! Optical bus lock state with physical capture priority.
+//!
+//! Light enters at ring 0 and propagates downstream (paper Fig 1(a)): a
+//! locked ring strips its tone from the bus, so the tone is invisible to
+//! every ring *after* it. Rings physically before the locked ring still see
+//! the tone. This is the precedence the Relation Search exploits ("light
+//! propagating downstream first interacts with microrings physically closer
+//! to the light input, granting them priority" — paper §V-B).
+
+use crate::model::ring::red_shift_distance;
+use crate::model::{MwlSample, RingRowSample};
+
+/// Tone-alignment tolerance for lock adjudication (nm). Heats in this
+/// substrate are exact, so this only guards float arithmetic.
+pub const LOCK_EPS_NM: f64 = 1e-6;
+
+/// Lock state of the microring row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bus {
+    /// Per-ring locked heat (None = parked / not tuned).
+    locked_heat: Vec<Option<f64>>,
+    /// Per-ring captured tone index, derived at lock time.
+    locked_tone: Vec<Option<usize>>,
+}
+
+impl Bus {
+    pub fn new(n_rings: usize) -> Self {
+        Self {
+            locked_heat: vec![None; n_rings],
+            locked_tone: vec![None; n_rings],
+        }
+    }
+
+    /// Lock `ring` at `heat_nm`. The captured tone (if the tuned resonance
+    /// aligns with one that actually reaches this ring) is recorded.
+    /// Returns the captured tone.
+    pub fn lock(
+        &mut self,
+        laser: &MwlSample,
+        rings: &RingRowSample,
+        ring: usize,
+        heat_nm: f64,
+    ) -> Option<usize> {
+        let tone = aligned_tone(laser, rings, ring, heat_nm).filter(|&t| {
+            // A tone already stripped upstream cannot be captured here.
+            self.tone_visible_to(ring, t)
+        });
+        self.locked_heat[ring] = Some(heat_nm);
+        self.locked_tone[ring] = tone;
+        tone
+    }
+
+    pub fn unlock(&mut self, ring: usize) {
+        self.locked_heat[ring] = None;
+        self.locked_tone[ring] = None;
+    }
+
+    pub fn locked_heat(&self, ring: usize) -> Option<f64> {
+        self.locked_heat[ring]
+    }
+
+    pub fn locked_tone(&self, ring: usize) -> Option<usize> {
+        self.locked_tone[ring]
+    }
+
+    /// Is `tone` still on the bus when it reaches `ring`? (No ring
+    /// physically upstream of `ring` holds it.)
+    pub fn tone_visible_to(&self, ring: usize, tone: usize) -> bool {
+        !self.locked_tone[..ring].iter().any(|&t| t == Some(tone))
+    }
+}
+
+/// Which tone does ring `ring` align with at `heat_nm`? Checks every FSR
+/// image of the tuned resonance.
+pub fn aligned_tone(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    ring: usize,
+    heat_nm: f64,
+) -> Option<usize> {
+    let res = rings.resonance_nm[ring] ;
+    let fsr = rings.fsr_nm[ring];
+    for (j, &tone) in laser.tones_nm.iter().enumerate() {
+        // Alignment ⟺ red-shift distance from the *untuned* resonance to the
+        // tone equals the heat modulo the FSR.
+        let d = red_shift_distance(tone - res, fsr);
+        let m = (heat_nm - d).rem_euclid(fsr);
+        if m < LOCK_EPS_NM || (fsr - m) < LOCK_EPS_NM {
+            return Some(j);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::model::SpectralOrdering;
+
+    fn nominal() -> (MwlSample, RingRowSample) {
+        let cfg = SystemConfig::default();
+        (
+            MwlSample::nominal(&cfg.grid),
+            RingRowSample::nominal(&cfg.grid, &SpectralOrdering::natural(8), cfg.ring_bias_nm, cfg.fsr_mean_nm),
+        )
+    }
+
+    #[test]
+    fn lock_captures_aligned_tone() {
+        let (laser, rings) = nominal();
+        let mut bus = Bus::new(8);
+        // Ring 0 is 4.48 blue of tone 0.
+        assert_eq!(bus.lock(&laser, &rings, 0, 4.48), Some(0));
+        assert_eq!(bus.locked_tone(0), Some(0));
+        assert!(!bus.tone_visible_to(1, 0));
+        assert!(bus.tone_visible_to(0, 0)); // ring 0 itself still sees it
+    }
+
+    #[test]
+    fn lock_off_grid_captures_nothing() {
+        let (laser, rings) = nominal();
+        let mut bus = Bus::new(8);
+        assert_eq!(bus.lock(&laser, &rings, 0, 4.48 + 0.3), None);
+        assert!(bus.tone_visible_to(1, 0));
+    }
+
+    #[test]
+    fn upstream_capture_blocks_downstream_lock() {
+        let (laser, rings) = nominal();
+        let mut bus = Bus::new(8);
+        assert_eq!(bus.lock(&laser, &rings, 0, 4.48), Some(0));
+        // Ring 1 tries to grab tone 0 (heat = 4.48 − 1.12 = 3.36): tone is
+        // already stripped upstream, so the lock captures nothing.
+        assert_eq!(bus.lock(&laser, &rings, 1, 3.36), None);
+    }
+
+    #[test]
+    fn unlock_restores_visibility() {
+        let (laser, rings) = nominal();
+        let mut bus = Bus::new(8);
+        bus.lock(&laser, &rings, 0, 4.48);
+        bus.unlock(0);
+        assert!(bus.tone_visible_to(7, 0));
+        assert_eq!(bus.locked_heat(0), None);
+    }
+
+    #[test]
+    fn aligned_tone_respects_fsr_images() {
+        let (laser, rings) = nominal();
+        // Heat = 4.48 + FSR also aligns ring 0 with tone 0 (next image).
+        assert_eq!(aligned_tone(&laser, &rings, 0, 4.48 + 8.96), Some(0));
+        assert_eq!(aligned_tone(&laser, &rings, 0, 1.0), None);
+    }
+}

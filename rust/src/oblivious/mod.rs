@@ -1,0 +1,123 @@
+//! The wavelength-oblivious arbitration substrate and algorithms
+//! (paper §V).
+//!
+//! Nothing in this module may look at absolute wavelengths to make
+//! decisions: algorithms operate purely on per-microring *search tables*
+//! (tuner codes at which the wavelength sweep saw a peak) and on the
+//! outcomes of aggressor-injection experiments. Hidden tone identities are
+//! carried alongside for *adjudication only* (`outcome::classify`), mirroring
+//! how the paper scores trials against the wavelength-aware ideal model.
+//!
+//! Submodules:
+//! * [`search`] — tuner model + wavelength search → [`search::SearchTable`].
+//! * [`bus`] — optical-bus lock state with physical-position capture
+//!   priority (upstream locked rings mask tones downstream).
+//! * [`relation`] — unit/full Relation Search (RS) and the
+//!   Variation-Tolerant RS (VT-RS) of §V-B.
+//! * [`ssm`] — Lock-Allocation-Table construction + Single-Step Matching
+//!   (§V-C, Fig 12/13) including φ-cluster handling.
+//! * [`sequential`] — the sequential Lock-to-Nearest baseline (§V-D).
+//! * [`outcome`] — final-lock adjudication and failure classification
+//!   (Fig 9(c–f): Success / Dupl-Lock / Zero-Lock / Lane-Order).
+
+pub mod bus;
+pub mod outcome;
+pub mod relation;
+pub mod search;
+pub mod sequential;
+pub mod ssm;
+
+use crate::model::{MwlSample, RingRowSample, SpectralOrdering};
+
+/// Wavelength-oblivious arbitration scheme (paper §V-D names).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Sequential Lock-to-Nearest tuning — the baseline.
+    Sequential,
+    /// Relation Search + Single-Step Matching.
+    RsSsm,
+    /// Variation-Tolerant Relation Search + Single-Step Matching.
+    VtRsSsm,
+}
+
+impl Scheme {
+    pub fn all() -> [Scheme; 3] {
+        [Scheme::Sequential, Scheme::RsSsm, Scheme::VtRsSsm]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Sequential => "seq-tuning",
+            Scheme::RsSsm => "rs-ssm",
+            Scheme::VtRsSsm => "vt-rs-ssm",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Scheme> {
+        match name {
+            "seq-tuning" | "seq" | "sequential" => Some(Scheme::Sequential),
+            "rs-ssm" | "rs" => Some(Scheme::RsSsm),
+            "vt-rs-ssm" | "vt-rs" | "vtrs" => Some(Scheme::VtRsSsm),
+            _ => None,
+        }
+    }
+}
+
+/// Run one wavelength-oblivious arbitration trial end-to-end and adjudicate
+/// the final locks. `mean_tr_nm` is the mean microring tuning range λ̄_TR.
+pub fn run_scheme(
+    scheme: Scheme,
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    target_order: &SpectralOrdering,
+    mean_tr_nm: f64,
+) -> outcome::ArbitrationResult {
+    let heats = match scheme {
+        Scheme::Sequential => sequential::arbitrate(laser, rings, target_order, mean_tr_nm),
+        Scheme::RsSsm | Scheme::VtRsSsm => {
+            let probes = if scheme == Scheme::RsSsm {
+                relation::ProbeSet::FirstLast
+            } else {
+                relation::ProbeSet::FirstLastSecond
+            };
+            let rel =
+                relation::full_record_phase(laser, rings, target_order, mean_tr_nm, probes);
+            let plan = ssm::match_phase(&rel);
+            // Realize the lock plan: entry index → tuner heat.
+            plan.iter()
+                .enumerate()
+                .map(|(i, e)| e.map(|idx| rel.tables[i].entries[idx].heat_nm))
+                .collect()
+        }
+    };
+    outcome::classify(laser, rings, &heats, target_order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::model::SystemUnderTest;
+    use crate::rng::Rng;
+
+    #[test]
+    fn scheme_names_round_trip() {
+        for s in Scheme::all() {
+            assert_eq!(Scheme::by_name(s.name()), Some(s));
+        }
+        assert_eq!(Scheme::by_name("bogus"), None);
+    }
+
+    #[test]
+    fn all_schemes_run_and_classify() {
+        let cfg = SystemConfig::default();
+        let mut rng = Rng::seed_from(42);
+        for _ in 0..20 {
+            let sut = SystemUnderTest::sample(&cfg, &mut rng);
+            for scheme in Scheme::all() {
+                let res = run_scheme(scheme, &sut.laser, &sut.rings, &cfg.target_order, 6.0);
+                assert_eq!(res.assignment.len(), 8);
+            }
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Final-lock adjudication and failure classification (paper Fig 9(c–f)).
+//!
+//! Given the heats each ring ended up locked at, the adjudicator (which IS
+//! wavelength-aware, like the paper's simulator) determines which tone each
+//! ring sits on and classifies the trial:
+//!
+//! * **Success** — complete, collision-free, and cyclically equivalent to
+//!   the target spectral ordering (the LtC contract).
+//! * **Dupl-Lock** — ≥ 2 microrings assigned to the same wavelength.
+//! * **Zero-Lock** — ≥ 1 microring assigned to no wavelength.
+//! * **Lane-Order** — complete and collision-free, but the realized
+//!   spectral ordering is not a cyclic shift of the target.
+
+use crate::model::{MwlSample, RingRowSample, SpectralOrdering};
+use crate::oblivious::bus::aligned_tone;
+
+/// Trial classification (Fig 9(c–f)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OutcomeClass {
+    Success,
+    DuplLock,
+    ZeroLock,
+    LaneOrder,
+}
+
+impl OutcomeClass {
+    pub fn is_failure(&self) -> bool {
+        *self != OutcomeClass::Success
+    }
+
+    /// Fig 15 buckets: zero- and duplicate-lock are "Lock Error", lane-order
+    /// mismatch is "Wrong Order".
+    pub fn is_lock_error(&self) -> bool {
+        matches!(self, OutcomeClass::DuplLock | OutcomeClass::ZeroLock)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OutcomeClass::Success => "success",
+            OutcomeClass::DuplLock => "dupl-lock",
+            OutcomeClass::ZeroLock => "zero-lock",
+            OutcomeClass::LaneOrder => "lane-order",
+        }
+    }
+}
+
+/// Adjudicated result of one wavelength-oblivious arbitration trial.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArbitrationResult {
+    /// Tone captured per physical ring (`None` = no wavelength).
+    pub assignment: Vec<Option<usize>>,
+    pub class: OutcomeClass,
+}
+
+impl ArbitrationResult {
+    pub fn succeeded(&self) -> bool {
+        self.class == OutcomeClass::Success
+    }
+}
+
+/// Adjudicate final locks. `heats[i]` is ring `i`'s applied heat.
+pub fn classify(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    heats: &[Option<f64>],
+    target_order: &SpectralOrdering,
+) -> ArbitrationResult {
+    let n = rings.n_rings();
+    debug_assert_eq!(heats.len(), n);
+    let assignment: Vec<Option<usize>> = (0..n)
+        .map(|i| heats[i].and_then(|h| aligned_tone(laser, rings, i, h)))
+        .collect();
+
+    // Zero-lock: any ring without a tone.
+    if assignment.iter().any(|a| a.is_none()) {
+        return ArbitrationResult { assignment, class: OutcomeClass::ZeroLock };
+    }
+    let tones: Vec<usize> = assignment.iter().map(|a| a.unwrap()).collect();
+
+    // Dupl-lock: any tone taken twice.
+    let mut seen = vec![false; laser.n_ch()];
+    for &t in &tones {
+        if seen[t] {
+            return ArbitrationResult { assignment, class: OutcomeClass::DuplLock };
+        }
+        seen[t] = true;
+    }
+
+    // Lane-order: complete + unique but not cyclically equivalent.
+    let class = if target_order.matches_cyclic(&tones).is_some() {
+        OutcomeClass::Success
+    } else {
+        OutcomeClass::LaneOrder
+    };
+    ArbitrationResult { assignment, class }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::model::SpectralOrdering;
+
+    fn nominal() -> (MwlSample, RingRowSample) {
+        let cfg = SystemConfig::default();
+        (
+            MwlSample::nominal(&cfg.grid),
+            RingRowSample::nominal(&cfg.grid, &SpectralOrdering::natural(8), 0.5, cfg.fsr_mean_nm),
+        )
+    }
+
+    fn heat_for(laser: &MwlSample, rings: &RingRowSample, ring: usize, tone: usize) -> f64 {
+        crate::model::ring::red_shift_distance(
+            laser.tones_nm[tone] - rings.resonance_nm[ring],
+            rings.fsr_nm[ring],
+        )
+    }
+
+    #[test]
+    fn identity_assignment_succeeds() {
+        let (laser, rings) = nominal();
+        let order = SpectralOrdering::natural(8);
+        let heats: Vec<Option<f64>> =
+            (0..8).map(|i| Some(heat_for(&laser, &rings, i, i))).collect();
+        let res = classify(&laser, &rings, &heats, &order);
+        assert_eq!(res.class, OutcomeClass::Success);
+        assert_eq!(res.assignment, (0..8).map(Some).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn cyclic_shift_succeeds() {
+        let (laser, rings) = nominal();
+        let order = SpectralOrdering::natural(8);
+        let heats: Vec<Option<f64>> = (0..8)
+            .map(|i| Some(heat_for(&laser, &rings, i, (i + 3) % 8)))
+            .collect();
+        assert_eq!(classify(&laser, &rings, &heats, &order).class, OutcomeClass::Success);
+    }
+
+    #[test]
+    fn missing_lock_is_zero_lock() {
+        let (laser, rings) = nominal();
+        let order = SpectralOrdering::natural(8);
+        let mut heats: Vec<Option<f64>> =
+            (0..8).map(|i| Some(heat_for(&laser, &rings, i, i))).collect();
+        heats[3] = None;
+        assert_eq!(classify(&laser, &rings, &heats, &order).class, OutcomeClass::ZeroLock);
+    }
+
+    #[test]
+    fn off_tone_lock_is_zero_lock() {
+        let (laser, rings) = nominal();
+        let order = SpectralOrdering::natural(8);
+        let mut heats: Vec<Option<f64>> =
+            (0..8).map(|i| Some(heat_for(&laser, &rings, i, i))).collect();
+        heats[3] = Some(heats[3].unwrap() + 0.4); // parked between tones
+        assert_eq!(classify(&laser, &rings, &heats, &order).class, OutcomeClass::ZeroLock);
+    }
+
+    #[test]
+    fn duplicate_is_dupl_lock() {
+        let (laser, rings) = nominal();
+        let order = SpectralOrdering::natural(8);
+        let mut heats: Vec<Option<f64>> =
+            (0..8).map(|i| Some(heat_for(&laser, &rings, i, i))).collect();
+        heats[1] = Some(heat_for(&laser, &rings, 1, 0)); // rings 0 & 1 on tone 0
+        assert_eq!(classify(&laser, &rings, &heats, &order).class, OutcomeClass::DuplLock);
+    }
+
+    #[test]
+    fn shuffled_complete_assignment_is_lane_order() {
+        let (laser, rings) = nominal();
+        let order = SpectralOrdering::natural(8);
+        // Swap tones of rings 0 and 1: complete, unique, not cyclic.
+        let mut tones: Vec<usize> = (0..8).collect();
+        tones.swap(0, 1);
+        let heats: Vec<Option<f64>> = (0..8)
+            .map(|i| Some(heat_for(&laser, &rings, i, tones[i])))
+            .collect();
+        assert_eq!(classify(&laser, &rings, &heats, &order).class, OutcomeClass::LaneOrder);
+    }
+
+    #[test]
+    fn fig15_buckets() {
+        assert!(OutcomeClass::DuplLock.is_lock_error());
+        assert!(OutcomeClass::ZeroLock.is_lock_error());
+        assert!(!OutcomeClass::LaneOrder.is_lock_error());
+        assert!(OutcomeClass::LaneOrder.is_failure());
+        assert!(!OutcomeClass::Success.is_failure());
+    }
+}

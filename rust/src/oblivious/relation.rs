@@ -1,0 +1,351 @@
+//! Relation Search (paper §V-B, Figs 10–11).
+//!
+//! The record phase runs `N_ch` *full relation searches*, one per pair of
+//! spectrally-adjacent microrings (adjacency from the target ordering
+//! `s_i`). A full search is built from *unit* searches: the physically
+//! upstream ring of the pair (the **aggressor**) locks to a chosen entry of
+//! its search table, "injecting" aggression; the downstream **victim**
+//! re-sweeps and diffs its table — a disappeared (masked) entry reveals a
+//! wavelength correspondence, the **Relation Index**.
+//!
+//! Probe strategy:
+//! * RS   — aggressor Lock-to-Last, then Lock-to-First (Fig 11(a,b)).
+//! * VT-RS — additionally Lock-to-Second when both fail (Fig 11(c,d):
+//!   extreme FSR / tuning-range variation).
+//!
+//! Combine rule (paper footnote 8): candidates that agree modulo `N_ch`
+//! yield the valid RI; a single valid candidate is used as-is; no candidate
+//! is the φ (Relation-NULL) outcome; *disagreeing* candidates are a hard
+//! search failure.
+
+use crate::model::{MwlSample, RingRowSample, SpectralOrdering};
+use crate::oblivious::bus::Bus;
+use crate::oblivious::search::{initial_tables, SearchTable};
+
+/// Which aggressor entries a full relation search probes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeSet {
+    /// Standard RS: Lock-to-Last then Lock-to-First.
+    FirstLast,
+    /// VT-RS: Lock-to-Last, Lock-to-First, then Lock-to-Second.
+    FirstLastSecond,
+}
+
+/// Outcome of one full relation search over a ring pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RelationOutcome {
+    /// Relation index found. The value is the *offset delta along the
+    /// target-order chain*: `off[to] = off[from] + delta` in
+    /// Lock-Allocation-Table row coordinates.
+    Found(i64),
+    /// φ: no relation (pair looks spectrally disjoint / clustered apart).
+    Null,
+    /// Probes disagreed (mod `N_ch`) — hard search failure for the trial.
+    Failed,
+}
+
+/// Record-phase result handed to the matching phase.
+#[derive(Debug, Clone)]
+pub struct RecordPhase {
+    /// Initial (unmasked) search tables, one per physical ring.
+    pub tables: Vec<SearchTable>,
+    /// Rings in target-spectral order: `chain[k]` is the physical ring at
+    /// spectral slot `k`.
+    pub chain: Vec<usize>,
+    /// `relations[k]` relates `chain[k]` → `chain[(k+1) % N]`.
+    pub relations: Vec<RelationOutcome>,
+}
+
+/// One unit relation search (Fig 10).
+///
+/// Locks `aggr` to its table entry `aggr_idx`, re-sweeps `victim`, and
+/// returns `RI = masked_entry_index(victim) − aggr_idx` if exactly the
+/// injected tone disappeared from the victim's table. The aggressor must be
+/// physically upstream of the victim for the injection to mask anything.
+pub fn unit_relation_search(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    mean_tr_nm: f64,
+    tables: &[SearchTable],
+    aggr: usize,
+    victim: usize,
+    aggr_idx: usize,
+) -> Option<i64> {
+    let mut bus = Bus::new(rings.n_rings());
+    unit_relation_search_on(laser, rings, mean_tr_nm, tables, aggr, victim, aggr_idx, &mut bus)
+}
+
+/// [`unit_relation_search`] over a caller-provided bus (reused across the
+/// ~2–3·N_ch unit searches of a record phase — §Perf: avoids two Vec
+/// allocations per probe). The bus must arrive with no locks held; it is
+/// left unlocked on return.
+#[allow(clippy::too_many_arguments)]
+pub fn unit_relation_search_on(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    mean_tr_nm: f64,
+    tables: &[SearchTable],
+    aggr: usize,
+    victim: usize,
+    aggr_idx: usize,
+    bus: &mut Bus,
+) -> Option<i64> {
+    debug_assert!(aggr < victim, "aggressor must be physically upstream");
+    debug_assert!(mean_tr_nm >= 0.0); // tables were built at this range
+    let _ = mean_tr_nm;
+    let st_a = &tables[aggr];
+    let st_v = &tables[victim];
+    if aggr_idx >= st_a.len() || st_v.is_empty() {
+        return None;
+    }
+    bus.lock(laser, rings, aggr, st_a.entries[aggr_idx].heat_nm);
+    // Diff original vs re-swept victim table: the first missing entry is
+    // the masked one. The substrate is deterministic and the tuning range
+    // is unchanged, so the re-swept table equals the original minus the
+    // entries whose tone is no longer visible — checking visibility per
+    // original entry is exactly the heat-diff of a full re-sweep without
+    // rebuilding the table (§Perf; equivalence covered by
+    // tests::unit_search_equals_full_resweep). A tone reachable at
+    // multiple FSR images masks several entries; the lowest-heat one
+    // defines the RI, and the mod-N combine rule absorbs the ambiguity.
+    let masked_idx = st_v
+        .entries
+        .iter()
+        .position(|orig| !bus.tone_visible_to(victim, orig.tone));
+    bus.unlock(aggr);
+    Some(masked_idx? as i64 - aggr_idx as i64)
+}
+
+/// Full relation search over the pair `(from, to)` (spectral-chain
+/// direction), probing per `probes`. Returns the chain offset delta.
+pub fn full_relation_search(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    mean_tr_nm: f64,
+    tables: &[SearchTable],
+    from: usize,
+    to: usize,
+    probes: ProbeSet,
+) -> RelationOutcome {
+    let n = laser.n_ch() as i64;
+    // Physical upstream ring is the aggressor regardless of chain direction.
+    let (aggr, victim, forward) = if from < to { (from, to, true) } else { (to, from, false) };
+    let st_a_len = tables[aggr].len();
+    if st_a_len == 0 || tables[victim].is_empty() {
+        return RelationOutcome::Null;
+    }
+
+    let mut probe_indices: Vec<usize> = vec![st_a_len - 1, 0]; // Lock-to-Last, Lock-to-First
+    if probes == ProbeSet::FirstLastSecond && st_a_len > 1 {
+        probe_indices.push(1); // Lock-to-Second
+    }
+    probe_indices.dedup();
+
+    let mut bus = Bus::new(rings.n_rings());
+    let mut candidates: Vec<i64> = Vec::with_capacity(3);
+    for idx in probe_indices {
+        if let Some(ri) = unit_relation_search_on(
+            laser, rings, mean_tr_nm, tables, aggr, victim, idx, &mut bus,
+        ) {
+            candidates.push(ri);
+        }
+    }
+    if candidates.is_empty() {
+        return RelationOutcome::Null;
+    }
+    // Combine rule: all candidates must agree modulo N_ch.
+    let first = candidates[0];
+    if candidates
+        .iter()
+        .any(|&c| (c - first).rem_euclid(n) != 0)
+    {
+        return RelationOutcome::Failed;
+    }
+    // Candidates may differ by multiples of N_ch (the same tone observed at
+    // different FSR images). All are physically valid correspondences —
+    // shared resonance periodicity lets the inference extend across FSRs
+    // (paper §V-B) — so normalize to the minimal-|RI| representative, which
+    // keeps Lock-Allocation-Table rows compact.
+    let ri = candidates
+        .iter()
+        .copied()
+        .min_by_key(|&c| c.abs())
+        .expect("non-empty");
+    // RI(aggr→victim): off[victim] = off[aggr] − RI. Convert to the chain
+    // direction (from → to).
+    let delta = if forward { -ri } else { ri };
+    RelationOutcome::Found(delta)
+}
+
+/// Run the complete record phase: initial sweeps + `N_ch` full relation
+/// searches along the target-order chain.
+pub fn full_record_phase(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    target_order: &SpectralOrdering,
+    mean_tr_nm: f64,
+    probes: ProbeSet,
+) -> RecordPhase {
+    let tables = initial_tables(laser, rings, mean_tr_nm);
+    let chain = target_order.ring_at_slots();
+    let n = chain.len();
+    let relations = (0..n)
+        .map(|k| {
+            full_relation_search(
+                laser,
+                rings,
+                mean_tr_nm,
+                &tables,
+                chain[k],
+                chain[(k + 1) % n],
+                probes,
+            )
+        })
+        .collect();
+    RecordPhase { tables, chain, relations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::model::{MwlSample, RingRowSample, SpectralOrdering};
+
+    /// Nominal fixture with an *off-grid* ring bias (0.5 nm): with the
+    /// Table-I bias of 4.48 nm = 4·λ_gS, tone 4's tuning distance lands
+    /// exactly on the FSR boundary (8.96 mod 8.96), which is fp-degenerate
+    /// and measure-zero under sampling. 0.5 nm keeps every distance interior:
+    /// ST(i) sees tones (i, i+1, …) at heats 0.5 + 1.12·k.
+    fn nominal(tr: f64) -> (MwlSample, RingRowSample, f64) {
+        let cfg = SystemConfig::default();
+        let laser = MwlSample::nominal(&cfg.grid);
+        let rings = RingRowSample::nominal(
+            &cfg.grid,
+            &SpectralOrdering::natural(8),
+            0.5,
+            cfg.fsr_mean_nm,
+        );
+        (laser, rings, tr)
+    }
+
+    #[test]
+    fn unit_search_masks_injected_tone() {
+        let (laser, rings, tr) = nominal(8.96);
+        let tables = initial_tables(&laser, &rings, tr);
+        // Ring 0 locks its first entry (tone 0 @ 0.5). Ring 1's table is
+        // (1, 2, …, 7, 0) by heat — tone 0 is its LAST entry (index 7).
+        let ri = unit_relation_search(&laser, &rings, tr, &tables, 0, 1, 0).unwrap();
+        assert_eq!(ri, 7 - 0);
+    }
+
+    #[test]
+    fn full_search_finds_relation_on_nominal_system() {
+        let (laser, rings, tr) = nominal(8.96);
+        let tables = initial_tables(&laser, &rings, tr);
+        // Adjacent pair (0, 1): ring 0's entries are tones (0..7), ring 1's
+        // are (1..7, 0). Entry e of ST(0) (tone e) appears in ST(1) at
+        // index e − 1 ⇒ RI(0→1) = −1 ⇒ chain delta = +1.
+        match full_relation_search(&laser, &rings, tr, &tables, 0, 1, ProbeSet::FirstLast) {
+            RelationOutcome::Found(d) => assert_eq!(d, 1),
+            other => panic!("expected Found, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wrap_pair_reverse_direction() {
+        let (laser, rings, tr) = nominal(8.96);
+        let tables = initial_tables(&laser, &rings, tr);
+        // Chain pair (7 → 0): aggressor is ring 0 (upstream), victim ring 7.
+        // Must still produce a Found with consistent chain semantics.
+        match full_relation_search(&laser, &rings, tr, &tables, 7, 0, ProbeSet::FirstLast) {
+            RelationOutcome::Found(d) => {
+                // off[0] = off[7] + d. Ring 7's first tone is 7, ring 0's
+                // first is 0: ST(7) = (7, 0, 1, …, 6), ST(0) = (0, …, 7).
+                // Probes see RI(0→7) ∈ {−7, +1} (same correspondence, one
+                // FSR apart); min-|RI| normalization picks +1 ⇒
+                // off[7] = off[0] − 1 ⇒ d = off[0] − off[7] = 1.
+                assert_eq!(d, 1);
+            }
+            other => panic!("expected Found, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn disjoint_ranges_yield_null() {
+        // Tiny tuning range: each ring only reaches its own tone (heat 0.5);
+        // the aggressor's tone is outside the victim's range ⇒ φ.
+        let (laser, rings, tr) = nominal(1.0);
+        let tables = initial_tables(&laser, &rings, tr);
+        for t in &tables {
+            assert_eq!(t.len(), 1);
+        }
+        let out = full_relation_search(&laser, &rings, tr, &tables, 0, 1, ProbeSet::FirstLast);
+        assert_eq!(out, RelationOutcome::Null);
+    }
+
+    #[test]
+    fn record_phase_chain_follows_target_order() {
+        let (laser, rings, tr) = nominal(8.96);
+        let perm = SpectralOrdering::permuted(8);
+        let rec = full_record_phase(&laser, &rings, &perm, tr, ProbeSet::FirstLast);
+        // chain[k] = ring at spectral slot k: (0, 2, 4, 6, 1, 3, 5, 7).
+        assert_eq!(rec.chain, vec![0, 2, 4, 6, 1, 3, 5, 7]);
+        assert_eq!(rec.relations.len(), 8);
+        assert_eq!(rec.tables.len(), 8);
+    }
+
+    /// Equivalence of the visibility-based masked-entry scan with a literal
+    /// re-sweep + heat diff (guards the §Perf shortcut in
+    /// `unit_relation_search`).
+    #[test]
+    fn unit_search_equals_full_resweep() {
+        use crate::model::SystemUnderTest;
+        use crate::oblivious::bus::Bus;
+        use crate::oblivious::search::{wavelength_search, HEAT_EPS_NM};
+        let cfg = SystemConfig::default();
+        let mut rng = crate::rng::Rng::seed_from(31337);
+        for _ in 0..200 {
+            let sut = SystemUnderTest::sample(&cfg, &mut rng);
+            let tr = rng.uniform(1.0, 10.0);
+            let tables = initial_tables(&sut.laser, &sut.rings, tr);
+            for (aggr, victim) in [(0usize, 1usize), (2, 5), (0, 7)] {
+                let st_a = &tables[aggr];
+                for aggr_idx in [0, st_a.len().saturating_sub(1)] {
+                    if aggr_idx >= st_a.len() {
+                        continue;
+                    }
+                    let fast = unit_relation_search(
+                        &sut.laser, &sut.rings, tr, &tables, aggr, victim, aggr_idx,
+                    );
+                    // Literal re-sweep reference.
+                    let mut bus = Bus::new(sut.rings.n_rings());
+                    bus.lock(&sut.laser, &sut.rings, aggr, st_a.entries[aggr_idx].heat_nm);
+                    let resweep = wavelength_search(&sut.laser, &sut.rings, victim, tr, &bus);
+                    let slow = tables[victim]
+                        .entries
+                        .iter()
+                        .position(|orig| {
+                            resweep
+                                .entries
+                                .iter()
+                                .all(|new| (new.heat_nm - orig.heat_nm).abs() > HEAT_EPS_NM)
+                        })
+                        .map(|m| m as i64 - aggr_idx as i64);
+                    assert_eq!(fast, slow, "aggr {aggr} victim {victim} idx {aggr_idx}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vt_probe_set_never_worse_on_nominal() {
+        let (laser, rings, tr) = nominal(8.96);
+        let tables = initial_tables(&laser, &rings, tr);
+        for k in 0..7usize {
+            let a = full_relation_search(&laser, &rings, tr, &tables, k, k + 1, ProbeSet::FirstLast);
+            let b =
+                full_relation_search(&laser, &rings, tr, &tables, k, k + 1, ProbeSet::FirstLastSecond);
+            assert_eq!(a, b);
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Wavelength search: sweep a microring's tuner across its range and
+//! record the peaks (paper §V-A, Fig 9(b) "Search Table").
+//!
+//! The physical loop (heater DAC sweep + intra-cavity power peak detection)
+//! is projected onto the wavelength domain, exactly as the paper does: a
+//! peak occurs at heat `h` whenever some FSR image of the ring's resonance
+//! aligns with a *visible* laser tone:
+//!
+//! `res_i + h + k·FSR_i = λ_tone  ⟺  h = ((λ_tone − res_i) mod FSR_i) + k·FSR_i`
+//!
+//! Tones captured by locked rings physically *upstream* of the searching
+//! ring are invisible (the upstream ring strips that wavelength from the
+//! bus before it reaches the searcher).
+
+use crate::model::ring::red_shift_distance;
+use crate::model::{MwlSample, RingRowSample};
+use crate::oblivious::bus::Bus;
+
+/// Tuner-code resolution used for bookkeeping/display. Search decisions use
+/// exact heats (the closed-loop lock pulls the resonance onto the tone, so
+/// code quantization does not blur reachability).
+pub const TUNER_BITS: u32 = 10;
+
+/// One recorded peak.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SearchEntry {
+    /// Red-shift heat (nm) at which the peak occurred.
+    pub heat_nm: f64,
+    /// Quantized tuner code (bookkeeping; `TUNER_BITS` over the ring's TR).
+    pub code: u16,
+    /// Hidden tone identity — adjudication only, never consulted by the
+    /// wavelength-oblivious algorithms.
+    pub tone: usize,
+    /// Which FSR image (k) produced the peak.
+    pub fsr_image: u32,
+}
+
+/// The search table of one microring: peaks sorted by heat (≡ tuner code).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SearchTable {
+    pub ring: usize,
+    pub entries: Vec<SearchEntry>,
+}
+
+impl SearchTable {
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn first(&self) -> Option<&SearchEntry> {
+        self.entries.first()
+    }
+
+    pub fn last(&self) -> Option<&SearchEntry> {
+        self.entries.last()
+    }
+
+    /// Index of the entry with heat equal to `heat_nm` (within tolerance),
+    /// i.e. "which of my recorded peaks is this".
+    pub fn index_of_heat(&self, heat_nm: f64) -> Option<usize> {
+        self.entries
+            .iter()
+            .position(|e| (e.heat_nm - heat_nm).abs() < HEAT_EPS_NM)
+    }
+}
+
+/// Heat comparison tolerance. Sweeps are deterministic in this substrate, so
+/// any small epsilon works; 1e-9 nm is far below code resolution.
+pub const HEAT_EPS_NM: f64 = 1e-9;
+
+/// Sweep ring `ring` over `[0, TR_i]` and record every visible peak.
+pub fn wavelength_search(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    ring: usize,
+    mean_tr_nm: f64,
+    bus: &Bus,
+) -> SearchTable {
+    let n = laser.n_ch();
+    let tr = rings.tuning_range_nm(ring, mean_tr_nm);
+    let fsr = rings.fsr_nm[ring];
+    let res = rings.resonance_nm[ring];
+    let code_scale = if tr > 0.0 {
+        ((1u32 << TUNER_BITS) - 1) as f64 / tr
+    } else {
+        0.0
+    };
+    let mut entries = Vec::new();
+    for tone in 0..n {
+        if !bus.tone_visible_to(ring, tone) {
+            continue;
+        }
+        let base = red_shift_distance(laser.tones_nm[tone] - res, fsr);
+        let mut k = 0u32;
+        loop {
+            let h = base + k as f64 * fsr;
+            if h > tr {
+                break;
+            }
+            entries.push(SearchEntry {
+                heat_nm: h,
+                code: (h * code_scale).round() as u16,
+                tone,
+                fsr_image: k,
+            });
+            k += 1;
+        }
+    }
+    entries.sort_by(|a, b| a.heat_nm.partial_cmp(&b.heat_nm).unwrap());
+    SearchTable { ring, entries }
+}
+
+/// Initial record-phase tables: every ring sweeps with nothing locked.
+pub fn initial_tables(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    mean_tr_nm: f64,
+) -> Vec<SearchTable> {
+    let bus = Bus::new(rings.n_rings());
+    (0..rings.n_rings())
+        .map(|i| wavelength_search(laser, rings, i, mean_tr_nm, &bus))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::model::{SpectralOrdering, SystemUnderTest};
+    use crate::rng::Rng;
+
+    /// Off-grid bias (0.5 nm) — Table I's 4.48 nm = 4·λ_gS puts tone 4 on
+    /// the exact FSR boundary (fp-degenerate, measure-zero under sampling).
+    /// Here ST(i) sees tones (i, i+1, …) at heats 0.5 + 1.12·k.
+    fn nominal_sut() -> (MwlSample, RingRowSample) {
+        let cfg = SystemConfig::default();
+        (
+            MwlSample::nominal(&cfg.grid),
+            RingRowSample::nominal(&cfg.grid, &SpectralOrdering::natural(8), 0.5, cfg.fsr_mean_nm),
+        )
+    }
+
+    #[test]
+    fn nominal_ring0_sees_tones_in_order() {
+        let (laser, rings) = nominal_sut();
+        let bus = Bus::new(8);
+        // Ring 0 sits 0.5 nm blue of tone 0; TR = 8.96 covers the full FSR
+        // so all 8 tones appear exactly once, starting with tone 0.
+        let st = wavelength_search(&laser, &rings, 0, 8.96, &bus);
+        assert_eq!(st.len(), 8);
+        let tones: Vec<usize> = st.entries.iter().map(|e| e.tone).collect();
+        assert_eq!(tones, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        assert!((st.entries[0].heat_nm - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn search_table_wraps_cyclically() {
+        let (laser, rings) = nominal_sut();
+        let bus = Bus::new(8);
+        // Ring 4 sits at slot 4 − bias: first reachable tone is tone 4.
+        let st = wavelength_search(&laser, &rings, 4, 8.96, &bus);
+        let tones: Vec<usize> = st.entries.iter().map(|e| e.tone).collect();
+        assert_eq!(tones, vec![4, 5, 6, 7, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn small_tr_truncates_table() {
+        let (laser, rings) = nominal_sut();
+        let bus = Bus::new(8);
+        // TR = 3.0: ring 0 reaches heats 0.5 + 1.12k <= 3.0 -> tones 0, 1, 2.
+        let st = wavelength_search(&laser, &rings, 0, 3.0, &bus);
+        assert_eq!(st.len(), 3);
+        let tones: Vec<usize> = st.entries.iter().map(|e| e.tone).collect();
+        assert_eq!(tones, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn tr_beyond_fsr_duplicates_images() {
+        let (laser, rings) = nominal_sut();
+        let bus = Bus::new(8);
+        // TR = 14 > FSR: tone 0 appears at 0.5 and 0.5 + 8.96 = 9.46.
+        let st = wavelength_search(&laser, &rings, 0, 14.0, &bus);
+        let tone0: Vec<&SearchEntry> = st.entries.iter().filter(|e| e.tone == 0).collect();
+        assert_eq!(tone0.len(), 2);
+        assert_eq!(tone0[1].fsr_image, 1);
+        assert!((tone0[1].heat_nm - 9.46).abs() < 1e-9);
+    }
+
+    #[test]
+    fn masked_tone_absent() {
+        let (laser, rings) = nominal_sut();
+        let mut bus = Bus::new(8);
+        // Lock ring 0 onto tone 0 (heat 0.5); ring 1 (downstream) must not
+        // see tone 0 anymore.
+        bus.lock(&laser, &rings, 0, 0.5);
+        let st = wavelength_search(&laser, &rings, 1, 8.96, &bus);
+        assert!(st.entries.iter().all(|e| e.tone != 0));
+        assert_eq!(st.len(), 7);
+    }
+
+    #[test]
+    fn upstream_ring_unaffected_by_downstream_lock() {
+        let (laser, rings) = nominal_sut();
+        let mut bus = Bus::new(8);
+        // Lock ring 7 onto some tone; ring 0 (upstream) still sees all 8.
+        bus.lock(&laser, &rings, 7, rings_heat_for_tone(&laser, &rings, 7, 7));
+        let st = wavelength_search(&laser, &rings, 0, 8.96, &bus);
+        assert_eq!(st.len(), 8);
+    }
+
+    fn rings_heat_for_tone(laser: &MwlSample, rings: &RingRowSample, ring: usize, tone: usize) -> f64 {
+        crate::model::ring::red_shift_distance(
+            laser.tones_nm[tone] - rings.resonance_nm[ring],
+            rings.fsr_nm[ring],
+        )
+    }
+
+    #[test]
+    fn codes_monotone_with_heat() {
+        let cfg = SystemConfig::default();
+        let mut rng = Rng::seed_from(2);
+        let sut = SystemUnderTest::sample(&cfg, &mut rng);
+        let bus = Bus::new(8);
+        let st = wavelength_search(&sut.laser, &sut.rings, 3, 8.0, &bus);
+        for w in st.entries.windows(2) {
+            assert!(w[0].code <= w[1].code);
+        }
+    }
+}

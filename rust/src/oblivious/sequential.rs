@@ -1,0 +1,100 @@
+//! Sequential Lock-to-Nearest tuning — the paper's baseline (§V-D).
+//!
+//! Rings are tuned one at a time in target-spectral order; each ring sweeps
+//! from zero heat and locks to the **first visible peak** (the nearest
+//! available wavelength). Earlier rings can "steal" tones needed by later
+//! rings, producing the zero-/duplicate-lock errors the paper quantifies in
+//! Fig 15, and the final spectral ordering is not guaranteed to be a cyclic
+//! shift of the target (lane-order errors).
+
+use crate::model::{MwlSample, RingRowSample, SpectralOrdering};
+use crate::oblivious::bus::Bus;
+use crate::oblivious::search::wavelength_search;
+
+/// Tune every ring sequentially; returns the applied heat per ring
+/// (`None` = the sweep saw no peak, the ring stays parked).
+pub fn arbitrate(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    target_order: &SpectralOrdering,
+    mean_tr_nm: f64,
+) -> Vec<Option<f64>> {
+    let n = rings.n_rings();
+    let mut bus = Bus::new(n);
+    let mut heats: Vec<Option<f64>> = vec![None; n];
+    for &ring in &target_order.ring_at_slots() {
+        let st = wavelength_search(laser, rings, ring, mean_tr_nm, &bus);
+        if let Some(entry) = st.first() {
+            bus.lock(laser, rings, ring, entry.heat_nm);
+            heats[ring] = Some(entry.heat_nm);
+        }
+    }
+    heats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::model::SpectralOrdering;
+
+    fn nominal(bias: f64) -> (MwlSample, RingRowSample) {
+        let cfg = SystemConfig::default();
+        (
+            MwlSample::nominal(&cfg.grid),
+            RingRowSample::nominal(&cfg.grid, &SpectralOrdering::natural(8), bias, cfg.fsr_mean_nm),
+        )
+    }
+
+    #[test]
+    fn nominal_natural_order_locks_identity() {
+        let (laser, rings) = nominal(0.5);
+        let order = SpectralOrdering::natural(8);
+        let heats = arbitrate(&laser, &rings, &order, 8.96);
+        // Each ring's nearest tone is its own (heat 0.5).
+        for h in &heats {
+            assert!((h.unwrap() - 0.5).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn zero_tr_locks_nothing() {
+        let (laser, rings) = nominal(0.5);
+        let order = SpectralOrdering::natural(8);
+        let heats = arbitrate(&laser, &rings, &order, 0.1);
+        assert!(heats.iter().all(|h| h.is_none()));
+    }
+
+    #[test]
+    fn stealing_leaves_later_ring_empty() {
+        // Hand-built 2-ring / 2-tone system: ring 0's nearest tone is tone 1
+        // (it steals it); ring 1 can only reach tone 1 — which is now gone.
+        let laser = MwlSample { tones_nm: vec![0.0, 1.0], grid_offset_nm: 0.0 };
+        let rings = RingRowSample {
+            resonance_nm: vec![0.5, 0.8],
+            fsr_nm: vec![10.0, 10.0],
+            tr_scale: vec![1.0, 1.0],
+        };
+        // TR = 1.0: ring 0 reaches tone 1 (d = 0.5) only (tone 0 wraps to
+        // 9.5). Ring 1 reaches tone 1 (d = 0.2) only.
+        let order = SpectralOrdering::natural(2);
+        let heats = arbitrate(&laser, &rings, &order, 1.0);
+        assert!((heats[0].unwrap() - 0.5).abs() < 1e-9);
+        assert!(heats[1].is_none(), "ring 1 must find nothing: {heats:?}");
+    }
+
+    #[test]
+    fn tuning_follows_target_order() {
+        // Permuted target order: ring 0 tunes first (slot 0), then ring 2
+        // (slot 1), etc. With full visibility each ring takes its nearest
+        // tone; on the nominal system that is its own pre-fab slot.
+        let cfg = SystemConfig::default();
+        let order = SpectralOrdering::permuted(8);
+        let laser = MwlSample::nominal(&cfg.grid);
+        let rings = RingRowSample::nominal(&cfg.grid, &order, 0.5, cfg.fsr_mean_nm);
+        let heats = arbitrate(&laser, &rings, &order, 8.96);
+        for h in &heats {
+            assert!((h.unwrap() - 0.5).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,309 @@
+//! Single-Step Matching (paper §V-C, Figs 12–13).
+//!
+//! The matching phase builds a **Lock Allocation Table** (LAT): search
+//! tables arranged column-per-ring in target-spectral order and offset
+//! vertically by the relation indices, so entries at the same row
+//! correspond to the same wavelength. A non-iterative *diagonal* assignment
+//! (ring k takes row ρ + k) then realizes the Lock-to-Cyclic target
+//! ordering.
+//!
+//! **Rows are cyclic.** Because all microrings share (approximately) the
+//! same resonance periodicity, a search table that wraps into the next FSR
+//! observes the same tone one period later: LAT row `r` and row `r + N_ch`
+//! hold the same laser tone (the paper's "the inference can naturally
+//! extend to resonances across multiple FSRs"). The diagonal therefore
+//! matches **modulo N_ch**: ring k may satisfy row ρ + k with any entry
+//! whose row is ≡ ρ + k (mod N_ch). Without this, trials where different
+//! rings reach the same tone through different FSR images would be
+//! spuriously infeasible.
+//!
+//! φ handling (Fig 13): each `RI = φ` pair splits the chain into
+//! sub-allocation tables ("clusters"). The first microring of each cluster
+//! anchors to the *first* entry of its search table, the last microring to
+//! its *last* entry, and interior rings follow the (cyclic) diagonal from
+//! the first anchor — the strategy the paper proves optimal by
+//! contradiction.
+//!
+//! A hard `Failed` relation search aborts the trial (no locks applied),
+//! which adjudicates as Zero-Lock — the paper's "search is considered a
+//! failure".
+
+use crate::oblivious::relation::{RecordPhase, RelationOutcome};
+
+/// Per-ring chosen search-table entry index (`None` = no lock applied).
+pub type LockPlan = Vec<Option<usize>>;
+
+/// Run the matching phase over a completed record phase. Returns, for each
+/// physical ring, the chosen entry index into its search table.
+pub fn match_phase(rec: &RecordPhase) -> LockPlan {
+    let n = rec.chain.len();
+    let mut plan: LockPlan = vec![None; rec.tables.len()];
+    if n == 0 {
+        return plan;
+    }
+    if rec
+        .relations
+        .iter()
+        .any(|r| matches!(r, RelationOutcome::Failed))
+    {
+        return plan; // hard search failure: abort with no locks
+    }
+
+    // Indices k where the pair chain[k] -> chain[k+1] returned φ.
+    let nulls: Vec<usize> = rec
+        .relations
+        .iter()
+        .enumerate()
+        .filter_map(|(k, r)| matches!(r, RelationOutcome::Null).then_some(k))
+        .collect();
+
+    if nulls.is_empty() {
+        assign_single_table(rec, &mut plan);
+    } else {
+        // Clusters: maximal runs of chain positions separated by φ pairs.
+        // A φ at pair k means the cluster boundary is *after* chain[k].
+        for c in 0..nulls.len() {
+            let start = (nulls[c] + 1) % n;
+            let end = nulls[(c + 1) % nulls.len()]; // inclusive
+            let len = (end + n - start) % n + 1;
+            let members: Vec<usize> = (0..len).map(|t| (start + t) % n).collect();
+            assign_cluster(rec, &members, &mut plan);
+        }
+    }
+    plan
+}
+
+/// No-φ case (Fig 13(a)): one LAT, pick the best feasible cyclic diagonal.
+///
+/// A diagonal is a residue ρ ∈ [0, N): ring at chain position k takes an
+/// entry whose LAT row ≡ ρ + k (mod N). Among residues that give *every*
+/// ring an entry, the minimum-total-heat one is chosen (tuner codes are
+/// observable, so this stays wavelength-oblivious). If no residue covers
+/// all rings, the best-coverage residue is used and uncovered rings stay
+/// unlocked (adjudicated as Zero-Lock).
+fn assign_single_table(rec: &RecordPhase, plan: &mut LockPlan) {
+    let n = rec.chain.len();
+    let offsets = chain_offsets(rec, &(0..n).collect::<Vec<_>>());
+    let nn = n as i64;
+
+    let mut best: Option<(usize, f64, Vec<Option<usize>>)> = None; // (coverage, heat, picks)
+    for rho in 0..nn {
+        let mut covered = 0usize;
+        let mut heat = 0.0f64;
+        let mut picks: Vec<Option<usize>> = vec![None; n];
+        for k in 0..n {
+            let table = &rec.tables[rec.chain[k]];
+            let want = (rho + k as i64 - offsets[k]).rem_euclid(nn);
+            // Entries are heat-sorted; the first residue match is the
+            // lowest-heat image of the wanted tone row.
+            let found = (0..table.len()).find(|&e| (e as i64).rem_euclid(nn) == want);
+            if let Some(e) = found {
+                covered += 1;
+                heat += table.entries[e].heat_nm;
+                picks[k] = Some(e);
+            }
+        }
+        let better = match &best {
+            None => true,
+            Some((bc, bh, _)) => covered > *bc || (covered == *bc && heat < *bh),
+        };
+        if better {
+            best = Some((covered, heat, picks));
+        }
+    }
+    if let Some((_, _, picks)) = best {
+        for k in 0..n {
+            plan[rec.chain[k]] = picks[k];
+        }
+    }
+}
+
+/// Cluster case (Fig 13(b,c)): first ring → first entry, interior rings →
+/// cyclic diagonal from the first anchor, last ring → last entry.
+fn assign_cluster(rec: &RecordPhase, members: &[usize], plan: &mut LockPlan) {
+    let m = members.len();
+    let n = rec.chain.len() as i64;
+    let offsets = chain_offsets(rec, members);
+    for (t, &k) in members.iter().enumerate() {
+        let ring = rec.chain[k];
+        let table = &rec.tables[ring];
+        let len = table.len();
+        if len == 0 {
+            continue; // zero-lock, observed at adjudication
+        }
+        let entry = if t == 0 {
+            Some(0) // cluster head: first entry (the victim rule)
+        } else if t == m - 1 {
+            Some(len - 1) // cluster tail: last entry (the aggressor rule)
+        } else {
+            // Cyclic diagonal from the head anchor: head entry 0 sits at
+            // row offsets[0]; ring t wants row ≡ offsets[0] + t (mod N).
+            let want = (offsets[0] + t as i64 - offsets[t]).rem_euclid(n);
+            (0..len).find(|&e| (e as i64).rem_euclid(n) == want)
+        };
+        plan[ring] = entry;
+    }
+}
+
+/// Cumulative LAT row offsets along a run of chain positions. `members[t]`
+/// is a chain index; offsets are relative to the run head (off[0] = 0).
+/// Pairs inside the run must all be `Found` (callers split at φ).
+fn chain_offsets(rec: &RecordPhase, members: &[usize]) -> Vec<i64> {
+    let mut off = Vec::with_capacity(members.len());
+    off.push(0i64);
+    for t in 1..members.len() {
+        let pair = members[t - 1]; // relation chain[pair] -> chain[pair+1]
+        let delta = match rec.relations[pair] {
+            RelationOutcome::Found(d) => d,
+            // Unreachable by construction; treat as 0 to stay defensive.
+            _ => 0,
+        };
+        off.push(off[t - 1] + delta);
+    }
+    off
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::model::{MwlSample, RingRowSample, SpectralOrdering};
+    use crate::oblivious::relation::{full_record_phase, ProbeSet};
+
+    /// Off-grid bias fixture (see relation.rs): ST(i) = tones (i, i+1, …)
+    /// at heats 0.5 + 1.12·k when TR covers the FSR.
+    fn nominal(bias: f64) -> (MwlSample, RingRowSample) {
+        let cfg = SystemConfig::default();
+        (
+            MwlSample::nominal(&cfg.grid),
+            RingRowSample::nominal(&cfg.grid, &SpectralOrdering::natural(8), bias, cfg.fsr_mean_nm),
+        )
+    }
+
+    #[test]
+    fn full_visibility_gives_diagonal_assignment() {
+        let (laser, rings) = nominal(0.5);
+        let order = SpectralOrdering::natural(8);
+        let rec = full_record_phase(&laser, &rings, &order, 8.96, ProbeSet::FirstLast);
+        assert!(rec.relations.iter().all(|r| matches!(r, RelationOutcome::Found(_))));
+        let plan = match_phase(&rec);
+        // Every ring gets a lock; the realized tones must be a cyclic shift
+        // of (0, 1, …, 7).
+        let tones: Vec<usize> = (0..8)
+            .map(|i| rec.tables[i].entries[plan[i].unwrap()].tone)
+            .collect();
+        let shift = tones[0];
+        for (i, &t) in tones.iter().enumerate() {
+            assert_eq!(t, (shift + i) % 8, "tones {tones:?}");
+        }
+    }
+
+    #[test]
+    fn min_heat_diagonal_chosen() {
+        // With the nominal 0.5 nm bias system every residue is feasible at
+        // TR = FSR; the minimum-total-heat diagonal is the identity
+        // (heat 0.5 per ring).
+        let (laser, rings) = nominal(0.5);
+        let order = SpectralOrdering::natural(8);
+        let rec = full_record_phase(&laser, &rings, &order, 8.96, ProbeSet::FirstLast);
+        let plan = match_phase(&rec);
+        for i in 0..8 {
+            let e = plan[i].unwrap();
+            assert_eq!(rec.tables[i].entries[e].tone, i);
+            assert!((rec.tables[i].entries[e].heat_nm - 0.5).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn clustered_system_uses_anchors() {
+        // TR = 1.0 ⇒ every ring reaches only its own tone (heat 0.5):
+        // all relations are φ, 8 singleton clusters, each ring takes its
+        // only (first) entry ⇒ perfect natural assignment.
+        let (laser, rings) = nominal(0.5);
+        let order = SpectralOrdering::natural(8);
+        let rec = full_record_phase(&laser, &rings, &order, 1.0, ProbeSet::FirstLast);
+        assert!(rec.relations.iter().all(|r| matches!(r, RelationOutcome::Null)));
+        let plan = match_phase(&rec);
+        for i in 0..8 {
+            assert_eq!(plan[i], Some(0));
+            assert_eq!(rec.tables[i].entries[0].tone, i);
+        }
+    }
+
+    #[test]
+    fn empty_table_rings_stay_unlocked() {
+        // Zero tuning range: no entries anywhere, plan must be all None.
+        let (laser, rings) = nominal(0.5);
+        let order = SpectralOrdering::natural(8);
+        let rec = full_record_phase(&laser, &rings, &order, 0.1, ProbeSet::FirstLast);
+        let plan = match_phase(&rec);
+        assert!(plan.iter().all(|p| p.is_none()));
+    }
+
+    #[test]
+    fn failed_relation_aborts_trial() {
+        use crate::oblivious::relation::RecordPhase;
+        use crate::oblivious::search::SearchTable;
+        let rec = RecordPhase {
+            tables: vec![SearchTable::default(); 4],
+            chain: vec![0, 1, 2, 3],
+            relations: vec![
+                RelationOutcome::Found(1),
+                RelationOutcome::Failed,
+                RelationOutcome::Found(1),
+                RelationOutcome::Found(1),
+            ],
+        };
+        assert!(match_phase(&rec).iter().all(|p| p.is_none()));
+    }
+
+    #[test]
+    fn permuted_order_assigns_cyclically_in_spectral_space() {
+        let (laser, rings) = {
+            let cfg = SystemConfig::default();
+            let order = SpectralOrdering::permuted(8);
+            (
+                MwlSample::nominal(&cfg.grid),
+                RingRowSample::nominal(&cfg.grid, &order, 0.5, cfg.fsr_mean_nm),
+            )
+        };
+        let order = SpectralOrdering::permuted(8);
+        let rec = full_record_phase(&laser, &rings, &order, 8.96, ProbeSet::FirstLast);
+        let plan = match_phase(&rec);
+        // Ring i must land on tone (s_i + c) mod 8 for a common c.
+        let tones: Vec<usize> = (0..8)
+            .map(|i| rec.tables[i].entries[plan[i].unwrap()].tone)
+            .collect();
+        let c = (tones[0] + 8 - order.slot_of(0)) % 8;
+        for i in 0..8 {
+            assert_eq!(tones[i], (order.slot_of(i) + c) % 8, "tones {tones:?}");
+        }
+    }
+
+    #[test]
+    fn cross_fsr_image_diagonal_is_feasible() {
+        // Regression for the mod-N diagonal: rings reaching the same tones
+        // through different FSR images must still find a feasible diagonal.
+        // Ring 0 reaches tones {1, 0-next-image}: entries (tone1@0.3,
+        // tone0@9.7-ish rows wrap); built from a 2-channel toy system.
+        let laser = MwlSample { tones_nm: vec![0.0, 1.0], grid_offset_nm: 0.0 };
+        let rings = RingRowSample {
+            resonance_nm: vec![0.7, -1.5],
+            fsr_nm: vec![2.0, 2.0],
+            tr_scale: vec![1.0, 1.0],
+        };
+        // Ring 0: d(tone0) = (0−0.7) mod 2 = 1.3; d(tone1) = 0.3.
+        // Ring 1: d(tone0) = 1.5; d(tone1) = 0.5.
+        // TR = 1.6 ⇒ ST(0) = [tone1@0.3, tone0@1.3], ST(1) = [tone1@0.5, tone0@1.5].
+        let order = SpectralOrdering::natural(2);
+        let rec = full_record_phase(&laser, &rings, &order, 1.6, ProbeSet::FirstLast);
+        let plan = match_phase(&rec);
+        let tones: Vec<usize> = (0..2)
+            .map(|i| rec.tables[i].entries[plan[i].unwrap()].tone)
+            .collect();
+        // Must be {0, 1} in some cyclic order (N=2: any permutation).
+        let mut sorted = tones.clone();
+        sorted.sort();
+        assert_eq!(sorted, vec![0, 1], "tones {tones:?}");
+    }
+}

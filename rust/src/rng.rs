@@ -1,0 +1,168 @@
+//! Deterministic, dependency-free random number generation.
+//!
+//! The offline build environment carries no `rand` crate, so we implement
+//! the two small PRNGs the simulator needs:
+//!
+//! * [`SplitMix64`] — stateless-ish stream splitter, used to derive
+//!   independent seeds from `(experiment id, sweep point, sample index)` so
+//!   every Monte-Carlo trial is reproducible regardless of thread schedule.
+//! * [`Rng`] — xoshiro256++ (Blackman & Vigna), the workhorse generator for
+//!   uniform half-range variation sampling (paper §II-C models all
+//!   variations as uniform distributions with σ as the half-range).
+
+/// SplitMix64: used to expand a single u64 seed into well-mixed streams.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Derive a child seed from a parent seed and a list of lane indices.
+///
+/// Used so that trial `(point, laser_idx, ring_idx)` always sees the same
+/// random stream no matter how work is scheduled across threads.
+pub fn derive_seed(parent: u64, lanes: &[u64]) -> u64 {
+    let mut sm = SplitMix64::new(parent);
+    let mut acc = sm.next_u64();
+    for &lane in lanes {
+        let mut sm2 = SplitMix64::new(acc ^ lane.wrapping_mul(0xA24B_AED4_963E_E407));
+        acc = sm2.next_u64();
+    }
+    acc
+}
+
+/// xoshiro256++ generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 per the xoshiro reference implementation.
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform double in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn uniform01(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform double in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform01()
+    }
+
+    /// Uniform double in `[-half_range, +half_range)` — the paper's
+    /// half-range variation model (σ is the half-range, not a stddev).
+    #[inline]
+    pub fn half_range(&mut self, half_range: f64) -> f64 {
+        self.uniform(-half_range, half_range)
+    }
+
+    /// Uniform integer in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        // Rejection-free multiply-shift; bias is negligible for n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::seed_from(1);
+        let mut b = Rng::seed_from(1);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::seed_from(1);
+        let mut b = Rng::seed_from(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 5);
+    }
+
+    #[test]
+    fn uniform01_in_range_and_covers() {
+        let mut r = Rng::seed_from(7);
+        let mut lo = 1.0f64;
+        let mut hi = 0.0f64;
+        for _ in 0..10_000 {
+            let x = r.uniform01();
+            assert!((0.0..1.0).contains(&x));
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        assert!(lo < 0.01 && hi > 0.99);
+    }
+
+    #[test]
+    fn half_range_symmetric() {
+        let mut r = Rng::seed_from(9);
+        let mean: f64 = (0..100_000).map(|_| r.half_range(2.0)).sum::<f64>() / 100_000.0;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn derive_seed_depends_on_all_lanes() {
+        let a = derive_seed(1, &[1, 2, 3]);
+        let b = derive_seed(1, &[1, 2, 4]);
+        let c = derive_seed(1, &[2, 2, 3]);
+        let d = derive_seed(2, &[1, 2, 3]);
+        assert!(a != b && a != c && a != d);
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::seed_from(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let i = r.below(10);
+            assert!(i < 10);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

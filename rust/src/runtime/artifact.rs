@@ -1,0 +1,73 @@
+//! Artifact discovery: locate the AOT outputs of `make artifacts`.
+
+use std::path::{Path, PathBuf};
+
+/// Directory holding `ideal_n{8,16}.hlo.txt` + `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Look for the artifacts directory: `$WDM_ARTIFACTS`, `./artifacts`,
+    /// or `artifacts/` next to the workspace root (tests run from target
+    /// subdirectories).
+    pub fn discover() -> Option<Self> {
+        let mut candidates: Vec<PathBuf> = Vec::new();
+        if let Ok(env) = std::env::var("WDM_ARTIFACTS") {
+            candidates.push(PathBuf::from(env));
+        }
+        candidates.push(PathBuf::from("artifacts"));
+        if let Ok(mut cwd) = std::env::current_dir() {
+            for _ in 0..4 {
+                candidates.push(cwd.join("artifacts"));
+                if !cwd.pop() {
+                    break;
+                }
+            }
+        }
+        // CARGO_MANIFEST_DIR is compile-time: reliable for tests/benches.
+        candidates.push(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+        candidates
+            .into_iter()
+            .find(|c| c.join("manifest.json").is_file())
+            .map(|dir| Self { dir })
+    }
+
+    /// Path of the artifact for a given channel count.
+    pub fn path_for(&self, n_ch: usize) -> PathBuf {
+        self.dir.join(format!("ideal_n{n_ch}.hlo.txt"))
+    }
+
+    /// Channel counts with a present artifact.
+    pub fn available(&self) -> Vec<usize> {
+        [8usize, 16]
+            .into_iter()
+            .filter(|&n| self.path_for(n).is_file())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discover_finds_built_artifacts() {
+        // `make artifacts` has run in this workspace for the full test
+        // suite; if not, discovery must return None rather than panic.
+        match ArtifactStore::discover() {
+            Some(store) => {
+                assert!(store.path_for(8).is_file());
+                assert!(!store.available().is_empty());
+            }
+            None => eprintln!("artifacts not built; discovery degraded gracefully"),
+        }
+    }
+
+    #[test]
+    fn path_naming() {
+        let store = ArtifactStore { dir: PathBuf::from("/tmp/a") };
+        assert_eq!(store.path_for(16), PathBuf::from("/tmp/a/ideal_n16.hlo.txt"));
+    }
+}

@@ -1,0 +1,72 @@
+//! Pack sampled populations into the fixed-size f32 batches the artifact
+//! expects, and unpack per-trial results.
+//!
+//! The artifact shape is `[BATCH][N_ch]`; populations rarely divide evenly,
+//! so the tail batch is padded by repeating trial 0 (pad outputs are
+//! discarded on unpack). Wavelengths are already center-relative, so f32
+//! keeps ~1e-6 nm resolution.
+
+use crate::model::system::SystemSampler;
+
+/// Pack batch `batch_idx` (trials `batch_idx*batch .. +batch`) into flat
+/// f32 row tensors `(laser, ring, fsr, trscale)`.
+pub fn pack(
+    sampler: &SystemSampler,
+    batch: usize,
+    batch_idx: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let n_trials = sampler.n_trials();
+    let (l0, r0) = sampler.trial(0);
+    let n = l0.n_ch();
+    debug_assert_eq!(r0.n_rings(), n);
+    let mut laser = Vec::with_capacity(batch * n);
+    let mut ring = Vec::with_capacity(batch * n);
+    let mut fsr = Vec::with_capacity(batch * n);
+    let mut trs = Vec::with_capacity(batch * n);
+    for b in 0..batch {
+        let t = batch_idx * batch + b;
+        let (l, r) = if t < n_trials { sampler.trial(t) } else { sampler.trial(0) };
+        laser.extend(l.tones_nm.iter().map(|&x| x as f32));
+        ring.extend(r.resonance_nm.iter().map(|&x| x as f32));
+        fsr.extend(r.fsr_nm.iter().map(|&x| x as f32));
+        trs.extend(r.tr_scale.iter().map(|&x| x as f32));
+    }
+    (laser, ring, fsr, trs)
+}
+
+/// Number of batches needed to cover `n_trials`.
+pub fn n_batches(n_trials: usize, batch: usize) -> usize {
+    n_trials.div_ceil(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    #[test]
+    fn pack_shapes_and_padding() {
+        let cfg = SystemConfig::default();
+        let sampler = SystemSampler::new(&cfg, 3, 3, 1); // 9 trials
+        let (laser, ring, fsr, trs) = pack(&sampler, 16, 0);
+        assert_eq!(laser.len(), 16 * 8);
+        assert_eq!(ring.len(), 16 * 8);
+        assert_eq!(fsr.len(), 16 * 8);
+        assert_eq!(trs.len(), 16 * 8);
+        // Pad rows (trials 9..16) repeat trial 0.
+        let row = |v: &[f32], i: usize| v[i * 8..(i + 1) * 8].to_vec();
+        assert_eq!(row(&laser, 9), row(&laser, 0));
+        assert_eq!(row(&ring, 15), row(&ring, 0));
+        // Real rows match the sampler.
+        let (l5, _) = sampler.trial(5);
+        assert_eq!(row(&laser, 5), l5.tones_nm.iter().map(|&x| x as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batch_count() {
+        assert_eq!(n_batches(9, 16), 1);
+        assert_eq!(n_batches(16, 16), 1);
+        assert_eq!(n_batches(17, 16), 2);
+        assert_eq!(n_batches(0, 16), 0);
+    }
+}

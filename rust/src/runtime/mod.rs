@@ -1,0 +1,180 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas ideal-model
+//! artifacts from the Rust hot path.
+//!
+//! Python runs only at build time (`make artifacts`); this module makes the
+//! binary self-contained afterwards:
+//!
+//! 1. [`artifact`] locates `artifacts/ideal_n{8,16}.hlo.txt` (HLO **text** —
+//!    see `python/compile/aot.py` for why not serialized protos).
+//! 2. [`PjrtRuntime`] compiles each module once per process on the PJRT CPU
+//!    client.
+//! 3. [`batcher`] packs sampled systems into fixed-size f32 batches
+//!    (center-relative nm) and unpacks the outputs.
+//! 4. [`accel::XlaIdeal`] implements [`crate::montecarlo::IdealEvaluator`]
+//!    on top, finishing LtA's bottleneck matching in Rust from the returned
+//!    distance tensors.
+
+pub mod accel;
+pub mod artifact;
+pub mod batcher;
+
+use anyhow::{Context, Result};
+
+/// Batch size baked into the artifacts (see `python/compile/aot.py`).
+pub const BATCH: usize = 512;
+
+/// One compiled ideal-model executable (fixed `N_ch`, fixed batch).
+pub struct IdealExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub n_ch: usize,
+    pub batch: usize,
+}
+
+/// Output of one artifact execution, unpacked to f64.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IdealBatchOutput {
+    /// Scaled distances, `[batch][n][n]` flattened row-major. Empty when
+    /// the caller requested `want_dist = false` (LtC/LtD paths never read
+    /// it, and the f32→f64 conversion of 512×N² elements is measurable —
+    /// §Perf).
+    pub dist: Vec<f64>,
+    /// Per-cyclic-shift worst-case distance, `[batch][n]`.
+    pub smax: Vec<f64>,
+    /// LtC minimum mean tuning range per trial, `[batch]`.
+    pub ltc_min: Vec<f64>,
+    /// LtD minimum mean tuning range per trial, `[batch]`.
+    pub ltd: Vec<f64>,
+}
+
+/// PJRT CPU client + compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu().context("create PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: &std::path::Path, n_ch: usize) -> Result<IdealExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path is not UTF-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(IdealExecutable { exe, n_ch, batch: BATCH })
+    }
+}
+
+impl IdealExecutable {
+    /// Execute one batch. All row tensors are `[batch][n_ch]` flattened f32,
+    /// `s_order` is the target spectral ordering (i32, length `n_ch`).
+    pub fn run(
+        &self,
+        laser: &[f32],
+        ring: &[f32],
+        fsr: &[f32],
+        trscale: &[f32],
+        s_order: &[i32],
+    ) -> Result<IdealBatchOutput> {
+        self.run_with(laser, ring, fsr, trscale, s_order, true)
+    }
+
+    /// Like [`Self::run`], with control over unpacking the distance tensor.
+    pub fn run_with(
+        &self,
+        laser: &[f32],
+        ring: &[f32],
+        fsr: &[f32],
+        trscale: &[f32],
+        s_order: &[i32],
+        want_dist: bool,
+    ) -> Result<IdealBatchOutput> {
+        let rows = self.batch as i64;
+        let n = self.n_ch as i64;
+        debug_assert_eq!(laser.len(), self.batch * self.n_ch);
+        let lit = |v: &[f32]| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(v).reshape(&[rows, n])?)
+        };
+        let order = xla::Literal::vec1(s_order);
+        let args = [lit(laser)?, lit(ring)?, lit(fsr)?, lit(trscale)?, order];
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (dist, smax, ltc, ltd) = result.to_tuple4()?;
+        Ok(IdealBatchOutput {
+            dist: if want_dist {
+                dist.to_vec::<f32>()?.into_iter().map(|x| x as f64).collect()
+            } else {
+                Vec::new()
+            },
+            smax: smax.to_vec::<f32>()?.into_iter().map(|x| x as f64).collect(),
+            ltc_min: ltc.to_vec::<f32>()?.into_iter().map(|x| x as f64).collect(),
+            ltd: ltd.to_vec::<f32>()?.into_iter().map(|x| x as f64).collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::artifact::ArtifactStore;
+    use super::*;
+
+    /// End-to-end artifact numerics vs the Rust f64 oracle. Skips (with a
+    /// loud message) when artifacts have not been built.
+    #[test]
+    fn artifact_matches_rust_oracle() {
+        let Some(store) = ArtifactStore::discover() else {
+            eprintln!("SKIP: artifacts/ not built; run `make artifacts`");
+            return;
+        };
+        let rt = PjrtRuntime::cpu().expect("pjrt");
+        let exe = rt.load(&store.path_for(8), 8).expect("compile n8");
+
+        use crate::arbiter::{distance, ideal, Policy};
+        use crate::config::SystemConfig;
+        use crate::model::system::SystemSampler;
+
+        let cfg = SystemConfig::default();
+        let sampler = SystemSampler::new(&cfg, 8, 8, 77);
+        let (laser, ring, fsr, trs) = super::batcher::pack(&sampler, BATCH, 0);
+        let s: Vec<i32> = cfg.target_order.as_slice().iter().map(|&x| x as i32).collect();
+        let out = exe.run(&laser, &ring, &fsr, &trs, &s).expect("run");
+
+        for t in 0..sampler.n_trials().min(BATCH) {
+            let (l, r) = sampler.trial(t);
+            let dist = distance::scaled_distance_parts(l, r);
+            let ltc = ideal::min_tuning_range(Policy::LtC, &dist, cfg.target_order.as_slice());
+            let ltd = ideal::min_tuning_range(Policy::LtD, &dist, cfg.target_order.as_slice());
+            assert!(
+                (out.ltc_min[t] - ltc).abs() < 1e-3,
+                "trial {t}: xla {} vs rust {}",
+                out.ltc_min[t],
+                ltc
+            );
+            assert!((out.ltd[t] - ltd).abs() < 1e-3);
+            for i in 0..8 {
+                for j in 0..8 {
+                    let a = out.dist[t * 64 + i * 8 + j];
+                    let b = dist.at(i, j);
+                    // f32 mod near the FSR boundary may fold differently;
+                    // compare circularly like the python tests do.
+                    let fsr_scaled = r.fsr_nm[i] / r.tr_scale[i];
+                    let d = (a - b).abs();
+                    assert!(
+                        d < 1e-3 || (d - fsr_scaled).abs() < 1e-3,
+                        "trial {t} d[{i}][{j}]: xla {a} rust {b}"
+                    );
+                }
+            }
+        }
+    }
+}

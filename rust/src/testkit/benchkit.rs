@@ -1,0 +1,133 @@
+//! Micro-benchmark harness (no criterion crate offline — DESIGN.md
+//! "Substitutions").
+//!
+//! Calibrates the iteration count to a target wall time, reports the mean,
+//! median and p10/p90 of per-iteration latency across measurement batches,
+//! and guards against dead-code elimination with a `black_box` shim.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export of `std::hint::black_box` (benches call through this name so
+/// call-sites survive future refactors).
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One benchmark's result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.mean_ns > 0.0 {
+            1e9 / self.mean_ns
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// One formatted report row.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<38} {:>12} {:>12} {:>12} {:>14}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            format!("{}..{}", fmt_ns(self.p10_ns), fmt_ns(self.p90_ns)),
+            format!("{:.0}/s", self.throughput_per_s()),
+        )
+    }
+}
+
+/// Report header matching [`BenchResult::row`].
+pub fn header() -> String {
+    format!(
+        "{:<38} {:>12} {:>12} {:>12} {:>14}",
+        "benchmark", "mean", "median", "p10..p90", "throughput"
+    )
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly for ~`target` wall time (after a warmup) split into
+/// ~20 measurement batches.
+pub fn bench<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchResult {
+    // Warmup + calibration: find iterations per ~5 ms batch.
+    let mut batch_iters = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..batch_iters {
+            f();
+        }
+        let dt = t0.elapsed();
+        if dt >= Duration::from_millis(5) || batch_iters >= 1 << 24 {
+            break;
+        }
+        batch_iters = (batch_iters * 4).min(1 << 24);
+    }
+    let batches = 20usize;
+    let mut samples_ns: Vec<f64> = Vec::with_capacity(batches);
+    let deadline = Instant::now() + target;
+    for _ in 0..batches {
+        let t0 = Instant::now();
+        for _ in 0..batch_iters {
+            f();
+        }
+        samples_ns.push(t0.elapsed().as_nanos() as f64 / batch_iters as f64);
+        if Instant::now() > deadline {
+            break;
+        }
+    }
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+    let pct = |q: f64| crate::util::stats::percentile_sorted(&samples_ns, q);
+    BenchResult {
+        name: name.to_string(),
+        iters: batch_iters * samples_ns.len() as u64,
+        mean_ns: mean,
+        median_ns: pct(0.5),
+        p10_ns: pct(0.1),
+        p90_ns: pct(0.9),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", Duration::from_millis(30), || {
+            black_box(1u64 + black_box(2));
+        });
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.iters > 0);
+        assert!(r.p10_ns <= r.p90_ns + 1e-9);
+        assert!(r.row().contains("noop-ish"));
+    }
+
+    #[test]
+    fn formatting_scales() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+    }
+}

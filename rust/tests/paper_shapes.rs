@@ -1,0 +1,253 @@
+//! Paper-shape regression tests: the qualitative results of the paper's
+//! evaluation section, asserted at reduced Monte-Carlo scale. These are the
+//! "does the reproduction actually reproduce" tests; EXPERIMENTS.md records
+//! the full-scale runs.
+
+use wdm_arbiter::arbiter::Policy;
+use wdm_arbiter::config::SystemConfig;
+use wdm_arbiter::model::system::SystemSampler;
+use wdm_arbiter::montecarlo::sweep::{unit_multiples, Series};
+use wdm_arbiter::montecarlo::{cafp_tally, min_tr_complete, IdealEvaluator, RustIdeal};
+use wdm_arbiter::oblivious::Scheme;
+
+const SIDE: usize = 20; // 400 trials/point: enough for shape-level checks
+
+fn min_tr_series(policy: Policy, edit: impl Fn(&mut SystemConfig, f64), values: &[f64], seed: u64) -> Series {
+    let eval = RustIdeal::default();
+    let y: Vec<f64> = values
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            let mut cfg = SystemConfig::default();
+            edit(&mut cfg, v);
+            let sampler = SystemSampler::new(&cfg, SIDE, SIDE, seed + i as u64);
+            min_tr_complete(&eval.min_trs(&cfg, &sampler, policy))
+        })
+        .collect();
+    Series::new(format!("{policy}"), values.to_vec(), y)
+}
+
+/// Fig 5: LtC pre-saturation ramp slope ≈ 2 vs σ_rLV. (LtA's ramp flattens
+/// earlier — the paper notes its "slower ramp beyond ~3·λ_gS" — so the
+/// clean slope-2 claim is asserted on LtC; measured ≈ 1.98 at this scale.)
+#[test]
+fn fig5_ramp_slope_is_about_two() {
+    let values = unit_multiples(1.12, 0.25, 2.0, 0.25);
+    let s = min_tr_series(Policy::LtC, |c, v| c.variation.ring_local_nm = v, &values, 100);
+    let slope = s.slope();
+    assert!(
+        (1.5..=2.5).contains(&slope),
+        "LtC ramp slope {slope} outside [1.5, 2.5]"
+    );
+}
+
+/// Fig 5: LtC saturates at about the FSR once σ_rLV is large.
+#[test]
+fn fig5_ltc_saturates_at_fsr() {
+    let cfg = SystemConfig::default();
+    let values = vec![8.0 * 1.12];
+    let s = min_tr_series(Policy::LtC, |c, v| c.variation.ring_local_nm = v, &values, 200);
+    for &y in &s.y {
+        // Scaled by TR variation the ceiling is FSR / 0.9 ≈ 9.96; at this
+        // sampling scale (400 trials/point) the max sits slightly below it.
+        assert!(y <= cfg.fsr_mean_nm / 0.85, "LtC min TR {y} beyond FSR ceiling");
+        assert!(y >= 0.85 * cfg.fsr_mean_nm, "LtC min TR {y} below saturation");
+    }
+}
+
+/// Fig 4/5: LtA needs no more tuning range than LtC anywhere.
+#[test]
+fn fig5_lta_never_worse_than_ltc() {
+    let values = unit_multiples(1.12, 0.5, 8.0, 1.5);
+    let lta = min_tr_series(Policy::LtA, |c, v| c.variation.ring_local_nm = v, &values, 300);
+    let ltc = min_tr_series(Policy::LtC, |c, v| c.variation.ring_local_nm = v, &values, 300);
+    for i in 0..values.len() {
+        assert!(lta.y[i] <= ltc.y[i] + 1e-9, "sigma {}: LtA {} > LtC {}", values[i], lta.y[i], ltc.y[i]);
+    }
+}
+
+/// Fig 6: LtD at zero grid offset ramps with slope ≈ 1 in σ_rLV.
+#[test]
+fn fig6_ltd_slope_about_one_at_zero_offset() {
+    let values = unit_multiples(1.12, 0.25, 2.5, 0.25);
+    let s = min_tr_series(
+        Policy::LtD,
+        |c, v| {
+            c.variation.grid_offset_nm = 0.0;
+            c.variation.ring_local_nm = v;
+        },
+        &values,
+        400,
+    );
+    let slope = s.slope();
+    assert!((0.7..=1.3).contains(&slope), "LtD slope {slope} outside [0.7, 1.3]");
+}
+
+/// Fig 6: large grid offsets pin LtD's requirement near the FSR.
+#[test]
+fn fig6_large_offset_pins_ltd_at_fsr() {
+    let cfg = SystemConfig::default();
+    let s = min_tr_series(
+        Policy::LtD,
+        |c, v| {
+            c.variation.grid_offset_nm = 7.0;
+            c.variation.ring_local_nm = v;
+        },
+        &[0.28, 2.24],
+        500,
+    );
+    for &y in &s.y {
+        assert!(y > 0.85 * cfg.fsr_mean_nm, "LtD with 7nm offset should be near FSR, got {y}");
+    }
+}
+
+/// Fig 7(b): minimum-TR sensitivity to laser local variation for LtC.
+/// The paper measures ≈ 0.56 nm per 25 % at 10k trials/point; the max-over-
+/// trials statistic converges slowly from below (joint extremes of ring and
+/// laser draws must both be sampled), so at 2.5k trials we assert the
+/// direction and a converging magnitude (measured ≈ 0.38 here).
+#[test]
+fn fig7_laser_local_sensitivity() {
+    let eval = RustIdeal::default();
+    let values = [0.05, 0.15, 0.25, 0.35, 0.45];
+    let y: Vec<f64> = values
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            let mut cfg = SystemConfig::default();
+            cfg.variation.ring_local_nm = 2.24;
+            cfg.variation.laser_local_frac = v;
+            let sampler = SystemSampler::new(&cfg, 50, 50, 600 + i as u64);
+            min_tr_complete(&eval.min_trs(&cfg, &sampler, Policy::LtC))
+        })
+        .collect();
+    let s = Series::new("LtC", values.to_vec(), y);
+    let per25 = s.slope() * 0.25;
+    assert!(
+        (0.15..=0.9).contains(&per25),
+        "dminTR/dsigma_lLV = {per25} nm/25% outside [0.15, 0.9] (paper ~0.56 at 10k trials)"
+    );
+}
+
+/// Fig 7(a): grid offset beyond one grid spacing does not change LtC's
+/// requirement (cyclic re-centering).
+#[test]
+fn fig7_offset_flat_for_ltc() {
+    let s = min_tr_series(
+        Policy::LtC,
+        |c, v| {
+            c.variation.ring_local_nm = 2.24;
+            c.variation.grid_offset_nm = v;
+        },
+        &[2.0, 8.0, 15.0],
+        700,
+    );
+    let spread = s.y.iter().cloned().fold(f64::MIN, f64::max)
+        - s.y.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(spread < 0.8, "LtC min TR should be flat in grid offset, spread {spread}");
+}
+
+/// Fig 8: under-designing the FSR well below N·λ_gS makes complete success
+/// unreachable through resonance aliasing (a microring comb landing on two
+/// laser tones), while over-design degrades gradually. Uses the
+/// alias-aware evaluation (see arbiter::distance).
+#[test]
+fn fig8_fsr_underdesign_penalty() {
+    use wdm_arbiter::arbiter::distance::ALIAS_EPS_NM;
+    use wdm_arbiter::montecarlo::alias_aware_min_trs;
+    let nominal = 8.96;
+    let at = |fsr: f64, seed: u64| {
+        let mut cfg = SystemConfig::default();
+        cfg.fsr_mean_nm = fsr;
+        let sampler = SystemSampler::new(&cfg, SIDE, SIDE, seed);
+        min_tr_complete(&alias_aware_min_trs(&cfg, &sampler, Policy::LtC, ALIAS_EPS_NM, 0))
+    };
+    let under = at(nominal - 2.24, 800);
+    let nom = at(nominal, 801);
+    let over = at(nominal + 2.24, 802);
+    assert!(nom.is_finite(), "nominal design must be feasible, got {nom}");
+    assert!(
+        under > nom + 1.0,
+        "under-design must cost sharply: {under} vs {nom}"
+    );
+    assert!(over > nom - 0.3, "over-design should not help: {over} vs {nom}");
+    assert!(over.is_finite(), "over-design stays feasible (no aliasing in span)");
+}
+
+/// Fig 14: scheme ranking seq >> rs-ssm >= vt-rs-ssm ≈ 0 at a
+/// representative operating point.
+#[test]
+fn fig14_scheme_ranking_at_6nm() {
+    let cfg = SystemConfig::default();
+    let seq = cafp_tally(&cfg, Scheme::Sequential, 6.0, SIDE, SIDE, 900, 0);
+    let rs = cafp_tally(&cfg, Scheme::RsSsm, 6.0, SIDE, SIDE, 900, 0);
+    let vt = cafp_tally(&cfg, Scheme::VtRsSsm, 6.0, SIDE, SIDE, 900, 0);
+    assert!(seq.cafp() > 0.5, "sequential should fail often, got {}", seq.cafp());
+    assert!(rs.cafp() < 0.1, "rs-ssm should be small, got {}", rs.cafp());
+    assert!(vt.cafp() < 0.005, "vt-rs-ssm should be ~0, got {}", vt.cafp());
+}
+
+/// Fig 15: above the FSR, sequential failures are exclusively lane-order
+/// errors (every tone is reachable, so locks always complete); below it,
+/// the scheme shows *significant* zero/duplicate lock errors even under
+/// ideal laser/FSR/TR variations (the paper's §V-D claim).
+#[test]
+fn fig15_error_composition_flips_at_fsr() {
+    use wdm_arbiter::model::VariationConfig;
+    let mut ideal_cfg = SystemConfig::default();
+    ideal_cfg.variation = VariationConfig::ideal_fig15(2.24);
+    let below = cafp_tally(&ideal_cfg, Scheme::Sequential, 6.0, SIDE, SIDE, 1000, 0);
+    assert!(
+        below.lock_errors as f64 > 0.05 * below.trials as f64,
+        "below FSR lock errors should be significant even under ideal variations: {below:?}"
+    );
+    let cfg = SystemConfig::default();
+    let above = cafp_tally(&cfg, Scheme::Sequential, 10.08, SIDE, SIDE, 1000, 0);
+    assert!(
+        above.lane_order_errors >= above.lock_errors,
+        "above FSR lane-order should dominate: {above:?}"
+    );
+    assert!(
+        above.lane_order_errors as f64 > 0.5 * above.conditional_failures as f64,
+        "above FSR lane-order should be the majority failure: {above:?}"
+    );
+}
+
+/// Fig 16: under harsh σ_FSR/σ_TR, VT-RS/SSM stays no worse than RS/SSM.
+#[test]
+fn fig16_vt_no_worse_under_harsh_variation() {
+    let mut cfg = SystemConfig::default();
+    cfg.variation.fsr_frac = 0.05;
+    cfg.variation.tr_frac = 0.20;
+    for tr in [3.0, 8.0] {
+        let rs = cafp_tally(&cfg, Scheme::RsSsm, tr, SIDE, SIDE, 1100, 0);
+        let vt = cafp_tally(&cfg, Scheme::VtRsSsm, tr, SIDE, SIDE, 1100, 0);
+        assert!(
+            vt.cafp() <= rs.cafp() + 1e-9,
+            "tr={tr}: vt {} > rs {}",
+            vt.cafp(),
+            rs.cafp()
+        );
+    }
+}
+
+/// §IV-A: pre-fabrication ordering does not change the ideal minimum
+/// tuning range for LtA/LtC (N vs P cases agree within sampling noise).
+#[test]
+fn fig5_natural_vs_permuted_agree() {
+    let eval = RustIdeal::default();
+    for policy in [Policy::LtA, Policy::LtC] {
+        let mut vals = Vec::new();
+        for permuted in [false, true] {
+            let mut cfg = SystemConfig::default();
+            if permuted {
+                cfg = cfg.with_permuted_orders();
+            }
+            cfg.variation.ring_local_nm = 2.24;
+            let sampler = SystemSampler::new(&cfg, SIDE, SIDE, 1200);
+            vals.push(min_tr_complete(&eval.min_trs(&cfg, &sampler, policy)));
+        }
+        let diff = (vals[0] - vals[1]).abs();
+        assert!(diff < 0.7, "{policy}: N vs P min TR differ by {diff} ({vals:?})");
+    }
+}

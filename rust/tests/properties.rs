@@ -1,0 +1,225 @@
+//! Property-based invariants over randomized systems (testkit runner —
+//! DESIGN.md "Substitutions": hand-rolled in place of proptest).
+
+use wdm_arbiter::arbiter::{distance, ideal, matching, Policy};
+use wdm_arbiter::config::SystemConfig;
+use wdm_arbiter::model::{DwdmGrid, SpectralOrdering, SystemUnderTest};
+use wdm_arbiter::montecarlo::cafp_tally;
+use wdm_arbiter::oblivious::outcome::OutcomeClass;
+use wdm_arbiter::oblivious::{run_scheme, Scheme};
+use wdm_arbiter::prop_assert;
+use wdm_arbiter::rng::Rng;
+use wdm_arbiter::testkit::{check, check_default, PropConfig};
+
+fn random_cfg(rng: &mut Rng) -> SystemConfig {
+    let grid = match rng.below(4) {
+        0 => DwdmGrid::wdm8_g200(),
+        1 => DwdmGrid::wdm8_g400(),
+        2 => DwdmGrid::wdm16_g200(),
+        _ => DwdmGrid::wdm16_g400(),
+    };
+    let mut cfg = SystemConfig::table1(grid);
+    if rng.below(2) == 1 {
+        cfg = cfg.with_permuted_orders();
+    }
+    cfg.variation.ring_local_nm = rng.uniform(0.0, 4.0 * grid.spacing_nm);
+    cfg.variation.grid_offset_nm = rng.uniform(0.0, 20.0);
+    cfg.variation.laser_local_frac = rng.uniform(0.0, 0.45);
+    cfg.variation.tr_frac = rng.uniform(0.0, 0.2);
+    cfg.variation.fsr_frac = rng.uniform(0.0, 0.05);
+    cfg
+}
+
+/// Policies are nested in permissiveness: LtA ⊆ LtC ⊆ LtD enforcement ⇒
+/// min TR ordered the other way (paper Fig 1(b)).
+#[test]
+fn prop_policy_min_tr_nesting() {
+    check_default("policy nesting", |rng| {
+        let cfg = random_cfg(rng);
+        let sut = SystemUnderTest::sample(&cfg, rng);
+        let dist = distance::scaled_distance_matrix(&sut);
+        let s = cfg.target_order.as_slice();
+        let lta = ideal::min_tuning_range(Policy::LtA, &dist, s);
+        let ltc = ideal::min_tuning_range(Policy::LtC, &dist, s);
+        let ltd = ideal::min_tuning_range(Policy::LtD, &dist, s);
+        prop_assert!(lta <= ltc + 1e-12, "LtA {lta} > LtC {ltc}");
+        prop_assert!(ltc <= ltd + 1e-12, "LtC {ltc} > LtD {ltd}");
+        Ok(())
+    });
+}
+
+/// The ideal witness assignment is always achievable at its own min TR and
+/// honors the policy's ordering contract.
+#[test]
+fn prop_ideal_witness_valid() {
+    check_default("ideal witness validity", |rng| {
+        let cfg = random_cfg(rng);
+        let sut = SystemUnderTest::sample(&cfg, rng);
+        let dist = distance::scaled_distance_matrix(&sut);
+        let order = &cfg.target_order;
+        for policy in Policy::all() {
+            let out = ideal::arbitrate(policy, &dist, order.as_slice());
+            let worst = (0..dist.n)
+                .map(|i| dist.at(i, out.assignment[i]))
+                .fold(f64::MIN, f64::max);
+            prop_assert!(
+                (worst - out.min_tr_nm).abs() < 1e-9,
+                "{policy}: witness worst {worst} != min_tr {}",
+                out.min_tr_nm
+            );
+            let ok = match policy {
+                Policy::LtD => order.matches_exact(&out.assignment),
+                Policy::LtC => order.matches_cyclic(&out.assignment).is_some(),
+                Policy::LtA => SpectralOrdering::matches_any(&out.assignment),
+            };
+            prop_assert!(ok, "{policy}: ordering contract violated {:?}", out.assignment);
+        }
+        Ok(())
+    });
+}
+
+/// LtA min TR from the generic bottleneck matcher equals brute force for
+/// small N (complements the unit test with random *physical* systems).
+#[test]
+fn prop_bottleneck_equals_bruteforce_n8() {
+    check(
+        "bottleneck vs bruteforce",
+        PropConfig { cases: 64, seed: 0xB0 },
+        |rng| {
+            let cfg = SystemConfig::default();
+            let sut = SystemUnderTest::sample(&cfg, rng);
+            let dist = distance::scaled_distance_matrix(&sut);
+            let (t, _) = matching::bottleneck_assignment(&dist.d, 8);
+            let brute = brute_bottleneck(&dist.d, 8);
+            prop_assert!((t - brute).abs() < 1e-12, "hk {t} vs brute {brute}");
+            Ok(())
+        },
+    );
+}
+
+fn brute_bottleneck(d: &[f64], n: usize) -> f64 {
+    fn rec(d: &[f64], n: usize, i: usize, used: &mut [bool], cur: f64, best: &mut f64) {
+        if cur >= *best {
+            return;
+        }
+        if i == n {
+            *best = cur;
+            return;
+        }
+        for j in 0..n {
+            if !used[j] {
+                used[j] = true;
+                rec(d, n, i + 1, used, cur.max(d[i * n + j]), best);
+                used[j] = false;
+            }
+        }
+    }
+    let mut best = f64::INFINITY;
+    rec(d, n, 0, &mut vec![false; n], 0.0, &mut best);
+    best
+}
+
+/// Sequential tuning in *natural* order can never duplicate-lock: the
+/// tuning order equals the physical order, so every earlier lock masks its
+/// tone for all later (downstream) rings.
+#[test]
+fn prop_sequential_natural_never_duplicates() {
+    check_default("sequential natural no dupl", |rng| {
+        let mut cfg = random_cfg(rng);
+        cfg.pre_fab_order = SpectralOrdering::natural(cfg.grid.n_ch);
+        cfg.target_order = SpectralOrdering::natural(cfg.grid.n_ch);
+        let sut = SystemUnderTest::sample(&cfg, rng);
+        let tr = rng.uniform(0.5, 11.0);
+        let res = run_scheme(Scheme::Sequential, &sut.laser, &sut.rings, &cfg.target_order, tr);
+        prop_assert!(
+            res.class != OutcomeClass::DuplLock,
+            "dupl-lock at tr={tr}: {:?}",
+            res.assignment
+        );
+        Ok(())
+    });
+}
+
+/// VT-RS/SSM matches the ideal LtC model on Table-I-default systems: if the
+/// ideal model succeeds with margin, the algorithm succeeds (the paper's
+/// CAFP ≈ 0 claim).
+#[test]
+fn prop_vt_rs_ssm_tracks_ideal_with_margin() {
+    check(
+        "vt-rs-ssm ~ ideal LtC",
+        PropConfig { cases: 256, seed: 0x5EED },
+        |rng| {
+            let cfg = SystemConfig::default();
+            let sut = SystemUnderTest::sample(&cfg, rng);
+            let tr = rng.uniform(1.0, 10.0);
+            let dist = distance::scaled_distance_matrix(&sut);
+            let min_tr = ideal::min_tuning_range(Policy::LtC, &dist, cfg.target_order.as_slice());
+            // Margin keeps us off fp-boundary trials.
+            if min_tr > tr - 1e-3 {
+                return Ok(());
+            }
+            let res = run_scheme(Scheme::VtRsSsm, &sut.laser, &sut.rings, &cfg.target_order, tr);
+            prop_assert!(
+                res.succeeded(),
+                "ideal feasible (min_tr {min_tr:.3} <= tr {tr:.3}) but vt-rs-ssm {}",
+                res.class.name()
+            );
+            Ok(())
+        },
+    );
+}
+
+/// CAFP ordering across schemes holds on sampled populations:
+/// seq ≥ RS/SSM ≥ VT-RS/SSM (paper Fig 14).
+#[test]
+fn prop_scheme_ranking() {
+    let cfg = SystemConfig::default();
+    for (seed, tr) in [(1u64, 4.0), (2, 6.0), (3, 8.0)] {
+        let seq = cafp_tally(&cfg, Scheme::Sequential, tr, 12, 12, seed, 0);
+        let rs = cafp_tally(&cfg, Scheme::RsSsm, tr, 12, 12, seed, 0);
+        let vt = cafp_tally(&cfg, Scheme::VtRsSsm, tr, 12, 12, seed, 0);
+        assert!(
+            seq.cafp() >= rs.cafp() && rs.cafp() >= vt.cafp(),
+            "tr={tr}: seq {} rs {} vt {}",
+            seq.cafp(),
+            rs.cafp(),
+            vt.cafp()
+        );
+    }
+}
+
+/// Grid-offset invariance (paper Fig 7(a)): with FSR exactly N·λ_gS,
+/// uniformly spaced tones and no FSR/TR variation, shifting the whole
+/// laser comb by one grid spacing leaves the LtC minimum tuning range
+/// unchanged per-trial (barrel-shift re-centering). With laser *local*
+/// variation the invariance is only distributional — consecutive tone
+/// spacings differ from λ_gS — so it is zeroed here; ring local variation
+/// stays (it commutes with the global shift).
+#[test]
+fn prop_ltc_offset_recentering() {
+    check(
+        "LtC offset re-centering",
+        PropConfig { cases: 64, seed: 0x0FF5 },
+        |rng| {
+            let mut cfg = SystemConfig::default();
+            cfg.variation.grid_offset_nm = 0.0;
+            cfg.variation.fsr_frac = 0.0;
+            cfg.variation.tr_frac = 0.0;
+            cfg.variation.laser_local_frac = 0.0;
+            let mut sut = SystemUnderTest::sample(&cfg, rng);
+            let s = cfg.target_order.as_slice();
+            let d0 = distance::scaled_distance_matrix(&sut);
+            let base = ideal::min_tuning_range(Policy::LtC, &d0, s);
+            for t in &mut sut.laser.tones_nm {
+                *t += cfg.grid.spacing_nm;
+            }
+            let d1 = distance::scaled_distance_matrix(&sut);
+            let shifted = ideal::min_tuning_range(Policy::LtC, &d1, s);
+            prop_assert!(
+                (base - shifted).abs() < 1e-6,
+                "offset changed LtC min TR: {base} -> {shifted}"
+            );
+            Ok(())
+        },
+    );
+}
