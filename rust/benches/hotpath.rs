@@ -10,13 +10,17 @@ use std::time::Duration;
 
 use wdm_arbiter::arbiter::{distance, ideal, matching, Policy};
 use wdm_arbiter::config::SystemConfig;
+use wdm_arbiter::coordinator::sweep::{ConfigAxis, Measure, SweepSpec};
+use wdm_arbiter::coordinator::RunOptions;
+use wdm_arbiter::experiments::{rlv_sweep, tr_sweep};
+use wdm_arbiter::metrics::TrialTally;
 use wdm_arbiter::model::system::SystemSampler;
 use wdm_arbiter::model::{DwdmGrid, SystemUnderTest};
-use wdm_arbiter::montecarlo::{IdealEvaluator, RustIdeal};
+use wdm_arbiter::montecarlo::{IdealEvaluator, RustIdeal, TrialEngine};
 use wdm_arbiter::oblivious::relation::{full_record_phase, ProbeSet};
 use wdm_arbiter::oblivious::search::initial_tables;
 use wdm_arbiter::oblivious::ssm::match_phase;
-use wdm_arbiter::oblivious::{run_scheme, Scheme};
+use wdm_arbiter::oblivious::{run_scheme, run_scheme_with, Scheme, Workspace};
 use wdm_arbiter::rng::Rng;
 use wdm_arbiter::runtime::accel::XlaIdeal;
 use wdm_arbiter::testkit::benchkit::{bench, black_box, header, BenchResult};
@@ -89,6 +93,21 @@ fn main() {
             black_box(run_scheme(scheme, &sut8.laser, &sut8.rings, &cfg8.target_order, 6.0));
         });
     }
+    {
+        let mut ws = Workspace::new();
+        for scheme in Scheme::all() {
+            run(&format!("full_trial_{}_reused_ws_n8", scheme.name()), &mut || {
+                black_box(run_scheme_with(
+                    scheme,
+                    &sut8.laser,
+                    &sut8.rings,
+                    &cfg8.target_order,
+                    6.0,
+                    &mut ws,
+                ));
+            });
+        }
+    }
 
     // --- population evaluation: rust vs PJRT artifact --------------------
     let sampler = SystemSampler::new(&cfg8, 16, 32, 1234); // 512 = one batch
@@ -116,4 +135,100 @@ fn main() {
     for r in &results {
         println!("{}", r.row());
     }
+
+    // --- Fig 14 grid: TrialEngine column reuse vs the seed structure ------
+    // Acceptance check for the TrialEngine refactor: the same CAFP grid
+    // (fast-preset Fig 14 axes, all three schemes) evaluated (a) the seed
+    // way — fresh population + per-trial ideal evaluation for EVERY
+    // (σ_rLV, λ̄_TR, scheme) cell — and (b) through the SweepSpec/TrialEngine
+    // path — one population + one ideal evaluation per σ_rLV column, shared
+    // by all thresholds and schemes, with per-worker workspace reuse.
+    if filter.is_empty() || filter == "--bench" || "fig14_grid".contains(&filter) {
+        fig14_grid_comparison();
+    }
+}
+
+fn fig14_grid_comparison() {
+    let cfg = SystemConfig::default();
+    let rlv = rlv_sweep(cfg.grid.spacing_nm, 1.0); // fast-preset Fig 14 axes
+    let trs = tr_sweep(cfg.grid.spacing_nm, 1.0);
+    let schemes = Scheme::all();
+    let (n_lasers, n_rows) = (10usize, 10usize);
+    let order = cfg.target_order.as_slice();
+
+    // (a) Seed structure: per (scheme, σ_rLV, λ̄_TR) cell, resample the
+    // population and evaluate ideal LtC per trial (the old cafp_shmoo).
+    let seed_structure = || -> f64 {
+        let mut acc = 0.0;
+        for (si, scheme) in schemes.iter().enumerate() {
+            for (ix, &r) in rlv.iter().enumerate() {
+                let mut c = cfg.clone();
+                c.variation.ring_local_nm = r;
+                for (iy, &tr) in trs.iter().enumerate() {
+                    let seed = (si * 1_000_000 + ix * 1000 + iy) as u64;
+                    let sampler = SystemSampler::new(&c, n_lasers, n_rows, seed);
+                    let mut tally = TrialTally::default();
+                    for t in 0..sampler.n_trials() {
+                        let (laser, rings) = sampler.trial(t);
+                        let dist = distance::scaled_distance_parts(laser, rings);
+                        let ok = ideal::min_tuning_range(Policy::LtC, &dist, order) <= tr;
+                        let class = if ok {
+                            Some(run_scheme(*scheme, laser, rings, &c.target_order, tr).class)
+                        } else {
+                            None
+                        };
+                        tally.record(ok, class);
+                    }
+                    acc += tally.cafp();
+                }
+            }
+        }
+        acc
+    };
+
+    // (b) TrialEngine/SweepSpec path: one population + one ideal LtC
+    // evaluation per column, all schemes and thresholds sharing it.
+    let opts = RunOptions {
+        n_lasers,
+        n_rows,
+        threads: 1,
+        fast: true,
+        ..RunOptions::fast()
+    };
+    let engine_structure = || -> f64 {
+        let ideal_eval = RustIdeal { threads: 1 };
+        let engine = TrialEngine::new(&ideal_eval, 1);
+        let outs = SweepSpec::new("bench", cfg.clone(), ConfigAxis::RingLocalNm, rlv.clone())
+            .thresholds(trs.clone())
+            .measures(schemes.iter().map(|&s| Measure::Cafp(s)))
+            .run(&engine, &opts);
+        outs.into_iter()
+            .map(|o| o.into_shmoo().cells.iter().sum::<f64>())
+            .sum()
+    };
+
+    let time_min = |f: &dyn Fn() -> f64| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = std::time::Instant::now();
+            black_box(f());
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+
+    let t_seed = time_min(&seed_structure);
+    let t_engine = time_min(&engine_structure);
+    let cells = schemes.len() * rlv.len() * trs.len();
+    println!(
+        "\nfig14_grid ({} cells x {} trials, 1 thread):\n  \
+         seed structure (per-cell sample + ideal): {:>8.1} ms\n  \
+         trial-engine (per-column reuse):          {:>8.1} ms\n  \
+         speedup: {:.1}x (acceptance floor: 3x)",
+        cells,
+        n_lasers * n_rows,
+        t_seed * 1e3,
+        t_engine * 1e3,
+        t_seed / t_engine
+    );
 }

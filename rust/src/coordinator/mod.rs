@@ -3,6 +3,7 @@
 //! reports.
 
 pub mod report;
+pub mod sweep;
 
 use std::path::PathBuf;
 
@@ -105,6 +106,11 @@ pub struct ExperimentReport {
     pub files: Vec<PathBuf>,
     /// Machine-readable result payload.
     pub json: Json,
+    /// `name()` of the evaluator that actually ran (NOT the requested
+    /// backend: `Backend::Xla` silently falls back to `RustIdeal` when
+    /// artifacts are missing). `"none"` for table renders with no
+    /// Monte-Carlo evaluation.
+    pub backend: &'static str,
 }
 
 /// An experiment that regenerates one paper table/figure.
@@ -128,7 +134,10 @@ pub fn run_experiment(exp: &dyn Experiment, opts: &RunOptions) -> Result<Experim
             ("title", Json::str(exp.title())),
             ("elapsed_s", Json::num(elapsed.as_secs_f64())),
             ("trials_per_point", Json::num(opts.trials_per_point() as f64)),
-            ("backend", Json::str(match opts.backend {
+            // The evaluator that actually ran, not the requested backend
+            // (Xla falls back to rust-f64 when artifacts are missing).
+            ("backend", Json::str(rep.backend)),
+            ("backend_requested", Json::str(match opts.backend {
                 Backend::Rust => "rust",
                 Backend::Xla => "xla",
             })),
@@ -175,6 +184,7 @@ mod tests {
                 summary: "ok".into(),
                 files: vec![],
                 json: Json::num(1.0),
+                backend: "none",
             })
         }
     }
@@ -187,6 +197,10 @@ mod tests {
         assert!(rep.files[0].is_file());
         let text = std::fs::read_to_string(&rep.files[0]).unwrap();
         assert!(text.contains("\"id\": \"dummy\""));
+        // The recorded backend is the evaluator that actually ran (the
+        // satellite fix: never report an Xla request that fell back).
+        assert!(text.contains("\"backend\": \"none\""));
+        assert!(text.contains("\"backend_requested\": \"rust\""));
         std::fs::remove_dir_all(dir).ok();
     }
 }

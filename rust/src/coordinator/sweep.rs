@@ -1,0 +1,508 @@
+//! Declarative sweep specifications over the [`TrialEngine`].
+//!
+//! Experiments submit a [`SweepSpec`] — a base configuration, one *column*
+//! axis (which system parameter varies and over which values), a set of
+//! λ̄_TR threshold rows, and the measures to take — instead of hand-rolling
+//! nested loops. The runner enforces the engine's cost structure:
+//!
+//! * each column's population is sampled **exactly once**;
+//! * the ideal model runs **once per column** (multi-policy, shared
+//!   per-trial distance work), never per cell;
+//! * AFP cells are threshold tests on the per-column vectors;
+//! * CAFP cells gate the oblivious simulation on the precomputed ideal-LtC
+//!   vector and reuse per-worker arbitration workspaces.
+//!
+//! The `wdm-arbiter sweep` subcommand exposes ad-hoc grids over the same
+//! axes (σ_rLV, σ_gO, σ_lLV, σ_TR, σ_FSR, λ̄_FSR, channel count, grid
+//! spacing, target-order permutation).
+
+use crate::arbiter::distance::ALIAS_EPS_NM;
+use crate::arbiter::Policy;
+use crate::config::SystemConfig;
+use crate::coordinator::RunOptions;
+use crate::metrics::TrialTally;
+use crate::model::{DwdmGrid, SpectralOrdering};
+use crate::montecarlo::sweep::{Series, Shmoo};
+use crate::montecarlo::{afp_at, alias_aware_min_trs, min_tr_complete, TrialEngine};
+use crate::oblivious::Scheme;
+use crate::rng::derive_seed;
+
+/// Which system parameter a sweep's columns vary. Every column resamples
+/// its population; the λ̄_TR threshold axis never does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConfigAxis {
+    /// σ_rLV — ring local resonance variation (nm).
+    RingLocalNm,
+    /// σ_gO — grid offset (nm).
+    GridOffsetNm,
+    /// σ_lLV — laser local variation (fraction of λ_gS).
+    LaserLocalFrac,
+    /// σ_TR — tuning-range variation (fraction).
+    TrFrac,
+    /// σ_FSR — FSR variation (fraction).
+    FsrFrac,
+    /// λ̄_FSR — FSR mean (nm).
+    FsrMeanNm,
+    /// N_ch — channel count. Re-derives the Table-I design rules (ring
+    /// bias, FSR mean, orderings) for the new grid; explicit variation
+    /// settings from the base config are preserved.
+    Channels,
+    /// λ_gS — grid spacing (nm). Re-derives design rules like [`Channels`].
+    SpacingNm,
+    /// Target-order permutation: value 0 forces natural orderings, any
+    /// other value the permuted ones (both r_i and s_i — the paper's N/N
+    /// vs P/P cases).
+    Permuted,
+}
+
+impl ConfigAxis {
+    pub fn all() -> [ConfigAxis; 9] {
+        [
+            ConfigAxis::RingLocalNm,
+            ConfigAxis::GridOffsetNm,
+            ConfigAxis::LaserLocalFrac,
+            ConfigAxis::TrFrac,
+            ConfigAxis::FsrFrac,
+            ConfigAxis::FsrMeanNm,
+            ConfigAxis::Channels,
+            ConfigAxis::SpacingNm,
+            ConfigAxis::Permuted,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConfigAxis::RingLocalNm => "ring-local",
+            ConfigAxis::GridOffsetNm => "grid-offset",
+            ConfigAxis::LaserLocalFrac => "laser-local",
+            ConfigAxis::TrFrac => "tr-frac",
+            ConfigAxis::FsrFrac => "fsr-frac",
+            ConfigAxis::FsrMeanNm => "fsr-mean",
+            ConfigAxis::Channels => "channels",
+            ConfigAxis::SpacingNm => "spacing",
+            ConfigAxis::Permuted => "permuted",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ConfigAxis> {
+        ConfigAxis::all().into_iter().find(|a| a.name() == name)
+    }
+
+    /// Build the column configuration at axis value `v`.
+    pub fn apply(&self, base: &SystemConfig, v: f64) -> SystemConfig {
+        let mut cfg = base.clone();
+        match self {
+            ConfigAxis::RingLocalNm => cfg.variation.ring_local_nm = v,
+            ConfigAxis::GridOffsetNm => cfg.variation.grid_offset_nm = v,
+            ConfigAxis::LaserLocalFrac => cfg.variation.laser_local_frac = v,
+            ConfigAxis::TrFrac => cfg.variation.tr_frac = v,
+            ConfigAxis::FsrFrac => cfg.variation.fsr_frac = v,
+            ConfigAxis::FsrMeanNm => cfg.fsr_mean_nm = v,
+            ConfigAxis::Channels => {
+                let grid = DwdmGrid { n_ch: v.round().max(2.0) as usize, spacing_nm: base.grid.spacing_nm };
+                cfg = regrid(base, grid);
+            }
+            ConfigAxis::SpacingNm => {
+                let grid = DwdmGrid { n_ch: base.grid.n_ch, spacing_nm: v };
+                cfg = regrid(base, grid);
+            }
+            ConfigAxis::Permuted => {
+                let n = cfg.grid.n_ch;
+                if v != 0.0 {
+                    cfg.pre_fab_order = SpectralOrdering::permuted(n);
+                    cfg.target_order = SpectralOrdering::permuted(n);
+                } else {
+                    cfg.pre_fab_order = SpectralOrdering::natural(n);
+                    cfg.target_order = SpectralOrdering::natural(n);
+                }
+            }
+        }
+        cfg
+    }
+}
+
+/// Rebuild Table-I design rules for `grid`, preserving the base config's
+/// variation settings and carrying each spectral ordering across
+/// independently (mixed N/P cases and custom orderings survive).
+fn regrid(base: &SystemConfig, grid: DwdmGrid) -> SystemConfig {
+    let new_n = grid.n_ch;
+    let mut cfg = SystemConfig::table1(grid);
+    cfg.variation = base.variation;
+    cfg.pre_fab_order = remap_order(&base.pre_fab_order, base.grid.n_ch, new_n);
+    cfg.target_order = remap_order(&base.target_order, base.grid.n_ch, new_n);
+    cfg
+}
+
+/// Carry one ordering across a grid change: the named patterns (natural /
+/// permuted) are re-derived at the new channel count; a custom permutation
+/// is kept verbatim when the channel count is unchanged and falls back to
+/// natural otherwise (an N-permutation has no canonical N′ extension).
+/// Natural is checked first: for N ≤ 2 the two named patterns coincide and
+/// the identity is the safer reading.
+fn remap_order(order: &SpectralOrdering, old_n: usize, new_n: usize) -> SpectralOrdering {
+    if *order == SpectralOrdering::natural(old_n) {
+        SpectralOrdering::natural(new_n)
+    } else if *order == SpectralOrdering::permuted(old_n) {
+        SpectralOrdering::permuted(new_n)
+    } else if old_n == new_n {
+        order.clone()
+    } else {
+        SpectralOrdering::natural(new_n)
+    }
+}
+
+/// What to measure at each grid point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Measure {
+    /// Minimum mean tuning range for complete arbitration success per
+    /// column (1-D curve; ignores the threshold axis). Paper Figs 5–7.
+    MinTrComplete(Policy),
+    /// Like [`Measure::MinTrComplete`] with alias-aware distances
+    /// (resonance aliasing under FSR under-design — paper Fig 8).
+    MinTrAliasAware(Policy),
+    /// AFP at each λ̄_TR threshold row (2-D shmoo). Paper Fig 4.
+    Afp(Policy),
+    /// CAFP of a wavelength-oblivious scheme at each λ̄_TR row (2-D
+    /// shmoo + per-cell tallies). Paper Figs 14–16.
+    Cafp(Scheme),
+}
+
+impl Measure {
+    /// Filesystem-safe identifier, e.g. `afp_ltc`, `cafp_vt-rs-ssm`.
+    pub fn slug(&self) -> String {
+        match self {
+            Measure::MinTrComplete(p) => format!("min-tr_{}", format!("{p}").to_lowercase()),
+            Measure::MinTrAliasAware(p) => {
+                format!("alias-min-tr_{}", format!("{p}").to_lowercase())
+            }
+            Measure::Afp(p) => format!("afp_{}", format!("{p}").to_lowercase()),
+            Measure::Cafp(s) => format!("cafp_{}", s.name()),
+        }
+    }
+}
+
+/// One measure's sweep result.
+#[derive(Debug, Clone)]
+pub enum SweepOutput {
+    /// Per-column scalar (curve measures).
+    Curve(Series),
+    /// Column × threshold grid (AFP).
+    Grid(Shmoo),
+    /// Column × threshold grid with full failure tallies (CAFP). `tallies`
+    /// is row-major `[iy * n_columns + ix]`, matching `cafp.cells`.
+    CafpGrid { cafp: Shmoo, tallies: Vec<TrialTally> },
+}
+
+impl SweepOutput {
+    /// Unwrap a curve measure's series.
+    pub fn into_series(self) -> Series {
+        match self {
+            SweepOutput::Curve(s) => s,
+            other => panic!("expected curve sweep output, got {other:?}"),
+        }
+    }
+
+    /// Unwrap a grid measure's shmoo (the CAFP shmoo for CAFP measures).
+    pub fn into_shmoo(self) -> Shmoo {
+        match self {
+            SweepOutput::Grid(s) => s,
+            SweepOutput::CafpGrid { cafp, .. } => cafp,
+            other => panic!("expected grid sweep output, got {other:?}"),
+        }
+    }
+
+    /// Unwrap a CAFP measure's shmoo + tallies.
+    pub fn into_cafp(self) -> (Shmoo, Vec<TrialTally>) {
+        match self {
+            SweepOutput::CafpGrid { cafp, tallies } => (cafp, tallies),
+            other => panic!("expected CAFP sweep output, got {other:?}"),
+        }
+    }
+}
+
+/// A declarative sweep: base config + column axis + threshold rows +
+/// measures. Built with the fluent helpers, executed with [`SweepSpec::run`].
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Tag mixed into per-column seeds (usually the experiment id).
+    pub tag: String,
+    /// Seed lane separating multiple sweeps within one experiment.
+    pub lane: usize,
+    pub base: SystemConfig,
+    pub axis: ConfigAxis,
+    /// Column values — one sampled population per value.
+    pub values: Vec<f64>,
+    /// λ̄_TR threshold rows. May be empty for curve-only sweeps.
+    pub tr_values: Vec<f64>,
+    pub measures: Vec<Measure>,
+}
+
+impl SweepSpec {
+    pub fn new(
+        tag: impl Into<String>,
+        base: SystemConfig,
+        axis: ConfigAxis,
+        values: Vec<f64>,
+    ) -> Self {
+        Self {
+            tag: tag.into(),
+            lane: 0,
+            base,
+            axis,
+            values,
+            tr_values: Vec::new(),
+            measures: Vec::new(),
+        }
+    }
+
+    pub fn lane(mut self, lane: usize) -> Self {
+        self.lane = lane;
+        self
+    }
+
+    pub fn thresholds(mut self, tr_values: Vec<f64>) -> Self {
+        self.tr_values = tr_values;
+        self
+    }
+
+    pub fn measure(mut self, m: Measure) -> Self {
+        self.measures.push(m);
+        self
+    }
+
+    pub fn measures(mut self, ms: impl IntoIterator<Item = Measure>) -> Self {
+        self.measures.extend(ms);
+        self
+    }
+
+    /// Ideal-model policies the engine must evaluate per column: one entry
+    /// per distinct AFP/curve policy, plus LtC when any CAFP measure needs
+    /// its gate.
+    fn column_policies(&self) -> Vec<Policy> {
+        fn push_unique(policies: &mut Vec<Policy>, p: Policy) {
+            if !policies.contains(&p) {
+                policies.push(p);
+            }
+        }
+        let mut policies: Vec<Policy> = Vec::new();
+        let mut need_gate = false;
+        for m in &self.measures {
+            match m {
+                Measure::MinTrComplete(p) | Measure::Afp(p) => push_unique(&mut policies, *p),
+                Measure::Cafp(_) => need_gate = true,
+                Measure::MinTrAliasAware(_) => {}
+            }
+        }
+        if need_gate {
+            push_unique(&mut policies, Policy::LtC);
+        }
+        policies
+    }
+
+    /// Execute the sweep: per column, sample once, evaluate the ideal model
+    /// once, then fill every measure's cells. Outputs are parallel to
+    /// [`Self::measures`].
+    pub fn run(&self, engine: &TrialEngine<'_>, opts: &RunOptions) -> Vec<SweepOutput> {
+        let policies = self.column_policies();
+        let nx = self.values.len();
+        let ny = self.tr_values.len();
+        // Hard assert (not debug-only): a grid measure without threshold
+        // rows would silently produce empty shmoos in release builds.
+        assert!(
+            ny > 0
+                || self
+                    .measures
+                    .iter()
+                    .all(|m| matches!(m, Measure::MinTrComplete(_) | Measure::MinTrAliasAware(_))),
+            "SweepSpec: AFP/CAFP measures need thresholds() rows"
+        );
+
+        let mut outs: Vec<SweepOutput> = self
+            .measures
+            .iter()
+            .map(|m| match m {
+                Measure::MinTrComplete(p) => SweepOutput::Curve(Series::new(
+                    format!("{p}"),
+                    self.values.clone(),
+                    vec![0.0; nx],
+                )),
+                Measure::MinTrAliasAware(p) => SweepOutput::Curve(Series::new(
+                    format!("{p}"),
+                    self.values.clone(),
+                    vec![0.0; nx],
+                )),
+                Measure::Afp(p) => SweepOutput::Grid(Shmoo::new(
+                    format!("{p}"),
+                    self.values.clone(),
+                    self.tr_values.clone(),
+                )),
+                Measure::Cafp(s) => SweepOutput::CafpGrid {
+                    cafp: Shmoo::new(
+                        format!("{} cafp", s.name()),
+                        self.values.clone(),
+                        self.tr_values.clone(),
+                    ),
+                    tallies: vec![TrialTally::default(); nx * ny],
+                },
+            })
+            .collect();
+
+        for (ix, &v) in self.values.iter().enumerate() {
+            let cfg = self.axis.apply(&self.base, v);
+            let seed = column_seed(opts.seed, &self.tag, self.lane, ix);
+            let pop = engine.population(&cfg, opts.n_lasers, opts.n_rows, seed, &policies);
+            for (m, out) in self.measures.iter().zip(outs.iter_mut()) {
+                match (m, out) {
+                    (Measure::MinTrComplete(p), SweepOutput::Curve(series)) => {
+                        let trs = pop.min_trs_for(*p).expect("policy evaluated per column");
+                        series.y[ix] = min_tr_complete(trs);
+                    }
+                    (Measure::MinTrAliasAware(p), SweepOutput::Curve(series)) => {
+                        let trs = alias_aware_min_trs(
+                            &cfg,
+                            &pop.sampler,
+                            *p,
+                            ALIAS_EPS_NM,
+                            engine.threads(),
+                        );
+                        series.y[ix] = min_tr_complete(&trs);
+                    }
+                    (Measure::Afp(p), SweepOutput::Grid(shmoo)) => {
+                        let trs = pop.min_trs_for(*p).expect("policy evaluated per column");
+                        for (iy, &tr) in self.tr_values.iter().enumerate() {
+                            shmoo.set(ix, iy, afp_at(trs, tr));
+                        }
+                    }
+                    (Measure::Cafp(s), SweepOutput::CafpGrid { cafp, tallies }) => {
+                        for (iy, &tr) in self.tr_values.iter().enumerate() {
+                            let tally = engine.cafp(&pop, *s, tr);
+                            cafp.set(ix, iy, tally.cafp());
+                            tallies[iy * nx + ix] = tally;
+                        }
+                    }
+                    _ => unreachable!("sweep output shape mismatch"),
+                }
+            }
+        }
+        outs
+    }
+}
+
+/// Deterministic per-column seed: bit-identical to
+/// [`crate::experiments::point_seed`] at `point = lane·10⁴ + column` (both
+/// go through [`crate::rng::tag_hash`]), so experiments rewritten onto
+/// SweepSpec keep their seed streams.
+pub fn column_seed(base_seed: u64, tag: &str, lane: usize, ix: usize) -> u64 {
+    derive_seed(base_seed, &[crate::rng::tag_hash(tag), (lane * 10_000 + ix) as u64])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::system::SystemSampler;
+    use crate::montecarlo::{IdealEvaluator, RustIdeal};
+
+    #[test]
+    fn axis_names_round_trip() {
+        for axis in ConfigAxis::all() {
+            assert_eq!(ConfigAxis::by_name(axis.name()), Some(axis));
+        }
+        assert_eq!(ConfigAxis::by_name("bogus"), None);
+    }
+
+    #[test]
+    fn axis_apply_variation_fields() {
+        let base = SystemConfig::default();
+        assert_eq!(ConfigAxis::RingLocalNm.apply(&base, 3.0).variation.ring_local_nm, 3.0);
+        assert_eq!(ConfigAxis::GridOffsetNm.apply(&base, 2.0).variation.grid_offset_nm, 2.0);
+        assert_eq!(ConfigAxis::FsrMeanNm.apply(&base, 7.0).fsr_mean_nm, 7.0);
+        let p = ConfigAxis::Permuted.apply(&base, 1.0);
+        assert_eq!(p.target_order, SpectralOrdering::permuted(8));
+        let n = ConfigAxis::Permuted.apply(&p, 0.0);
+        assert_eq!(n.target_order, SpectralOrdering::natural(8));
+    }
+
+    #[test]
+    fn channels_axis_rederives_design_rules() {
+        let mut base = SystemConfig::default().with_permuted_orders();
+        base.variation.ring_local_nm = 1.0; // explicit setting survives
+        let c = ConfigAxis::Channels.apply(&base, 16.0);
+        assert_eq!(c.grid.n_ch, 16);
+        assert!((c.fsr_mean_nm - 16.0 * 1.12).abs() < 1e-9);
+        assert_eq!(c.variation.ring_local_nm, 1.0);
+        assert_eq!(c.target_order, SpectralOrdering::permuted(16));
+    }
+
+    #[test]
+    fn regrid_preserves_mixed_and_custom_orderings() {
+        // Mixed N/P (Table-II style): each ordering carried independently.
+        let mut base = SystemConfig::default();
+        base.target_order = SpectralOrdering::permuted(8);
+        let c = ConfigAxis::SpacingNm.apply(&base, 2.24);
+        assert_eq!(c.pre_fab_order, SpectralOrdering::natural(8));
+        assert_eq!(c.target_order, SpectralOrdering::permuted(8));
+        assert!((c.fsr_mean_nm - 8.0 * 2.24).abs() < 1e-9);
+
+        // Custom permutation survives a same-N regrid, falls back to
+        // natural when the channel count changes.
+        let custom = SpectralOrdering::from_vec(vec![1, 0, 2, 3, 4, 5, 6, 7]).unwrap();
+        base.target_order = custom.clone();
+        let same_n = ConfigAxis::SpacingNm.apply(&base, 0.8);
+        assert_eq!(same_n.target_order, custom);
+        let new_n = ConfigAxis::Channels.apply(&base, 16.0);
+        assert_eq!(new_n.target_order, SpectralOrdering::natural(16));
+    }
+
+    #[test]
+    fn sweep_afp_matches_direct_evaluation() {
+        let opts = RunOptions { n_lasers: 6, n_rows: 6, ..RunOptions::fast() };
+        let ideal = RustIdeal::default();
+        let engine = TrialEngine::new(&ideal, 0);
+        let values = vec![1.12, 2.24];
+        let trs_axis = vec![2.0, 6.0];
+        let spec = SweepSpec::new("t", SystemConfig::default(), ConfigAxis::RingLocalNm, values.clone())
+            .thresholds(trs_axis.clone())
+            .measure(Measure::Afp(Policy::LtC));
+        let shmoo = spec
+            .run(&engine, &opts)
+            .into_iter()
+            .next()
+            .unwrap()
+            .into_shmoo();
+        for (ix, &rlv) in values.iter().enumerate() {
+            let mut cfg = SystemConfig::default();
+            cfg.variation.ring_local_nm = rlv;
+            let sampler =
+                SystemSampler::new(&cfg, 6, 6, column_seed(opts.seed, "t", 0, ix));
+            let min_trs = ideal.min_trs(&cfg, &sampler, Policy::LtC);
+            for (iy, &tr) in trs_axis.iter().enumerate() {
+                assert_eq!(shmoo.at(ix, iy), afp_at(&min_trs, tr));
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_cafp_reuses_column_population() {
+        let opts = RunOptions { n_lasers: 5, n_rows: 5, ..RunOptions::fast() };
+        let ideal = RustIdeal::default();
+        let engine = TrialEngine::new(&ideal, 0);
+        let spec = SweepSpec::new("t", SystemConfig::default(), ConfigAxis::RingLocalNm, vec![2.24])
+            .thresholds(vec![3.0, 6.0, 9.0])
+            .measure(Measure::Cafp(crate::oblivious::Scheme::VtRsSsm));
+        let (cafp, tallies) = spec
+            .run(&engine, &opts)
+            .into_iter()
+            .next()
+            .unwrap()
+            .into_cafp();
+        assert_eq!(cafp.cells.len(), 3);
+        assert_eq!(tallies.len(), 3);
+        // Same population across rows: trial counts equal, and the AFP
+        // component (the gate) can only shrink as the threshold grows.
+        for t in &tallies {
+            assert_eq!(t.trials, 25);
+        }
+        assert!(tallies[0].policy_failures >= tallies[1].policy_failures);
+        assert!(tallies[1].policy_failures >= tallies[2].policy_failures);
+    }
+}

@@ -73,6 +73,7 @@ impl Experiment for Fig4 {
             summary,
             files,
             json: Json::Arr(json_panels),
+            backend: eval.name(),
         })
     }
 }

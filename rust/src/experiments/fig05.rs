@@ -11,6 +11,7 @@ use anyhow::Result;
 use crate::config::presets::{fig5_grids, table2_cases};
 use crate::config::SystemConfig;
 use crate::coordinator::report::{curve_table, write_csv_series};
+use crate::coordinator::sweep::ConfigAxis;
 use crate::coordinator::{Experiment, ExperimentReport, RunOptions};
 use crate::experiments::min_tr_curve;
 use crate::montecarlo::sweep::Series;
@@ -44,12 +45,9 @@ impl Experiment for Fig5 {
                     crate::montecarlo::sweep::unit_multiples(grid.spacing_nm, 0.25, 8.0, opts.stride());
                 let series = min_tr_curve(
                     &grid.name(),
+                    &base,
+                    ConfigAxis::RingLocalNm,
                     &values,
-                    |rlv| {
-                        let mut c = base.clone();
-                        c.variation.ring_local_nm = rlv;
-                        c
-                    },
                     case.policy,
                     opts,
                     eval.as_ref(),
@@ -96,7 +94,13 @@ impl Experiment for Fig5 {
                 ("ramp_slope_wdm8_200g", Json::num(slope)),
             ]));
         }
-        Ok(ExperimentReport { id: self.id(), summary, files, json: Json::Arr(json_panels) })
+        Ok(ExperimentReport {
+            id: self.id(),
+            summary,
+            files,
+            json: Json::Arr(json_panels),
+            backend: eval.name(),
+        })
     }
 }
 

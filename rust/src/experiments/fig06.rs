@@ -10,6 +10,7 @@ use anyhow::Result;
 use crate::arbiter::Policy;
 use crate::config::SystemConfig;
 use crate::coordinator::report::{curve_table, write_csv_series};
+use crate::coordinator::sweep::ConfigAxis;
 use crate::coordinator::{Experiment, ExperimentReport, RunOptions};
 use crate::experiments::{min_tr_curve, rlv_sweep};
 use crate::util::json::Json;
@@ -35,15 +36,13 @@ impl Experiment for Fig6 {
 
         let mut series = Vec::new();
         for (k, &go) in GRID_OFFSETS_NM.iter().enumerate() {
+            let mut series_base = base.clone();
+            series_base.variation.grid_offset_nm = go;
             series.push(min_tr_curve(
                 &format!("gO={go}nm"),
+                &series_base,
+                ConfigAxis::RingLocalNm,
                 &rlv,
-                |v| {
-                    let mut c = base.clone();
-                    c.variation.grid_offset_nm = go;
-                    c.variation.ring_local_nm = v;
-                    c
-                },
                 Policy::LtD,
                 opts,
                 eval.as_ref(),
@@ -80,7 +79,7 @@ impl Experiment for Fig6 {
                 })
                 .collect(),
         );
-        Ok(ExperimentReport { id: self.id(), summary, files, json })
+        Ok(ExperimentReport { id: self.id(), summary, files, json, backend: eval.name() })
     }
 }
 

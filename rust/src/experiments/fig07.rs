@@ -14,6 +14,7 @@ use anyhow::Result;
 use crate::arbiter::Policy;
 use crate::config::SystemConfig;
 use crate::coordinator::report::{curve_table, write_csv_series};
+use crate::coordinator::sweep::ConfigAxis;
 use crate::coordinator::{Experiment, ExperimentReport, RunOptions};
 use crate::experiments::min_tr_curve;
 use crate::montecarlo::sweep::{linspace, Series};
@@ -26,7 +27,7 @@ struct Panel {
     name: &'static str,
     x_label: &'static str,
     values: Vec<f64>,
-    apply: fn(&mut SystemConfig, f64),
+    axis: ConfigAxis,
 }
 
 fn panels(fast: bool) -> Vec<Panel> {
@@ -36,25 +37,25 @@ fn panels(fast: bool) -> Vec<Panel> {
             name: "a_grid_offset",
             x_label: "sigma_gO_nm",
             values: linspace(0.0, 2.24, steps),
-            apply: |c, v| c.variation.grid_offset_nm = v,
+            axis: ConfigAxis::GridOffsetNm,
         },
         Panel {
             name: "b_laser_local",
             x_label: "sigma_lLV_frac",
             values: linspace(0.01, 0.45, steps),
-            apply: |c, v| c.variation.laser_local_frac = v,
+            axis: ConfigAxis::LaserLocalFrac,
         },
         Panel {
             name: "c_tr_variation",
             x_label: "sigma_TR_frac",
             values: linspace(0.0, 0.20, steps),
-            apply: |c, v| c.variation.tr_frac = v,
+            axis: ConfigAxis::TrFrac,
         },
         Panel {
             name: "d_fsr_variation",
             x_label: "sigma_FSR_frac",
             values: linspace(0.0, 0.05, steps),
-            apply: |c, v| c.variation.fsr_frac = v,
+            axis: ConfigAxis::FsrFrac,
         },
     ]
 }
@@ -116,7 +117,13 @@ impl Experiment for Fig7 {
                 ),
             ]));
         }
-        Ok(ExperimentReport { id: self.id(), summary, files, json: Json::Arr(json_panels) })
+        Ok(ExperimentReport {
+            id: self.id(),
+            summary,
+            files,
+            json: Json::Arr(json_panels),
+            backend: eval.name(),
+        })
     }
 }
 
@@ -131,16 +138,14 @@ fn run_panel(
         .into_iter()
         .enumerate()
         .map(|(ci, (label, policy, base))| {
+            // σ_rLV fixed at the Table I default 2.24 nm.
+            let mut panel_base = base;
+            panel_base.variation.ring_local_nm = 2.24;
             min_tr_curve(
                 label,
+                &panel_base,
+                panel.axis,
                 &panel.values,
-                |v| {
-                    let mut c = base.clone();
-                    // σ_rLV fixed at the Table I default 2.24 nm.
-                    c.variation.ring_local_nm = 2.24;
-                    (panel.apply)(&mut c, v);
-                    c
-                },
                 policy,
                 opts,
                 eval,

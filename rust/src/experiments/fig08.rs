@@ -8,15 +8,13 @@
 
 use anyhow::Result;
 
-use crate::arbiter::distance::ALIAS_EPS_NM;
 use crate::arbiter::Policy;
 use crate::config::SystemConfig;
 use crate::coordinator::report::{curve_table, write_csv_series};
+use crate::coordinator::sweep::{ConfigAxis, Measure, SweepSpec};
 use crate::coordinator::{Experiment, ExperimentReport, RunOptions};
-use crate::experiments::point_seed;
-use crate::model::system::SystemSampler;
-use crate::montecarlo::sweep::{unit_multiples, Series};
-use crate::montecarlo::{alias_aware_min_trs, min_tr_complete};
+use crate::montecarlo::sweep::unit_multiples;
+use crate::montecarlo::{RustIdeal, TrialEngine};
 use crate::util::json::Json;
 
 pub struct Fig8;
@@ -41,26 +39,23 @@ impl Experiment for Fig8 {
         // collision-free assignment are clipped to CLIP for plotting.
         const CLIP: f64 = 18.0;
 
+        // Alias-aware evaluation never touches the IdealEvaluator backend
+        // (pure-CPU extension of the mod-FSR distance), so the engine runs
+        // on the Rust oracle and the report records backend "none".
+        let ideal_eval = RustIdeal { threads: opts.threads };
+        let engine = TrialEngine::new(&ideal_eval, opts.threads);
         let mut series = Vec::new();
         for (k, policy) in [Policy::LtA, Policy::LtC].into_iter().enumerate() {
-            let y: Vec<f64> = fsr_values
-                .iter()
-                .enumerate()
-                .map(|(i, &fsr)| {
-                    let mut cfg = base.clone();
-                    cfg.fsr_mean_nm = fsr;
-                    let sampler = SystemSampler::new(
-                        &cfg,
-                        opts.n_lasers,
-                        opts.n_rows,
-                        point_seed(opts, self.id(), k * 10_000 + i),
-                    );
-                    let trs =
-                        alias_aware_min_trs(&cfg, &sampler, policy, ALIAS_EPS_NM, opts.threads);
-                    min_tr_complete(&trs).min(CLIP)
-                })
-                .collect();
-            series.push(Series::new(format!("{policy}"), fsr_values.clone(), y));
+            let mut s = SweepSpec::new(self.id(), base.clone(), ConfigAxis::FsrMeanNm, fsr_values.clone())
+                .lane(k)
+                .measure(Measure::MinTrAliasAware(policy))
+                .run(&engine, opts)
+                .remove(0)
+                .into_series();
+            for y in &mut s.y {
+                *y = y.min(CLIP);
+            }
+            series.push(s);
         }
         let path = opts.out_dir.join("fig8_fsr_design.csv");
         let files = vec![write_csv_series(&path, "fsr_mean_nm", &series)?];
@@ -106,7 +101,7 @@ impl Experiment for Fig8 {
                 })
                 .collect(),
         );
-        Ok(ExperimentReport { id: self.id(), summary, files, json })
+        Ok(ExperimentReport { id: self.id(), summary, files, json, backend: "none" })
     }
 }
 

@@ -11,7 +11,7 @@ use anyhow::Result;
 use crate::config::SystemConfig;
 use crate::coordinator::report::{ascii_heatmap, write_csv_shmoo};
 use crate::coordinator::{Experiment, ExperimentReport, RunOptions};
-use crate::experiments::{cafp_shmoo, rlv_sweep, tr_sweep};
+use crate::experiments::{cafp_shmoos, rlv_sweep, tr_sweep};
 use crate::oblivious::Scheme;
 use crate::util::json::Json;
 
@@ -32,6 +32,11 @@ impl Experiment for Fig14 {
 }
 
 /// Shared CAFP-shmoo driver (Fig 16 reuses it with a harsher config).
+///
+/// SweepSpec path: per target-ordering panel, **all schemes share one
+/// population and one ideal-LtC evaluation per σ_rLV column**; the ideal
+/// model never runs per cell (the seed structure re-evaluated it — and
+/// resampled the population — for every (σ_rLV, λ̄_TR, scheme) cell).
 pub fn run_cafp_grid(
     exp_id: &'static str,
     opts: &RunOptions,
@@ -43,6 +48,7 @@ pub fn run_cafp_grid(
     let stride = if opts.fast { 1.0 } else { 0.5 };
     let rlv = rlv_sweep(base_cfg.grid.spacing_nm, stride);
     let tr = tr_sweep(base_cfg.grid.spacing_nm, stride);
+    let eval = opts.backend.evaluator(opts.threads);
 
     let mut summary = String::new();
     let mut files = Vec::new();
@@ -56,8 +62,8 @@ pub fn run_cafp_grid(
     .into_iter()
     .enumerate()
     {
-        for (si, &scheme) in schemes.iter().enumerate() {
-            let shmoo = cafp_shmoo(&cfg, scheme, &rlv, &tr, opts, exp_id, oi * 10 + si);
+        let shmoos = cafp_shmoos(&cfg, &schemes, &rlv, &tr, opts, eval.as_ref(), exp_id, oi);
+        for (&scheme, shmoo) in schemes.iter().zip(shmoos) {
             let peak = shmoo.cells.iter().cloned().fold(0.0f64, f64::max);
             peak_cafp.push((format!("{}-{}", scheme.name(), order_tag), peak));
             summary.push_str(&format!("panel {} / {}:\n", scheme.name(), order_tag));
@@ -81,7 +87,13 @@ pub fn run_cafp_grid(
     for (name, peak) in &peak_cafp {
         summary.push_str(&format!("  {name:<16} {peak:.4}\n"));
     }
-    Ok(ExperimentReport { id: exp_id, summary, files, json: Json::Arr(json_panels) })
+    Ok(ExperimentReport {
+        id: exp_id,
+        summary,
+        files,
+        json: Json::Arr(json_panels),
+        backend: eval.name(),
+    })
 }
 
 #[cfg(test)]

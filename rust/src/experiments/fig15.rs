@@ -10,11 +10,12 @@ use anyhow::Result;
 
 use crate::config::SystemConfig;
 use crate::coordinator::report::{curve_table, write_csv_series};
+use crate::coordinator::sweep::{ConfigAxis, Measure, SweepSpec};
 use crate::coordinator::{Experiment, ExperimentReport, RunOptions};
-use crate::experiments::{point_seed, tr_sweep};
+use crate::experiments::tr_sweep;
 use crate::model::VariationConfig;
 use crate::montecarlo::sweep::Series;
-use crate::montecarlo::cafp_tally;
+use crate::montecarlo::TrialEngine;
 use crate::oblivious::Scheme;
 use crate::util::json::Json;
 
@@ -32,6 +33,8 @@ impl Experiment for Fig15 {
     fn run(&self, opts: &RunOptions) -> Result<ExperimentReport> {
         let base = SystemConfig::default();
         let tr_values = tr_sweep(base.grid.spacing_nm, if opts.fast { 0.5 } else { 0.25 });
+        let eval = opts.backend.evaluator(opts.threads);
+        let engine = TrialEngine::new(eval.as_ref(), opts.threads);
 
         let mut summary = String::new();
         let mut files = Vec::new();
@@ -45,23 +48,20 @@ impl Experiment for Fig15 {
         ];
 
         for (pi, (tag, cfg)) in panels.into_iter().enumerate() {
-            let mut lock = Vec::with_capacity(tr_values.len());
-            let mut order = Vec::with_capacity(tr_values.len());
-            let mut total = Vec::with_capacity(tr_values.len());
-            for (i, &tr) in tr_values.iter().enumerate() {
-                let tally = cafp_tally(
-                    &cfg,
-                    Scheme::Sequential,
-                    tr,
-                    opts.n_lasers,
-                    opts.n_rows,
-                    point_seed(opts, self.id(), pi * 10_000 + i),
-                    opts.threads,
-                );
-                lock.push(tally.lock_error_rate());
-                order.push(tally.lane_order_rate());
-                total.push(tally.cafp());
-            }
+            // SweepSpec path: one column per panel (the identity σ_rLV
+            // axis), λ̄_TR rows over a single shared population — the
+            // ideal gate is evaluated once per panel, not per point.
+            let rlv = cfg.variation.ring_local_nm;
+            let (_, tallies) = SweepSpec::new(self.id(), cfg.clone(), ConfigAxis::RingLocalNm, vec![rlv])
+                .lane(pi)
+                .thresholds(tr_values.clone())
+                .measure(Measure::Cafp(Scheme::Sequential))
+                .run(&engine, opts)
+                .remove(0)
+                .into_cafp();
+            let lock: Vec<f64> = tallies.iter().map(|t| t.lock_error_rate()).collect();
+            let order: Vec<f64> = tallies.iter().map(|t| t.lane_order_rate()).collect();
+            let total: Vec<f64> = tallies.iter().map(|t| t.cafp()).collect();
             let series = vec![
                 Series::new("lock_error", tr_values.clone(), lock),
                 Series::new("wrong_order", tr_values.clone(), order),
@@ -100,7 +100,13 @@ impl Experiment for Fig15 {
                 ("cafp_total", Json::arr_f64(&series[2].y)),
             ]));
         }
-        Ok(ExperimentReport { id: self.id(), summary, files, json: Json::Arr(json_panels) })
+        Ok(ExperimentReport {
+            id: self.id(),
+            summary,
+            files,
+            json: Json::Arr(json_panels),
+            backend: eval.name(),
+        })
     }
 }
 

@@ -14,10 +14,10 @@ pub mod tables;
 
 use crate::arbiter::Policy;
 use crate::config::SystemConfig;
+use crate::coordinator::sweep::{ConfigAxis, Measure, SweepSpec};
 use crate::coordinator::{Experiment, RunOptions};
-use crate::model::system::SystemSampler;
 use crate::montecarlo::sweep::{Series, Shmoo};
-use crate::montecarlo::{afp_at, min_tr_complete, IdealEvaluator};
+use crate::montecarlo::{IdealEvaluator, TrialEngine};
 use crate::oblivious::Scheme;
 use crate::rng::derive_seed;
 
@@ -44,40 +44,36 @@ pub fn by_id(id: &str) -> Option<Box<dyn Experiment>> {
 }
 
 /// Deterministic seed for one sweep point of one experiment.
+/// `coordinator::sweep::column_seed` derives the identical stream for
+/// `point = lane · 10⁴ + column` (both share [`crate::rng::tag_hash`]).
 pub fn point_seed(opts: &RunOptions, exp_id: &str, point: usize) -> u64 {
-    let tag = exp_id.bytes().fold(0u64, |acc, b| acc.wrapping_mul(131).wrapping_add(b as u64));
-    derive_seed(opts.seed, &[tag, point as u64])
+    derive_seed(opts.seed, &[crate::rng::tag_hash(exp_id), point as u64])
 }
 
-/// Minimum tuning range for complete success, swept over configurations.
-///
-/// `make_cfg(v)` builds the system configuration at sweep value `v`; each
-/// point uses an independent derived population.
+/// Minimum tuning range for complete success, swept along `axis` over
+/// `values` from `base`. One population + one ideal evaluation per point
+/// ([`SweepSpec`] path).
+#[allow(clippy::too_many_arguments)]
 pub fn min_tr_curve(
     label: &str,
+    base: &SystemConfig,
+    axis: ConfigAxis,
     values: &[f64],
-    make_cfg: impl Fn(f64) -> SystemConfig,
     policy: Policy,
     opts: &RunOptions,
     eval: &dyn IdealEvaluator,
     exp_id: &str,
     lane: usize,
 ) -> Series {
-    let y: Vec<f64> = values
-        .iter()
-        .enumerate()
-        .map(|(i, &v)| {
-            let cfg = make_cfg(v);
-            let sampler = SystemSampler::new(
-                &cfg,
-                opts.n_lasers,
-                opts.n_rows,
-                point_seed(opts, exp_id, lane * 10_000 + i),
-            );
-            min_tr_complete(&eval.min_trs(&cfg, &sampler, policy))
-        })
-        .collect();
-    Series::new(label, values.to_vec(), y)
+    let engine = TrialEngine::new(eval, opts.threads);
+    let mut series = SweepSpec::new(exp_id, base.clone(), axis, values.to_vec())
+        .lane(lane)
+        .measure(Measure::MinTrComplete(policy))
+        .run(&engine, opts)
+        .remove(0)
+        .into_series();
+    series.label = label.to_string();
+    series
 }
 
 /// AFP shmoo grids for several policies over σ_rLV × λ̄_TR, sharing one
@@ -91,57 +87,41 @@ pub fn afp_shmoos(
     eval: &dyn IdealEvaluator,
     exp_id: &str,
 ) -> Vec<Shmoo> {
-    let mut shmoos: Vec<Shmoo> = policies
-        .iter()
-        .map(|p| Shmoo::new(format!("{p}"), rlv_values.to_vec(), tr_values.to_vec()))
-        .collect();
-    for (ix, &rlv) in rlv_values.iter().enumerate() {
-        let mut cfg = cfg_base.clone();
-        cfg.variation.ring_local_nm = rlv;
-        let sampler =
-            SystemSampler::new(&cfg, opts.n_lasers, opts.n_rows, point_seed(opts, exp_id, ix));
-        let min_trs = eval.min_trs_multi(&cfg, &sampler, policies);
-        for (k, trs) in min_trs.iter().enumerate() {
-            for (iy, &tr) in tr_values.iter().enumerate() {
-                shmoos[k].set(ix, iy, afp_at(trs, tr));
-            }
-        }
-    }
-    shmoos
+    let engine = TrialEngine::new(eval, opts.threads);
+    SweepSpec::new(exp_id, cfg_base.clone(), ConfigAxis::RingLocalNm, rlv_values.to_vec())
+        .thresholds(tr_values.to_vec())
+        .measures(policies.iter().map(|&p| Measure::Afp(p)))
+        .run(&engine, opts)
+        .into_iter()
+        .map(|o| o.into_shmoo())
+        .collect()
 }
 
-/// CAFP shmoo of one scheme over σ_rLV × λ̄_TR (paper Figs 14/16).
-pub fn cafp_shmoo(
+/// CAFP shmoos of several schemes over σ_rLV × λ̄_TR (paper Figs 14/16):
+/// all schemes share one population and one ideal-LtC gate evaluation per
+/// σ_rLV column — the ideal model is never re-run per cell. Callers that
+/// need the per-cell failure breakdown (Fig 15) build the [`SweepSpec`]
+/// themselves and use [`crate::coordinator::sweep::SweepOutput::into_cafp`].
+#[allow(clippy::too_many_arguments)]
+pub fn cafp_shmoos(
     cfg_base: &SystemConfig,
-    scheme: Scheme,
+    schemes: &[Scheme],
     rlv_values: &[f64],
     tr_values: &[f64],
     opts: &RunOptions,
+    eval: &dyn IdealEvaluator,
     exp_id: &str,
     lane: usize,
-) -> Shmoo {
-    let mut shmoo = Shmoo::new(
-        format!("{} cafp", scheme.name()),
-        rlv_values.to_vec(),
-        tr_values.to_vec(),
-    );
-    for (ix, &rlv) in rlv_values.iter().enumerate() {
-        let mut cfg = cfg_base.clone();
-        cfg.variation.ring_local_nm = rlv;
-        for (iy, &tr) in tr_values.iter().enumerate() {
-            let tally = crate::montecarlo::cafp_tally(
-                &cfg,
-                scheme,
-                tr,
-                opts.n_lasers,
-                opts.n_rows,
-                point_seed(opts, exp_id, lane * 1_000_000 + ix * 1000 + iy),
-                opts.threads,
-            );
-            shmoo.set(ix, iy, tally.cafp());
-        }
-    }
-    shmoo
+) -> Vec<Shmoo> {
+    let engine = TrialEngine::new(eval, opts.threads);
+    SweepSpec::new(exp_id, cfg_base.clone(), ConfigAxis::RingLocalNm, rlv_values.to_vec())
+        .lane(lane)
+        .thresholds(tr_values.to_vec())
+        .measures(schemes.iter().map(|&s| Measure::Cafp(s)))
+        .run(&engine, opts)
+        .into_iter()
+        .map(|o| o.into_shmoo())
+        .collect()
 }
 
 /// The paper's standard σ_rLV sweep: 0.25·λ_gS … 8·λ_gS.

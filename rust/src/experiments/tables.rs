@@ -43,7 +43,7 @@ impl Experiment for Table1 {
                 .map(|(sym, val, _)| (sym.to_string(), Json::str(val.clone())))
                 .collect(),
         );
-        Ok(ExperimentReport { id: self.id(), summary, files: vec![], json })
+        Ok(ExperimentReport { id: self.id(), summary, files: vec![], json, backend: "none" })
     }
 }
 
@@ -87,7 +87,7 @@ impl Experiment for Table2 {
                 })
                 .collect(),
         );
-        Ok(ExperimentReport { id: self.id(), summary, files: vec![], json })
+        Ok(ExperimentReport { id: self.id(), summary, files: vec![], json, backend: "none" })
     }
 }
 

@@ -19,14 +19,26 @@
 //!   and the sequential Lock-to-Nearest baseline.
 //! * [`metrics`] — AFP / CAFP accumulators and failure classification
 //!   (paper §III, Fig 9(d–f)).
-//! * [`montecarlo`] — the 100×100 laser/ring-row cross sampler, parameter
-//!   sweeps and the thread-pool trial executor.
-//! * [`runtime`] — PJRT CPU runtime: loads the AOT-compiled JAX/Pallas ideal
-//!   model (`artifacts/ideal_n{8,16}.hlo.txt`) and batch-executes it from the
-//!   Rust hot path (Python is never on the request path).
-//! * [`experiments`] + [`coordinator`] — one module per paper figure/table,
-//!   an experiment registry, report writers (CSV / JSON / ASCII shmoo) and
-//!   the launcher used by the `wdm-arbiter` binary.
+//! * [`montecarlo`] — the 100×100 laser/ring-row cross sampler, the
+//!   thread-pool trial executor, and the **TrialEngine**
+//!   ([`montecarlo::engine`]): unified ideal + oblivious evaluation with
+//!   per-column population reuse — one sampled population and one
+//!   ideal-model evaluation per sweep column, AFP by thresholding, CAFP
+//!   gated on the precomputed ideal-LtC vector with per-worker arbitration
+//!   workspaces ([`oblivious::Workspace`]).
+//! * [`coordinator::sweep`] — declarative **SweepSpec** layer: experiments
+//!   submit (base config, column axis, λ̄_TR thresholds, measures) instead
+//!   of hand-rolled nested loops; the `wdm-arbiter sweep` subcommand
+//!   exposes ad-hoc grids over the same axes.
+//! * [`runtime`] — PJRT CPU runtime behind the off-by-default `xla` cargo
+//!   feature: loads the AOT-compiled JAX/Pallas ideal model
+//!   (`artifacts/ideal_n{8,16}.hlo.txt`) and batch-executes it from the
+//!   Rust hot path (Python is never on the request path). The default
+//!   build compiles a stub that falls back to the pure-Rust backend.
+//! * [`experiments`] + [`coordinator`] — one module per paper figure/table
+//!   (all built on SweepSpec), an experiment registry, report writers
+//!   (CSV / JSON / ASCII shmoo) and the launcher used by the `wdm-arbiter`
+//!   binary.
 //!
 //! ## Quickstart
 //!

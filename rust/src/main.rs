@@ -4,6 +4,9 @@
 //! wdm-arbiter list
 //! wdm-arbiter run <experiment|all> [--out DIR] [--fast] [--lasers N]
 //!                 [--rows N] [--seed S] [--threads T] [--backend rust|xla]
+//! wdm-arbiter sweep --axis AXIS --values LO:HI:STEP|A,B,C [--tr ...]
+//!                   [--measure afp:ltc,cafp:vt-rs-ssm,...] [--config FILE.toml]
+//!                   [--out DIR] [--fast] [--lasers N] [--rows N] [--seed S]
 //! wdm-arbiter arbitrate [--scheme seq|rs|vt-rs] [--tr NM] [--seed S]
 //!                       [--config FILE.toml] [--permuted]
 //! wdm-arbiter show-config [--cases] [--config FILE.toml]
@@ -15,12 +18,16 @@ use std::process::ExitCode;
 use wdm_arbiter::arbiter::{distance, ideal, Policy};
 use wdm_arbiter::config::presets::system_config_from_toml;
 use wdm_arbiter::config::SystemConfig;
+use wdm_arbiter::coordinator::report::{ascii_heatmap, curve_table, write_csv_series, write_csv_shmoo};
+use wdm_arbiter::coordinator::sweep::{ConfigAxis, Measure, SweepOutput, SweepSpec};
 use wdm_arbiter::coordinator::{run_experiment, Backend, RunOptions};
-use wdm_arbiter::experiments::{all_experiments, by_id};
+use wdm_arbiter::experiments::{all_experiments, by_id, tr_sweep};
 use wdm_arbiter::model::SystemUnderTest;
+use wdm_arbiter::montecarlo::TrialEngine;
 use wdm_arbiter::oblivious::{run_scheme, Scheme};
 use wdm_arbiter::rng::Rng;
 use wdm_arbiter::util::cli::Args;
+use wdm_arbiter::util::json::Json;
 
 const USAGE: &str = "\
 wdm-arbiter — wavelength arbitration for microring-based DWDM transceivers
@@ -32,6 +39,18 @@ USAGE:
   wdm-arbiter run <id|all> [--out DIR] [--fast] [--lasers N] [--rows N]
                   [--seed S] [--threads T] [--backend rust|xla]
       Regenerate a paper table/figure (default 100x100 trials per point).
+  wdm-arbiter sweep --axis AXIS --values LO:HI:STEP|A,B,C
+                  [--tr LO:HI:STEP|A,B,C] [--measure M1,M2,...]
+                  [--config FILE.toml] [--permuted] [--out DIR] [--fast]
+                  [--lasers N] [--rows N] [--seed S] [--threads T]
+                  [--backend rust|xla]
+      Ad-hoc Monte-Carlo grid over one config axis x the tuning-range axis.
+      AXIS: ring-local | grid-offset | laser-local | tr-frac | fsr-frac |
+            fsr-mean | channels | spacing | permuted
+      Measures: afp:<lta|ltc|ltd>  cafp:<seq|rs-ssm|vt-rs-ssm>
+                min-tr:<policy>  alias-min-tr:<policy>   (default afp:ltc)
+      Each axis value samples ONE population, evaluated by the ideal model
+      once; every λ̄_TR row reuses it.
   wdm-arbiter arbitrate [--scheme seq|rs-ssm|vt-rs-ssm] [--tr NM] [--seed S]
                   [--config FILE.toml] [--permuted]
       Run a single arbitration trial end-to-end and print the outcome.
@@ -60,6 +79,7 @@ fn dispatch(argv: &[String]) -> anyhow::Result<()> {
     match args.positionals[0].as_str() {
         "list" => cmd_list(),
         "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
         "arbitrate" => cmd_arbitrate(&args),
         "show-config" => cmd_show_config(&args),
         other => {
@@ -106,6 +126,150 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let exp = by_id(target)
         .ok_or_else(|| anyhow::anyhow!("unknown experiment '{target}' (see `list`)"))?;
     run_experiment(exp.as_ref(), &opts)?;
+    Ok(())
+}
+
+/// Parse `a,b,c` or `lo:hi:step` into a value list.
+fn parse_values(s: &str) -> anyhow::Result<Vec<f64>> {
+    if s.contains(':') {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 3 {
+            return Err(anyhow::anyhow!("range syntax is lo:hi:step, got '{s}'"));
+        }
+        let lo: f64 = parts[0].parse()?;
+        let hi: f64 = parts[1].parse()?;
+        let step: f64 = parts[2].parse()?;
+        if step <= 0.0 || hi < lo {
+            return Err(anyhow::anyhow!("range needs step > 0 and hi >= lo, got '{s}'"));
+        }
+        let mut v = Vec::new();
+        let mut x = lo;
+        while x <= hi + 1e-9 {
+            v.push(x);
+            x += step;
+        }
+        Ok(v)
+    } else {
+        s.split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("expected a number, got '{t}'"))
+            })
+            .collect()
+    }
+}
+
+/// Parse one measure spec: `afp:ltc`, `cafp:vt-rs-ssm`, `min-tr:lta`,
+/// `alias-min-tr:ltc`.
+fn parse_measure(s: &str) -> anyhow::Result<Measure> {
+    let (kind, arg) = s.split_once(':').unwrap_or((s, ""));
+    let policy = |arg: &str, default: Policy| -> anyhow::Result<Policy> {
+        if arg.is_empty() {
+            Ok(default)
+        } else {
+            Policy::by_name(arg).ok_or_else(|| anyhow::anyhow!("unknown policy '{arg}'"))
+        }
+    };
+    match kind {
+        "afp" => Ok(Measure::Afp(policy(arg, Policy::LtC)?)),
+        "min-tr" => Ok(Measure::MinTrComplete(policy(arg, Policy::LtC)?)),
+        "alias-min-tr" | "alias" => Ok(Measure::MinTrAliasAware(policy(arg, Policy::LtC)?)),
+        "cafp" => {
+            let scheme = if arg.is_empty() {
+                Scheme::VtRsSsm
+            } else {
+                Scheme::by_name(arg)
+                    .ok_or_else(|| anyhow::anyhow!("unknown scheme '{arg}'"))?
+            };
+            Ok(Measure::Cafp(scheme))
+        }
+        other => Err(anyhow::anyhow!(
+            "unknown measure '{other}' (afp | cafp | min-tr | alias-min-tr)"
+        )),
+    }
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let opts = options_from(args)?;
+    let cfg = load_config(args)?;
+    let axis_name = args.get_or("axis", "ring-local");
+    let axis = ConfigAxis::by_name(axis_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown axis '{axis_name}' (see `wdm-arbiter --help`)"))?;
+    let values = parse_values(args.get("values").ok_or_else(|| {
+        anyhow::anyhow!("sweep: --values is required (list `a,b,c` or range `lo:hi:step`)")
+    })?)?;
+    let measures: Vec<Measure> = args
+        .get_or("measure", "afp:ltc")
+        .split(',')
+        .map(parse_measure)
+        .collect::<anyhow::Result<_>>()?;
+    let needs_tr = measures
+        .iter()
+        .any(|m| matches!(m, Measure::Afp(_) | Measure::Cafp(_)));
+    let tr_values = match args.get("tr") {
+        Some(s) => parse_values(s)?,
+        None if needs_tr => tr_sweep(cfg.grid.spacing_nm, opts.stride()),
+        None => Vec::new(),
+    };
+
+    let eval = opts.backend.evaluator(opts.threads);
+    let engine = TrialEngine::new(eval.as_ref(), opts.threads);
+    let spec = SweepSpec::new("sweep", cfg, axis, values.clone())
+        .thresholds(tr_values)
+        .measures(measures.iter().copied());
+    let outs = spec.run(&engine, &opts);
+
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let mut json_panels = Vec::new();
+    for (m, out) in measures.iter().zip(outs) {
+        let slug = m.slug();
+        match out {
+            SweepOutput::Curve(series) => {
+                println!("== sweep {} over {}", slug, axis.name());
+                println!("{}", curve_table(axis.name(), std::slice::from_ref(&series), 12));
+                let path = opts.out_dir.join(format!("sweep_{slug}.csv"));
+                write_csv_series(&path, axis.name(), std::slice::from_ref(&series))?;
+                println!("wrote {}", path.display());
+                json_panels.push(Json::obj(vec![
+                    ("measure", Json::str(slug.clone())),
+                    ("x", Json::arr_f64(&series.x)),
+                    ("y", Json::arr_f64(&series.y)),
+                ]));
+            }
+            SweepOutput::Grid(shmoo) | SweepOutput::CafpGrid { cafp: shmoo, .. } => {
+                println!("== sweep {} over {} x tr", slug, axis.name());
+                println!("{}", ascii_heatmap(&shmoo));
+                let path = opts.out_dir.join(format!("sweep_{slug}.csv"));
+                write_csv_shmoo(&path, &shmoo)?;
+                println!("wrote {}", path.display());
+                json_panels.push(Json::obj(vec![
+                    ("measure", Json::str(slug.clone())),
+                    ("x", Json::arr_f64(&shmoo.x)),
+                    ("y_tr_nm", Json::arr_f64(&shmoo.y)),
+                    ("cells", Json::arr_f64(&shmoo.cells)),
+                ]));
+            }
+        }
+    }
+    // Record the evaluator that actually ran: alias-aware-only sweeps
+    // never invoke the ideal backend.
+    let uses_ideal = measures
+        .iter()
+        .any(|m| !matches!(m, Measure::MinTrAliasAware(_)));
+    let json_path = opts.out_dir.join("sweep.json");
+    std::fs::write(
+        &json_path,
+        Json::obj(vec![
+            ("axis", Json::str(axis.name())),
+            ("values", Json::arr_f64(&values)),
+            ("backend", Json::str(if uses_ideal { eval.name() } else { "none" })),
+            ("trials_per_point", Json::num(opts.trials_per_point() as f64)),
+            ("panels", Json::Arr(json_panels)),
+        ])
+        .to_pretty(),
+    )?;
+    println!("wrote {}", json_path.display());
     Ok(())
 }
 

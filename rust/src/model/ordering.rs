@@ -76,11 +76,29 @@ impl SpectralOrdering {
     /// spectral slot `k`. Useful for walking rings in target-order
     /// (paper §V-B pairs rings by spectral adjacency).
     pub fn ring_at_slots(&self) -> Vec<usize> {
-        let mut inv = vec![0usize; self.0.len()];
-        for (ring, &slot) in self.0.iter().enumerate() {
-            inv[slot] = ring;
-        }
+        let mut inv = Vec::new();
+        self.ring_at_slots_into(&mut inv);
         inv
+    }
+
+    /// [`Self::ring_at_slots`] into a caller-owned buffer (hot-loop
+    /// workspace reuse — no allocation when capacity suffices).
+    pub fn ring_at_slots_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.resize(self.0.len(), 0);
+        for (ring, &slot) in self.0.iter().enumerate() {
+            out[slot] = ring;
+        }
+    }
+
+    /// Allocation-free inverse lookup: the physical ring occupying spectral
+    /// slot `k` (O(N) scan; N ≤ 16 in practice).
+    #[inline]
+    pub fn ring_at_slot(&self, slot: usize) -> usize {
+        self.0
+            .iter()
+            .position(|&s| s == slot)
+            .expect("permutation covers every slot")
     }
 
     /// Is `assignment` (laser index per physical ring) exactly this

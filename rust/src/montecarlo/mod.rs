@@ -10,16 +10,23 @@
 //!   population max ([`min_tr_complete`]).
 //! * **algorithm robustness** — CAFP of a wavelength-oblivious scheme
 //!   against the ideal LtC condition ([`cafp_tally`]).
+//!
+//! The [`engine`] module hosts the unified [`TrialEngine`]: sweeps build a
+//! [`Population`] (one sample + one ideal evaluation per column) and take
+//! AFP by thresholding and CAFP through a [`SchemeEvaluator`] that gates
+//! on the precomputed ideal-LtC vector.
 
+pub mod engine;
 pub mod executor;
 pub mod sweep;
 
-use crate::arbiter::distance::{scaled_distance_parts, DistanceMatrix};
+pub use engine::{Population, RustOblivious, SchemeEvaluator, TrialEngine};
+
 use crate::arbiter::{ideal, Policy};
 use crate::config::SystemConfig;
 use crate::metrics::TrialTally;
 use crate::model::system::SystemSampler;
-use crate::oblivious::{run_scheme, Scheme};
+use crate::oblivious::Scheme;
 
 /// Evaluates per-trial ideal-model minimum tuning ranges over a population.
 ///
@@ -168,6 +175,11 @@ pub fn min_tr_complete(min_trs: &[f64]) -> f64 {
 
 /// CAFP of `scheme` at mean tuning range `tr` against the ideal LtC
 /// condition, over an `n_lasers × n_rows` population.
+///
+/// Convenience wrapper over the [`TrialEngine`]: samples the population
+/// once, evaluates ideal LtC once, then gates the oblivious simulation on
+/// the precomputed vector. Sweeps over many `tr` values should build the
+/// [`Population`] themselves and reuse it across thresholds.
 pub fn cafp_tally(
     cfg: &SystemConfig,
     scheme: Scheme,
@@ -177,31 +189,10 @@ pub fn cafp_tally(
     seed: u64,
     threads: usize,
 ) -> TrialTally {
-    let sampler = SystemSampler::new(cfg, n_lasers, n_rows, seed);
-    let order = cfg.target_order.as_slice();
-    let tallies = executor::parallel_map_chunked(
-        sampler.n_trials(),
-        threads,
-        TrialTally::default,
-        |tally: &mut TrialTally, t: usize| {
-            let (laser, rings) = sampler.trial(t);
-            let dist: DistanceMatrix = scaled_distance_parts(laser, rings);
-            let ideal_ok = ideal::min_tuning_range(Policy::LtC, &dist, order) <= tr;
-            let class = if ideal_ok {
-                // Only pay for the oblivious simulation when the trial can
-                // conditionally fail (CAFP conditions on ideal success).
-                Some(run_scheme(scheme, laser, rings, &cfg.target_order, tr).class)
-            } else {
-                None
-            };
-            tally.record(ideal_ok, class);
-        },
-    );
-    let mut total = TrialTally::default();
-    for t in &tallies {
-        total.merge(t);
-    }
-    total
+    let ideal_eval = RustIdeal { threads };
+    let engine = TrialEngine::new(&ideal_eval, threads);
+    let pop = engine.population(cfg, n_lasers, n_rows, seed, &[Policy::LtC]);
+    engine.cafp(&pop, scheme, tr)
 }
 
 #[cfg(test)]

@@ -50,6 +50,15 @@ impl Bus {
         tone
     }
 
+    /// Clear every lock and resize to `n_rings` without reallocating when
+    /// the size is unchanged (per-worker workspace reuse — §Perf).
+    pub fn reset(&mut self, n_rings: usize) {
+        self.locked_heat.clear();
+        self.locked_heat.resize(n_rings, None);
+        self.locked_tone.clear();
+        self.locked_tone.resize(n_rings, None);
+    }
+
     pub fn unlock(&mut self, ring: usize) {
         self.locked_heat[ring] = None;
         self.locked_tone[ring] = None;

@@ -63,6 +63,42 @@ impl Scheme {
     }
 }
 
+/// Reusable per-worker arbitration workspace (§Perf): search tables,
+/// relation/record state, bus locks, the lock plan and the matching
+/// scratch are allocated once per worker thread and refilled every trial —
+/// the same pattern `RustIdeal` uses for its scratch `DistanceMatrix`.
+/// Eliminates all per-trial heap traffic in the CAFP hot path.
+#[derive(Debug, Clone)]
+pub struct Workspace {
+    rec: relation::RecordPhase,
+    bus: bus::Bus,
+    plan: ssm::LockPlan,
+    scratch: ssm::MatchScratch,
+    heats: Vec<Option<f64>>,
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self {
+            rec: relation::RecordPhase {
+                tables: Vec::new(),
+                chain: Vec::new(),
+                relations: Vec::new(),
+            },
+            bus: bus::Bus::new(0),
+            plan: ssm::LockPlan::new(),
+            scratch: ssm::MatchScratch::default(),
+            heats: Vec::new(),
+        }
+    }
+}
+
 /// Run one wavelength-oblivious arbitration trial end-to-end and adjudicate
 /// the final locks. `mean_tr_nm` is the mean microring tuning range λ̄_TR.
 pub fn run_scheme(
@@ -72,25 +108,58 @@ pub fn run_scheme(
     target_order: &SpectralOrdering,
     mean_tr_nm: f64,
 ) -> outcome::ArbitrationResult {
-    let heats = match scheme {
-        Scheme::Sequential => sequential::arbitrate(laser, rings, target_order, mean_tr_nm),
+    let mut ws = Workspace::new();
+    run_scheme_with(scheme, laser, rings, target_order, mean_tr_nm, &mut ws)
+}
+
+/// [`run_scheme`] over a reusable [`Workspace`] — the form the Monte-Carlo
+/// trial engine threads through its worker loops.
+pub fn run_scheme_with(
+    scheme: Scheme,
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    target_order: &SpectralOrdering,
+    mean_tr_nm: f64,
+    ws: &mut Workspace,
+) -> outcome::ArbitrationResult {
+    match scheme {
+        Scheme::Sequential => {
+            sequential::arbitrate_into(
+                laser,
+                rings,
+                target_order,
+                mean_tr_nm,
+                &mut ws.bus,
+                &mut ws.heats,
+            );
+        }
         Scheme::RsSsm | Scheme::VtRsSsm => {
             let probes = if scheme == Scheme::RsSsm {
                 relation::ProbeSet::FirstLast
             } else {
                 relation::ProbeSet::FirstLastSecond
             };
-            let rel =
-                relation::full_record_phase(laser, rings, target_order, mean_tr_nm, probes);
-            let plan = ssm::match_phase(&rel);
+            relation::full_record_phase_into(
+                laser,
+                rings,
+                target_order,
+                mean_tr_nm,
+                probes,
+                &mut ws.rec,
+                &mut ws.bus,
+            );
+            ssm::match_phase_into(&ws.rec, &mut ws.plan, &mut ws.scratch);
             // Realize the lock plan: entry index → tuner heat.
-            plan.iter()
-                .enumerate()
-                .map(|(i, e)| e.map(|idx| rel.tables[i].entries[idx].heat_nm))
-                .collect()
+            let (rec, plan, heats) = (&ws.rec, &ws.plan, &mut ws.heats);
+            heats.clear();
+            heats.extend(
+                plan.iter()
+                    .enumerate()
+                    .map(|(i, e)| e.map(|idx| rec.tables[i].entries[idx].heat_nm)),
+            );
         }
-    };
-    outcome::classify(laser, rings, &heats, target_order)
+    }
+    outcome::classify(laser, rings, &ws.heats, target_order)
 }
 
 #[cfg(test)]
@@ -106,6 +175,32 @@ mod tests {
             assert_eq!(Scheme::by_name(s.name()), Some(s));
         }
         assert_eq!(Scheme::by_name("bogus"), None);
+    }
+
+    /// A single workspace reused across trials and schemes must be
+    /// indistinguishable from fresh per-trial allocation (guards the §Perf
+    /// reuse path: every buffer is fully reinitialized per trial).
+    #[test]
+    fn workspace_reuse_matches_fresh_runs() {
+        let cfg = SystemConfig::default();
+        let mut rng = Rng::seed_from(77);
+        let mut ws = Workspace::new();
+        for _ in 0..50 {
+            let sut = SystemUnderTest::sample(&cfg, &mut rng);
+            let tr = rng.uniform(1.0, 10.0);
+            for scheme in Scheme::all() {
+                let fresh = run_scheme(scheme, &sut.laser, &sut.rings, &cfg.target_order, tr);
+                let reused = run_scheme_with(
+                    scheme,
+                    &sut.laser,
+                    &sut.rings,
+                    &cfg.target_order,
+                    tr,
+                    &mut ws,
+                );
+                assert_eq!(fresh, reused);
+            }
+        }
     }
 
     #[test]

@@ -20,7 +20,7 @@
 
 use crate::model::{MwlSample, RingRowSample, SpectralOrdering};
 use crate::oblivious::bus::Bus;
-use crate::oblivious::search::{initial_tables, SearchTable};
+use crate::oblivious::search::{initial_tables_into, SearchTable};
 
 /// Which aggressor entries a full relation search probes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -127,6 +127,24 @@ pub fn full_relation_search(
     to: usize,
     probes: ProbeSet,
 ) -> RelationOutcome {
+    let mut bus = Bus::new(rings.n_rings());
+    full_relation_search_on(laser, rings, mean_tr_nm, tables, from, to, probes, &mut bus)
+}
+
+/// [`full_relation_search`] over a caller-provided (unlocked) bus — reused
+/// across the `N_ch` pair searches of a record phase (§Perf: no allocation
+/// in the probe loop; probe/candidate sets live in fixed arrays).
+#[allow(clippy::too_many_arguments)]
+pub fn full_relation_search_on(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    mean_tr_nm: f64,
+    tables: &[SearchTable],
+    from: usize,
+    to: usize,
+    probes: ProbeSet,
+    bus: &mut Bus,
+) -> RelationOutcome {
     let n = laser.n_ch() as i64;
     // Physical upstream ring is the aggressor regardless of chain direction.
     let (aggr, victim, forward) = if from < to { (from, to, true) } else { (to, from, false) };
@@ -135,30 +153,35 @@ pub fn full_relation_search(
         return RelationOutcome::Null;
     }
 
-    let mut probe_indices: Vec<usize> = vec![st_a_len - 1, 0]; // Lock-to-Last, Lock-to-First
+    // Lock-to-Last, Lock-to-First, and (VT-RS) Lock-to-Second. A
+    // single-entry aggressor table collapses Last onto First (one probe);
+    // the remaining Last == Second duplicate (2-entry tables under VT-RS)
+    // is harmless: repeated candidates agree trivially under the combine
+    // rule, matching the seed's `dedup()` semantics.
+    let mut probe_indices = [st_a_len - 1, 0, 0];
+    let mut n_probes = if st_a_len == 1 { 1 } else { 2 };
     if probes == ProbeSet::FirstLastSecond && st_a_len > 1 {
-        probe_indices.push(1); // Lock-to-Second
+        probe_indices[2] = 1;
+        n_probes = 3;
     }
-    probe_indices.dedup();
 
-    let mut bus = Bus::new(rings.n_rings());
-    let mut candidates: Vec<i64> = Vec::with_capacity(3);
-    for idx in probe_indices {
-        if let Some(ri) = unit_relation_search_on(
-            laser, rings, mean_tr_nm, tables, aggr, victim, idx, &mut bus,
-        ) {
-            candidates.push(ri);
+    let mut candidates = [0i64; 3];
+    let mut n_cand = 0;
+    for &idx in &probe_indices[..n_probes] {
+        if let Some(ri) =
+            unit_relation_search_on(laser, rings, mean_tr_nm, tables, aggr, victim, idx, bus)
+        {
+            candidates[n_cand] = ri;
+            n_cand += 1;
         }
     }
+    let candidates = &candidates[..n_cand];
     if candidates.is_empty() {
         return RelationOutcome::Null;
     }
     // Combine rule: all candidates must agree modulo N_ch.
     let first = candidates[0];
-    if candidates
-        .iter()
-        .any(|&c| (c - first).rem_euclid(n) != 0)
-    {
+    if candidates.iter().any(|&c| (c - first).rem_euclid(n) != 0) {
         return RelationOutcome::Failed;
     }
     // Candidates may differ by multiples of N_ch (the same tone observed at
@@ -186,23 +209,44 @@ pub fn full_record_phase(
     mean_tr_nm: f64,
     probes: ProbeSet,
 ) -> RecordPhase {
-    let tables = initial_tables(laser, rings, mean_tr_nm);
-    let chain = target_order.ring_at_slots();
-    let n = chain.len();
-    let relations = (0..n)
-        .map(|k| {
-            full_relation_search(
-                laser,
-                rings,
-                mean_tr_nm,
-                &tables,
-                chain[k],
-                chain[(k + 1) % n],
-                probes,
-            )
-        })
-        .collect();
-    RecordPhase { tables, chain, relations }
+    let mut rec = RecordPhase { tables: Vec::new(), chain: Vec::new(), relations: Vec::new() };
+    let mut bus = Bus::new(rings.n_rings());
+    full_record_phase_into(laser, rings, target_order, mean_tr_nm, probes, &mut rec, &mut bus);
+    rec
+}
+
+/// [`full_record_phase`] into a caller-owned [`RecordPhase`] + bus: the
+/// search tables, chain and relation vectors are refilled in place, so a
+/// worker thread sweeping thousands of trials allocates the record-phase
+/// state once (§Perf — the same pattern as `RustIdeal`'s scratch
+/// `DistanceMatrix`).
+pub fn full_record_phase_into(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    target_order: &SpectralOrdering,
+    mean_tr_nm: f64,
+    probes: ProbeSet,
+    rec: &mut RecordPhase,
+    bus: &mut Bus,
+) {
+    bus.reset(rings.n_rings());
+    initial_tables_into(laser, rings, mean_tr_nm, bus, &mut rec.tables);
+    let n = target_order.len();
+    target_order.ring_at_slots_into(&mut rec.chain);
+    rec.relations.clear();
+    for k in 0..n {
+        let out = full_relation_search_on(
+            laser,
+            rings,
+            mean_tr_nm,
+            &rec.tables,
+            rec.chain[k],
+            rec.chain[(k + 1) % n],
+            probes,
+            bus,
+        );
+        rec.relations.push(out);
+    }
 }
 
 #[cfg(test)]
@@ -210,6 +254,7 @@ mod tests {
     use super::*;
     use crate::config::SystemConfig;
     use crate::model::{MwlSample, RingRowSample, SpectralOrdering};
+    use crate::oblivious::search::initial_tables;
 
     /// Nominal fixture with an *off-grid* ring bias (0.5 nm): with the
     /// Table-I bias of 4.48 nm = 4·λ_gS, tone 4's tuning distance lands

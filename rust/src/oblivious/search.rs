@@ -80,6 +80,21 @@ pub fn wavelength_search(
     mean_tr_nm: f64,
     bus: &Bus,
 ) -> SearchTable {
+    let mut out = SearchTable::default();
+    wavelength_search_into(laser, rings, ring, mean_tr_nm, bus, &mut out);
+    out
+}
+
+/// [`wavelength_search`] into a caller-owned table, reusing its entry
+/// allocation (per-worker workspace reuse — §Perf).
+pub fn wavelength_search_into(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    ring: usize,
+    mean_tr_nm: f64,
+    bus: &Bus,
+    out: &mut SearchTable,
+) {
     let n = laser.n_ch();
     let tr = rings.tuning_range_nm(ring, mean_tr_nm);
     let fsr = rings.fsr_nm[ring];
@@ -89,7 +104,8 @@ pub fn wavelength_search(
     } else {
         0.0
     };
-    let mut entries = Vec::new();
+    out.ring = ring;
+    out.entries.clear();
     for tone in 0..n {
         if !bus.tone_visible_to(ring, tone) {
             continue;
@@ -101,7 +117,7 @@ pub fn wavelength_search(
             if h > tr {
                 break;
             }
-            entries.push(SearchEntry {
+            out.entries.push(SearchEntry {
                 heat_nm: h,
                 code: (h * code_scale).round() as u16,
                 tone,
@@ -110,8 +126,41 @@ pub fn wavelength_search(
             k += 1;
         }
     }
-    entries.sort_by(|a, b| a.heat_nm.partial_cmp(&b.heat_nm).unwrap());
-    SearchTable { ring, entries }
+    out.entries
+        .sort_by(|a, b| a.heat_nm.partial_cmp(&b.heat_nm).unwrap());
+}
+
+/// Heat of the first (lowest-heat) visible peak ring `ring` would see, or
+/// `None` when no tone is reachable. Equivalent to
+/// `wavelength_search(..).first()` without building the table — the lowest
+/// entry is always a k = 0 image (§Perf; sequential tuning's hot call).
+pub fn first_visible_peak(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    ring: usize,
+    mean_tr_nm: f64,
+    bus: &Bus,
+) -> Option<f64> {
+    let tr = rings.tuning_range_nm(ring, mean_tr_nm);
+    let fsr = rings.fsr_nm[ring];
+    let res = rings.resonance_nm[ring];
+    let mut best: Option<f64> = None;
+    for tone in 0..laser.n_ch() {
+        if !bus.tone_visible_to(ring, tone) {
+            continue;
+        }
+        let base = red_shift_distance(laser.tones_nm[tone] - res, fsr);
+        // Strict `<` keeps the lower tone index on (measure-zero) ties,
+        // matching the stable sort in `wavelength_search_into`.
+        let better = match best {
+            None => true,
+            Some(b) => base < b,
+        };
+        if base <= tr && better {
+            best = Some(base);
+        }
+    }
+    best
 }
 
 /// Initial record-phase tables: every ring sweeps with nothing locked.
@@ -120,10 +169,26 @@ pub fn initial_tables(
     rings: &RingRowSample,
     mean_tr_nm: f64,
 ) -> Vec<SearchTable> {
+    let mut tables = Vec::new();
     let bus = Bus::new(rings.n_rings());
-    (0..rings.n_rings())
-        .map(|i| wavelength_search(laser, rings, i, mean_tr_nm, &bus))
-        .collect()
+    initial_tables_into(laser, rings, mean_tr_nm, &bus, &mut tables);
+    tables
+}
+
+/// [`initial_tables`] into caller-owned tables (workspace reuse). `bus`
+/// must arrive with no locks held.
+pub fn initial_tables_into(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    mean_tr_nm: f64,
+    bus: &Bus,
+    tables: &mut Vec<SearchTable>,
+) {
+    let n = rings.n_rings();
+    tables.resize_with(n, SearchTable::default);
+    for (i, t) in tables.iter_mut().enumerate() {
+        wavelength_search_into(laser, rings, i, mean_tr_nm, bus, t);
+    }
 }
 
 #[cfg(test)]
@@ -217,6 +282,25 @@ mod tests {
             laser.tones_nm[tone] - rings.resonance_nm[ring],
             rings.fsr_nm[ring],
         )
+    }
+
+    /// `first_visible_peak` is exactly the head of the full search table
+    /// (guards the §Perf shortcut used by sequential tuning).
+    #[test]
+    fn first_visible_peak_matches_table_head() {
+        let cfg = SystemConfig::default();
+        let mut rng = Rng::seed_from(7);
+        for _ in 0..100 {
+            let sut = SystemUnderTest::sample(&cfg, &mut rng);
+            let tr = rng.uniform(0.5, 12.0);
+            let mut bus = Bus::new(8);
+            bus.lock(&sut.laser, &sut.rings, 0, 0.0);
+            for ring in 1..8 {
+                let st = wavelength_search(&sut.laser, &sut.rings, ring, tr, &bus);
+                let fast = first_visible_peak(&sut.laser, &sut.rings, ring, tr, &bus);
+                assert_eq!(fast, st.first().map(|e| e.heat_nm));
+            }
+        }
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use crate::model::{MwlSample, RingRowSample, SpectralOrdering};
 use crate::oblivious::bus::Bus;
-use crate::oblivious::search::wavelength_search;
+use crate::oblivious::search::first_visible_peak;
 
 /// Tune every ring sequentially; returns the applied heat per ring
 /// (`None` = the sweep saw no peak, the ring stays parked).
@@ -19,17 +19,36 @@ pub fn arbitrate(
     target_order: &SpectralOrdering,
     mean_tr_nm: f64,
 ) -> Vec<Option<f64>> {
+    let mut bus = Bus::new(rings.n_rings());
+    let mut heats = Vec::new();
+    arbitrate_into(laser, rings, target_order, mean_tr_nm, &mut bus, &mut heats);
+    heats
+}
+
+/// [`arbitrate`] into caller-owned bus + heat buffers (workspace reuse);
+/// each ring locks to its first visible peak via the allocation-free
+/// [`first_visible_peak`] scan instead of building a full search table.
+pub fn arbitrate_into(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    target_order: &SpectralOrdering,
+    mean_tr_nm: f64,
+    bus: &mut Bus,
+    heats: &mut Vec<Option<f64>>,
+) {
     let n = rings.n_rings();
-    let mut bus = Bus::new(n);
-    let mut heats: Vec<Option<f64>> = vec![None; n];
-    for &ring in &target_order.ring_at_slots() {
-        let st = wavelength_search(laser, rings, ring, mean_tr_nm, &bus);
-        if let Some(entry) = st.first() {
-            bus.lock(laser, rings, ring, entry.heat_nm);
-            heats[ring] = Some(entry.heat_nm);
+    bus.reset(n);
+    heats.clear();
+    heats.resize(n, None);
+    // Walk rings in target-spectral order (allocation-free inverse lookup;
+    // the O(N²) total scan beats allocating the inverse for N ≤ 16).
+    for slot in 0..n {
+        let ring = target_order.ring_at_slot(slot);
+        if let Some(heat) = first_visible_peak(laser, rings, ring, mean_tr_nm, bus) {
+            bus.lock(laser, rings, ring, heat);
+            heats[ring] = Some(heat);
         }
     }
-    heats
 }
 
 #[cfg(test)]

@@ -33,44 +33,66 @@ use crate::oblivious::relation::{RecordPhase, RelationOutcome};
 /// Per-ring chosen search-table entry index (`None` = no lock applied).
 pub type LockPlan = Vec<Option<usize>>;
 
+/// Reusable matching-phase scratch: the Lock-Allocation-Table offsets,
+/// per-residue pick buffers and cluster membership lists, allocated once
+/// per worker and refilled every trial (§Perf).
+#[derive(Debug, Clone, Default)]
+pub struct MatchScratch {
+    offsets: Vec<i64>,
+    picks: Vec<Option<usize>>,
+    best_picks: Vec<Option<usize>>,
+    nulls: Vec<usize>,
+    members: Vec<usize>,
+}
+
 /// Run the matching phase over a completed record phase. Returns, for each
 /// physical ring, the chosen entry index into its search table.
 pub fn match_phase(rec: &RecordPhase) -> LockPlan {
+    let mut plan = LockPlan::new();
+    let mut scratch = MatchScratch::default();
+    match_phase_into(rec, &mut plan, &mut scratch);
+    plan
+}
+
+/// [`match_phase`] into a caller-owned plan + scratch (workspace reuse).
+pub fn match_phase_into(rec: &RecordPhase, plan: &mut LockPlan, ws: &mut MatchScratch) {
     let n = rec.chain.len();
-    let mut plan: LockPlan = vec![None; rec.tables.len()];
+    plan.clear();
+    plan.resize(rec.tables.len(), None);
     if n == 0 {
-        return plan;
+        return;
     }
     if rec
         .relations
         .iter()
         .any(|r| matches!(r, RelationOutcome::Failed))
     {
-        return plan; // hard search failure: abort with no locks
+        return; // hard search failure: abort with no locks
     }
 
     // Indices k where the pair chain[k] -> chain[k+1] returned φ.
-    let nulls: Vec<usize> = rec
-        .relations
-        .iter()
-        .enumerate()
-        .filter_map(|(k, r)| matches!(r, RelationOutcome::Null).then_some(k))
-        .collect();
+    ws.nulls.clear();
+    ws.nulls.extend(
+        rec.relations
+            .iter()
+            .enumerate()
+            .filter_map(|(k, r)| matches!(r, RelationOutcome::Null).then_some(k)),
+    );
 
-    if nulls.is_empty() {
-        assign_single_table(rec, &mut plan);
+    if ws.nulls.is_empty() {
+        assign_single_table(rec, plan, ws);
     } else {
         // Clusters: maximal runs of chain positions separated by φ pairs.
         // A φ at pair k means the cluster boundary is *after* chain[k].
-        for c in 0..nulls.len() {
-            let start = (nulls[c] + 1) % n;
-            let end = nulls[(c + 1) % nulls.len()]; // inclusive
+        for c in 0..ws.nulls.len() {
+            let start = (ws.nulls[c] + 1) % n;
+            let end = ws.nulls[(c + 1) % ws.nulls.len()]; // inclusive
             let len = (end + n - start) % n + 1;
-            let members: Vec<usize> = (0..len).map(|t| (start + t) % n).collect();
-            assign_cluster(rec, &members, &mut plan);
+            ws.members.clear();
+            ws.members.extend((0..len).map(|t| (start + t) % n));
+            assign_cluster(rec, &ws.members, plan, &mut ws.offsets);
         }
     }
-    plan
 }
 
 /// No-φ case (Fig 13(a)): one LAT, pick the best feasible cyclic diagonal.
@@ -81,49 +103,58 @@ pub fn match_phase(rec: &RecordPhase) -> LockPlan {
 /// observable, so this stays wavelength-oblivious). If no residue covers
 /// all rings, the best-coverage residue is used and uncovered rings stay
 /// unlocked (adjudicated as Zero-Lock).
-fn assign_single_table(rec: &RecordPhase, plan: &mut LockPlan) {
+fn assign_single_table(rec: &RecordPhase, plan: &mut LockPlan, ws: &mut MatchScratch) {
     let n = rec.chain.len();
-    let offsets = chain_offsets(rec, &(0..n).collect::<Vec<_>>());
+    ws.members.clear();
+    ws.members.extend(0..n);
+    chain_offsets_into(rec, &ws.members, &mut ws.offsets);
     let nn = n as i64;
 
-    let mut best: Option<(usize, f64, Vec<Option<usize>>)> = None; // (coverage, heat, picks)
+    let mut best: Option<(usize, f64)> = None; // (coverage, heat) → ws.best_picks
     for rho in 0..nn {
         let mut covered = 0usize;
         let mut heat = 0.0f64;
-        let mut picks: Vec<Option<usize>> = vec![None; n];
+        ws.picks.clear();
+        ws.picks.resize(n, None);
         for k in 0..n {
             let table = &rec.tables[rec.chain[k]];
-            let want = (rho + k as i64 - offsets[k]).rem_euclid(nn);
+            let want = (rho + k as i64 - ws.offsets[k]).rem_euclid(nn);
             // Entries are heat-sorted; the first residue match is the
             // lowest-heat image of the wanted tone row.
             let found = (0..table.len()).find(|&e| (e as i64).rem_euclid(nn) == want);
             if let Some(e) = found {
                 covered += 1;
                 heat += table.entries[e].heat_nm;
-                picks[k] = Some(e);
+                ws.picks[k] = Some(e);
             }
         }
         let better = match &best {
             None => true,
-            Some((bc, bh, _)) => covered > *bc || (covered == *bc && heat < *bh),
+            Some((bc, bh)) => covered > *bc || (covered == *bc && heat < *bh),
         };
         if better {
-            best = Some((covered, heat, picks));
+            best = Some((covered, heat));
+            std::mem::swap(&mut ws.picks, &mut ws.best_picks);
         }
     }
-    if let Some((_, _, picks)) = best {
+    if best.is_some() {
         for k in 0..n {
-            plan[rec.chain[k]] = picks[k];
+            plan[rec.chain[k]] = ws.best_picks[k];
         }
     }
 }
 
 /// Cluster case (Fig 13(b,c)): first ring → first entry, interior rings →
 /// cyclic diagonal from the first anchor, last ring → last entry.
-fn assign_cluster(rec: &RecordPhase, members: &[usize], plan: &mut LockPlan) {
+fn assign_cluster(
+    rec: &RecordPhase,
+    members: &[usize],
+    plan: &mut LockPlan,
+    offsets: &mut Vec<i64>,
+) {
     let m = members.len();
     let n = rec.chain.len() as i64;
-    let offsets = chain_offsets(rec, members);
+    chain_offsets_into(rec, members, offsets);
     for (t, &k) in members.iter().enumerate() {
         let ring = rec.chain[k];
         let table = &rec.tables[ring];
@@ -148,9 +179,9 @@ fn assign_cluster(rec: &RecordPhase, members: &[usize], plan: &mut LockPlan) {
 /// Cumulative LAT row offsets along a run of chain positions. `members[t]`
 /// is a chain index; offsets are relative to the run head (off[0] = 0).
 /// Pairs inside the run must all be `Found` (callers split at φ).
-fn chain_offsets(rec: &RecordPhase, members: &[usize]) -> Vec<i64> {
-    let mut off = Vec::with_capacity(members.len());
-    off.push(0i64);
+fn chain_offsets_into(rec: &RecordPhase, members: &[usize], out: &mut Vec<i64>) {
+    out.clear();
+    out.push(0i64);
     for t in 1..members.len() {
         let pair = members[t - 1]; // relation chain[pair] -> chain[pair+1]
         let delta = match rec.relations[pair] {
@@ -158,9 +189,9 @@ fn chain_offsets(rec: &RecordPhase, members: &[usize]) -> Vec<i64> {
             // Unreachable by construction; treat as 0 to stay defensive.
             _ => 0,
         };
-        off.push(off[t - 1] + delta);
+        let prev = out[t - 1];
+        out.push(prev + delta);
     }
-    off
 }
 
 #[cfg(test)]

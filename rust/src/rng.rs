@@ -31,6 +31,15 @@ impl SplitMix64 {
     }
 }
 
+/// Stable hash of an experiment/sweep tag, mixed into [`derive_seed`] lanes.
+/// Shared by `experiments::point_seed` and `coordinator::sweep::column_seed`
+/// so per-column sweep seeds stay bit-compatible with per-point experiment
+/// seeds.
+pub fn tag_hash(tag: &str) -> u64 {
+    tag.bytes()
+        .fold(0u64, |acc, b| acc.wrapping_mul(131).wrapping_add(b as u64))
+}
+
 /// Derive a child seed from a parent seed and a list of lane indices.
 ///
 /// Used so that trial `(point, laser_idx, ring_idx)` always sees the same

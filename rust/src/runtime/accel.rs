@@ -6,25 +6,63 @@
 //! bottleneck bipartite matching in Rust (matching is control-flow-heavy
 //! and N ≤ 16, so it belongs on the coordinator side — DESIGN.md).
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
+#[cfg(feature = "xla")]
+use anyhow::Context;
 
+#[cfg(feature = "xla")]
 use crate::arbiter::distance::DistanceMatrix;
+#[cfg(feature = "xla")]
 use crate::arbiter::matching::bottleneck_assignment;
 use crate::arbiter::Policy;
 use crate::config::SystemConfig;
 use crate::model::system::SystemSampler;
 use crate::montecarlo::IdealEvaluator;
+#[cfg(feature = "xla")]
 use crate::runtime::artifact::ArtifactStore;
+#[cfg(feature = "xla")]
 use crate::runtime::{batcher, IdealExecutable, PjrtRuntime, BATCH};
+
+/// Stub evaluator compiled when the `xla` feature is off: discovery always
+/// fails, so the coordinator falls back to [`crate::montecarlo::RustIdeal`]
+/// with a warning and experiments stay runnable on the default build.
+#[cfg(not(feature = "xla"))]
+pub struct XlaIdeal {
+    _private: (),
+}
+
+#[cfg(not(feature = "xla"))]
+impl XlaIdeal {
+    /// Always errors: the default build carries no PJRT bindings.
+    pub fn discover() -> Result<Self> {
+        Err(anyhow!(
+            "wdm-arbiter was built without the `xla` feature; rebuild with \
+             `--features xla` (and real PJRT bindings) for the accelerated backend"
+        ))
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+impl IdealEvaluator for XlaIdeal {
+    fn min_trs(&self, _cfg: &SystemConfig, _sampler: &SystemSampler, _policy: Policy) -> Vec<f64> {
+        unreachable!("XlaIdeal cannot be constructed without the `xla` feature")
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}
 
 /// PJRT-backed ideal-model evaluator. Compiles artifacts lazily, one per
 /// channel count, and keeps them for the process lifetime.
+#[cfg(feature = "xla")]
 pub struct XlaIdeal {
     runtime: PjrtRuntime,
     store: ArtifactStore,
     exes: std::cell::RefCell<std::collections::HashMap<usize, std::rc::Rc<IdealExecutable>>>,
 }
 
+#[cfg(feature = "xla")]
 impl XlaIdeal {
     /// Create from discovered artifacts; errors if none are built.
     pub fn discover() -> Result<Self> {
@@ -94,6 +132,7 @@ impl XlaIdeal {
     }
 }
 
+#[cfg(feature = "xla")]
 impl XlaIdeal {
     /// Multi-policy evaluation sharing one artifact execution per batch.
     pub fn try_min_trs_multi(
@@ -129,6 +168,7 @@ impl XlaIdeal {
     }
 }
 
+#[cfg(feature = "xla")]
 impl IdealEvaluator for XlaIdeal {
     fn min_trs(&self, cfg: &SystemConfig, sampler: &SystemSampler, policy: Policy) -> Vec<f64> {
         self.try_min_trs(cfg, sampler, policy)
@@ -150,7 +190,7 @@ impl IdealEvaluator for XlaIdeal {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "xla"))]
 mod tests {
     use super::*;
     use crate::montecarlo::{policy_min_trs, RustIdeal};

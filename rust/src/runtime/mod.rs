@@ -18,12 +18,14 @@ pub mod accel;
 pub mod artifact;
 pub mod batcher;
 
+#[cfg(feature = "xla")]
 use anyhow::{Context, Result};
 
 /// Batch size baked into the artifacts (see `python/compile/aot.py`).
 pub const BATCH: usize = 512;
 
 /// One compiled ideal-model executable (fixed `N_ch`, fixed batch).
+#[cfg(feature = "xla")]
 pub struct IdealExecutable {
     exe: xla::PjRtLoadedExecutable,
     pub n_ch: usize,
@@ -47,10 +49,12 @@ pub struct IdealBatchOutput {
 }
 
 /// PJRT CPU client + compiled executables.
+#[cfg(feature = "xla")]
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "xla")]
 impl PjrtRuntime {
     pub fn cpu() -> Result<Self> {
         Ok(Self { client: xla::PjRtClient::cpu().context("create PJRT CPU client")? })
@@ -75,6 +79,7 @@ impl PjrtRuntime {
     }
 }
 
+#[cfg(feature = "xla")]
 impl IdealExecutable {
     /// Execute one batch. All row tensors are `[batch][n_ch]` flattened f32,
     /// `s_order` is the target spectral ordering (i32, length `n_ch`).
@@ -123,7 +128,7 @@ impl IdealExecutable {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "xla"))]
 mod tests {
     use super::artifact::ArtifactStore;
     use super::*;

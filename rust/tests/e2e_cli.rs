@@ -58,6 +58,56 @@ fn run_fig8_fast_tiny_population() {
 }
 
 #[test]
+fn sweep_subcommand_writes_grid_and_json() {
+    let dir = std::env::temp_dir().join(format!("wdm-e2e-sweep-{}", std::process::id()));
+    let out = bin()
+        .args([
+            "sweep", "--axis", "ring-local", "--values", "1.12,2.24", "--tr", "2,6",
+            "--measure", "afp:ltc,cafp:vt-rs-ssm", "--fast", "--lasers", "4", "--rows", "4",
+            "--out",
+        ])
+        .arg(&dir)
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("afp_ltc"), "{text}");
+    assert!(dir.join("sweep_afp_ltc.csv").is_file());
+    assert!(dir.join("sweep_cafp_vt-rs-ssm.csv").is_file());
+    assert!(dir.join("sweep.json").is_file());
+    let json = std::fs::read_to_string(dir.join("sweep.json")).unwrap();
+    assert!(json.contains("\"axis\": \"ring-local\""));
+    assert!(json.contains("\"backend\": \"rust-f64\""));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sweep_range_syntax_and_curve_measure() {
+    let dir = std::env::temp_dir().join(format!("wdm-e2e-sweep2-{}", std::process::id()));
+    let out = bin()
+        .args([
+            "sweep", "--axis", "grid-offset", "--values", "0:2:1", "--measure", "min-tr:lta",
+            "--fast", "--lasers", "3", "--rows", "3", "--out",
+        ])
+        .arg(&dir)
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(dir.join("sweep_min-tr_lta.csv").is_file());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sweep_rejects_bad_axis() {
+    let out = bin()
+        .args(["sweep", "--axis", "warp-factor", "--values", "1,2"])
+        .output()
+        .expect("run");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown axis"));
+}
+
+#[test]
 fn config_file_round_trip() {
     let dir = std::env::temp_dir();
     let path = dir.join(format!("wdm-cfg-{}.toml", std::process::id()));

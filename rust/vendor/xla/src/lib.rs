@@ -1,0 +1,112 @@
+//! Offline **stub** of the PJRT/XLA binding surface `wdm-arbiter`'s
+//! `runtime` module compiles against when the `xla` cargo feature is on.
+//!
+//! Every entry point returns [`Error::Stub`]: enabling the feature keeps the
+//! code compiling and the CLI working (the coordinator falls back to the
+//! pure-Rust backend with a warning), without pulling heavyweight native
+//! dependencies into the build. To run the real AOT JAX/Pallas artifacts,
+//! point the `xla` path dependency in `rust/Cargo.toml` at actual PJRT
+//! bindings exposing this same surface (e.g. xla-rs).
+
+use std::fmt;
+
+/// Stub error: the only error this crate ever produces.
+#[derive(Debug)]
+pub enum Error {
+    Stub,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "built against the vendored xla stub; point rust/vendor/xla at real PJRT bindings"
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// A host literal (stub: carries no data).
+#[derive(Debug, Clone, Default)]
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(_v: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Stub)
+    }
+
+    pub fn to_tuple4(&self) -> Result<(Literal, Literal, Literal, Literal)> {
+        Err(Error::Stub)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::Stub)
+    }
+}
+
+/// A device buffer handle returned by execution.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Stub)
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Stub)
+    }
+}
+
+/// An XLA computation ready to compile.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Stub)
+    }
+}
+
+/// A PJRT client.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Stub: always errors — callers fall back to the pure-Rust backend.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Stub)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Stub)
+    }
+}
