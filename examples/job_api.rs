@@ -1,0 +1,58 @@
+//! Drive the typed job API programmatically: one long-lived
+//! [`ArbiterService`], several jobs, and population-cache reuse across
+//! overlapping sweeps — the same mechanism behind `wdm-arbiter serve`.
+//!
+//! ```bash
+//! cargo run --release --example job_api
+//! ```
+
+use wdm_arbiter::api::{ArbiterService, JobRequest};
+use wdm_arbiter::coordinator::Backend;
+
+fn main() {
+    let service = ArbiterService::new(Backend::Rust, 0);
+
+    // A sweep job, written exactly as a serve-mode client would send it.
+    let sweep = JobRequest::from_json_str(
+        r#"{
+        "type": "sweep", "axis": "ring-local", "values": [1.12, 2.24, 4.48],
+        "tr": [2, 4, 6, 9], "measures": ["afp:ltc", "cafp:vt-rs-ssm"],
+        "options": {"fast": true, "lasers": 10, "rows": 10, "out": "out/job-api"}
+    }"#,
+    )
+    .expect("valid job");
+
+    let first = service.submit(&sweep);
+    print!("{}", first.summary);
+    println!(
+        "first submit:  {} cache hits, {} misses ({} populations held)",
+        first.cache.hits, first.cache.misses, first.cache.entries
+    );
+
+    // Re-submitting the same job resamples nothing: every column is a hit.
+    let second = service.submit(&sweep);
+    println!(
+        "second submit: {} cache hits, {} misses",
+        second.cache.hits, second.cache.misses
+    );
+
+    // A *different* measure over the same columns still reuses them — the
+    // ideal-LtC evaluation already paid for is shared.
+    let min_tr = JobRequest::from_json_str(
+        r#"{
+        "type": "sweep", "axis": "ring-local", "values": [1.12, 2.24, 4.48],
+        "measures": ["min-tr:ltc"],
+        "options": {"fast": true, "lasers": 10, "rows": 10, "out": "out/job-api"}
+    }"#,
+    )
+    .expect("valid job");
+    let third = service.submit(&min_tr);
+    println!(
+        "third submit:  {} cache hits, {} misses",
+        third.cache.hits, third.cache.misses
+    );
+
+    // Every job is a serializable value — this line is a valid stdin line
+    // for `wdm-arbiter serve`.
+    println!("wire form: {}", sweep.to_json_string());
+}

@@ -1,0 +1,207 @@
+//! argv → [`JobRequest`] mapping: the CLI is a thin client of the job API.
+//!
+//! Every `run` / `sweep` / `arbitrate` / `show-config` invocation maps to
+//! exactly one `JobRequest` (`run all` becomes a [`JobRequest::Batch`] of
+//! every registered experiment), and the mapping is lossless: the request
+//! serializes to JSON and parses back identical (round-trip tested in
+//! `tests/api_roundtrip.rs`).
+
+use crate::api::request::{ConfigSpec, JobOptions, JobRequest};
+use crate::coordinator::sweep::{ConfigAxis, Measure};
+use crate::coordinator::Backend;
+use crate::experiments::all_experiments;
+use crate::oblivious::Scheme;
+use crate::util::cli::Args;
+use crate::util::values::parse_values;
+
+/// Map parsed argv to a job. `args.positionals[0]` must be one of
+/// `run | sweep | arbitrate | show-config` (`list`, `serve` and `batch`
+/// are handled by the binary itself — they are not jobs).
+pub fn job_from_args(args: &Args) -> Result<JobRequest, String> {
+    match args.positionals.first().map(String::as_str) {
+        Some("run") => run_from_args(args),
+        Some("sweep") => sweep_from_args(args),
+        Some("arbitrate") => arbitrate_from_args(args),
+        Some("show-config") => Ok(JobRequest::ShowConfig {
+            cases: args.flag("cases"),
+            config: config_from_args(args),
+        }),
+        Some(other) => Err(format!("no job mapping for subcommand '{other}'")),
+        None => Err("missing subcommand".to_string()),
+    }
+}
+
+/// Largest CLI-accepted seed: JSON numbers are f64, so seeds must stay
+/// within the exact-integer range for the JobRequest round-trip to be
+/// lossless (TOML/JSON entry points are f64-native and need no check).
+const MAX_JSON_SAFE_SEED: u64 = 1 << 53;
+
+fn json_safe_seed(seed: u64) -> Result<u64, String> {
+    if seed > MAX_JSON_SAFE_SEED {
+        return Err(format!("--seed must be <= 2^53 ({MAX_JSON_SAFE_SEED}), got {seed}"));
+    }
+    Ok(seed)
+}
+
+/// The shared execution options (`--out --fast --lasers --rows --seed
+/// --threads --backend`), captured only when explicitly given.
+pub fn options_from_args(args: &Args) -> Result<JobOptions, String> {
+    let mut o = JobOptions { fast: args.flag("fast"), ..JobOptions::default() };
+    o.out = args.get("out").map(str::to_string);
+    o.lasers = parse_opt::<usize>(args, "lasers")?;
+    o.rows = parse_opt::<usize>(args, "rows")?;
+    o.seed = parse_opt::<u64>(args, "seed")?.map(json_safe_seed).transpose()?;
+    o.threads = parse_opt::<usize>(args, "threads")?;
+    if let Some(b) = args.get("backend") {
+        o.backend = Some(Backend::by_name(b).ok_or_else(|| format!("unknown backend '{b}'"))?);
+    }
+    Ok(o)
+}
+
+/// The shared config flags (`--config FILE.toml`, `--permuted`).
+pub fn config_from_args(args: &Args) -> ConfigSpec {
+    ConfigSpec {
+        path: args.get("config").map(str::to_string),
+        inline_toml: None,
+        permuted: args.flag("permuted"),
+    }
+}
+
+fn parse_opt<T: std::str::FromStr>(args: &Args, name: &str) -> Result<Option<T>, String> {
+    match args.get(name) {
+        None => Ok(None),
+        Some(v) => v
+            .parse::<T>()
+            .map(Some)
+            .map_err(|_| format!("--{name} expects a number, got '{v}'")),
+    }
+}
+
+fn run_from_args(args: &Args) -> Result<JobRequest, String> {
+    let target = args
+        .positionals
+        .get(1)
+        .ok_or_else(|| "run: expected an experiment id (see `list`)".to_string())?;
+    let options = options_from_args(args)?;
+    if target == "all" {
+        let jobs = all_experiments()
+            .iter()
+            .map(|e| JobRequest::RunExperiment { id: e.id().to_string(), options: options.clone() })
+            .collect();
+        return Ok(JobRequest::Batch { jobs });
+    }
+    Ok(JobRequest::RunExperiment { id: target.clone(), options })
+}
+
+fn sweep_from_args(args: &Args) -> Result<JobRequest, String> {
+    let axis_name = args.get_or("axis", "ring-local");
+    let axis = ConfigAxis::by_name(axis_name)
+        .ok_or_else(|| format!("unknown axis '{axis_name}' (see `wdm-arbiter --help`)"))?;
+    let values = parse_values(args.get("values").ok_or_else(|| {
+        "sweep: --values is required (list `a,b,c` or range `lo:hi:step`)".to_string()
+    })?)?;
+    let thresholds = match args.get("tr") {
+        Some(s) => Some(parse_values(s)?),
+        None => None,
+    };
+    let measures = Measure::parse_list(args.get_or("measure", "afp:ltc"))?;
+    Ok(JobRequest::Sweep {
+        axis,
+        values,
+        thresholds,
+        measures,
+        config: config_from_args(args),
+        options: options_from_args(args)?,
+    })
+}
+
+fn arbitrate_from_args(args: &Args) -> Result<JobRequest, String> {
+    let scheme_name = args.get_or("scheme", "vt-rs-ssm");
+    let scheme = Scheme::by_name(scheme_name)
+        .ok_or_else(|| format!("unknown scheme '{scheme_name}'"))?;
+    Ok(JobRequest::Arbitrate {
+        scheme,
+        tr_nm: args.get_f64("tr", 6.0)?,
+        seed: json_safe_seed(args.get_u64("seed", 42)?)?,
+        config: config_from_args(args),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arbiter::Policy;
+
+    fn argv(s: &[&str]) -> Args {
+        let v: Vec<String> = s.iter().map(|x| x.to_string()).collect();
+        Args::parse(&v, &["fast", "cases", "permuted", "help"]).unwrap()
+    }
+
+    #[test]
+    fn run_maps_and_run_all_becomes_batch() {
+        let job = job_from_args(&argv(&["run", "fig4", "--fast", "--seed", "9"])).unwrap();
+        assert_eq!(
+            job,
+            JobRequest::RunExperiment {
+                id: "fig4".to_string(),
+                options: JobOptions { fast: true, seed: Some(9), ..JobOptions::default() },
+            }
+        );
+        let all = job_from_args(&argv(&["run", "all", "--fast"])).unwrap();
+        let JobRequest::Batch { jobs } = all else { panic!("run all should be a batch") };
+        assert_eq!(jobs.len(), all_experiments().len());
+        assert!(jobs.iter().all(|j| matches!(j, JobRequest::RunExperiment { .. })));
+    }
+
+    #[test]
+    fn sweep_maps_with_defaults() {
+        let job = job_from_args(&argv(&[
+            "sweep", "--axis", "grid-offset", "--values", "0:2:1", "--permuted",
+        ]))
+        .unwrap();
+        let JobRequest::Sweep { axis, values, thresholds, measures, config, .. } = job else {
+            panic!()
+        };
+        assert_eq!(axis, ConfigAxis::GridOffsetNm);
+        assert_eq!(values, vec![0.0, 1.0, 2.0]);
+        assert_eq!(thresholds, None);
+        assert_eq!(measures, vec![Measure::Afp(Policy::LtC)]);
+        assert!(config.permuted);
+    }
+
+    #[test]
+    fn arbitrate_and_show_config_map() {
+        assert_eq!(
+            job_from_args(&argv(&["arbitrate", "--tr", "5.5", "--seed", "123"])).unwrap(),
+            JobRequest::Arbitrate {
+                scheme: crate::oblivious::Scheme::VtRsSsm,
+                tr_nm: 5.5,
+                seed: 123,
+                config: ConfigSpec::default(),
+            }
+        );
+        assert_eq!(
+            job_from_args(&argv(&["show-config", "--cases", "--config", "x.toml"])).unwrap(),
+            JobRequest::ShowConfig {
+                cases: true,
+                config: ConfigSpec {
+                    path: Some("x.toml".to_string()),
+                    inline_toml: None,
+                    permuted: false,
+                },
+            }
+        );
+    }
+
+    #[test]
+    fn bad_flags_are_rejected() {
+        assert!(job_from_args(&argv(&["sweep", "--values", "1", "--axis", "warp"])).is_err());
+        assert!(job_from_args(&argv(&["sweep"])).is_err());
+        assert!(job_from_args(&argv(&["run", "x", "--lasers", "many"])).is_err());
+        assert!(job_from_args(&argv(&["arbitrate", "--scheme", "warp"])).is_err());
+        assert!(job_from_args(&argv(&["list"])).is_err());
+        // Seeds past 2^53 would corrupt silently in the f64 JSON form.
+        assert!(job_from_args(&argv(&["run", "fig4", "--seed", "9007199254740993"])).is_err());
+        assert!(job_from_args(&argv(&["arbitrate", "--seed", "18446744073709551615"])).is_err());
+    }
+}

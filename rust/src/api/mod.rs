@@ -1,0 +1,54 @@
+//! The typed job API: programmatic, serializable request/response access
+//! to everything the `wdm-arbiter` CLI can do.
+//!
+//! The paper's hierarchical framework is meant to be *driven* — many
+//! policies × schemes × variability scenarios, submitted by outer planning
+//! loops rather than one-shot shell invocations. This module is that
+//! surface:
+//!
+//! * [`JobRequest`] — a typed, serializable job description
+//!   (`RunExperiment`, `Sweep`, `Arbitrate`, `ShowConfig`, or a `Batch`
+//!   of jobs) with lossless JSON round-trip ([`JobRequest::to_json`] /
+//!   [`JobRequest::from_json`]) and a TOML form
+//!   ([`JobRequest::from_toml`]) for hand-written job files.
+//! * [`JobResponse`] / [`JobEvent`] — structured results (per-panel data,
+//!   files written, the evaluator that **actually ran**, population-cache
+//!   activity) and progress events, replacing `println!` side effects.
+//! * [`ArbiterService`] — a long-lived service owning the backend
+//!   evaluator and a [`crate::montecarlo::PopulationCache`]: repeated or
+//!   overlapping jobs reuse each column's sampled population and ideal
+//!   evaluation instead of resampling (keyed by config fingerprint ×
+//!   population shape × seed lane).
+//!
+//! The CLI (`src/main.rs`) is a thin client: every subcommand maps argv to
+//! a `JobRequest` ([`cli::job_from_args`]) and renders the response;
+//! `wdm-arbiter serve` processes JSON-lines requests on stdin and
+//! `wdm-arbiter batch jobs.{json,toml}` runs a job file — all three drive
+//! the same service.
+//!
+//! ## Example
+//!
+//! ```no_run
+//! use wdm_arbiter::api::{ArbiterService, JobRequest};
+//! use wdm_arbiter::coordinator::Backend;
+//!
+//! let service = ArbiterService::new(Backend::Rust, 0);
+//! let job = JobRequest::from_json_str(
+//!     r#"{"type":"sweep","axis":"ring-local","values":[1.12,2.24],
+//!         "tr":[2,6],"measures":["afp:ltc"],"options":{"fast":true}}"#,
+//! )
+//! .unwrap();
+//! let first = service.submit(&job);
+//! let second = service.submit(&job); // same columns: served from cache
+//! assert!(first.ok && second.ok);
+//! assert_eq!(second.cache.hits, 2); // one hit per column
+//! ```
+
+pub mod cli;
+pub mod request;
+pub mod response;
+pub mod service;
+
+pub use request::{ConfigSpec, JobOptions, JobRequest};
+pub use response::{JobEvent, JobResponse, Panel};
+pub use service::ArbiterService;

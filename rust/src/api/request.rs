@@ -1,0 +1,928 @@
+//! [`JobRequest`]: the typed, serializable job description.
+//!
+//! JSON is the canonical wire form (`to_json` / `from_json` are exact
+//! inverses — round-trip tested for every CLI invocation shape); TOML is a
+//! convenience form for hand-written job files (`from_toml`), sharing the
+//! same field names and the same value-list syntax as the CLI
+//! ([`crate::util::values::parse_values`]).
+
+use std::path::PathBuf;
+
+use crate::arbiter::Policy;
+use crate::config::presets::system_config_from_toml;
+use crate::config::toml::TomlDoc;
+use crate::config::SystemConfig;
+use crate::coordinator::sweep::{ConfigAxis, Measure};
+use crate::coordinator::{Backend, RunOptions};
+use crate::oblivious::Scheme;
+use crate::util::json::Json;
+use crate::util::values::parse_values;
+
+/// Execution options a job may override; unset fields fall back to
+/// [`RunOptions::default`] (or [`RunOptions::fast`] when `fast` is set),
+/// exactly like the CLI flags they mirror.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct JobOptions {
+    /// Output directory (`--out`).
+    pub out: Option<String>,
+    /// Reduced population + coarser grids (`--fast`).
+    pub fast: bool,
+    /// Lasers per Monte-Carlo point (`--lasers`).
+    pub lasers: Option<usize>,
+    /// Ring rows per Monte-Carlo point (`--rows`).
+    pub rows: Option<usize>,
+    /// Base RNG seed (`--seed`).
+    pub seed: Option<u64>,
+    /// Worker threads, 0 = all cores (`--threads`).
+    pub threads: Option<usize>,
+    /// Ideal-model backend (`--backend`).
+    pub backend: Option<Backend>,
+}
+
+impl JobOptions {
+    /// Resolve to concrete [`RunOptions`] (the fast preset first, then
+    /// field overrides — the same precedence as the CLI).
+    pub fn to_run_options(&self) -> RunOptions {
+        let mut o = if self.fast { RunOptions::fast() } else { RunOptions::default() };
+        if let Some(out) = &self.out {
+            o.out_dir = PathBuf::from(out);
+        }
+        if let Some(n) = self.lasers {
+            o.n_lasers = n;
+        }
+        if let Some(n) = self.rows {
+            o.n_rows = n;
+        }
+        if let Some(s) = self.seed {
+            o.seed = s;
+        }
+        if let Some(t) = self.threads {
+            o.threads = t;
+        }
+        if let Some(b) = self.backend {
+            o.backend = b;
+        }
+        o
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = Vec::new();
+        if let Some(out) = &self.out {
+            pairs.push(("out", Json::str(out.clone())));
+        }
+        if self.fast {
+            pairs.push(("fast", Json::Bool(true)));
+        }
+        if let Some(n) = self.lasers {
+            pairs.push(("lasers", Json::num(n as f64)));
+        }
+        if let Some(n) = self.rows {
+            pairs.push(("rows", Json::num(n as f64)));
+        }
+        if let Some(s) = self.seed {
+            pairs.push(("seed", Json::num(s as f64)));
+        }
+        if let Some(t) = self.threads {
+            pairs.push(("threads", Json::num(t as f64)));
+        }
+        if let Some(b) = self.backend {
+            pairs.push(("backend", Json::str(b.name())));
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(j: &Json) -> Result<JobOptions, String> {
+        let Json::Obj(pairs) = j else {
+            return Err("options: expected an object".to_string());
+        };
+        let mut o = JobOptions::default();
+        for (k, v) in pairs {
+            match k.as_str() {
+                "out" => {
+                    o.out = Some(
+                        v.as_str()
+                            .ok_or_else(|| "options.out: expected a string".to_string())?
+                            .to_string(),
+                    )
+                }
+                "fast" => {
+                    o.fast = v
+                        .as_bool()
+                        .ok_or_else(|| "options.fast: expected a bool".to_string())?
+                }
+                "lasers" => {
+                    o.lasers = Some(
+                        v.as_usize()
+                            .ok_or_else(|| "options.lasers: expected an integer".to_string())?,
+                    )
+                }
+                "rows" => {
+                    o.rows = Some(
+                        v.as_usize()
+                            .ok_or_else(|| "options.rows: expected an integer".to_string())?,
+                    )
+                }
+                "seed" => {
+                    o.seed = Some(
+                        v.as_u64()
+                            .ok_or_else(|| "options.seed: expected an integer".to_string())?,
+                    )
+                }
+                "threads" => {
+                    o.threads = Some(
+                        v.as_usize()
+                            .ok_or_else(|| "options.threads: expected an integer".to_string())?,
+                    )
+                }
+                "backend" => {
+                    let name = v
+                        .as_str()
+                        .ok_or_else(|| "options.backend: expected a string".to_string())?;
+                    o.backend = Some(
+                        Backend::by_name(name)
+                            .ok_or_else(|| format!("options.backend: unknown backend '{name}'"))?,
+                    );
+                }
+                other => return Err(format!("options: unknown key '{other}'")),
+            }
+        }
+        Ok(o)
+    }
+
+    fn from_toml(doc: &TomlDoc, prefix: &str) -> Result<JobOptions, String> {
+        let g = |s: &str| doc.get(&format!("{prefix}.options.{s}"));
+        let mut o = JobOptions::default();
+        if let Some(v) = g("out") {
+            o.out = Some(
+                v.as_str()
+                    .ok_or_else(|| "options.out: expected a string".to_string())?
+                    .to_string(),
+            );
+        }
+        if let Some(v) = g("fast") {
+            o.fast = v
+                .as_bool()
+                .ok_or_else(|| "options.fast: expected a bool".to_string())?;
+        }
+        if let Some(v) = g("lasers") {
+            o.lasers = Some(
+                v.as_usize()
+                    .ok_or_else(|| "options.lasers: expected an integer".to_string())?,
+            );
+        }
+        if let Some(v) = g("rows") {
+            o.rows = Some(
+                v.as_usize()
+                    .ok_or_else(|| "options.rows: expected an integer".to_string())?,
+            );
+        }
+        if let Some(v) = g("seed") {
+            let x = v
+                .as_f64()
+                .filter(|x| *x >= 0.0 && x.trunc() == *x)
+                .ok_or_else(|| "options.seed: expected an integer".to_string())?;
+            o.seed = Some(x as u64);
+        }
+        if let Some(v) = g("threads") {
+            o.threads = Some(
+                v.as_usize()
+                    .ok_or_else(|| "options.threads: expected an integer".to_string())?,
+            );
+        }
+        if let Some(v) = g("backend") {
+            let name = v
+                .as_str()
+                .ok_or_else(|| "options.backend: expected a string".to_string())?;
+            o.backend = Some(
+                Backend::by_name(name)
+                    .ok_or_else(|| format!("options.backend: unknown backend '{name}'"))?,
+            );
+        }
+        Ok(o)
+    }
+}
+
+/// How a job names its [`SystemConfig`]: a TOML file path, inline TOML
+/// text (serve-mode clients without a shared filesystem), or the Table-I
+/// default — optionally switched to permuted orderings.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ConfigSpec {
+    /// Path to a TOML config file (`--config`), read at execution time.
+    pub path: Option<String>,
+    /// Inline TOML text (no CLI equivalent; job files / serve clients).
+    pub inline_toml: Option<String>,
+    /// Apply permuted `r_i`/`s_i` orderings after loading (`--permuted`).
+    pub permuted: bool,
+}
+
+impl ConfigSpec {
+    /// Resolve to a concrete [`SystemConfig`].
+    pub fn load(&self) -> Result<SystemConfig, String> {
+        let mut cfg = match (&self.path, &self.inline_toml) {
+            (Some(_), Some(_)) => {
+                return Err("config: 'path' and 'toml' are mutually exclusive".to_string())
+            }
+            (Some(p), None) => {
+                let text =
+                    std::fs::read_to_string(p).map_err(|e| format!("config '{p}': {e}"))?;
+                system_config_from_toml(&text)?
+            }
+            (None, Some(t)) => system_config_from_toml(t)?,
+            (None, None) => SystemConfig::default(),
+        };
+        if self.permuted {
+            cfg = cfg.with_permuted_orders();
+        }
+        Ok(cfg)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = Vec::new();
+        if let Some(p) = &self.path {
+            pairs.push(("path", Json::str(p.clone())));
+        }
+        if let Some(t) = &self.inline_toml {
+            pairs.push(("toml", Json::str(t.clone())));
+        }
+        if self.permuted {
+            pairs.push(("permuted", Json::Bool(true)));
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(j: &Json) -> Result<ConfigSpec, String> {
+        let Json::Obj(pairs) = j else {
+            return Err("config: expected an object".to_string());
+        };
+        let mut c = ConfigSpec::default();
+        for (k, v) in pairs {
+            match k.as_str() {
+                "path" => {
+                    c.path = Some(
+                        v.as_str()
+                            .ok_or_else(|| "config.path: expected a string".to_string())?
+                            .to_string(),
+                    )
+                }
+                "toml" => {
+                    c.inline_toml = Some(
+                        v.as_str()
+                            .ok_or_else(|| "config.toml: expected a string".to_string())?
+                            .to_string(),
+                    )
+                }
+                "permuted" => {
+                    c.permuted = v
+                        .as_bool()
+                        .ok_or_else(|| "config.permuted: expected a bool".to_string())?
+                }
+                other => return Err(format!("config: unknown key '{other}'")),
+            }
+        }
+        Ok(c)
+    }
+
+    fn from_toml(doc: &TomlDoc, prefix: &str) -> Result<ConfigSpec, String> {
+        let g = |s: &str| doc.get(&format!("{prefix}.config.{s}"));
+        let mut c = ConfigSpec::default();
+        if let Some(v) = g("path") {
+            c.path = Some(
+                v.as_str()
+                    .ok_or_else(|| "config.path: expected a string".to_string())?
+                    .to_string(),
+            );
+        }
+        if let Some(v) = g("toml") {
+            c.inline_toml = Some(
+                v.as_str()
+                    .ok_or_else(|| "config.toml: expected a string".to_string())?
+                    .to_string(),
+            );
+        }
+        if let Some(v) = g("permuted") {
+            c.permuted = v
+                .as_bool()
+                .ok_or_else(|| "config.permuted: expected a bool".to_string())?;
+        }
+        Ok(c)
+    }
+}
+
+/// One unit of work for the [`crate::api::ArbiterService`]. Every CLI
+/// invocation maps to exactly one of these (see
+/// [`crate::api::cli::job_from_args`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobRequest {
+    /// Regenerate one registered paper experiment (`wdm-arbiter run <id>`).
+    RunExperiment { id: String, options: JobOptions },
+    /// Ad-hoc Monte-Carlo grid over one config axis × the λ̄_TR axis
+    /// (`wdm-arbiter sweep`).
+    Sweep {
+        axis: ConfigAxis,
+        /// Column values — one (possibly cached) population per value.
+        values: Vec<f64>,
+        /// λ̄_TR threshold rows; `None` derives the paper's default sweep
+        /// when any grid measure needs rows.
+        thresholds: Option<Vec<f64>>,
+        measures: Vec<Measure>,
+        config: ConfigSpec,
+        options: JobOptions,
+    },
+    /// One arbitration trial end-to-end (`wdm-arbiter arbitrate`).
+    Arbitrate { scheme: Scheme, tr_nm: f64, seed: u64, config: ConfigSpec },
+    /// Resolved configuration / Table-II cases (`wdm-arbiter show-config`).
+    ShowConfig { cases: bool, config: ConfigSpec },
+    /// A sequence of jobs, executed in order against the same service
+    /// (shared population cache); keeps going past failures.
+    Batch { jobs: Vec<JobRequest> },
+}
+
+impl JobRequest {
+    /// Response/report kind tag: `run`, `sweep`, `arbitrate`,
+    /// `show-config`, `batch`.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JobRequest::RunExperiment { .. } => "run",
+            JobRequest::Sweep { .. } => "sweep",
+            JobRequest::Arbitrate { .. } => "arbitrate",
+            JobRequest::ShowConfig { .. } => "show-config",
+            JobRequest::Batch { .. } => "batch",
+        }
+    }
+
+    /// Short human label (experiment id, axis, scheme, …).
+    pub fn label(&self) -> String {
+        match self {
+            JobRequest::RunExperiment { id, .. } => id.clone(),
+            JobRequest::Sweep { axis, .. } => axis.name().to_string(),
+            JobRequest::Arbitrate { scheme, .. } => scheme.name().to_string(),
+            JobRequest::ShowConfig { .. } => "config".to_string(),
+            JobRequest::Batch { jobs } => format!("{} jobs", jobs.len()),
+        }
+    }
+
+    /// Serialize to the canonical JSON form ([`Self::from_json`] inverse).
+    pub fn to_json(&self) -> Json {
+        match self {
+            JobRequest::RunExperiment { id, options } => Json::obj(vec![
+                ("type", Json::str("run")),
+                ("id", Json::str(id.clone())),
+                ("options", options.to_json()),
+            ]),
+            JobRequest::Sweep { axis, values, thresholds, measures, config, options } => {
+                let mut pairs = vec![
+                    ("type", Json::str("sweep")),
+                    ("axis", Json::str(axis.name())),
+                    ("values", Json::arr_f64(values)),
+                ];
+                if let Some(tr) = thresholds {
+                    pairs.push(("tr", Json::arr_f64(tr)));
+                }
+                pairs.push((
+                    "measures",
+                    Json::Arr(measures.iter().map(|m| Json::str(m.spec())).collect()),
+                ));
+                pairs.push(("config", config.to_json()));
+                pairs.push(("options", options.to_json()));
+                Json::obj(pairs)
+            }
+            JobRequest::Arbitrate { scheme, tr_nm, seed, config } => Json::obj(vec![
+                ("type", Json::str("arbitrate")),
+                ("scheme", Json::str(scheme.name())),
+                ("tr", Json::num(*tr_nm)),
+                ("seed", Json::num(*seed as f64)),
+                ("config", config.to_json()),
+            ]),
+            JobRequest::ShowConfig { cases, config } => Json::obj(vec![
+                ("type", Json::str("show-config")),
+                ("cases", Json::Bool(*cases)),
+                ("config", config.to_json()),
+            ]),
+            JobRequest::Batch { jobs } => Json::obj(vec![
+                ("type", Json::str("batch")),
+                ("jobs", Json::Arr(jobs.iter().map(|j| j.to_json()).collect())),
+            ]),
+        }
+    }
+
+    /// Compact single-line JSON (the `serve` wire form).
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse the canonical JSON form.
+    pub fn from_json(j: &Json) -> Result<JobRequest, String> {
+        let ty = j.get("type").and_then(Json::as_str).ok_or_else(|| {
+            "job: missing 'type' (run | sweep | arbitrate | show-config | batch)".to_string()
+        })?;
+        match ty {
+            "run" => {
+                check_keys(j, &["type", "id", "options"])?;
+                let id = j
+                    .get("id")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| "run: missing experiment 'id'".to_string())?
+                    .to_string();
+                Ok(JobRequest::RunExperiment { id, options: options_field(j)? })
+            }
+            "sweep" => {
+                check_keys(j, &["type", "axis", "values", "tr", "measures", "config", "options"])?;
+                let axis_name = j
+                    .get("axis")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| "sweep: missing 'axis'".to_string())?;
+                let axis = ConfigAxis::by_name(axis_name)
+                    .ok_or_else(|| format!("sweep: unknown axis '{axis_name}'"))?;
+                let values = values_field(
+                    j.get("values").ok_or_else(|| "sweep: missing 'values'".to_string())?,
+                    "values",
+                )?;
+                let thresholds = match j.get("tr") {
+                    Some(v) => Some(values_field(v, "tr")?),
+                    None => None,
+                };
+                let measures = match j.get("measures") {
+                    Some(v) => measures_field(v)?,
+                    None => vec![Measure::Afp(Policy::LtC)],
+                };
+                Ok(JobRequest::Sweep {
+                    axis,
+                    values,
+                    thresholds,
+                    measures,
+                    config: config_field(j)?,
+                    options: options_field(j)?,
+                })
+            }
+            "arbitrate" => {
+                check_keys(j, &["type", "scheme", "tr", "seed", "config"])?;
+                let scheme = match j.get("scheme") {
+                    None => Scheme::VtRsSsm,
+                    Some(v) => {
+                        let name = v
+                            .as_str()
+                            .ok_or_else(|| "arbitrate.scheme: expected a string".to_string())?;
+                        Scheme::by_name(name)
+                            .ok_or_else(|| format!("arbitrate: unknown scheme '{name}'"))?
+                    }
+                };
+                let tr_nm = match j.get("tr") {
+                    None => 6.0,
+                    Some(v) => v
+                        .as_f64()
+                        .ok_or_else(|| "arbitrate.tr: expected a number".to_string())?,
+                };
+                let seed = match j.get("seed") {
+                    None => 42,
+                    Some(v) => v
+                        .as_u64()
+                        .ok_or_else(|| "arbitrate.seed: expected an integer".to_string())?,
+                };
+                Ok(JobRequest::Arbitrate { scheme, tr_nm, seed, config: config_field(j)? })
+            }
+            "show-config" => {
+                check_keys(j, &["type", "cases", "config"])?;
+                let cases = match j.get("cases") {
+                    None => false,
+                    Some(v) => v
+                        .as_bool()
+                        .ok_or_else(|| "show-config.cases: expected a bool".to_string())?,
+                };
+                Ok(JobRequest::ShowConfig { cases, config: config_field(j)? })
+            }
+            "batch" => {
+                check_keys(j, &["type", "jobs"])?;
+                let jobs = j
+                    .get("jobs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| "batch: missing 'jobs' array".to_string())?
+                    .iter()
+                    .map(JobRequest::from_json)
+                    .collect::<Result<Vec<_>, _>>()?;
+                Ok(JobRequest::Batch { jobs })
+            }
+            other => Err(format!(
+                "job: unknown type '{other}' (run | sweep | arbitrate | show-config | batch)"
+            )),
+        }
+    }
+
+    /// Parse one JSON document into a job.
+    pub fn from_json_str(text: &str) -> Result<JobRequest, String> {
+        JobRequest::from_json(&Json::parse(text)?)
+    }
+
+    /// Parse a *job file*: a single job object, a JSON array of jobs, or
+    /// `{"jobs": [...]}` — the latter two become a [`JobRequest::Batch`].
+    pub fn from_jobs_json(text: &str) -> Result<JobRequest, String> {
+        let j = Json::parse(text)?;
+        if let Some(items) = j.as_arr() {
+            let jobs = items
+                .iter()
+                .map(JobRequest::from_json)
+                .collect::<Result<Vec<_>, _>>()?;
+            return Ok(JobRequest::Batch { jobs });
+        }
+        if j.get("type").is_none() {
+            if let Some(items) = j.get("jobs").and_then(Json::as_arr) {
+                let jobs = items
+                    .iter()
+                    .map(JobRequest::from_json)
+                    .collect::<Result<Vec<_>, _>>()?;
+                return Ok(JobRequest::Batch { jobs });
+            }
+        }
+        JobRequest::from_json(&j)
+    }
+
+    /// Parse the TOML job-file form. A single job lives under `[job]`;
+    /// a batch uses numbered `[jobs.1]`, `[jobs.2]`, … sections (executed
+    /// in label order). Value lists accept arrays (`[1.12, 2.24]`) or the
+    /// CLI string syntax (`"0.28:8.96:0.28"` / `"a,b,c"`); measures are a
+    /// comma-separated string.
+    ///
+    /// ```toml
+    /// [jobs.1]
+    /// type = "sweep"
+    /// axis = "ring-local"
+    /// values = "1.12,2.24"
+    /// tr = [2.0, 6.0]
+    /// measures = "afp:ltc,cafp:vt-rs-ssm"
+    /// [jobs.1.options]
+    /// fast = true
+    ///
+    /// [jobs.2]
+    /// type = "run"
+    /// id = "table1"
+    /// ```
+    pub fn from_toml(text: &str) -> Result<JobRequest, String> {
+        let doc = TomlDoc::parse(text)?;
+        let mut labels: Vec<String> = doc
+            .entries
+            .keys()
+            .filter_map(|k| k.strip_prefix("jobs."))
+            .filter_map(|rest| rest.split('.').next())
+            .map(|s| s.to_string())
+            .collect();
+        labels.sort();
+        labels.dedup();
+        if !labels.is_empty() {
+            labels.sort_by_key(|l| (l.parse::<u64>().ok(), l.clone()));
+            let jobs = labels
+                .iter()
+                .map(|l| JobRequest::from_toml_section(&doc, &format!("jobs.{l}")))
+                .collect::<Result<Vec<_>, _>>()?;
+            return Ok(JobRequest::Batch { jobs });
+        }
+        JobRequest::from_toml_section(&doc, "job")
+    }
+
+    fn from_toml_section(doc: &TomlDoc, prefix: &str) -> Result<JobRequest, String> {
+        let key = |s: &str| format!("{prefix}.{s}");
+        let get_str = |s: &str| doc.get(&key(s)).and_then(|v| v.as_str());
+        let ty = get_str("type").ok_or_else(|| {
+            format!("[{prefix}]: missing type = \"run|sweep|arbitrate|show-config\"")
+        })?;
+        match ty {
+            "run" => {
+                let id = get_str("id")
+                    .ok_or_else(|| format!("[{prefix}]: run needs an experiment id"))?
+                    .to_string();
+                Ok(JobRequest::RunExperiment { id, options: JobOptions::from_toml(doc, prefix)? })
+            }
+            "sweep" => {
+                let axis_name = get_str("axis").unwrap_or("ring-local");
+                let axis = ConfigAxis::by_name(axis_name)
+                    .ok_or_else(|| format!("[{prefix}]: unknown axis '{axis_name}'"))?;
+                let values = toml_values(
+                    doc.get(&key("values"))
+                        .ok_or_else(|| format!("[{prefix}]: sweep needs values"))?,
+                    "values",
+                )?;
+                let thresholds = match doc.get(&key("tr")) {
+                    Some(v) => Some(toml_values(v, "tr")?),
+                    None => None,
+                };
+                let measures = match get_str("measures") {
+                    Some(s) => Measure::parse_list(s)?,
+                    None => vec![Measure::Afp(Policy::LtC)],
+                };
+                Ok(JobRequest::Sweep {
+                    axis,
+                    values,
+                    thresholds,
+                    measures,
+                    config: ConfigSpec::from_toml(doc, prefix)?,
+                    options: JobOptions::from_toml(doc, prefix)?,
+                })
+            }
+            "arbitrate" => {
+                let scheme = match get_str("scheme") {
+                    None => Scheme::VtRsSsm,
+                    Some(name) => Scheme::by_name(name)
+                        .ok_or_else(|| format!("[{prefix}]: unknown scheme '{name}'"))?,
+                };
+                let tr_nm = doc.get_f64(&key("tr"), 6.0);
+                let seed = doc.get_f64(&key("seed"), 42.0);
+                if seed < 0.0 || seed.trunc() != seed {
+                    return Err(format!("[{prefix}]: seed must be a non-negative integer"));
+                }
+                Ok(JobRequest::Arbitrate {
+                    scheme,
+                    tr_nm,
+                    seed: seed as u64,
+                    config: ConfigSpec::from_toml(doc, prefix)?,
+                })
+            }
+            "show-config" => Ok(JobRequest::ShowConfig {
+                cases: doc.get_bool(&key("cases"), false),
+                config: ConfigSpec::from_toml(doc, prefix)?,
+            }),
+            other => Err(format!(
+                "[{prefix}]: unknown type '{other}' (batches use [jobs.N] sections)"
+            )),
+        }
+    }
+}
+
+fn check_keys(j: &Json, allowed: &[&str]) -> Result<(), String> {
+    if let Json::Obj(pairs) = j {
+        for (k, _) in pairs {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!("job: unknown key '{k}'"));
+            }
+        }
+        Ok(())
+    } else {
+        Err("job: expected an object".to_string())
+    }
+}
+
+fn options_field(j: &Json) -> Result<JobOptions, String> {
+    match j.get("options") {
+        None => Ok(JobOptions::default()),
+        Some(v) => JobOptions::from_json(v),
+    }
+}
+
+fn config_field(j: &Json) -> Result<ConfigSpec, String> {
+    match j.get("config") {
+        None => Ok(ConfigSpec::default()),
+        Some(v) => ConfigSpec::from_json(v),
+    }
+}
+
+/// A value list: a JSON number array or the CLI string syntax
+/// (`lo:hi:step` / `a,b,c`).
+fn values_field(v: &Json, what: &str) -> Result<Vec<f64>, String> {
+    if let Some(arr) = v.as_f64_arr() {
+        Ok(arr)
+    } else if let Some(s) = v.as_str() {
+        parse_values(s)
+    } else {
+        Err(format!("{what}: expected a number array or a 'lo:hi:step' / 'a,b,c' string"))
+    }
+}
+
+fn toml_values(v: &crate::config::toml::TomlValue, what: &str) -> Result<Vec<f64>, String> {
+    if let Some(arr) = v.as_f64_array() {
+        Ok(arr)
+    } else if let Some(s) = v.as_str() {
+        parse_values(s)
+    } else {
+        Err(format!("{what}: expected a number array or a 'lo:hi:step' / 'a,b,c' string"))
+    }
+}
+
+/// Measure list: an array of spec strings or one comma-separated string.
+fn measures_field(v: &Json) -> Result<Vec<Measure>, String> {
+    if let Some(s) = v.as_str() {
+        Measure::parse_list(s)
+    } else if let Some(arr) = v.as_arr() {
+        arr.iter()
+            .map(|m| {
+                m.as_str()
+                    .ok_or_else(|| "measures: expected spec strings".to_string())
+                    .and_then(Measure::from_spec)
+            })
+            .collect()
+    } else {
+        Err("measures: expected an array of specs or a comma-separated string".to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sweep_job() -> JobRequest {
+        JobRequest::Sweep {
+            axis: ConfigAxis::RingLocalNm,
+            values: vec![1.12, 2.24],
+            thresholds: Some(vec![2.0, 6.0]),
+            measures: vec![Measure::Afp(Policy::LtC), Measure::Cafp(Scheme::VtRsSsm)],
+            config: ConfigSpec { path: None, inline_toml: None, permuted: true },
+            options: JobOptions { fast: true, lasers: Some(4), ..JobOptions::default() },
+        }
+    }
+
+    #[test]
+    fn every_variant_round_trips_json() {
+        let jobs = vec![
+            JobRequest::RunExperiment {
+                id: "fig14".to_string(),
+                options: JobOptions {
+                    out: Some("out/x".to_string()),
+                    fast: true,
+                    lasers: Some(4),
+                    rows: Some(5),
+                    seed: Some(99),
+                    threads: Some(2),
+                    backend: Some(Backend::Xla),
+                },
+            },
+            sweep_job(),
+            JobRequest::Sweep {
+                axis: ConfigAxis::Channels,
+                values: vec![8.0, 16.0],
+                thresholds: None,
+                measures: vec![Measure::MinTrComplete(Policy::LtA)],
+                config: ConfigSpec::default(),
+                options: JobOptions::default(),
+            },
+            JobRequest::Arbitrate {
+                scheme: Scheme::Sequential,
+                tr_nm: 5.5,
+                seed: 123,
+                config: ConfigSpec {
+                    path: Some("cfg.toml".to_string()),
+                    inline_toml: None,
+                    permuted: false,
+                },
+            },
+            JobRequest::ShowConfig { cases: true, config: ConfigSpec::default() },
+            JobRequest::Batch {
+                jobs: vec![
+                    JobRequest::RunExperiment {
+                        id: "table1".to_string(),
+                        options: JobOptions::default(),
+                    },
+                    sweep_job(),
+                ],
+            },
+        ];
+        for job in jobs {
+            let text = job.to_json_string();
+            let back = JobRequest::from_json_str(&text)
+                .unwrap_or_else(|e| panic!("{e} parsing {text}"));
+            assert_eq!(back, job, "round-trip through {text}");
+            // And through the pretty form too.
+            assert_eq!(JobRequest::from_json_str(&job.to_json().to_pretty()).unwrap(), job);
+        }
+    }
+
+    #[test]
+    fn json_accepts_cli_string_syntax_for_values_and_measures() {
+        let job = JobRequest::from_json_str(
+            r#"{"type":"sweep","axis":"ring-local","values":"1.12,2.24",
+                "tr":"2:6:4","measures":"afp:ltc,cafp:vt-rs-ssm"}"#,
+        )
+        .unwrap();
+        let JobRequest::Sweep { values, thresholds, measures, .. } = job else {
+            panic!("expected sweep")
+        };
+        assert_eq!(values, vec![1.12, 2.24]);
+        assert_eq!(thresholds, Some(vec![2.0, 6.0]));
+        assert_eq!(measures.len(), 2);
+    }
+
+    #[test]
+    fn json_defaults_mirror_cli_defaults() {
+        let job = JobRequest::from_json_str(r#"{"type":"arbitrate"}"#).unwrap();
+        assert_eq!(
+            job,
+            JobRequest::Arbitrate {
+                scheme: Scheme::VtRsSsm,
+                tr_nm: 6.0,
+                seed: 42,
+                config: ConfigSpec::default(),
+            }
+        );
+        let job = JobRequest::from_json_str(
+            r#"{"type":"sweep","axis":"grid-offset","values":[0,1]}"#,
+        )
+        .unwrap();
+        let JobRequest::Sweep { measures, thresholds, .. } = job else { panic!() };
+        assert_eq!(measures, vec![Measure::Afp(Policy::LtC)]);
+        assert_eq!(thresholds, None);
+    }
+
+    #[test]
+    fn json_rejects_unknown_keys_and_types() {
+        assert!(JobRequest::from_json_str(r#"{"type":"warp"}"#).is_err());
+        assert!(JobRequest::from_json_str(r#"{"type":"run","id":"fig4","oops":1}"#).is_err());
+        assert!(JobRequest::from_json_str(r#"{"type":"run"}"#).is_err());
+        assert!(JobRequest::from_json_str(r#"{"type":"sweep","axis":"warp","values":[1]}"#)
+            .is_err());
+        assert!(JobRequest::from_json_str(
+            r#"{"type":"sweep","axis":"ring-local","values":[1],"options":{"bogus":1}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn jobs_file_forms_become_batches() {
+        let a = r#"[{"type":"run","id":"table1"},{"type":"show-config"}]"#;
+        let b = r#"{"jobs":[{"type":"run","id":"table1"},{"type":"show-config"}]}"#;
+        let ja = JobRequest::from_jobs_json(a).unwrap();
+        let jb = JobRequest::from_jobs_json(b).unwrap();
+        assert_eq!(ja, jb);
+        let JobRequest::Batch { jobs } = ja else { panic!("expected batch") };
+        assert_eq!(jobs.len(), 2);
+        // A single object stays a single job.
+        let single = JobRequest::from_jobs_json(r#"{"type":"run","id":"table1"}"#).unwrap();
+        assert!(matches!(single, JobRequest::RunExperiment { .. }));
+    }
+
+    #[test]
+    fn toml_and_json_forms_are_equivalent() {
+        let toml = r#"
+# a two-job batch
+[jobs.1]
+type = "sweep"
+axis = "ring-local"
+values = "1.12,2.24"
+tr = [2.0, 6.0]
+measures = "afp:ltc,cafp:vt-rs-ssm"
+[jobs.1.config]
+permuted = true
+[jobs.1.options]
+fast = true
+lasers = 4
+
+[jobs.2]
+type = "run"
+id = "table1"
+"#;
+        let json = r#"{"jobs":[
+            {"type":"sweep","axis":"ring-local","values":[1.12,2.24],"tr":[2,6],
+             "measures":["afp:ltc","cafp:vt-rs-ssm"],"config":{"permuted":true},
+             "options":{"fast":true,"lasers":4}},
+            {"type":"run","id":"table1"}
+        ]}"#;
+        let from_toml = JobRequest::from_toml(toml).unwrap();
+        let from_json = JobRequest::from_jobs_json(json).unwrap();
+        assert_eq!(from_toml, from_json);
+        // And the TOML-parsed batch serializes to JSON that parses back
+        // identical (full JSON↔TOML↔memory coherence).
+        assert_eq!(
+            JobRequest::from_json_str(&from_toml.to_json_string()).unwrap(),
+            from_json
+        );
+    }
+
+    #[test]
+    fn toml_single_job_and_ordering() {
+        let single =
+            JobRequest::from_toml("[job]\ntype = \"show-config\"\ncases = true\n").unwrap();
+        assert_eq!(
+            single,
+            JobRequest::ShowConfig { cases: true, config: ConfigSpec::default() }
+        );
+        // Numeric section labels execute in numeric order (10 after 2).
+        let toml = "[jobs.10]\ntype = \"run\"\nid = \"b\"\n[jobs.2]\ntype = \"run\"\nid = \"a\"\n";
+        let JobRequest::Batch { jobs } = JobRequest::from_toml(toml).unwrap() else { panic!() };
+        assert_eq!(jobs[0].label(), "a");
+        assert_eq!(jobs[1].label(), "b");
+    }
+
+    #[test]
+    fn job_options_resolve_like_cli() {
+        let o = JobOptions { fast: true, lasers: Some(7), seed: Some(5), ..JobOptions::default() };
+        let r = o.to_run_options();
+        assert!(r.fast);
+        assert_eq!(r.n_lasers, 7);
+        assert_eq!(r.n_rows, 30); // fast preset default survives
+        assert_eq!(r.seed, 5);
+        assert_eq!(JobOptions::default().to_run_options().n_lasers, 100);
+    }
+
+    #[test]
+    fn config_spec_loads_inline_and_permuted() {
+        let spec = ConfigSpec {
+            path: None,
+            inline_toml: Some("[grid]\nn_ch = 16\nspacing_nm = 2.24\n".to_string()),
+            permuted: true,
+        };
+        let cfg = spec.load().unwrap();
+        assert_eq!(cfg.grid.n_ch, 16);
+        assert_eq!(cfg.pre_fab_order, crate::model::SpectralOrdering::permuted(16));
+        assert!(ConfigSpec {
+            path: Some("x".into()),
+            inline_toml: Some("y".into()),
+            permuted: false
+        }
+        .load()
+        .is_err());
+    }
+}

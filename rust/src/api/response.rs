@@ -1,0 +1,235 @@
+//! Structured job results and progress events — the replacement for the
+//! CLI's historical `println!` side effects. Human rendering lives in the
+//! response's `summary`; everything a program needs is in typed fields.
+
+use crate::montecarlo::CacheStats;
+use crate::util::json::Json;
+
+/// One measure's result panel (mirrors `sweep.json` panels).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Panel {
+    /// Per-column scalar (min-tr / alias-min-tr measures).
+    Curve { measure: String, x: Vec<f64>, y: Vec<f64> },
+    /// Column × λ̄_TR grid, row-major `cells[iy * x.len() + ix]`
+    /// (AFP / CAFP measures).
+    Grid { measure: String, x: Vec<f64>, tr_nm: Vec<f64>, cells: Vec<f64> },
+}
+
+impl Panel {
+    pub fn measure(&self) -> &str {
+        match self {
+            Panel::Curve { measure, .. } | Panel::Grid { measure, .. } => measure,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Panel::Curve { measure, x, y } => Json::obj(vec![
+                ("measure", Json::str(measure.clone())),
+                ("x", Json::arr_f64(x)),
+                ("y", Json::arr_f64(y)),
+            ]),
+            Panel::Grid { measure, x, tr_nm, cells } => Json::obj(vec![
+                ("measure", Json::str(measure.clone())),
+                ("x", Json::arr_f64(x)),
+                ("tr_nm", Json::arr_f64(tr_nm)),
+                ("cells", Json::arr_f64(cells)),
+            ]),
+        }
+    }
+}
+
+/// Progress signal emitted while a job executes (`serve` forwards these as
+/// JSON lines; the CLI stays quiet, matching historical output).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobEvent {
+    /// Free-form progress note.
+    Progress { message: String },
+    /// One sweep panel finished (full data arrives in the response).
+    PanelReady { measure: String },
+    ExperimentStarted { id: String },
+    /// One experiment completed; `summary` is the rendered report so batch
+    /// clients (and `run all`) can stream output as work finishes.
+    ExperimentFinished { id: String, ok: bool, elapsed_s: f64, backend: String, summary: String },
+}
+
+impl JobEvent {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("type", Json::str("event"))];
+        match self {
+            JobEvent::Progress { message } => {
+                pairs.push(("event", Json::str("progress")));
+                pairs.push(("message", Json::str(message.clone())));
+            }
+            JobEvent::PanelReady { measure } => {
+                pairs.push(("event", Json::str("panel")));
+                pairs.push(("measure", Json::str(measure.clone())));
+            }
+            JobEvent::ExperimentStarted { id } => {
+                pairs.push(("event", Json::str("experiment-started")));
+                pairs.push(("id", Json::str(id.clone())));
+            }
+            JobEvent::ExperimentFinished { id, ok, elapsed_s, backend, summary } => {
+                pairs.push(("event", Json::str("experiment-finished")));
+                pairs.push(("id", Json::str(id.clone())));
+                pairs.push(("ok", Json::Bool(*ok)));
+                pairs.push(("elapsed_s", Json::num(*elapsed_s)));
+                pairs.push(("backend", Json::str(backend.clone())));
+                pairs.push(("summary", Json::str(summary.clone())));
+            }
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// The structured outcome of one [`crate::api::JobRequest`].
+#[derive(Debug, Clone)]
+pub struct JobResponse {
+    /// Request kind: `run`, `sweep`, `arbitrate`, `show-config`, `batch`.
+    pub kind: &'static str,
+    /// Short label (experiment id / axis / scheme).
+    pub label: String,
+    pub ok: bool,
+    pub error: Option<String>,
+    /// `name()` of the evaluator that **actually ran** — never the
+    /// requested backend (XLA falls back to rust-f64 when artifacts are
+    /// missing); `"none"` when no Monte-Carlo evaluation happened.
+    pub backend: String,
+    pub elapsed_s: f64,
+    /// Human-readable rendering (what the CLI prints).
+    pub summary: String,
+    /// Files written (CSV/JSON paths).
+    pub files: Vec<String>,
+    /// Sweep result panels.
+    pub panels: Vec<Panel>,
+    /// Job-specific structured payload.
+    pub data: Json,
+    /// Population-cache activity attributable to this job (delta, not
+    /// cumulative; `entries` is the absolute cache size afterwards).
+    pub cache: CacheStats,
+    /// Child responses (batch jobs only), in submission order.
+    pub jobs: Vec<JobResponse>,
+}
+
+impl JobResponse {
+    /// Successful-response skeleton; handlers fill the payload fields.
+    pub fn new(kind: &'static str, label: impl Into<String>) -> JobResponse {
+        JobResponse {
+            kind,
+            label: label.into(),
+            ok: true,
+            error: None,
+            backend: "none".to_string(),
+            elapsed_s: 0.0,
+            summary: String::new(),
+            files: Vec::new(),
+            panels: Vec::new(),
+            data: Json::Null,
+            cache: CacheStats::default(),
+            jobs: Vec::new(),
+        }
+    }
+
+    /// Failed response carrying the error.
+    pub fn failure(
+        kind: &'static str,
+        label: impl Into<String>,
+        error: impl Into<String>,
+    ) -> JobResponse {
+        let error = error.into();
+        let mut r = JobResponse::new(kind, label);
+        r.ok = false;
+        r.summary = format!("error: {error}");
+        r.error = Some(error);
+        r
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("type", Json::str("response")),
+            ("kind", Json::str(self.kind)),
+            ("label", Json::str(self.label.clone())),
+            ("ok", Json::Bool(self.ok)),
+        ];
+        if let Some(e) = &self.error {
+            pairs.push(("error", Json::str(e.clone())));
+        }
+        pairs.push(("backend", Json::str(self.backend.clone())));
+        pairs.push(("elapsed_s", Json::num(self.elapsed_s)));
+        pairs.push((
+            "cache",
+            Json::obj(vec![
+                ("hits", Json::num(self.cache.hits as f64)),
+                ("misses", Json::num(self.cache.misses as f64)),
+                ("entries", Json::num(self.cache.entries as f64)),
+            ]),
+        ));
+        pairs.push((
+            "files",
+            Json::Arr(self.files.iter().map(|f| Json::str(f.clone())).collect()),
+        ));
+        if !self.panels.is_empty() {
+            pairs.push(("panels", Json::Arr(self.panels.iter().map(Panel::to_json).collect())));
+        }
+        pairs.push(("summary", Json::str(self.summary.clone())));
+        pairs.push(("data", self.data.clone()));
+        if !self.jobs.is_empty() {
+            pairs.push(("jobs", Json::Arr(self.jobs.iter().map(JobResponse::to_json).collect())));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Compact single-line JSON (the `serve` wire form).
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_json_is_parseable_and_tagged() {
+        let mut r = JobResponse::new("sweep", "ring-local");
+        r.backend = "rust-f64".to_string();
+        r.cache = CacheStats { hits: 2, misses: 1, entries: 3 };
+        r.panels.push(Panel::Curve {
+            measure: "min-tr_ltc".to_string(),
+            x: vec![1.0],
+            y: vec![2.0],
+        });
+        let j = Json::parse(&r.to_json_string()).unwrap();
+        assert_eq!(j.get("type").unwrap().as_str(), Some("response"));
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("cache").unwrap().get("hits").unwrap().as_usize(), Some(2));
+        assert_eq!(
+            j.get("panels").unwrap().as_arr().unwrap()[0].get("measure").unwrap().as_str(),
+            Some("min-tr_ltc")
+        );
+    }
+
+    #[test]
+    fn failure_response_carries_error() {
+        let r = JobResponse::failure("run", "fig99", "unknown experiment 'fig99'");
+        assert!(!r.ok);
+        let j = Json::parse(&r.to_json_string()).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("fig99"));
+    }
+
+    #[test]
+    fn events_serialize_tagged() {
+        let e = JobEvent::ExperimentFinished {
+            id: "fig4".to_string(),
+            ok: true,
+            elapsed_s: 0.5,
+            backend: "rust-f64".to_string(),
+            summary: "== fig4\n".to_string(),
+        };
+        let j = Json::parse(&e.to_json().to_string()).unwrap();
+        assert_eq!(j.get("type").unwrap().as_str(), Some("event"));
+        assert_eq!(j.get("event").unwrap().as_str(), Some("experiment-finished"));
+        assert_eq!(j.get("id").unwrap().as_str(), Some("fig4"));
+    }
+}

@@ -1,0 +1,604 @@
+//! [`ArbiterService`]: the long-lived execution engine behind the job API.
+//!
+//! One service owns one default ideal-model evaluator and one
+//! [`PopulationCache`]; every sweep job routes its columns through the
+//! cache, so a serve session (or a batch) that revisits a column reuses
+//! the sampled population and its ideal evaluation instead of recomputing.
+//! Column seeds derive from the column *index* (CLI seed-stream parity),
+//! so a column recurs when config, shape, base seed, axis value **and
+//! position** all match: the same sweep re-submitted, a different measure
+//! over the same value list, or lists sharing a leading prefix — not
+//! arbitrary value overlaps. [`JobResponse::cache`] reports the per-job
+//! hit/miss delta.
+
+use crate::api::request::{ConfigSpec, JobOptions, JobRequest};
+use crate::api::response::{JobEvent, JobResponse, Panel};
+use crate::arbiter::{distance, ideal, Policy};
+use crate::config::presets::table2_cases;
+use crate::config::SystemConfig;
+use crate::coordinator::report::{ascii_heatmap, curve_table, write_csv_series, write_csv_shmoo};
+use crate::coordinator::sweep::{ConfigAxis, Measure, SweepOutput, SweepSpec};
+use crate::coordinator::{run_experiment_quiet, Backend, RunOptions};
+use crate::experiments::{by_id, tr_sweep};
+use crate::model::SystemUnderTest;
+use crate::montecarlo::{IdealEvaluator, PopulationCache, TrialEngine};
+use crate::oblivious::{run_scheme, Scheme};
+use crate::rng::Rng;
+use crate::util::json::Json;
+
+/// Long-lived job executor: owns the default backend evaluator and the
+/// cross-request [`PopulationCache`]. Submit any number of
+/// [`JobRequest`]s; the service never panics on bad input — errors come
+/// back inside the [`JobResponse`].
+pub struct ArbiterService {
+    backend: Backend,
+    threads: usize,
+    evaluator: Box<dyn IdealEvaluator>,
+    cache: PopulationCache,
+}
+
+impl ArbiterService {
+    /// `threads` is the default worker budget for the owned evaluator
+    /// (0 = all cores); jobs may override both via their options.
+    pub fn new(backend: Backend, threads: usize) -> Self {
+        Self {
+            backend,
+            threads,
+            evaluator: backend.evaluator(threads),
+            cache: PopulationCache::new(),
+        }
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Default worker budget the owned evaluator was built with.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The shared population cache (cumulative stats).
+    pub fn cache(&self) -> &PopulationCache {
+        &self.cache
+    }
+
+    /// Execute one job, discarding progress events.
+    pub fn submit(&self, req: &JobRequest) -> JobResponse {
+        self.submit_with(req, &mut |_| {})
+    }
+
+    /// Execute one job, forwarding [`JobEvent`]s to `sink` as they occur.
+    pub fn submit_with(&self, req: &JobRequest, sink: &mut dyn FnMut(JobEvent)) -> JobResponse {
+        let cache_before = self.cache.stats();
+        let started = std::time::Instant::now();
+        let result = match req {
+            JobRequest::RunExperiment { id, options } => self.run_job(id, options, sink),
+            JobRequest::Sweep { axis, values, thresholds, measures, config, options } => self
+                .sweep_job(*axis, values, thresholds.as_deref(), measures, config, options, sink),
+            JobRequest::Arbitrate { scheme, tr_nm, seed, config } => {
+                self.arbitrate_job(*scheme, *tr_nm, *seed, config)
+            }
+            JobRequest::ShowConfig { cases, config } => self.show_config_job(*cases, config),
+            JobRequest::Batch { jobs } => Ok(self.batch_job(jobs, sink)),
+        };
+        let mut resp =
+            result.unwrap_or_else(|e| JobResponse::failure(req.kind(), req.label(), e));
+        resp.elapsed_s = started.elapsed().as_secs_f64();
+        resp.cache = self.cache.stats().since(&cache_before);
+        resp
+    }
+
+    /// The evaluator for a job: the owned one, or a transient instance
+    /// when the job requests a different backend. Both compute the same
+    /// ideal model by contract, so they safely share the population cache.
+    fn evaluator_for<'a>(
+        &'a self,
+        options: &JobOptions,
+        opts: &RunOptions,
+        transient: &'a mut Option<Box<dyn IdealEvaluator>>,
+    ) -> &'a dyn IdealEvaluator {
+        match options.backend {
+            Some(b) if b != self.backend => {
+                *transient = Some(b.evaluator(opts.threads));
+                transient.as_ref().expect("just set").as_ref()
+            }
+            _ => self.evaluator.as_ref(),
+        }
+    }
+
+    fn run_job(
+        &self,
+        id: &str,
+        options: &JobOptions,
+        sink: &mut dyn FnMut(JobEvent),
+    ) -> Result<JobResponse, String> {
+        let opts = options.to_run_options();
+        let exp = by_id(id).ok_or_else(|| format!("unknown experiment '{id}' (see `list`)"))?;
+        sink(JobEvent::ExperimentStarted { id: id.to_string() });
+        let (rep, elapsed) =
+            run_experiment_quiet(exp.as_ref(), &opts).map_err(|e| format!("{e:#}"))?;
+        let summary =
+            format!("== {} — {} ({elapsed:.1}s)\n{}", exp.id(), exp.title(), rep.summary);
+        sink(JobEvent::ExperimentFinished {
+            id: id.to_string(),
+            ok: true,
+            elapsed_s: elapsed,
+            backend: rep.backend.to_string(),
+            summary: summary.clone(),
+        });
+        let mut r = JobResponse::new("run", id);
+        r.backend = rep.backend.to_string();
+        r.summary = summary;
+        r.files = rep.files.iter().map(|p| p.display().to_string()).collect();
+        r.data = Json::obj(vec![
+            ("id", Json::str(exp.id())),
+            ("title", Json::str(exp.title())),
+            ("data", rep.json),
+        ]);
+        Ok(r)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn sweep_job(
+        &self,
+        axis: ConfigAxis,
+        values: &[f64],
+        thresholds: Option<&[f64]>,
+        measures: &[Measure],
+        config: &ConfigSpec,
+        options: &JobOptions,
+        sink: &mut dyn FnMut(JobEvent),
+    ) -> Result<JobResponse, String> {
+        let opts = options.to_run_options();
+        let cfg = config.load()?;
+        if values.is_empty() {
+            return Err("sweep: needs at least one axis value".to_string());
+        }
+        if measures.is_empty() {
+            return Err("sweep: needs at least one measure".to_string());
+        }
+        let mut transient = None;
+        let eval = self.evaluator_for(options, &opts, &mut transient);
+        let engine = TrialEngine::new(eval, opts.threads).with_cache(&self.cache);
+
+        let needs_tr = measures
+            .iter()
+            .any(|m| matches!(m, Measure::Afp(_) | Measure::Cafp(_)));
+        let tr_values = match thresholds {
+            Some(v) => v.to_vec(),
+            None if needs_tr => tr_sweep(cfg.grid.spacing_nm, opts.stride()),
+            None => Vec::new(),
+        };
+        if needs_tr && tr_values.is_empty() {
+            return Err("sweep: AFP/CAFP measures need at least one 'tr' row".to_string());
+        }
+        sink(JobEvent::Progress {
+            message: format!(
+                "sweep over {} ({} columns x {} thresholds, {} measures)",
+                axis.name(),
+                values.len(),
+                tr_values.len(),
+                measures.len()
+            ),
+        });
+
+        let spec = SweepSpec::new("sweep", cfg, axis, values.to_vec())
+            .thresholds(tr_values)
+            .measures(measures.iter().copied());
+        let outs = spec.run(&engine, &opts);
+
+        std::fs::create_dir_all(&opts.out_dir).map_err(|e| e.to_string())?;
+        let mut summary = String::new();
+        let mut files = Vec::new();
+        let mut panels = Vec::new();
+        for (m, out) in measures.iter().zip(outs) {
+            let slug = m.slug();
+            match out {
+                SweepOutput::Curve(series) => {
+                    summary.push_str(&format!("== sweep {} over {}\n", slug, axis.name()));
+                    summary.push_str(&curve_table(axis.name(), std::slice::from_ref(&series), 12));
+                    summary.push('\n');
+                    let path = opts.out_dir.join(format!("sweep_{slug}.csv"));
+                    write_csv_series(&path, axis.name(), std::slice::from_ref(&series))
+                        .map_err(|e| format!("{e:#}"))?;
+                    summary.push_str(&format!("wrote {}\n", path.display()));
+                    files.push(path.display().to_string());
+                    panels.push(Panel::Curve { measure: slug.clone(), x: series.x, y: series.y });
+                }
+                SweepOutput::Grid(shmoo) | SweepOutput::CafpGrid { cafp: shmoo, .. } => {
+                    summary.push_str(&format!("== sweep {} over {} x tr\n", slug, axis.name()));
+                    summary.push_str(&ascii_heatmap(&shmoo));
+                    summary.push('\n');
+                    let path = opts.out_dir.join(format!("sweep_{slug}.csv"));
+                    write_csv_shmoo(&path, &shmoo).map_err(|e| format!("{e:#}"))?;
+                    summary.push_str(&format!("wrote {}\n", path.display()));
+                    files.push(path.display().to_string());
+                    panels.push(Panel::Grid {
+                        measure: slug.clone(),
+                        x: shmoo.x,
+                        tr_nm: shmoo.y,
+                        cells: shmoo.cells,
+                    });
+                }
+            }
+            sink(JobEvent::PanelReady { measure: slug });
+        }
+
+        // Record the evaluator that actually ran: alias-aware-only sweeps
+        // never invoke the ideal backend.
+        let uses_ideal = measures
+            .iter()
+            .any(|m| !matches!(m, Measure::MinTrAliasAware(_)));
+        let backend = if uses_ideal { eval.name() } else { "none" };
+        // `data` carries the sweep metadata only; the panel arrays live in
+        // the response's `panels` field (no double payload on the wire).
+        // The sweep.json file keeps the full PR-1 schema: metadata + panels.
+        let meta = vec![
+            ("axis", Json::str(axis.name())),
+            ("values", Json::arr_f64(values)),
+            ("backend", Json::str(backend)),
+            ("trials_per_point", Json::num(opts.trials_per_point() as f64)),
+        ];
+        let mut file_pairs = meta.clone();
+        file_pairs.push(("panels", Json::Arr(panels.iter().map(Panel::to_json).collect())));
+        let json_path = opts.out_dir.join("sweep.json");
+        std::fs::write(&json_path, Json::obj(file_pairs).to_pretty()).map_err(|e| e.to_string())?;
+        summary.push_str(&format!("wrote {}\n", json_path.display()));
+        files.push(json_path.display().to_string());
+
+        let mut r = JobResponse::new("sweep", axis.name());
+        r.backend = backend.to_string();
+        r.summary = summary;
+        r.files = files;
+        r.panels = panels;
+        r.data = Json::obj(meta);
+        Ok(r)
+    }
+
+    fn arbitrate_job(
+        &self,
+        scheme: Scheme,
+        tr: f64,
+        seed: u64,
+        config: &ConfigSpec,
+    ) -> Result<JobResponse, String> {
+        let cfg = config.load()?;
+        let mut rng = Rng::seed_from(seed);
+        let sut = SystemUnderTest::sample(&cfg, &mut rng);
+        let mut summary = String::new();
+        summary.push_str("system-under-test (center-relative nm):\n");
+        summary.push_str(&format!("  lasers: {:?}\n", rounded(&sut.laser.tones_nm)));
+        summary.push_str(&format!("  rings:  {:?}\n", rounded(&sut.rings.resonance_nm)));
+
+        let dist = distance::scaled_distance_matrix(&sut);
+        let mut ideal_json = Vec::new();
+        for policy in Policy::all() {
+            let out = ideal::arbitrate(policy, &dist, cfg.target_order.as_slice());
+            let feasible = out.min_tr_nm <= tr;
+            summary.push_str(&format!(
+                "ideal {policy}: min TR {:.2} nm -> assignment {:?} (feasible at {tr} nm: {feasible})\n",
+                out.min_tr_nm, out.assignment,
+            ));
+            ideal_json.push(Json::obj(vec![
+                ("policy", Json::str(format!("{policy}"))),
+                ("min_tr_nm", Json::num(out.min_tr_nm)),
+                ("assignment", Json::arr_usize(&out.assignment)),
+                ("feasible", Json::Bool(feasible)),
+            ]));
+        }
+        let res = run_scheme(scheme, &sut.laser, &sut.rings, &cfg.target_order, tr);
+        summary.push_str(&format!(
+            "oblivious {} at TR {tr} nm: {} -> {:?}\n",
+            scheme.name(),
+            res.class.name(),
+            res.assignment,
+        ));
+        let oblivious_assignment = Json::Arr(
+            res.assignment
+                .iter()
+                .map(|a| match a {
+                    Some(i) => Json::num(*i as f64),
+                    None => Json::Null,
+                })
+                .collect(),
+        );
+
+        let mut r = JobResponse::new("arbitrate", scheme.name());
+        r.summary = summary;
+        r.data = Json::obj(vec![
+            ("seed", Json::num(seed as f64)),
+            ("tr_nm", Json::num(tr)),
+            ("lasers_nm", Json::arr_f64(&sut.laser.tones_nm)),
+            ("rings_nm", Json::arr_f64(&sut.rings.resonance_nm)),
+            ("ideal", Json::Arr(ideal_json)),
+            (
+                "oblivious",
+                Json::obj(vec![
+                    ("scheme", Json::str(scheme.name())),
+                    ("class", Json::str(res.class.name())),
+                    ("assignment", oblivious_assignment),
+                ]),
+            ),
+        ]);
+        Ok(r)
+    }
+
+    fn show_config_job(&self, cases: bool, config: &ConfigSpec) -> Result<JobResponse, String> {
+        // Load the *requested* config up front — historically `--cases`
+        // rendered against the default config, silently dropping
+        // `--config`/`--permuted`.
+        let cfg = config.load()?;
+        let mut r = JobResponse::new("show-config", if cases { "cases" } else { "config" });
+        if cases {
+            let mut summary =
+                format!("  {:<10} {:<8} {:<22} {:<22}\n", "case", "policy", "r_i", "s_i");
+            let mut arr = Vec::new();
+            for c in table2_cases() {
+                let applied = c.configure(cfg.clone());
+                let r_i = format!("{}", applied.pre_fab_order);
+                let s_i = if c.target == "any" {
+                    "any".to_string()
+                } else {
+                    format!("{}", applied.target_order)
+                };
+                summary.push_str(&format!(
+                    "  {:<10} {:<8} {:<22} {:<22}\n",
+                    c.name,
+                    format!("{}", c.policy),
+                    r_i,
+                    s_i
+                ));
+                arr.push(Json::obj(vec![
+                    ("name", Json::str(c.name)),
+                    ("policy", Json::str(format!("{}", c.policy))),
+                    ("pre_fab", Json::arr_usize(applied.pre_fab_order.as_slice())),
+                    ("target", Json::str(s_i)),
+                ]));
+            }
+            r.summary = summary;
+            r.data = Json::obj(vec![
+                ("grid", Json::str(cfg.grid.name())),
+                ("cases", Json::Arr(arr)),
+            ]);
+            return Ok(r);
+        }
+        let mut summary = String::new();
+        summary.push_str(&format!(
+            "grid:        {} ({} ch, {:.2} nm spacing)\n",
+            cfg.grid.name(),
+            cfg.grid.n_ch,
+            cfg.grid.spacing_nm
+        ));
+        summary.push_str(&format!(
+            "ring bias:   {:.2} nm   fsr mean: {:.2} nm\n",
+            cfg.ring_bias_nm, cfg.fsr_mean_nm
+        ));
+        summary.push_str(&format!(
+            "variation:   gO ±{} nm, lLV ±{}%, rLV ±{} nm, FSR ±{}%, TR ±{}%\n",
+            cfg.variation.grid_offset_nm,
+            cfg.variation.laser_local_frac * 100.0,
+            cfg.variation.ring_local_nm,
+            cfg.variation.fsr_frac * 100.0,
+            cfg.variation.tr_frac * 100.0,
+        ));
+        summary.push_str(&format!(
+            "orders:      r_i = {}  s_i = {}\n",
+            cfg.pre_fab_order, cfg.target_order
+        ));
+        r.summary = summary;
+        r.data = config_json(&cfg);
+        Ok(r)
+    }
+
+    fn batch_job(&self, jobs: &[JobRequest], sink: &mut dyn FnMut(JobEvent)) -> JobResponse {
+        let mut children = Vec::new();
+        let mut failed = 0usize;
+        for (i, job) in jobs.iter().enumerate() {
+            sink(JobEvent::Progress {
+                message: format!(
+                    "batch job {}/{}: {} {}",
+                    i + 1,
+                    jobs.len(),
+                    job.kind(),
+                    job.label()
+                ),
+            });
+            // Keep going past failures; the batch reports them at the end.
+            let child = self.submit_with(job, sink);
+            if !child.ok {
+                failed += 1;
+            }
+            children.push(child);
+        }
+        let mut r = JobResponse::new("batch", format!("{} jobs", jobs.len()));
+        let mut summary = String::new();
+        for child in &children {
+            summary.push_str(&format!(
+                "{} {} {} ({:.1}s){}\n",
+                if child.ok { "ok  " } else { "FAIL" },
+                child.kind,
+                child.label,
+                child.elapsed_s,
+                child.error.as_ref().map(|e| format!(" — {e}")).unwrap_or_default(),
+            ));
+        }
+        r.summary = summary;
+        if failed > 0 {
+            r.ok = false;
+            r.error = Some(format!("{failed} of {} jobs failed", jobs.len()));
+        }
+        r.jobs = children;
+        r
+    }
+}
+
+fn config_json(cfg: &SystemConfig) -> Json {
+    Json::obj(vec![
+        (
+            "grid",
+            Json::obj(vec![
+                ("name", Json::str(cfg.grid.name())),
+                ("n_ch", Json::num(cfg.grid.n_ch as f64)),
+                ("spacing_nm", Json::num(cfg.grid.spacing_nm)),
+            ]),
+        ),
+        ("ring_bias_nm", Json::num(cfg.ring_bias_nm)),
+        ("fsr_mean_nm", Json::num(cfg.fsr_mean_nm)),
+        (
+            "variation",
+            Json::obj(vec![
+                ("grid_offset_nm", Json::num(cfg.variation.grid_offset_nm)),
+                ("laser_local_frac", Json::num(cfg.variation.laser_local_frac)),
+                ("ring_local_nm", Json::num(cfg.variation.ring_local_nm)),
+                ("fsr_frac", Json::num(cfg.variation.fsr_frac)),
+                ("tr_frac", Json::num(cfg.variation.tr_frac)),
+            ]),
+        ),
+        ("pre_fab_order", Json::arr_usize(cfg.pre_fab_order.as_slice())),
+        ("target_order", Json::arr_usize(cfg.target_order.as_slice())),
+    ])
+}
+
+fn rounded(v: &[f64]) -> Vec<f64> {
+    v.iter().map(|x| (x * 100.0).round() / 100.0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_sweep(measures: &str, dir: &std::path::Path) -> JobRequest {
+        JobRequest::from_json_str(&format!(
+            r#"{{"type":"sweep","axis":"ring-local","values":[1.12,2.24],"tr":[2,6],
+                "measures":"{measures}",
+                "options":{{"fast":true,"lasers":3,"rows":3,"out":"{}"}}}}"#,
+            dir.display()
+        ))
+        .unwrap()
+    }
+
+    fn test_dir(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("wdm-api-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn repeated_sweep_hits_population_cache() {
+        let dir = test_dir("svc-cache");
+        let service = ArbiterService::new(Backend::Rust, 2);
+        let job = tiny_sweep("afp:ltc", &dir);
+        let first = service.submit(&job);
+        assert!(first.ok, "{:?}", first.error);
+        assert_eq!(first.cache.hits, 0);
+        assert_eq!(first.cache.misses, 2); // one per column
+        assert_eq!(first.backend, "rust-f64");
+        assert_eq!(first.panels.len(), 1);
+
+        // Overlapping job with a *different* measure still reuses the
+        // populations (CAFP gates on the LtC vector already evaluated).
+        let second = service.submit(&tiny_sweep("cafp:vt-rs-ssm", &dir));
+        assert!(second.ok, "{:?}", second.error);
+        assert_eq!(second.cache.hits, 2);
+        assert_eq!(second.cache.misses, 0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn sweep_summary_and_files_match_cli_contract() {
+        let dir = test_dir("svc-files");
+        let service = ArbiterService::new(Backend::Rust, 2);
+        let resp = service.submit(&tiny_sweep("afp:ltc", &dir));
+        assert!(resp.ok);
+        assert!(resp.summary.contains("== sweep afp_ltc over ring-local"));
+        assert!(resp.summary.contains("wrote "));
+        assert!(resp.files.iter().any(|f| f.ends_with("sweep_afp_ltc.csv")));
+        assert!(resp.files.iter().any(|f| f.ends_with("sweep.json")));
+        let json =
+            Json::parse(&std::fs::read_to_string(dir.join("sweep.json")).unwrap()).unwrap();
+        assert_eq!(json.get("axis").unwrap().as_str(), Some("ring-local"));
+        assert_eq!(json.get("backend").unwrap().as_str(), Some("rust-f64"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn arbitrate_is_structured_and_deterministic() {
+        let service = ArbiterService::new(Backend::Rust, 0);
+        let job = JobRequest::from_json_str(r#"{"type":"arbitrate","tr":6,"seed":7}"#).unwrap();
+        let a = service.submit(&job);
+        let b = service.submit(&job);
+        assert!(a.ok);
+        assert!(a.summary.contains("ideal LtC"));
+        assert!(a.summary.contains("oblivious vt-rs-ssm"));
+        assert_eq!(a.summary, b.summary, "seeded runs are bit-identical");
+        assert_eq!(a.data.get("ideal").unwrap().as_arr().unwrap().len(), 3);
+        assert!(a.data.get("oblivious").unwrap().get("class").is_some());
+    }
+
+    #[test]
+    fn show_config_cases_respects_config() {
+        let service = ArbiterService::new(Backend::Rust, 0);
+        // 16-channel config: the case table must reflect it.
+        let req = JobRequest::ShowConfig {
+            cases: true,
+            config: ConfigSpec {
+                path: None,
+                inline_toml: Some("[grid]\nn_ch = 16\nspacing_nm = 2.24\n".to_string()),
+                permuted: false,
+            },
+        };
+        let resp = service.submit(&req);
+        assert!(resp.ok, "{:?}", resp.error);
+        // The permuted r_i of a 16-channel grid starts 0,8 — impossible
+        // under the default 8-channel config the old path always used.
+        assert!(resp.summary.contains("(0,8,"), "{}", resp.summary);
+        assert_eq!(resp.data.get("grid").unwrap().as_str(), Some("wdm16-400g"));
+
+        // Empty sweeps fail gracefully rather than panicking.
+        let bad = JobRequest::from_json_str(
+            r#"{"type":"sweep","axis":"ring-local","values":[]}"#,
+        )
+        .unwrap();
+        let r = service.submit(&bad);
+        assert!(!r.ok);
+    }
+
+    #[test]
+    fn batch_keeps_going_past_failures() {
+        let service = ArbiterService::new(Backend::Rust, 0);
+        let req = JobRequest::from_jobs_json(
+            r#"[{"type":"run","id":"fig99"},
+                {"type":"show-config"},
+                {"type":"run","id":"nope"}]"#,
+        )
+        .unwrap();
+        let resp = service.submit(&req);
+        assert!(!resp.ok);
+        assert_eq!(resp.jobs.len(), 3, "keeps going past failures");
+        assert!(!resp.jobs[0].ok);
+        assert!(resp.jobs[1].ok);
+        assert!(!resp.jobs[2].ok);
+        assert!(resp.error.as_ref().unwrap().contains("2 of 3"));
+        assert!(resp.summary.contains("FAIL run fig99"));
+        assert!(resp.summary.contains("ok   show-config"));
+    }
+
+    #[test]
+    fn run_job_reports_backend_that_ran() {
+        let dir = std::env::temp_dir().join(format!("wdm-api-run-{}", std::process::id()));
+        let service = ArbiterService::new(Backend::Rust, 0);
+        let req = JobRequest::from_json_str(&format!(
+            r#"{{"type":"run","id":"table1","options":{{"out":"{}"}}}}"#,
+            dir.display()
+        ))
+        .unwrap();
+        let mut events = Vec::new();
+        let resp = service.submit_with(&req, &mut |e| events.push(e));
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.backend, "none"); // table render: no MC evaluation
+        assert!(resp.summary.contains("Table I"));
+        assert!(resp.files.iter().any(|f| f.ends_with("table1.json")));
+        assert!(matches!(events[0], JobEvent::ExperimentStarted { .. }));
+        assert!(matches!(events[1], JobEvent::ExperimentFinished { ok: true, .. }));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

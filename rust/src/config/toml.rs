@@ -2,18 +2,23 @@
 //! crates offline — DESIGN.md "Substitutions").
 //!
 //! Supported: `[section]` headers, `key = value` with string (`"…"`),
-//! number, boolean and flat integer-array (`[1, 2, 3]`) values, `#`
-//! comments, blank lines. This covers everything in `configs/*.toml`.
+//! number, boolean and flat number-array (`[1, 2, 3]` / `[1.12, 2.24]`)
+//! values, `#` comments, blank lines. This covers `configs/*.toml` and the
+//! job files consumed by [`crate::api::JobRequest::from_toml`].
 
 use std::collections::HashMap;
 
-/// A parsed value.
+/// A parsed value. Arrays whose every element parses as `i64` stay
+/// [`TomlValue::IntArray`] (spectral orderings); any fractional element
+/// promotes the whole array to [`TomlValue::NumArray`] (sweep values /
+/// thresholds).
 #[derive(Debug, Clone, PartialEq)]
 pub enum TomlValue {
     Str(String),
     Num(f64),
     Bool(bool),
     IntArray(Vec<i64>),
+    NumArray(Vec<f64>),
 }
 
 impl TomlValue {
@@ -48,6 +53,15 @@ impl TomlValue {
     pub fn as_int_array(&self) -> Option<&[i64]> {
         match self {
             TomlValue::IntArray(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Any numeric array as `Vec<f64>` (integer arrays widen).
+    pub fn as_f64_array(&self) -> Option<Vec<f64>> {
+        match self {
+            TomlValue::IntArray(v) => Some(v.iter().map(|&x| x as f64).collect()),
+            TomlValue::NumArray(v) => Some(v.clone()),
             _ => None,
         }
     }
@@ -105,6 +119,10 @@ impl TomlDoc {
     pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
     }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -137,18 +155,28 @@ fn parse_value(v: &str, lineno: usize) -> Result<TomlValue, String> {
         let inner = inner
             .strip_suffix(']')
             .ok_or_else(|| format!("line {lineno}: unterminated array"))?;
-        let mut out = Vec::new();
+        let mut ints = Vec::new();
+        let mut nums = Vec::new();
+        let mut all_ints = true;
         for part in inner.split(',') {
             let part = part.trim();
             if part.is_empty() {
                 continue;
             }
-            out.push(
-                part.parse::<i64>()
-                    .map_err(|_| format!("line {lineno}: bad array int '{part}'"))?,
-            );
+            let x = part
+                .parse::<f64>()
+                .map_err(|_| format!("line {lineno}: bad array number '{part}'"))?;
+            nums.push(x);
+            match part.parse::<i64>() {
+                Ok(i) => ints.push(i),
+                Err(_) => all_ints = false,
+            }
         }
-        return Ok(TomlValue::IntArray(out));
+        return Ok(if all_ints {
+            TomlValue::IntArray(ints)
+        } else {
+            TomlValue::NumArray(nums)
+        });
     }
     v.parse::<f64>()
         .map(TomlValue::Num)
@@ -192,6 +220,17 @@ fast = true
         assert!(TomlDoc::parse("key").is_err());
         assert!(TomlDoc::parse("x = \"unterminated").is_err());
         assert!(TomlDoc::parse("x = [1, oops]").is_err());
+    }
+
+    #[test]
+    fn number_arrays_promote_on_fractions() {
+        let doc =
+            TomlDoc::parse("ints = [1, 2, 3]\nnums = [1.12, 2.24]\nmixed = [1, 2.5]").unwrap();
+        assert_eq!(doc.get("ints").unwrap().as_int_array(), Some(&[1i64, 2, 3][..]));
+        assert_eq!(doc.get("ints").unwrap().as_f64_array(), Some(vec![1.0, 2.0, 3.0]));
+        assert_eq!(doc.get("nums").unwrap().as_int_array(), None);
+        assert_eq!(doc.get("nums").unwrap().as_f64_array(), Some(vec![1.12, 2.24]));
+        assert_eq!(doc.get("mixed").unwrap().as_f64_array(), Some(vec![1.0, 2.5]));
     }
 
     #[test]

@@ -31,6 +31,16 @@ impl Backend {
         }
     }
 
+    /// Canonical request name (`by_name` inverse). This is the *requested*
+    /// backend; evaluators report what actually ran via
+    /// [`crate::montecarlo::IdealEvaluator::name`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Rust => "rust",
+            Backend::Xla => "xla",
+        }
+    }
+
     /// Instantiate the evaluator. XLA falls back to Rust (with a warning)
     /// when artifacts are missing so experiments stay runnable.
     pub fn evaluator(&self, threads: usize) -> Box<dyn IdealEvaluator> {
@@ -120,33 +130,41 @@ pub trait Experiment {
     fn run(&self, opts: &RunOptions) -> Result<ExperimentReport>;
 }
 
-/// Run one experiment: execute, persist its JSON, print the summary.
-pub fn run_experiment(exp: &dyn Experiment, opts: &RunOptions) -> Result<ExperimentReport> {
+/// Run one experiment **without printing**: execute, persist its JSON,
+/// return the report plus elapsed seconds. The structured path used by
+/// [`crate::api::ArbiterService`]; callers own all presentation.
+pub fn run_experiment_quiet(
+    exp: &dyn Experiment,
+    opts: &RunOptions,
+) -> Result<(ExperimentReport, f64)> {
     std::fs::create_dir_all(&opts.out_dir)?;
     let started = std::time::Instant::now();
     let mut rep = exp.run(opts)?;
-    let elapsed = started.elapsed();
+    let elapsed = started.elapsed().as_secs_f64();
     let json_path = opts.out_dir.join(format!("{}.json", exp.id()));
     std::fs::write(
         &json_path,
         Json::obj(vec![
             ("id", Json::str(exp.id())),
             ("title", Json::str(exp.title())),
-            ("elapsed_s", Json::num(elapsed.as_secs_f64())),
+            ("elapsed_s", Json::num(elapsed)),
             ("trials_per_point", Json::num(opts.trials_per_point() as f64)),
             // The evaluator that actually ran, not the requested backend
             // (Xla falls back to rust-f64 when artifacts are missing).
             ("backend", Json::str(rep.backend)),
-            ("backend_requested", Json::str(match opts.backend {
-                Backend::Rust => "rust",
-                Backend::Xla => "xla",
-            })),
+            ("backend_requested", Json::str(opts.backend.name())),
             ("data", rep.json.clone()),
         ])
         .to_pretty(),
     )?;
     rep.files.push(json_path);
-    println!("== {} — {} ({:.1}s)", exp.id(), exp.title(), elapsed.as_secs_f64());
+    Ok((rep, elapsed))
+}
+
+/// Run one experiment: execute, persist its JSON, print the summary.
+pub fn run_experiment(exp: &dyn Experiment, opts: &RunOptions) -> Result<ExperimentReport> {
+    let (rep, elapsed) = run_experiment_quiet(exp, opts)?;
+    println!("== {} — {} ({elapsed:.1}s)", exp.id(), exp.title());
     println!("{}", rep.summary);
     Ok(rep)
 }

@@ -179,6 +179,55 @@ impl Measure {
             Measure::Cafp(s) => format!("cafp_{}", s.name()),
         }
     }
+
+    /// Canonical spec string, e.g. `afp:ltc`, `cafp:vt-rs-ssm` — the form
+    /// accepted by `--measure` and by job files; [`Measure::from_spec`]
+    /// parses it back.
+    pub fn spec(&self) -> String {
+        match self {
+            Measure::MinTrComplete(p) => format!("min-tr:{}", format!("{p}").to_lowercase()),
+            Measure::MinTrAliasAware(p) => {
+                format!("alias-min-tr:{}", format!("{p}").to_lowercase())
+            }
+            Measure::Afp(p) => format!("afp:{}", format!("{p}").to_lowercase()),
+            Measure::Cafp(s) => format!("cafp:{}", s.name()),
+        }
+    }
+
+    /// Parse one measure spec: `afp:ltc`, `cafp:vt-rs-ssm`, `min-tr:lta`,
+    /// `alias-min-tr:ltc`. The policy/scheme argument is optional (`afp`
+    /// defaults to LtC, `cafp` to VT-RS/SSM).
+    pub fn from_spec(s: &str) -> Result<Measure, String> {
+        let (kind, arg) = s.trim().split_once(':').unwrap_or((s.trim(), ""));
+        let policy = |arg: &str| -> Result<Policy, String> {
+            if arg.is_empty() {
+                Ok(Policy::LtC)
+            } else {
+                Policy::by_name(arg).ok_or_else(|| format!("unknown policy '{arg}'"))
+            }
+        };
+        match kind {
+            "afp" => Ok(Measure::Afp(policy(arg)?)),
+            "min-tr" => Ok(Measure::MinTrComplete(policy(arg)?)),
+            "alias-min-tr" | "alias" => Ok(Measure::MinTrAliasAware(policy(arg)?)),
+            "cafp" => {
+                let scheme = if arg.is_empty() {
+                    Scheme::VtRsSsm
+                } else {
+                    Scheme::by_name(arg).ok_or_else(|| format!("unknown scheme '{arg}'"))?
+                };
+                Ok(Measure::Cafp(scheme))
+            }
+            other => Err(format!(
+                "unknown measure '{other}' (afp | cafp | min-tr | alias-min-tr)"
+            )),
+        }
+    }
+
+    /// Parse a comma-separated measure list (`afp:ltc,cafp:vt-rs-ssm`).
+    pub fn parse_list(s: &str) -> Result<Vec<Measure>, String> {
+        s.split(',').map(Measure::from_spec).collect()
+    }
 }
 
 /// One measure's sweep result.
@@ -401,6 +450,24 @@ mod tests {
     use super::*;
     use crate::model::system::SystemSampler;
     use crate::montecarlo::{IdealEvaluator, RustIdeal};
+
+    #[test]
+    fn measure_spec_round_trips() {
+        let all = [
+            Measure::MinTrComplete(Policy::LtA),
+            Measure::MinTrAliasAware(Policy::LtC),
+            Measure::Afp(Policy::LtD),
+            Measure::Cafp(Scheme::RsSsm),
+        ];
+        for m in all {
+            assert_eq!(Measure::from_spec(&m.spec()), Ok(m));
+        }
+        assert_eq!(Measure::from_spec("afp"), Ok(Measure::Afp(Policy::LtC)));
+        assert_eq!(Measure::from_spec("cafp"), Ok(Measure::Cafp(Scheme::VtRsSsm)));
+        assert!(Measure::from_spec("bogus:ltc").is_err());
+        assert!(Measure::from_spec("afp:bogus").is_err());
+        assert_eq!(Measure::parse_list("afp:ltc, cafp:vt-rs-ssm").unwrap().len(), 2);
+    }
 
     #[test]
     fn axis_names_round_trip() {

@@ -39,6 +39,13 @@
 //!   (all built on SweepSpec), an experiment registry, report writers
 //!   (CSV / JSON / ASCII shmoo) and the launcher used by the `wdm-arbiter`
 //!   binary.
+//! * [`api`] — the **typed job API**: serializable
+//!   [`api::JobRequest`]/[`api::JobResponse`] (JSON + TOML forms) and the
+//!   long-lived [`api::ArbiterService`] that owns the backend evaluator
+//!   and memoizes per-column populations across requests
+//!   ([`montecarlo::PopulationCache`]). The CLI, `wdm-arbiter serve`
+//!   (JSON-lines on stdin/stdout) and `wdm-arbiter batch jobs.json` are
+//!   all thin clients of this service.
 //!
 //! ## Quickstart
 //!
@@ -56,6 +63,7 @@
 //! println!("this trial needs a {min_tr:.2} nm mean tuning range under LtC");
 //! ```
 
+pub mod api;
 pub mod arbiter;
 pub mod config;
 pub mod coordinator;

@@ -1,5 +1,10 @@
 //! `wdm-arbiter` — launcher for the wavelength-arbitration simulator.
 //!
+//! A thin client of the typed job API ([`wdm_arbiter::api`]): every
+//! subcommand maps argv to a [`JobRequest`], submits it to an
+//! [`ArbiterService`], and renders the [`JobResponse`]. `serve` and
+//! `batch` drive the same service with JSON-lines / job files.
+//!
 //! ```text
 //! wdm-arbiter list
 //! wdm-arbiter run <experiment|all> [--out DIR] [--fast] [--lasers N]
@@ -10,22 +15,18 @@
 //! wdm-arbiter arbitrate [--scheme seq|rs|vt-rs] [--tr NM] [--seed S]
 //!                       [--config FILE.toml] [--permuted]
 //! wdm-arbiter show-config [--cases] [--config FILE.toml]
+//! wdm-arbiter serve [--backend rust|xla] [--threads T]
+//! wdm-arbiter batch <jobs.json|jobs.toml> [--backend rust|xla] [--threads T]
 //! ```
 
-use std::path::PathBuf;
+use std::io::{BufRead, Write};
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-use wdm_arbiter::arbiter::{distance, ideal, Policy};
-use wdm_arbiter::config::presets::system_config_from_toml;
-use wdm_arbiter::config::SystemConfig;
-use wdm_arbiter::coordinator::report::{ascii_heatmap, curve_table, write_csv_series, write_csv_shmoo};
-use wdm_arbiter::coordinator::sweep::{ConfigAxis, Measure, SweepOutput, SweepSpec};
-use wdm_arbiter::coordinator::{run_experiment, Backend, RunOptions};
-use wdm_arbiter::experiments::{all_experiments, by_id, tr_sweep};
-use wdm_arbiter::model::SystemUnderTest;
-use wdm_arbiter::montecarlo::TrialEngine;
-use wdm_arbiter::oblivious::{run_scheme, Scheme};
-use wdm_arbiter::rng::Rng;
+use wdm_arbiter::api::cli::{job_from_args, options_from_args};
+use wdm_arbiter::api::{ArbiterService, JobEvent, JobRequest, JobResponse};
+use wdm_arbiter::coordinator::Backend;
+use wdm_arbiter::experiments::all_experiments;
 use wdm_arbiter::util::cli::Args;
 use wdm_arbiter::util::json::Json;
 
@@ -39,6 +40,8 @@ USAGE:
   wdm-arbiter run <id|all> [--out DIR] [--fast] [--lasers N] [--rows N]
                   [--seed S] [--threads T] [--backend rust|xla]
       Regenerate a paper table/figure (default 100x100 trials per point).
+      `run all` keeps going past failures and writes an aggregate
+      DIR/manifest.json (ids, elapsed, backend that actually ran, files).
   wdm-arbiter sweep --axis AXIS --values LO:HI:STEP|A,B,C
                   [--tr LO:HI:STEP|A,B,C] [--measure M1,M2,...]
                   [--config FILE.toml] [--permuted] [--out DIR] [--fast]
@@ -54,8 +57,17 @@ USAGE:
   wdm-arbiter arbitrate [--scheme seq|rs-ssm|vt-rs-ssm] [--tr NM] [--seed S]
                   [--config FILE.toml] [--permuted]
       Run a single arbitration trial end-to-end and print the outcome.
-  wdm-arbiter show-config [--cases] [--config FILE.toml]
-      Print the resolved system configuration (Table I) / test cases (Table II).
+  wdm-arbiter show-config [--cases] [--config FILE.toml] [--permuted]
+      Print the resolved system configuration (Table I) / test cases
+      (Table II, rendered against the loaded config).
+  wdm-arbiter serve [--backend rust|xla] [--threads T]
+      Long-lived job server: one JobRequest JSON per stdin line, progress
+      events + one JobResponse JSON per line on stdout. Populations are
+      memoized across requests (responses report cache hits/misses).
+  wdm-arbiter batch <jobs.json|jobs.toml> [--backend rust|xla] [--threads T]
+      Run a job file (single job, JSON array, {\"jobs\": [...]}, or TOML
+      [jobs.N] sections) against one shared service, keep going past
+      failures, and report per-job results.
 ";
 
 fn main() -> ExitCode {
@@ -79,9 +91,9 @@ fn dispatch(argv: &[String]) -> anyhow::Result<()> {
     match args.positionals[0].as_str() {
         "list" => cmd_list(),
         "run" => cmd_run(&args),
-        "sweep" => cmd_sweep(&args),
-        "arbitrate" => cmd_arbitrate(&args),
-        "show-config" => cmd_show_config(&args),
+        "sweep" | "arbitrate" | "show-config" => cmd_job(&args),
+        "serve" => cmd_serve(&args),
+        "batch" => cmd_batch(&args),
         other => {
             println!("{USAGE}");
             Err(anyhow::anyhow!("unknown subcommand '{other}'"))
@@ -97,252 +109,172 @@ fn cmd_list() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn options_from(args: &Args) -> anyhow::Result<RunOptions> {
-    let mut opts = if args.flag("fast") { RunOptions::fast() } else { RunOptions::default() };
-    opts.out_dir = PathBuf::from(args.get_or("out", "out"));
-    opts.n_lasers = args.get_usize("lasers", opts.n_lasers).map_err(anyhow::Error::msg)?;
-    opts.n_rows = args.get_usize("rows", opts.n_rows).map_err(anyhow::Error::msg)?;
-    opts.seed = args.get_u64("seed", opts.seed).map_err(anyhow::Error::msg)?;
-    opts.threads = args.get_usize("threads", opts.threads).map_err(anyhow::Error::msg)?;
-    if let Some(b) = args.get("backend") {
-        opts.backend =
-            Backend::by_name(b).ok_or_else(|| anyhow::anyhow!("unknown backend '{b}'"))?;
+/// One service per CLI invocation, configured from the shared flags.
+fn service_from(args: &Args) -> anyhow::Result<ArbiterService> {
+    let opts = options_from_args(args).map_err(anyhow::Error::msg)?;
+    Ok(ArbiterService::new(
+        opts.backend.unwrap_or(Backend::Rust),
+        opts.threads.unwrap_or(0),
+    ))
+}
+
+/// Render one response: summary to stdout on success, error upward (main
+/// prints it once on stderr) on failure.
+fn render(resp: JobResponse) -> anyhow::Result<()> {
+    if resp.ok {
+        print!("{}", resp.summary);
+        Ok(())
+    } else {
+        Err(anyhow::anyhow!(resp.error.unwrap_or_else(|| "job failed".to_string())))
     }
-    Ok(opts)
+}
+
+fn cmd_job(args: &Args) -> anyhow::Result<()> {
+    let req = job_from_args(args).map_err(anyhow::Error::msg)?;
+    let service = service_from(args)?;
+    render(service.submit(&req))
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
-    let target = args
-        .positionals
-        .get(1)
-        .ok_or_else(|| anyhow::anyhow!("run: expected an experiment id (see `list`)"))?;
-    let opts = options_from(args)?;
-    if target == "all" {
-        for e in all_experiments() {
-            run_experiment(e.as_ref(), &opts)?;
-        }
-        return Ok(());
+    let req = job_from_args(args).map_err(anyhow::Error::msg)?;
+    let service = service_from(args)?;
+    if !matches!(&req, JobRequest::Batch { .. }) {
+        return render(service.submit(&req));
     }
-    let exp = by_id(target)
-        .ok_or_else(|| anyhow::anyhow!("unknown experiment '{target}' (see `list`)"))?;
-    run_experiment(exp.as_ref(), &opts)?;
-    Ok(())
-}
-
-/// Parse `a,b,c` or `lo:hi:step` into a value list.
-fn parse_values(s: &str) -> anyhow::Result<Vec<f64>> {
-    if s.contains(':') {
-        let parts: Vec<&str> = s.split(':').collect();
-        if parts.len() != 3 {
-            return Err(anyhow::anyhow!("range syntax is lo:hi:step, got '{s}'"));
-        }
-        let lo: f64 = parts[0].parse()?;
-        let hi: f64 = parts[1].parse()?;
-        let step: f64 = parts[2].parse()?;
-        if step <= 0.0 || hi < lo {
-            return Err(anyhow::anyhow!("range needs step > 0 and hi >= lo, got '{s}'"));
-        }
-        let mut v = Vec::new();
-        let mut x = lo;
-        while x <= hi + 1e-9 {
-            v.push(x);
-            x += step;
-        }
-        Ok(v)
-    } else {
-        s.split(',')
-            .map(|t| {
-                t.trim()
-                    .parse::<f64>()
-                    .map_err(|_| anyhow::anyhow!("expected a number, got '{t}'"))
-            })
-            .collect()
-    }
-}
-
-/// Parse one measure spec: `afp:ltc`, `cafp:vt-rs-ssm`, `min-tr:lta`,
-/// `alias-min-tr:ltc`.
-fn parse_measure(s: &str) -> anyhow::Result<Measure> {
-    let (kind, arg) = s.split_once(':').unwrap_or((s, ""));
-    let policy = |arg: &str, default: Policy| -> anyhow::Result<Policy> {
-        if arg.is_empty() {
-            Ok(default)
-        } else {
-            Policy::by_name(arg).ok_or_else(|| anyhow::anyhow!("unknown policy '{arg}'"))
+    // `run all`: stream each experiment's report as it finishes, write the
+    // aggregate manifest, and report the failures at the end (the batch
+    // keeps going past them).
+    let mut sink = |ev: JobEvent| {
+        if let JobEvent::ExperimentFinished { summary, ok: true, .. } = ev {
+            print!("{summary}");
+            let _ = std::io::stdout().flush();
         }
     };
-    match kind {
-        "afp" => Ok(Measure::Afp(policy(arg, Policy::LtC)?)),
-        "min-tr" => Ok(Measure::MinTrComplete(policy(arg, Policy::LtC)?)),
-        "alias-min-tr" | "alias" => Ok(Measure::MinTrAliasAware(policy(arg, Policy::LtC)?)),
-        "cafp" => {
-            let scheme = if arg.is_empty() {
-                Scheme::VtRsSsm
-            } else {
-                Scheme::by_name(arg)
-                    .ok_or_else(|| anyhow::anyhow!("unknown scheme '{arg}'"))?
-            };
-            Ok(Measure::Cafp(scheme))
-        }
-        other => Err(anyhow::anyhow!(
-            "unknown measure '{other}' (afp | cafp | min-tr | alias-min-tr)"
-        )),
-    }
-}
-
-fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
-    let opts = options_from(args)?;
-    let cfg = load_config(args)?;
-    let axis_name = args.get_or("axis", "ring-local");
-    let axis = ConfigAxis::by_name(axis_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown axis '{axis_name}' (see `wdm-arbiter --help`)"))?;
-    let values = parse_values(args.get("values").ok_or_else(|| {
-        anyhow::anyhow!("sweep: --values is required (list `a,b,c` or range `lo:hi:step`)")
-    })?)?;
-    let measures: Vec<Measure> = args
-        .get_or("measure", "afp:ltc")
-        .split(',')
-        .map(parse_measure)
-        .collect::<anyhow::Result<_>>()?;
-    let needs_tr = measures
-        .iter()
-        .any(|m| matches!(m, Measure::Afp(_) | Measure::Cafp(_)));
-    let tr_values = match args.get("tr") {
-        Some(s) => parse_values(s)?,
-        None if needs_tr => tr_sweep(cfg.grid.spacing_nm, opts.stride()),
-        None => Vec::new(),
-    };
-
-    let eval = opts.backend.evaluator(opts.threads);
-    let engine = TrialEngine::new(eval.as_ref(), opts.threads);
-    let spec = SweepSpec::new("sweep", cfg, axis, values.clone())
-        .thresholds(tr_values)
-        .measures(measures.iter().copied());
-    let outs = spec.run(&engine, &opts);
-
-    std::fs::create_dir_all(&opts.out_dir)?;
-    let mut json_panels = Vec::new();
-    for (m, out) in measures.iter().zip(outs) {
-        let slug = m.slug();
-        match out {
-            SweepOutput::Curve(series) => {
-                println!("== sweep {} over {}", slug, axis.name());
-                println!("{}", curve_table(axis.name(), std::slice::from_ref(&series), 12));
-                let path = opts.out_dir.join(format!("sweep_{slug}.csv"));
-                write_csv_series(&path, axis.name(), std::slice::from_ref(&series))?;
-                println!("wrote {}", path.display());
-                json_panels.push(Json::obj(vec![
-                    ("measure", Json::str(slug.clone())),
-                    ("x", Json::arr_f64(&series.x)),
-                    ("y", Json::arr_f64(&series.y)),
-                ]));
-            }
-            SweepOutput::Grid(shmoo) | SweepOutput::CafpGrid { cafp: shmoo, .. } => {
-                println!("== sweep {} over {} x tr", slug, axis.name());
-                println!("{}", ascii_heatmap(&shmoo));
-                let path = opts.out_dir.join(format!("sweep_{slug}.csv"));
-                write_csv_shmoo(&path, &shmoo)?;
-                println!("wrote {}", path.display());
-                json_panels.push(Json::obj(vec![
-                    ("measure", Json::str(slug.clone())),
-                    ("x", Json::arr_f64(&shmoo.x)),
-                    ("y_tr_nm", Json::arr_f64(&shmoo.y)),
-                    ("cells", Json::arr_f64(&shmoo.cells)),
-                ]));
-            }
-        }
-    }
-    // Record the evaluator that actually ran: alias-aware-only sweeps
-    // never invoke the ideal backend.
-    let uses_ideal = measures
-        .iter()
-        .any(|m| !matches!(m, Measure::MinTrAliasAware(_)));
-    let json_path = opts.out_dir.join("sweep.json");
-    std::fs::write(
-        &json_path,
-        Json::obj(vec![
-            ("axis", Json::str(axis.name())),
-            ("values", Json::arr_f64(&values)),
-            ("backend", Json::str(if uses_ideal { eval.name() } else { "none" })),
-            ("trials_per_point", Json::num(opts.trials_per_point() as f64)),
-            ("panels", Json::Arr(json_panels)),
-        ])
-        .to_pretty(),
-    )?;
-    println!("wrote {}", json_path.display());
-    Ok(())
-}
-
-fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
-    let mut cfg = match args.get("config") {
-        Some(path) => {
-            let text = std::fs::read_to_string(path)?;
-            system_config_from_toml(&text).map_err(anyhow::Error::msg)?
-        }
-        None => SystemConfig::default(),
-    };
-    if args.flag("permuted") {
-        cfg = cfg.with_permuted_orders();
-    }
-    Ok(cfg)
-}
-
-fn cmd_arbitrate(args: &Args) -> anyhow::Result<()> {
-    let cfg = load_config(args)?;
-    let scheme_name = args.get_or("scheme", "vt-rs-ssm");
-    let scheme = Scheme::by_name(scheme_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown scheme '{scheme_name}'"))?;
-    let tr = args.get_f64("tr", 6.0).map_err(anyhow::Error::msg)?;
-    let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
-
-    let mut rng = Rng::seed_from(seed);
-    let sut = SystemUnderTest::sample(&cfg, &mut rng);
-    println!("system-under-test (center-relative nm):");
-    println!("  lasers: {:?}", rounded(&sut.laser.tones_nm));
-    println!("  rings:  {:?}", rounded(&sut.rings.resonance_nm));
-
-    let dist = distance::scaled_distance_matrix(&sut);
-    for policy in Policy::all() {
-        let out = ideal::arbitrate(policy, &dist, cfg.target_order.as_slice());
-        println!(
-            "ideal {policy}: min TR {:.2} nm -> assignment {:?} (feasible at {tr} nm: {})",
-            out.min_tr_nm,
-            out.assignment,
-            out.min_tr_nm <= tr
+    let resp = service.submit_with(&req, &mut sink);
+    for child in resp.jobs.iter().filter(|c| !c.ok) {
+        eprintln!(
+            "error: {} failed: {}",
+            child.label,
+            child.error.as_deref().unwrap_or("unknown error")
         );
     }
-    let res = run_scheme(scheme, &sut.laser, &sut.rings, &cfg.target_order, tr);
-    println!(
-        "oblivious {} at TR {tr} nm: {} -> {:?}",
-        scheme.name(),
-        res.class.name(),
-        res.assignment
-    );
-    Ok(())
-}
-
-fn cmd_show_config(args: &Args) -> anyhow::Result<()> {
-    if args.flag("cases") {
-        let exp = by_id("table2").expect("registered");
-        let rep = exp.run(&RunOptions::fast())?;
-        println!("{}", rep.summary);
-        return Ok(());
+    let out_dir = options_from_args(args)
+        .map_err(anyhow::Error::msg)?
+        .to_run_options()
+        .out_dir;
+    let manifest_path = write_manifest(&out_dir, &resp)?;
+    println!("wrote {}", manifest_path.display());
+    if !resp.ok {
+        let failed: Vec<&str> =
+            resp.jobs.iter().filter(|c| !c.ok).map(|c| c.label.as_str()).collect();
+        return Err(anyhow::anyhow!(
+            "{} experiment(s) failed: {}",
+            failed.len(),
+            failed.join(", ")
+        ));
     }
-    let cfg = load_config(args)?;
-    println!("grid:        {} ({} ch, {:.2} nm spacing)", cfg.grid.name(), cfg.grid.n_ch, cfg.grid.spacing_nm);
-    println!("ring bias:   {:.2} nm   fsr mean: {:.2} nm", cfg.ring_bias_nm, cfg.fsr_mean_nm);
-    println!(
-        "variation:   gO ±{} nm, lLV ±{}%, rLV ±{} nm, FSR ±{}%, TR ±{}%",
-        cfg.variation.grid_offset_nm,
-        cfg.variation.laser_local_frac * 100.0,
-        cfg.variation.ring_local_nm,
-        cfg.variation.fsr_frac * 100.0,
-        cfg.variation.tr_frac * 100.0,
-    );
-    println!("orders:      r_i = {}  s_i = {}", cfg.pre_fab_order, cfg.target_order);
     Ok(())
 }
 
-fn rounded(v: &[f64]) -> Vec<f64> {
-    v.iter().map(|x| (x * 100.0).round() / 100.0).collect()
+/// Aggregate `run all` manifest: per-experiment id, outcome, elapsed, the
+/// evaluator that actually ran, and the files written.
+fn write_manifest(out_dir: &Path, batch: &JobResponse) -> anyhow::Result<PathBuf> {
+    std::fs::create_dir_all(out_dir)?;
+    let jobs: Vec<Json> = batch
+        .jobs
+        .iter()
+        .map(|c| {
+            let mut pairs = vec![
+                ("id", Json::str(c.label.clone())),
+                ("ok", Json::Bool(c.ok)),
+                ("elapsed_s", Json::num(c.elapsed_s)),
+                ("backend", Json::str(c.backend.clone())),
+                (
+                    "files",
+                    Json::Arr(c.files.iter().map(|f| Json::str(f.clone())).collect()),
+                ),
+            ];
+            if let Some(e) = &c.error {
+                pairs.push(("error", Json::str(e.clone())));
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    let failures = batch.jobs.iter().filter(|c| !c.ok).count();
+    let manifest = Json::obj(vec![
+        ("kind", Json::str("run-all-manifest")),
+        ("experiments", Json::num(batch.jobs.len() as f64)),
+        ("failures", Json::num(failures as f64)),
+        ("jobs", Json::Arr(jobs)),
+    ]);
+    let path = out_dir.join("manifest.json");
+    std::fs::write(&path, manifest.to_pretty())?;
+    Ok(path)
+}
+
+/// JSON-lines server: one `JobRequest` per stdin line; progress events and
+/// exactly one `JobResponse` per job on stdout, flushed per line. The
+/// service (and its population cache) lives for the whole session.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let service = service_from(args)?;
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut out = stdout.lock();
+        let resp = match JobRequest::from_json_str(line) {
+            Ok(req) => {
+                let mut sink = |ev: JobEvent| {
+                    let _ = writeln!(out, "{}", ev.to_json().to_string());
+                    let _ = out.flush();
+                };
+                service.submit_with(&req, &mut sink)
+            }
+            Err(e) => JobResponse::failure("request", "parse", e),
+        };
+        writeln!(out, "{}", resp.to_json_string())?;
+        out.flush()?;
+    }
+    Ok(())
+}
+
+/// Run a job file against one shared service.
+fn cmd_batch(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positionals
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("batch: expected a jobs file (.json or .toml)"))?;
+    let text = std::fs::read_to_string(path)?;
+    let req = if path.ends_with(".toml") {
+        JobRequest::from_toml(&text)
+    } else {
+        JobRequest::from_jobs_json(&text)
+    }
+    .map_err(anyhow::Error::msg)?;
+    let service = service_from(args)?;
+    let resp = service.submit(&req);
+    if let JobRequest::Batch { .. } = &req {
+        for child in &resp.jobs {
+            if child.ok {
+                print!("{}", child.summary);
+            }
+        }
+        print!("{}", resp.summary); // per-job ok/FAIL table
+    } else if resp.ok {
+        print!("{}", resp.summary);
+    }
+    println!(
+        "cache: {} hits, {} misses, {} populations",
+        resp.cache.hits, resp.cache.misses, resp.cache.entries
+    );
+    if !resp.ok {
+        return Err(anyhow::anyhow!(resp
+            .error
+            .unwrap_or_else(|| "batch failed".to_string())));
+    }
+    Ok(())
 }

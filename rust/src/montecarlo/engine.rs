@@ -21,6 +21,10 @@
 //! sampling and ideal-model work — the dominant cost at low tuning ranges,
 //! where most trials fail the gate and no oblivious simulation runs.
 
+use std::cell::{Cell, RefCell};
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
 use crate::arbiter::Policy;
 use crate::config::SystemConfig;
 use crate::metrics::TrialTally;
@@ -130,16 +134,152 @@ impl SchemeEvaluator for RustOblivious {
     }
 }
 
+/// Population-cache hit/miss counters (cumulative since construction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    /// Requests fully served by a memoized population.
+    pub hits: usize,
+    /// Requests that sampled and/or evaluated (including policy upgrades
+    /// of an existing entry).
+    pub misses: usize,
+    /// Populations currently memoized.
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// Per-request delta: counters accumulated since `earlier` was
+    /// snapshotted (`entries` stays absolute).
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            entries: self.entries,
+        }
+    }
+}
+
+/// Cache key: config fingerprint (exact `Debug` rendering — all fields,
+/// f64s formatted losslessly) × population shape × seed lane.
+type PopKey = (String, usize, usize, u64);
+
+/// Memoizes per-column [`Population`]s across requests, so repeated or
+/// overlapping jobs submitted to a long-lived service never resample or
+/// re-evaluate a column they have already paid for.
+///
+/// A lookup hits only when the cached entry covers every requested policy;
+/// otherwise the population is rebuilt with the **union** of old and new
+/// policies and the entry upgraded in place (the deterministic seed makes
+/// the resample bit-identical, so earlier consumers stay coherent).
+///
+/// The cache is **bounded**: at most `capacity` populations are held
+/// (default 256 ≈ tens of MB at the paper's 100×100 shape) and the oldest
+/// insertion is evicted first, so a long-lived serve session cannot grow
+/// without limit.
+///
+/// Single-threaded by design (interior `RefCell`), matching
+/// [`IdealEvaluator`]'s deliberate `!Send + !Sync`: parallelism lives
+/// *inside* the evaluators, not across cache consumers.
+#[derive(Debug)]
+pub struct PopulationCache {
+    entries: RefCell<HashMap<PopKey, Arc<Population>>>,
+    /// Insertion order for FIFO eviction (policy upgrades keep their slot).
+    order: RefCell<VecDeque<PopKey>>,
+    capacity: usize,
+    hits: Cell<usize>,
+    misses: Cell<usize>,
+}
+
+impl Default for PopulationCache {
+    fn default() -> Self {
+        Self::with_capacity(256)
+    }
+}
+
+impl PopulationCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A cache holding at most `capacity` populations (min 1).
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            entries: RefCell::new(HashMap::new()),
+            order: RefCell::new(VecDeque::new()),
+            capacity: capacity.max(1),
+            hits: Cell::new(0),
+            misses: Cell::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn key(cfg: &SystemConfig, n_lasers: usize, n_rows: usize, seed: u64) -> PopKey {
+        (format!("{cfg:?}"), n_lasers, n_rows, seed)
+    }
+
+    /// Insert (or upgrade) an entry, evicting the oldest insertions once
+    /// the capacity is reached.
+    fn insert(&self, key: PopKey, pop: Arc<Population>) {
+        let mut entries = self.entries.borrow_mut();
+        let mut order = self.order.borrow_mut();
+        if !entries.contains_key(&key) {
+            while entries.len() >= self.capacity {
+                match order.pop_front() {
+                    Some(old) => {
+                        entries.remove(&old);
+                    }
+                    None => break,
+                }
+            }
+            order.push_back(key.clone());
+        }
+        entries.insert(key, pop);
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.get(),
+            misses: self.misses.get(),
+            entries: self.entries.borrow().len(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.borrow().is_empty()
+    }
+
+    /// Drop every memoized population (counters keep accumulating).
+    pub fn clear(&self) {
+        self.entries.borrow_mut().clear();
+        self.order.borrow_mut().clear();
+    }
+}
+
 /// The unified trial engine: one ideal-model backend + a thread budget,
-/// shared by every column of a sweep.
+/// shared by every column of a sweep, optionally backed by a
+/// [`PopulationCache`] for cross-request memoization.
 pub struct TrialEngine<'a> {
     ideal: &'a dyn IdealEvaluator,
     threads: usize,
+    cache: Option<&'a PopulationCache>,
 }
 
 impl<'a> TrialEngine<'a> {
     pub fn new(ideal: &'a dyn IdealEvaluator, threads: usize) -> Self {
-        Self { ideal, threads }
+        Self { ideal, threads, cache: None }
+    }
+
+    /// Memoize per-column populations in `cache` (the
+    /// [`crate::api::ArbiterService`] path).
+    pub fn with_cache(mut self, cache: &'a PopulationCache) -> Self {
+        self.cache = Some(cache);
+        self
     }
 
     /// The backing ideal-model evaluator.
@@ -154,7 +294,42 @@ impl<'a> TrialEngine<'a> {
     /// Sample one column population and evaluate the ideal model **once**
     /// over `policies` (per-trial distance work shared across policies).
     /// Include `Policy::LtC` when the population will gate CAFP.
+    ///
+    /// With a [`PopulationCache`] attached, a column already built for the
+    /// same (config, shape, seed) is returned without resampling; an entry
+    /// missing some requested policy is rebuilt once with the policy union.
     pub fn population(
+        &self,
+        cfg: &SystemConfig,
+        n_lasers: usize,
+        n_rows: usize,
+        seed: u64,
+        policies: &[Policy],
+    ) -> Arc<Population> {
+        let Some(cache) = self.cache else {
+            return Arc::new(self.build_population(cfg, n_lasers, n_rows, seed, policies));
+        };
+        let key = PopulationCache::key(cfg, n_lasers, n_rows, seed);
+        let mut union: Vec<Policy> = Vec::new();
+        if let Some(hit) = cache.entries.borrow().get(&key) {
+            if policies.iter().all(|p| hit.policies.contains(p)) {
+                cache.hits.set(cache.hits.get() + 1);
+                return Arc::clone(hit);
+            }
+            union = hit.policies.clone();
+        }
+        for &p in policies {
+            if !union.contains(&p) {
+                union.push(p);
+            }
+        }
+        cache.misses.set(cache.misses.get() + 1);
+        let pop = Arc::new(self.build_population(cfg, n_lasers, n_rows, seed, &union));
+        cache.insert(key, Arc::clone(&pop));
+        pop
+    }
+
+    fn build_population(
         &self,
         cfg: &SystemConfig,
         n_lasers: usize,
@@ -280,6 +455,73 @@ mod tests {
 
     fn pop_afp_at(pop: &Population, tr: f64) -> f64 {
         crate::montecarlo::afp_at(pop.ideal_ltc(), tr)
+    }
+
+    #[test]
+    fn cache_hits_on_identical_columns_and_upgrades_policies() {
+        let ideal_eval = RustIdeal::default();
+        let cache = PopulationCache::new();
+        let engine = TrialEngine::new(&ideal_eval, 0).with_cache(&cache);
+        let cfg = SystemConfig::default();
+
+        let a = engine.population(&cfg, 4, 4, 7, &[Policy::LtC]);
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 1, entries: 1 });
+        let b = engine.population(&cfg, 4, 4, 7, &[Policy::LtC]);
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, entries: 1 });
+        assert!(Arc::ptr_eq(&a, &b), "hit must be the same allocation");
+
+        // Missing policy: rebuild once with the union, then both policy
+        // sets hit the upgraded entry.
+        let c = engine.population(&cfg, 4, 4, 7, &[Policy::LtA]);
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 2, entries: 1 });
+        assert!(c.min_trs_for(Policy::LtC).is_some(), "union keeps earlier policies");
+        assert!(c.min_trs_for(Policy::LtA).is_some());
+        let d = engine.population(&cfg, 4, 4, 7, &[Policy::LtC, Policy::LtA]);
+        assert_eq!(cache.stats(), CacheStats { hits: 2, misses: 2, entries: 1 });
+        assert_eq!(d.ideal_ltc(), a.ideal_ltc(), "deterministic resample");
+
+        // Different seed or config: separate entries.
+        engine.population(&cfg, 4, 4, 8, &[Policy::LtC]);
+        let mut other = cfg.clone();
+        other.variation.ring_local_nm = 1.0;
+        engine.population(&other, 4, 4, 7, &[Policy::LtC]);
+        assert_eq!(cache.stats(), CacheStats { hits: 2, misses: 4, entries: 3 });
+
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn cache_capacity_bounds_memory_with_fifo_eviction() {
+        let ideal_eval = RustIdeal::default();
+        let cache = PopulationCache::with_capacity(2);
+        assert_eq!(cache.capacity(), 2);
+        let engine = TrialEngine::new(&ideal_eval, 0).with_cache(&cache);
+        let cfg = SystemConfig::default();
+        for seed in [1u64, 2, 3] {
+            engine.population(&cfg, 3, 3, seed, &[Policy::LtC]);
+        }
+        assert_eq!(cache.len(), 2, "capacity enforced");
+        // Seed 1 (oldest) was evicted; 3 still resident.
+        engine.population(&cfg, 3, 3, 3, &[Policy::LtC]);
+        assert_eq!(cache.stats().hits, 1);
+        engine.population(&cfg, 3, 3, 1, &[Policy::LtC]);
+        assert_eq!(cache.stats().hits, 1, "evicted entry misses again");
+        assert_eq!(cache.stats().misses, 4);
+    }
+
+    #[test]
+    fn cached_population_matches_uncached() {
+        let ideal_eval = RustIdeal::default();
+        let cache = PopulationCache::new();
+        let cfg = SystemConfig::default();
+        let plain = TrialEngine::new(&ideal_eval, 0).population(&cfg, 5, 5, 11, &[Policy::LtC]);
+        let cached = TrialEngine::new(&ideal_eval, 0)
+            .with_cache(&cache)
+            .population(&cfg, 5, 5, 11, &[Policy::LtC]);
+        assert_eq!(plain.min_trs, cached.min_trs);
+        assert_eq!(plain.seed, cached.seed);
     }
 
     #[test]

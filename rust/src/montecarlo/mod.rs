@@ -20,7 +20,9 @@ pub mod engine;
 pub mod executor;
 pub mod sweep;
 
-pub use engine::{Population, RustOblivious, SchemeEvaluator, TrialEngine};
+pub use engine::{
+    CacheStats, Population, PopulationCache, RustOblivious, SchemeEvaluator, TrialEngine,
+};
 
 use crate::arbiter::{ideal, Policy};
 use crate::config::SystemConfig;

@@ -1,8 +1,10 @@
-//! Minimal JSON value model + writer (results/report serialization).
+//! JSON value model, writer **and parser** (job API + report serialization).
 //!
-//! Only what the report writers need: objects preserve insertion order,
-//! numbers are f64 (written losslessly-enough via `{:?}` / integer fast
-//! path), strings are escaped per RFC 8259.
+//! Objects preserve insertion order, numbers are f64 (written
+//! losslessly-enough via `{:?}` / integer fast path), strings are escaped
+//! per RFC 8259. The parser accepts the full RFC 8259 grammar — nested
+//! values, all escapes including `\uXXXX` with surrogate pairs — so
+//! [`crate::api::JobRequest`] documents round-trip through it.
 
 use std::fmt::Write as _;
 
@@ -32,6 +34,85 @@ impl Json {
 
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Array from indices (assignments, orderings).
+    pub fn arr_usize(v: &[usize]) -> Json {
+        Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
+    /// Object-member lookup (first match; `None` on non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items.as_slice()),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.trunc() == *x && *x < 9e15 => Some(*x as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.trunc() == *x && *x < 1.8e19 => Some(*x as u64),
+            _ => None,
+        }
+    }
+
+    /// All-numbers array as a `Vec<f64>` (`None` if any element is not a
+    /// number).
+    pub fn as_f64_arr(&self) -> Option<Vec<f64>> {
+        let items = self.as_arr()?;
+        let mut out = Vec::with_capacity(items.len());
+        for item in items {
+            out.push(item.as_f64()?);
+        }
+        Some(out)
+    }
+
+    /// Parse one JSON document (RFC 8259). Trailing non-whitespace is an
+    /// error. Numbers become [`Json::Num`] (f64); integer-valued numbers
+    /// re-serialize without a decimal point, so `1.0` round-trips as `1`.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser { s: text.as_bytes(), i: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.s.len() {
+            return Err(p.err("trailing characters after document"));
+        }
+        Ok(v)
     }
 
     /// Compact serialization.
@@ -111,6 +192,220 @@ fn newline_indent(out: &mut String, indent: Option<usize>, level: usize) {
     }
 }
 
+/// Recursive-descent RFC 8259 parser over the raw bytes (input is `&str`,
+/// so non-escape bytes are valid UTF-8 and are copied verbatim).
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> String {
+        format!("json: {} at byte {}", msg, self.i)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.s.get(self.i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.i).copied()
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(_) => Err(self.err("unexpected character")),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.s[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(self.err("invalid literal"))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        loop {
+            match self.peek() {
+                Some(c) if c.is_ascii_digit() => self.i += 1,
+                Some(b'.' | b'e' | b'E' | b'+' | b'-') => self.i += 1,
+                _ => break,
+            }
+        }
+        let span = std::str::from_utf8(&self.s[start..self.i]).expect("ascii span");
+        let x: f64 = span
+            .parse()
+            .map_err(|_| format!("json: invalid number '{span}' at byte {start}"))?;
+        if !x.is_finite() {
+            return Err(format!("json: non-finite number '{span}' at byte {start}"));
+        }
+        Ok(Json::Num(x))
+    }
+
+    fn expect(&mut self, c: u8, what: &str) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(what))
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{', "expected '{'")?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            if self.peek() != Some(b'"') {
+                return Err(self.err("expected string key"));
+            }
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':', "expected ':' after key")?;
+            let v = self.value()?;
+            pairs.push((key, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[', "expected '['")?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"', "expected '\"'")?;
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            let c = *self
+                .s
+                .get(self.i)
+                .ok_or_else(|| self.err("unterminated string"))?;
+            match c {
+                b'"' => {
+                    self.i += 1;
+                    return String::from_utf8(out).map_err(|_| self.err("invalid UTF-8"));
+                }
+                b'\\' => {
+                    self.i += 1;
+                    let e = *self
+                        .s
+                        .get(self.i)
+                        .ok_or_else(|| self.err("unterminated escape"))?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push(b'"'),
+                        b'\\' => out.push(b'\\'),
+                        b'/' => out.push(b'/'),
+                        b'b' => out.push(0x08),
+                        b'f' => out.push(0x0C),
+                        b'n' => out.push(b'\n'),
+                        b'r' => out.push(b'\r'),
+                        b't' => out.push(b'\t'),
+                        b'u' => {
+                            let ch = self.unicode_escape()?;
+                            let mut buf = [0u8; 4];
+                            out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                        }
+                        _ => return Err(self.err("invalid escape")),
+                    }
+                }
+                c if c < 0x20 => return Err(self.err("unescaped control character")),
+                c => {
+                    out.push(c);
+                    self.i += 1;
+                }
+            }
+        }
+    }
+
+    /// Body of a `\u` escape (the `\u` itself already consumed); pairs a
+    /// high surrogate with the following `\uXXXX` low surrogate.
+    fn unicode_escape(&mut self) -> Result<char, String> {
+        let hi = self.hex4()?;
+        let code = if (0xD800..0xDC00).contains(&hi) {
+            if self.peek() != Some(b'\\') || self.s.get(self.i + 1) != Some(&b'u') {
+                return Err(self.err("unpaired high surrogate"));
+            }
+            self.i += 2;
+            let lo = self.hex4()?;
+            if !(0xDC00..0xE000).contains(&lo) {
+                return Err(self.err("invalid low surrogate"));
+            }
+            0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+        } else if (0xDC00..0xE000).contains(&hi) {
+            return Err(self.err("unpaired low surrogate"));
+        } else {
+            hi
+        };
+        char::from_u32(code).ok_or_else(|| self.err("invalid unicode escape"))
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        let mut code: u32 = 0;
+        for _ in 0..4 {
+            let c = *self
+                .s
+                .get(self.i)
+                .ok_or_else(|| self.err("truncated \\u escape"))?;
+            let d = (c as char)
+                .to_digit(16)
+                .ok_or_else(|| self.err("bad hex digit in \\u escape"))?;
+            code = code * 16 + d;
+            self.i += 1;
+        }
+        Ok(code)
+    }
+}
+
 fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for ch in s.chars() {
@@ -164,5 +459,98 @@ mod tests {
     #[test]
     fn non_finite_becomes_null() {
         assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn parses_every_value_kind() {
+        let j = Json::parse(r#" { "s": "hi", "n": -2.5e2, "i": 42, "b": [true, false, null],
+                                 "o": { "nested": [[1], [2, 3]] } } "#)
+            .unwrap();
+        assert_eq!(j.get("s").unwrap().as_str(), Some("hi"));
+        assert_eq!(j.get("n").unwrap().as_f64(), Some(-250.0));
+        assert_eq!(j.get("i").unwrap().as_usize(), Some(42));
+        let b = j.get("b").unwrap().as_arr().unwrap();
+        assert_eq!(b[0].as_bool(), Some(true));
+        assert_eq!(b[2], Json::Null);
+        let nested = j.get("o").unwrap().get("nested").unwrap().as_arr().unwrap();
+        assert_eq!(nested[1].as_f64_arr(), Some(vec![2.0, 3.0]));
+    }
+
+    #[test]
+    fn parse_round_trips_writer_output() {
+        let j = Json::obj(vec![
+            ("name", Json::str("fig4 \"quoted\" \\slash\\ \n\t")),
+            ("afp", Json::arr_f64(&[0.0, 0.5, 1.0, -3.25])),
+            ("n", Json::num(8.0)),
+            ("deep", Json::Arr(vec![Json::Arr(vec![Json::obj(vec![("k", Json::Null)])])])),
+            ("ok", Json::Bool(true)),
+        ]);
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        assert_eq!(Json::parse(&j.to_pretty()).unwrap(), j);
+    }
+
+    #[test]
+    fn parse_escapes_and_unicode() {
+        let j = Json::parse(r#""a\"b\\c\/d\b\f\n\r\t\u00e9\u2603\ud83d\ude00""#).unwrap();
+        assert_eq!(
+            j.as_str(),
+            Some("a\"b\\c/d\u{8}\u{c}\n\r\té☃😀")
+        );
+        // Raw (non-escaped) UTF-8 passes through, and re-serializing then
+        // re-parsing is the identity.
+        let raw = Json::parse("\"héllo ☃ 😀\"").unwrap();
+        assert_eq!(Json::parse(&raw.to_string()).unwrap(), raw);
+        // Control characters written as \u00XX round-trip.
+        let ctl = Json::str("\u{1}\u{8}\u{1f}");
+        assert_eq!(Json::parse(&ctl.to_string()).unwrap(), ctl);
+    }
+
+    #[test]
+    fn parse_integer_vs_float_formatting() {
+        // Integer-valued floats normalize to integer form.
+        assert_eq!(Json::parse("1.0").unwrap().to_string(), "1");
+        assert_eq!(Json::parse("1e3").unwrap().to_string(), "1000");
+        assert_eq!(Json::parse("-0.5").unwrap().to_string(), "-0.5");
+        // Very large magnitudes keep the float path.
+        let big = Json::parse("1e20").unwrap();
+        assert_eq!(big.as_f64(), Some(1e20));
+        assert_eq!(Json::parse(&big.to_string()).unwrap(), big);
+        // f64 round-trip of an awkward fraction.
+        let x = Json::Num(0.1 + 0.2);
+        assert_eq!(Json::parse(&x.to_string()).unwrap(), x);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in [
+            "",
+            "{",
+            "[1, 2",
+            "{\"a\" 1}",
+            "{\"a\": 1,}",
+            "[1,]",
+            "\"unterminated",
+            "\"bad \\x escape\"",
+            "\"\\ud800 lone\"",
+            "\"\\udc00 lone\"",
+            "\"\\u12g4\"",
+            "nul",
+            "1.2.3",
+            "01a",
+            "[1] trailing",
+            "{\"a\": 1} {}",
+            "\u{1}",
+        ] {
+            assert!(Json::parse(bad).is_err(), "should reject {bad:?}");
+        }
+        // Keys must be strings.
+        assert!(Json::parse("{1: 2}").is_err());
+    }
+
+    #[test]
+    fn parse_accepts_whitespace_and_empties() {
+        assert_eq!(Json::parse(" \t\r\n{ } ").unwrap(), Json::Obj(vec![]));
+        assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(Json::parse(" null ").unwrap(), Json::Null);
     }
 }

@@ -4,3 +4,4 @@
 pub mod cli;
 pub mod json;
 pub mod stats;
+pub mod values;

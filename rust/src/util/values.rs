@@ -1,0 +1,85 @@
+//! Shared numeric value-list syntax: `a,b,c` or `lo:hi:step`.
+//!
+//! Used by the `wdm-arbiter sweep` CLI flags (`--values`, `--tr`) and by
+//! job files ([`crate::api::JobRequest`] accepts the same string forms),
+//! so both surfaces expand ranges identically.
+
+/// Parse `a,b,c` or `lo:hi:step` into a value list.
+///
+/// Range expansion generates `lo + i·step` from a precomputed count rather
+/// than accumulating `x += step`, so long ranges don't drift: `0:100:0.1`
+/// yields exactly 1001 points and the last one is within one ulp-scale
+/// error of 100, never a dropped or duplicated endpoint.
+pub fn parse_values(s: &str) -> Result<Vec<f64>, String> {
+    if s.contains(':') {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 3 {
+            return Err(format!("range syntax is lo:hi:step, got '{s}'"));
+        }
+        let lo: f64 = parse_num(parts[0])?;
+        let hi: f64 = parse_num(parts[1])?;
+        let step: f64 = parse_num(parts[2])?;
+        if step <= 0.0 || !step.is_finite() || !lo.is_finite() || !hi.is_finite() || hi < lo {
+            return Err(format!("range needs step > 0 and hi >= lo, got '{s}'"));
+        }
+        // Tolerate float error in the division so an intended endpoint is
+        // kept (1e-6 of a step), but never invent a point past hi.
+        let steps = ((hi - lo) / step + 1e-6).floor();
+        if steps >= 10_000_000.0 {
+            return Err(format!("range '{s}' expands past 10M points"));
+        }
+        let count = steps as usize + 1;
+        Ok((0..count).map(|i| lo + i as f64 * step).collect())
+    } else {
+        s.split(',').map(|t| parse_num(t.trim())).collect()
+    }
+}
+
+fn parse_num(t: &str) -> Result<f64, String> {
+    t.parse::<f64>()
+        .map_err(|_| format!("expected a number, got '{t}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_lists() {
+        assert_eq!(parse_values("1,2.5, -3").unwrap(), vec![1.0, 2.5, -3.0]);
+        assert_eq!(parse_values("7").unwrap(), vec![7.0]);
+        assert!(parse_values("1,x").is_err());
+    }
+
+    #[test]
+    fn parses_ranges() {
+        assert_eq!(parse_values("0:2:1").unwrap(), vec![0.0, 1.0, 2.0]);
+        assert_eq!(parse_values("1.12:1.12:0.5").unwrap(), vec![1.12]);
+        // hi not on the lattice: stop below it.
+        assert_eq!(parse_values("0:0.95:0.3").unwrap().len(), 4);
+    }
+
+    #[test]
+    fn long_ranges_do_not_drift() {
+        // The seed's `x += step` loop accumulates error; `0:100:0.1` could
+        // gain or lose the endpoint depending on rounding direction.
+        let v = parse_values("0:100:0.1").unwrap();
+        assert_eq!(v.len(), 1001);
+        assert!((v[1000] - 100.0).abs() < 1e-9, "endpoint {}", v[1000]);
+        assert!((v[500] - 50.0).abs() < 1e-9);
+        // Paper-style sweep: 0.28:8.96:0.28 has exactly 32 columns.
+        let r = parse_values("0.28:8.96:0.28").unwrap();
+        assert_eq!(r.len(), 32);
+        assert!((r[31] - 8.96).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_bad_ranges() {
+        assert!(parse_values("0:1").is_err());
+        assert!(parse_values("0:1:0").is_err());
+        assert!(parse_values("0:1:-0.1").is_err());
+        assert!(parse_values("2:1:0.5").is_err());
+        assert!(parse_values("0:1e9:0.0001").is_err()); // > 10M points
+        assert!(parse_values("a:b:c").is_err());
+    }
+}

@@ -1,0 +1,85 @@
+//! Job-API acceptance contract: every CLI invocation maps to a
+//! [`JobRequest`] that serializes to JSON and parses back identical, and
+//! the TOML job-file form agrees with the JSON form.
+
+use wdm_arbiter::api::cli::job_from_args;
+use wdm_arbiter::api::JobRequest;
+use wdm_arbiter::util::cli::Args;
+
+fn args(s: &[&str]) -> Args {
+    let v: Vec<String> = s.iter().map(|x| x.to_string()).collect();
+    Args::parse(&v, &["fast", "cases", "permuted", "help"]).unwrap()
+}
+
+#[test]
+fn every_cli_invocation_round_trips_through_json() {
+    let invocations: Vec<Vec<&str>> = vec![
+        // run — plain, fully-flagged, xla backend, and `run all`.
+        vec!["run", "table1"],
+        vec![
+            "run", "fig4", "--out", "out", "--fast", "--lasers", "4", "--rows", "5", "--seed",
+            "7", "--threads", "2", "--backend", "rust",
+        ],
+        vec!["run", "fig14", "--backend", "xla"],
+        vec!["run", "all", "--fast", "--out", "results"],
+        // sweep — list and range values, every measure kind, config flags.
+        vec![
+            "sweep", "--axis", "ring-local", "--values", "0.28:8.96:0.56", "--measure",
+            "afp:ltc,cafp:vt-rs-ssm", "--fast",
+        ],
+        vec![
+            "sweep", "--axis", "grid-offset", "--values", "0,5,10", "--tr", "2:9:1",
+            "--measure", "min-tr:lta,alias-min-tr:ltc", "--config", "cfg.toml", "--permuted",
+            "--seed", "3",
+        ],
+        vec!["sweep", "--axis", "channels", "--values", "4,8,16"],
+        vec!["sweep", "--axis", "permuted", "--values", "0,1", "--measure", "cafp:seq"],
+        vec!["sweep", "--axis", "fsr-mean", "--values", "7:11:0.5", "--measure", "min-tr:ltc"],
+        // arbitrate — defaults, every flag, each scheme alias.
+        vec!["arbitrate"],
+        vec!["arbitrate", "--scheme", "rs-ssm", "--tr", "5.5", "--seed", "123", "--permuted"],
+        vec!["arbitrate", "--scheme", "seq", "--config", "cfg.toml"],
+        // show-config — plain and with cases + config.
+        vec!["show-config"],
+        vec!["show-config", "--cases", "--config", "cfg.toml", "--permuted"],
+    ];
+    for argv in invocations {
+        let job = job_from_args(&args(&argv)).unwrap_or_else(|e| panic!("{argv:?}: {e}"));
+        let json = job.to_json_string();
+        let back = JobRequest::from_json_str(&json)
+            .unwrap_or_else(|e| panic!("{argv:?}: {e} while re-parsing {json}"));
+        assert_eq!(back, job, "{argv:?} failed to round-trip through {json}");
+    }
+}
+
+#[test]
+fn run_all_maps_to_a_batch_that_round_trips() {
+    let job = job_from_args(&args(&["run", "all", "--fast", "--seed", "11"])).unwrap();
+    let JobRequest::Batch { jobs } = &job else { panic!("run all must map to a batch") };
+    assert!(jobs.len() >= 10, "all paper experiments present");
+    let back = JobRequest::from_json_str(&job.to_json_string()).unwrap();
+    assert_eq!(back, job);
+}
+
+#[test]
+fn toml_job_file_agrees_with_cli_mapping() {
+    let from_cli = job_from_args(&args(&[
+        "sweep", "--axis", "ring-local", "--values", "1.12,2.24", "--tr", "2,6", "--measure",
+        "afp:ltc", "--fast",
+    ]))
+    .unwrap();
+    let from_toml = JobRequest::from_toml(
+        r#"
+[job]
+type = "sweep"
+axis = "ring-local"
+values = [1.12, 2.24]
+tr = [2.0, 6.0]
+measures = "afp:ltc"
+[job.options]
+fast = true
+"#,
+    )
+    .unwrap();
+    assert_eq!(from_cli, from_toml);
+}

@@ -132,6 +132,161 @@ fn unknown_experiment_fails_cleanly() {
     assert!(err.contains("unknown experiment"));
 }
 
+/// Acceptance: a serve session where the second, overlapping sweep is
+/// served from the population cache (no resampling) and says so.
+#[test]
+fn serve_session_reports_cache_hits_on_overlapping_sweeps() {
+    use std::io::Write as _;
+    use std::process::Stdio;
+    let dir = std::env::temp_dir().join(format!("wdm-e2e-serve-{}", std::process::id()));
+    let mut child = bin()
+        .arg("serve")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn serve");
+    let mut stdin = child.stdin.take().unwrap();
+    let out = dir.display();
+    // Same axis/values/population shape/seed; different measures. The
+    // second job must reuse both column populations.
+    writeln!(
+        stdin,
+        r#"{{"type":"sweep","axis":"ring-local","values":[1.12,2.24],"tr":[2,6],"measures":["afp:ltc"],"options":{{"fast":true,"lasers":3,"rows":3,"out":"{out}"}}}}"#
+    )
+    .unwrap();
+    writeln!(
+        stdin,
+        r#"{{"type":"sweep","axis":"ring-local","values":[1.12,2.24],"tr":[2,6],"measures":["cafp:vt-rs-ssm"],"options":{{"fast":true,"lasers":3,"rows":3,"out":"{out}"}}}}"#
+    )
+    .unwrap();
+    drop(stdin); // EOF ends the session
+    let output = child.wait_with_output().expect("serve exits");
+    assert!(output.status.success(), "{}", String::from_utf8_lossy(&output.stderr));
+    let text = String::from_utf8_lossy(&output.stdout);
+    let responses: Vec<&str> =
+        text.lines().filter(|l| l.contains("\"type\":\"response\"")).collect();
+    assert_eq!(responses.len(), 2, "one response line per job:\n{text}");
+    assert!(responses[0].contains("\"ok\":true"), "{}", responses[0]);
+    assert!(responses[0].contains("\"hits\":0"), "{}", responses[0]);
+    assert!(responses[0].contains("\"misses\":2"), "{}", responses[0]);
+    assert!(responses[1].contains("\"ok\":true"), "{}", responses[1]);
+    assert!(responses[1].contains("\"hits\":2"), "{}", responses[1]);
+    assert!(responses[1].contains("\"misses\":0"), "{}", responses[1]);
+    // Progress events are JSON lines too.
+    assert!(text.lines().any(|l| l.contains("\"type\":\"event\"")), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_rejects_bad_request_lines_without_dying() {
+    use std::io::Write as _;
+    use std::process::Stdio;
+    let mut child = bin()
+        .arg("serve")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn serve");
+    let mut stdin = child.stdin.take().unwrap();
+    writeln!(stdin, "this is not json").unwrap();
+    writeln!(stdin, r#"{{"type":"show-config"}}"#).unwrap();
+    drop(stdin);
+    let output = child.wait_with_output().expect("serve exits");
+    assert!(output.status.success());
+    let text = String::from_utf8_lossy(&output.stdout);
+    let responses: Vec<&str> =
+        text.lines().filter(|l| l.contains("\"type\":\"response\"")).collect();
+    assert_eq!(responses.len(), 2, "{text}");
+    assert!(responses[0].contains("\"ok\":false"), "{}", responses[0]);
+    assert!(responses[1].contains("\"ok\":true"), "{}", responses[1]);
+}
+
+#[test]
+fn batch_runs_job_file_and_keeps_going_past_failures() {
+    let dir = std::env::temp_dir().join(format!("wdm-e2e-batch-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let jobs_path = dir.join("jobs.json");
+    std::fs::write(
+        &jobs_path,
+        format!(
+            r#"[
+  {{"type":"run","id":"table1","options":{{"out":"{0}"}}}},
+  {{"type":"run","id":"fig99"}},
+  {{"type":"show-config"}}
+]"#,
+            dir.display()
+        ),
+    )
+    .unwrap();
+    let out = bin().arg("batch").arg(&jobs_path).output().expect("run");
+    assert!(!out.status.success(), "a failing job fails the batch exit code");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Table I"), "{text}");
+    assert!(text.contains("FAIL run fig99"), "{text}");
+    assert!(text.contains("ok   show-config"), "{text}");
+    assert!(text.contains("cache:"), "{text}");
+    assert!(dir.join("table1.json").is_file(), "first job ran to completion");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn batch_accepts_toml_job_files() {
+    let dir = std::env::temp_dir().join(format!("wdm-e2e-batch-toml-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let jobs_path = dir.join("jobs.toml");
+    std::fs::write(
+        &jobs_path,
+        "[jobs.1]\ntype = \"show-config\"\n\n[jobs.2]\ntype = \"arbitrate\"\ntr = 6.0\nseed = 7\n",
+    )
+    .unwrap();
+    let out = bin().arg("batch").arg(&jobs_path).output().expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("ok   show-config"), "{text}");
+    assert!(text.contains("ok   arbitrate"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_all_writes_manifest_and_reports_backend() {
+    let dir = std::env::temp_dir().join(format!("wdm-e2e-manifest-{}", std::process::id()));
+    let out = bin()
+        .args(["run", "all", "--fast", "--lasers", "3", "--rows", "3", "--out"])
+        .arg(&dir)
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let manifest = std::fs::read_to_string(dir.join("manifest.json")).expect("manifest written");
+    assert!(manifest.contains("\"id\": \"table1\""), "{manifest}");
+    assert!(manifest.contains("\"id\": \"fig14\""), "{manifest}");
+    assert!(manifest.contains("\"failures\": 0"), "{manifest}");
+    assert!(manifest.contains("\"backend\""), "{manifest}");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("wrote"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn show_config_cases_respects_config_file() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("wdm-cases-cfg-{}.toml", std::process::id()));
+    std::fs::write(&path, "[grid]\nn_ch = 16\nspacing_nm = 2.24\n").unwrap();
+    let out = bin()
+        .args(["show-config", "--cases", "--config"])
+        .arg(&path)
+        .output()
+        .expect("run");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    // The permuted 16-channel ordering (0,8,…) proves the case table was
+    // rendered against the loaded config, not the default one.
+    assert!(text.contains("LtC-P/P"), "{text}");
+    assert!(text.contains("(0,8,"), "{text}");
+    std::fs::remove_file(path).ok();
+}
+
 #[test]
 fn seeded_runs_are_bit_identical() {
     let run = || {
