@@ -11,7 +11,8 @@ use std::time::Duration;
 use wdm_arbiter::arbiter::{distance, ideal, matching, Policy};
 use wdm_arbiter::config::SystemConfig;
 use wdm_arbiter::coordinator::sweep::{ConfigAxis, Measure, SweepSpec};
-use wdm_arbiter::coordinator::RunOptions;
+use wdm_arbiter::coordinator::{Backend, RunOptions};
+use wdm_arbiter::montecarlo::scheduler;
 use wdm_arbiter::experiments::{rlv_sweep, tr_sweep};
 use wdm_arbiter::metrics::TrialTally;
 use wdm_arbiter::model::system::SystemSampler;
@@ -195,14 +196,27 @@ fn fig14_grid_comparison() {
         fast: true,
         ..RunOptions::fast()
     };
+    let spec = SweepSpec::new("bench", cfg.clone(), ConfigAxis::RingLocalNm, rlv.clone())
+        .thresholds(trs.clone())
+        .measures(schemes.iter().map(|&s| Measure::Cafp(s)));
     let engine_structure = || -> f64 {
         let ideal_eval = RustIdeal { threads: 1 };
         let engine = TrialEngine::new(&ideal_eval, 1);
-        let outs = SweepSpec::new("bench", cfg.clone(), ConfigAxis::RingLocalNm, rlv.clone())
-            .thresholds(trs.clone())
-            .measures(schemes.iter().map(|&s| Measure::Cafp(s)))
-            .run(&engine, &opts);
+        let outs = spec.run(&engine, &opts);
         outs.into_iter()
+            .map(|o| o.into_shmoo().cells.iter().sum::<f64>())
+            .sum()
+    };
+
+    // (c) Column-parallel scheduler at 8 workers: same spec, same seeds —
+    // the determinism suite pins that the panels are byte-identical; here
+    // we time the wall-clock win (PR-3 acceptance: "measurably faster").
+    let sched_opts = RunOptions { threads: 8, ..opts.clone() };
+    let scheduler_structure = || -> f64 {
+        let run = scheduler::run_sweep(&spec, &sched_opts, &Backend::Rust, None, &mut |_| {})
+            .expect("bench sweep");
+        run.outputs
+            .into_iter()
             .map(|o| o.into_shmoo().cells.iter().sum::<f64>())
             .sum()
     };
@@ -219,16 +233,21 @@ fn fig14_grid_comparison() {
 
     let t_seed = time_min(&seed_structure);
     let t_engine = time_min(&engine_structure);
+    let t_sched = time_min(&scheduler_structure);
     let cells = schemes.len() * rlv.len() * trs.len();
     println!(
-        "\nfig14_grid ({} cells x {} trials, 1 thread):\n  \
+        "\nfig14_grid ({} cells x {} trials):\n  \
          seed structure (per-cell sample + ideal): {:>8.1} ms\n  \
-         trial-engine (per-column reuse):          {:>8.1} ms\n  \
-         speedup: {:.1}x (acceptance floor: 3x)",
+         trial-engine, 1 thread (column reuse):    {:>8.1} ms\n  \
+         scheduler, 8 column workers:              {:>8.1} ms\n  \
+         engine speedup: {:.1}x (acceptance floor: 3x)\n  \
+         column-parallel speedup over 1-thread engine: {:.1}x",
         cells,
         n_lasers * n_rows,
         t_seed * 1e3,
         t_engine * 1e3,
-        t_seed / t_engine
+        t_sched * 1e3,
+        t_seed / t_engine,
+        t_engine / t_sched
     );
 }

@@ -44,7 +44,8 @@ fn json_safe_seed(seed: u64) -> Result<u64, String> {
 }
 
 /// The shared execution options (`--out --fast --lasers --rows --seed
-/// --threads --backend`), captured only when explicitly given.
+/// --threads --backend --ci --min-trials --max-trials --inflight`),
+/// captured only when explicitly given.
 pub fn options_from_args(args: &Args) -> Result<JobOptions, String> {
     let mut o = JobOptions { fast: args.flag("fast"), ..JobOptions::default() };
     o.out = args.get("out").map(str::to_string);
@@ -55,6 +56,12 @@ pub fn options_from_args(args: &Args) -> Result<JobOptions, String> {
     if let Some(b) = args.get("backend") {
         o.backend = Some(Backend::by_name(b).ok_or_else(|| format!("unknown backend '{b}'"))?);
     }
+    o.ci = parse_opt::<f64>(args, "ci")?;
+    o.min_trials = parse_opt::<usize>(args, "min-trials")?;
+    o.max_trials = parse_opt::<usize>(args, "max-trials")?;
+    o.inflight = parse_opt::<usize>(args, "inflight")?;
+    // Fail bad adaptive combinations at argv time, not mid-sweep.
+    o.adaptive()?;
     Ok(o)
 }
 
@@ -83,6 +90,15 @@ fn run_from_args(args: &Args) -> Result<JobRequest, String> {
         .get(1)
         .ok_or_else(|| "run: expected an experiment id (see `list`)".to_string())?;
     let options = options_from_args(args)?;
+    // Adaptive allocation is a sweep knob; paper experiments always
+    // evaluate full populations. Silently ignoring it would mislead.
+    if options.ci.is_some() || options.min_trials.is_some() || options.max_trials.is_some() {
+        return Err(
+            "run: --ci/--min-trials/--max-trials apply to `sweep` only \
+             (experiments always evaluate full populations)"
+                .to_string(),
+        );
+    }
     if target == "all" {
         let jobs = all_experiments()
             .iter()
@@ -191,6 +207,41 @@ mod tests {
                 },
             }
         );
+    }
+
+    #[test]
+    fn adaptive_flags_map_and_validate() {
+        let job = job_from_args(&argv(&[
+            "sweep", "--axis", "ring-local", "--values", "1.12,2.24", "--tr", "2,6",
+            "--measure", "cafp:vt-rs-ssm", "--ci", "0.01", "--min-trials", "100",
+            "--max-trials", "5000", "--inflight", "2",
+        ]))
+        .unwrap();
+        let JobRequest::Sweep { options, .. } = job else { panic!("expected sweep") };
+        assert_eq!(options.ci, Some(0.01));
+        assert_eq!(options.min_trials, Some(100));
+        assert_eq!(options.max_trials, Some(5000));
+        assert_eq!(options.inflight, Some(2));
+        // Bad combinations fail at argv time.
+        assert!(job_from_args(&argv(&[
+            "sweep", "--axis", "ring-local", "--values", "1", "--ci", "2.0",
+        ]))
+        .is_err());
+        // Sweep-only knobs are rejected on `run` instead of silently
+        // ignored (--inflight stays valid: experiments use the scheduler).
+        assert!(job_from_args(&argv(&["run", "fig4", "--ci", "0.1"])).is_err());
+        assert!(job_from_args(&argv(&["run", "all", "--max-trials", "100", "--ci", "0.1"]))
+            .is_err());
+        assert!(job_from_args(&argv(&["run", "fig4", "--inflight", "2"])).is_ok());
+        assert!(job_from_args(&argv(&[
+            "sweep", "--axis", "ring-local", "--values", "1", "--min-trials", "10",
+        ]))
+        .is_err());
+        assert!(job_from_args(&argv(&[
+            "sweep", "--axis", "ring-local", "--values", "1", "--ci", "0.1",
+            "--min-trials", "100", "--max-trials", "10",
+        ]))
+        .is_err());
     }
 
     #[test]

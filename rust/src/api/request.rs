@@ -13,7 +13,7 @@ use crate::config::presets::system_config_from_toml;
 use crate::config::toml::TomlDoc;
 use crate::config::SystemConfig;
 use crate::coordinator::sweep::{ConfigAxis, Measure};
-use crate::coordinator::{Backend, RunOptions};
+use crate::coordinator::{AdaptiveCfg, Backend, RunOptions};
 use crate::oblivious::Scheme;
 use crate::util::json::Json;
 use crate::util::values::parse_values;
@@ -37,6 +37,17 @@ pub struct JobOptions {
     pub threads: Option<usize>,
     /// Ideal-model backend (`--backend`).
     pub backend: Option<Backend>,
+    /// Adaptive trial allocation: target 95 % Wilson-interval width on
+    /// AFP/CAFP cells (`--ci`). Sweep jobs only.
+    pub ci: Option<f64>,
+    /// Floor on trials per cell before `--ci` may stop (`--min-trials`).
+    pub min_trials: Option<usize>,
+    /// Ceiling on trials per cell under `--ci` (`--max-trials`; clamped to
+    /// the population size).
+    pub max_trials: Option<usize>,
+    /// Cap on concurrently in-flight sweep columns (`--inflight`,
+    /// 0 = one per worker thread). Bounds resident populations.
+    pub inflight: Option<usize>,
 }
 
 impl JobOptions {
@@ -62,7 +73,37 @@ impl JobOptions {
         if let Some(b) = self.backend {
             o.backend = b;
         }
+        if let Some(n) = self.inflight {
+            o.max_inflight = n;
+        }
+        // `ci` is resolved separately (`Self::adaptive`) because it needs
+        // validation and applies to sweep jobs only.
         o
+    }
+
+    /// Resolve the adaptive-allocation knobs into an [`AdaptiveCfg`].
+    /// `min_trials`/`max_trials` without `ci` is an error (they gate the
+    /// adaptive stop rule, nothing else).
+    pub fn adaptive(&self) -> Result<Option<AdaptiveCfg>, String> {
+        let Some(width) = self.ci else {
+            if self.min_trials.is_some() || self.max_trials.is_some() {
+                return Err(
+                    "options: min_trials/max_trials only apply together with ci".to_string()
+                );
+            }
+            return Ok(None);
+        };
+        if !(width > 0.0 && width < 1.0) {
+            return Err(format!("options.ci: interval width must be in (0, 1), got {width}"));
+        }
+        let min_trials = self.min_trials.unwrap_or(200).max(1);
+        let max_trials = self.max_trials.unwrap_or(usize::MAX);
+        if max_trials < min_trials {
+            return Err(format!(
+                "options: max_trials ({max_trials}) below min_trials ({min_trials})"
+            ));
+        }
+        Ok(Some(AdaptiveCfg { width, min_trials, max_trials }))
     }
 
     fn to_json(&self) -> Json {
@@ -87,6 +128,18 @@ impl JobOptions {
         }
         if let Some(b) = self.backend {
             pairs.push(("backend", Json::str(b.name())));
+        }
+        if let Some(w) = self.ci {
+            pairs.push(("ci", Json::num(w)));
+        }
+        if let Some(n) = self.min_trials {
+            pairs.push(("min_trials", Json::num(n as f64)));
+        }
+        if let Some(n) = self.max_trials {
+            pairs.push(("max_trials", Json::num(n as f64)));
+        }
+        if let Some(n) = self.inflight {
+            pairs.push(("inflight", Json::num(n as f64)));
         }
         Json::obj(pairs)
     }
@@ -143,6 +196,30 @@ impl JobOptions {
                             .ok_or_else(|| format!("options.backend: unknown backend '{name}'"))?,
                     );
                 }
+                "ci" => {
+                    o.ci = Some(
+                        v.as_f64()
+                            .ok_or_else(|| "options.ci: expected a number".to_string())?,
+                    )
+                }
+                "min_trials" => {
+                    o.min_trials = Some(
+                        v.as_usize()
+                            .ok_or_else(|| "options.min_trials: expected an integer".to_string())?,
+                    )
+                }
+                "max_trials" => {
+                    o.max_trials = Some(
+                        v.as_usize()
+                            .ok_or_else(|| "options.max_trials: expected an integer".to_string())?,
+                    )
+                }
+                "inflight" => {
+                    o.inflight = Some(
+                        v.as_usize()
+                            .ok_or_else(|| "options.inflight: expected an integer".to_string())?,
+                    )
+                }
                 other => return Err(format!("options: unknown key '{other}'")),
             }
         }
@@ -196,6 +273,30 @@ impl JobOptions {
             o.backend = Some(
                 Backend::by_name(name)
                     .ok_or_else(|| format!("options.backend: unknown backend '{name}'"))?,
+            );
+        }
+        if let Some(v) = g("ci") {
+            o.ci = Some(
+                v.as_f64()
+                    .ok_or_else(|| "options.ci: expected a number".to_string())?,
+            );
+        }
+        if let Some(v) = g("min_trials") {
+            o.min_trials = Some(
+                v.as_usize()
+                    .ok_or_else(|| "options.min_trials: expected an integer".to_string())?,
+            );
+        }
+        if let Some(v) = g("max_trials") {
+            o.max_trials = Some(
+                v.as_usize()
+                    .ok_or_else(|| "options.max_trials: expected an integer".to_string())?,
+            );
+        }
+        if let Some(v) = g("inflight") {
+            o.inflight = Some(
+                v.as_usize()
+                    .ok_or_else(|| "options.inflight: expected an integer".to_string())?,
             );
         }
         Ok(o)
@@ -722,7 +823,15 @@ mod tests {
             thresholds: Some(vec![2.0, 6.0]),
             measures: vec![Measure::Afp(Policy::LtC), Measure::Cafp(Scheme::VtRsSsm)],
             config: ConfigSpec { path: None, inline_toml: None, permuted: true },
-            options: JobOptions { fast: true, lasers: Some(4), ..JobOptions::default() },
+            options: JobOptions {
+                fast: true,
+                lasers: Some(4),
+                ci: Some(0.01),
+                min_trials: Some(100),
+                max_trials: Some(10_000),
+                inflight: Some(4),
+                ..JobOptions::default()
+            },
         }
     }
 
@@ -894,6 +1003,41 @@ id = "table1"
         let JobRequest::Batch { jobs } = JobRequest::from_toml(toml).unwrap() else { panic!() };
         assert_eq!(jobs[0].label(), "a");
         assert_eq!(jobs[1].label(), "b");
+    }
+
+    #[test]
+    fn adaptive_options_resolve_and_validate() {
+        assert_eq!(JobOptions::default().adaptive(), Ok(None));
+        let o = JobOptions { ci: Some(0.01), ..JobOptions::default() };
+        assert_eq!(
+            o.adaptive(),
+            Ok(Some(AdaptiveCfg { width: 0.01, min_trials: 200, max_trials: usize::MAX }))
+        );
+        let o = JobOptions {
+            ci: Some(0.05),
+            min_trials: Some(64),
+            max_trials: Some(4096),
+            ..JobOptions::default()
+        };
+        assert_eq!(
+            o.adaptive(),
+            Ok(Some(AdaptiveCfg { width: 0.05, min_trials: 64, max_trials: 4096 }))
+        );
+        // Invalid widths / bounds / orphan knobs are rejected.
+        assert!(JobOptions { ci: Some(0.0), ..JobOptions::default() }.adaptive().is_err());
+        assert!(JobOptions { ci: Some(1.5), ..JobOptions::default() }.adaptive().is_err());
+        assert!(JobOptions { min_trials: Some(5), ..JobOptions::default() }.adaptive().is_err());
+        assert!(JobOptions {
+            ci: Some(0.1),
+            min_trials: Some(100),
+            max_trials: Some(50),
+            ..JobOptions::default()
+        }
+        .adaptive()
+        .is_err());
+        // inflight flows into RunOptions.
+        let o = JobOptions { inflight: Some(3), ..JobOptions::default() };
+        assert_eq!(o.to_run_options().max_inflight, 3);
     }
 
     #[test]

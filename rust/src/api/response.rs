@@ -2,7 +2,7 @@
 //! CLI's historical `println!` side effects. Human rendering lives in the
 //! response's `summary`; everything a program needs is in typed fields.
 
-use crate::montecarlo::CacheStats;
+use crate::montecarlo::{CacheStats, GridStats};
 use crate::util::json::Json;
 
 /// One measure's result panel (mirrors `sweep.json` panels).
@@ -11,8 +11,16 @@ pub enum Panel {
     /// Per-column scalar (min-tr / alias-min-tr measures).
     Curve { measure: String, x: Vec<f64>, y: Vec<f64> },
     /// Column × λ̄_TR grid, row-major `cells[iy * x.len() + ix]`
-    /// (AFP / CAFP measures).
-    Grid { measure: String, x: Vec<f64>, tr_nm: Vec<f64>, cells: Vec<f64> },
+    /// (AFP / CAFP measures). Adaptive (`--ci`) sweeps attach per-cell
+    /// `stats` — trials used and the 95 % Wilson interval — making the
+    /// panel statistically self-describing.
+    Grid {
+        measure: String,
+        x: Vec<f64>,
+        tr_nm: Vec<f64>,
+        cells: Vec<f64>,
+        stats: Option<GridStats>,
+    },
 }
 
 impl Panel {
@@ -29,12 +37,20 @@ impl Panel {
                 ("x", Json::arr_f64(x)),
                 ("y", Json::arr_f64(y)),
             ]),
-            Panel::Grid { measure, x, tr_nm, cells } => Json::obj(vec![
-                ("measure", Json::str(measure.clone())),
-                ("x", Json::arr_f64(x)),
-                ("tr_nm", Json::arr_f64(tr_nm)),
-                ("cells", Json::arr_f64(cells)),
-            ]),
+            Panel::Grid { measure, x, tr_nm, cells, stats } => {
+                let mut pairs = vec![
+                    ("measure", Json::str(measure.clone())),
+                    ("x", Json::arr_f64(x)),
+                    ("tr_nm", Json::arr_f64(tr_nm)),
+                    ("cells", Json::arr_f64(cells)),
+                ];
+                if let Some(s) = stats {
+                    pairs.push(("n_trials", Json::arr_usize(&s.n_trials)));
+                    pairs.push(("ci_lo", Json::arr_f64(&s.ci_lo)));
+                    pairs.push(("ci_hi", Json::arr_f64(&s.ci_hi)));
+                }
+                Json::obj(pairs)
+            }
         }
     }
 }
@@ -45,6 +61,10 @@ impl Panel {
 pub enum JobEvent {
     /// Free-form progress note.
     Progress { message: String },
+    /// One sweep column finished (streamed live while other columns are
+    /// still running on the scheduler). `n_trials` is the trials actually
+    /// evaluated — below the population size when `--ci` stopped early.
+    ColumnDone { ix: usize, n_cols: usize, value: f64, n_trials: usize },
     /// One sweep panel finished (full data arrives in the response).
     PanelReady { measure: String },
     ExperimentStarted { id: String },
@@ -60,6 +80,13 @@ impl JobEvent {
             JobEvent::Progress { message } => {
                 pairs.push(("event", Json::str("progress")));
                 pairs.push(("message", Json::str(message.clone())));
+            }
+            JobEvent::ColumnDone { ix, n_cols, value, n_trials } => {
+                pairs.push(("event", Json::str("column")));
+                pairs.push(("ix", Json::num(*ix as f64)));
+                pairs.push(("of", Json::num(*n_cols as f64)));
+                pairs.push(("value", Json::num(*value)));
+                pairs.push(("n_trials", Json::num(*n_trials as f64)));
             }
             JobEvent::PanelReady { measure } => {
                 pairs.push(("event", Json::str("panel")));
@@ -216,6 +243,45 @@ mod tests {
         let j = Json::parse(&r.to_json_string()).unwrap();
         assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
         assert!(j.get("error").unwrap().as_str().unwrap().contains("fig99"));
+    }
+
+    #[test]
+    fn grid_panel_serializes_adaptive_stats_when_present() {
+        let bare = Panel::Grid {
+            measure: "cafp_vt-rs-ssm".to_string(),
+            x: vec![1.0],
+            tr_nm: vec![2.0],
+            cells: vec![0.25],
+            stats: None,
+        };
+        let j = Json::parse(&bare.to_json().to_string()).unwrap();
+        assert!(j.get("n_trials").is_none(), "no stats key without --ci");
+
+        let with = Panel::Grid {
+            measure: "cafp_vt-rs-ssm".to_string(),
+            x: vec![1.0],
+            tr_nm: vec![2.0],
+            cells: vec![0.25],
+            stats: Some(GridStats {
+                n_trials: vec![128],
+                ci_lo: vec![0.18],
+                ci_hi: vec![0.33],
+            }),
+        };
+        let j = Json::parse(&with.to_json().to_string()).unwrap();
+        assert_eq!(j.get("n_trials").unwrap().as_arr().unwrap()[0].as_usize(), Some(128));
+        assert_eq!(j.get("ci_lo").unwrap().as_arr().unwrap()[0].as_f64(), Some(0.18));
+        assert_eq!(j.get("ci_hi").unwrap().as_arr().unwrap()[0].as_f64(), Some(0.33));
+    }
+
+    #[test]
+    fn column_done_event_serializes() {
+        let e = JobEvent::ColumnDone { ix: 3, n_cols: 8, value: 2.24, n_trials: 400 };
+        let j = Json::parse(&e.to_json().to_string()).unwrap();
+        assert_eq!(j.get("event").unwrap().as_str(), Some("column"));
+        assert_eq!(j.get("ix").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("of").unwrap().as_usize(), Some(8));
+        assert_eq!(j.get("n_trials").unwrap().as_usize(), Some(400));
     }
 
     #[test]

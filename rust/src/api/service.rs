@@ -1,9 +1,10 @@
 //! [`ArbiterService`]: the long-lived execution engine behind the job API.
 //!
-//! One service owns one default ideal-model evaluator and one
-//! [`PopulationCache`]; every sweep job routes its columns through the
-//! cache, so a serve session (or a batch) that revisits a column reuses
-//! the sampled population and its ideal evaluation instead of recomputing.
+//! One service owns one default backend choice and one (thread-safe)
+//! [`PopulationCache`]; every sweep job runs its columns on the parallel
+//! scheduler with the cache shared across column workers, so a serve
+//! session (or a batch) that revisits a column reuses the sampled
+//! population and its ideal evaluation instead of recomputing.
 //! Column seeds derive from the column *index* (CLI seed-stream parity),
 //! so a column recurs when config, shape, base seed, axis value **and
 //! position** all match: the same sweep re-submitted, a different measure
@@ -18,42 +19,39 @@ use crate::config::presets::table2_cases;
 use crate::config::SystemConfig;
 use crate::coordinator::report::{ascii_heatmap, curve_table, write_csv_series, write_csv_shmoo};
 use crate::coordinator::sweep::{ConfigAxis, Measure, SweepOutput, SweepSpec};
-use crate::coordinator::{run_experiment_quiet, Backend, RunOptions};
+use crate::coordinator::{run_experiment_quiet, Backend};
 use crate::experiments::{by_id, tr_sweep};
 use crate::model::SystemUnderTest;
-use crate::montecarlo::{IdealEvaluator, PopulationCache, TrialEngine};
+use crate::montecarlo::{self, PopulationCache};
 use crate::oblivious::{run_scheme, Scheme};
 use crate::rng::Rng;
 use crate::util::json::Json;
 
-/// Long-lived job executor: owns the default backend evaluator and the
+/// Long-lived job executor: owns the default backend choice and the
 /// cross-request [`PopulationCache`]. Submit any number of
 /// [`JobRequest`]s; the service never panics on bad input — errors come
-/// back inside the [`JobResponse`].
+/// back inside the [`JobResponse`]. Sweep jobs run their columns on the
+/// parallel scheduler ([`crate::montecarlo::scheduler`]); each column
+/// worker builds its own evaluator from the backend tag, and all workers
+/// share (and coalesce on) the service's population cache.
 pub struct ArbiterService {
     backend: Backend,
     threads: usize,
-    evaluator: Box<dyn IdealEvaluator>,
     cache: PopulationCache,
 }
 
 impl ArbiterService {
-    /// `threads` is the default worker budget for the owned evaluator
-    /// (0 = all cores); jobs may override both via their options.
+    /// `threads` is the default worker budget for jobs that don't set
+    /// their own (0 = all cores).
     pub fn new(backend: Backend, threads: usize) -> Self {
-        Self {
-            backend,
-            threads,
-            evaluator: backend.evaluator(threads),
-            cache: PopulationCache::new(),
-        }
+        Self { backend, threads, cache: PopulationCache::new() }
     }
 
     pub fn backend(&self) -> Backend {
         self.backend
     }
 
-    /// Default worker budget the owned evaluator was built with.
+    /// Default worker budget for submitted jobs.
     pub fn threads(&self) -> usize {
         self.threads
     }
@@ -89,30 +87,21 @@ impl ArbiterService {
         resp
     }
 
-    /// The evaluator for a job: the owned one, or a transient instance
-    /// when the job requests a different backend. Both compute the same
-    /// ideal model by contract, so they safely share the population cache.
-    fn evaluator_for<'a>(
-        &'a self,
-        options: &JobOptions,
-        opts: &RunOptions,
-        transient: &'a mut Option<Box<dyn IdealEvaluator>>,
-    ) -> &'a dyn IdealEvaluator {
-        match options.backend {
-            Some(b) if b != self.backend => {
-                *transient = Some(b.evaluator(opts.threads));
-                transient.as_ref().expect("just set").as_ref()
-            }
-            _ => self.evaluator.as_ref(),
-        }
-    }
-
     fn run_job(
         &self,
         id: &str,
         options: &JobOptions,
         sink: &mut dyn FnMut(JobEvent),
     ) -> Result<JobResponse, String> {
+        // Adaptive allocation is a sweep knob; experiments always evaluate
+        // full populations, so accepting it here would mislead.
+        if options.ci.is_some() || options.min_trials.is_some() || options.max_trials.is_some() {
+            return Err(
+                "run: ci/min_trials/max_trials apply to sweep jobs only \
+                 (experiments always evaluate full populations)"
+                    .to_string(),
+            );
+        }
         let opts = options.to_run_options();
         let exp = by_id(id).ok_or_else(|| format!("unknown experiment '{id}' (see `list`)"))?;
         sink(JobEvent::ExperimentStarted { id: id.to_string() });
@@ -150,7 +139,12 @@ impl ArbiterService {
         options: &JobOptions,
         sink: &mut dyn FnMut(JobEvent),
     ) -> Result<JobResponse, String> {
-        let opts = options.to_run_options();
+        let mut opts = options.to_run_options();
+        opts.ci = options.adaptive()?;
+        if options.threads.is_none() {
+            // Inherit the service-level worker budget (`serve --threads T`).
+            opts.threads = self.threads;
+        }
         let cfg = config.load()?;
         if values.is_empty() {
             return Err("sweep: needs at least one axis value".to_string());
@@ -158,9 +152,7 @@ impl ArbiterService {
         if measures.is_empty() {
             return Err("sweep: needs at least one measure".to_string());
         }
-        let mut transient = None;
-        let eval = self.evaluator_for(options, &opts, &mut transient);
-        let engine = TrialEngine::new(eval, opts.threads).with_cache(&self.cache);
+        let backend_tag = options.backend.unwrap_or(self.backend);
 
         let needs_tr = measures
             .iter()
@@ -186,13 +178,29 @@ impl ArbiterService {
         let spec = SweepSpec::new("sweep", cfg, axis, values.to_vec())
             .thresholds(tr_values)
             .measures(measures.iter().copied());
-        let outs = spec.run(&engine, &opts);
+        // Column-parallel scheduler: workers share the service's population
+        // cache (coalescing, so concurrent identical columns sample once).
+        // Adaptive (--ci) sweeps bypass the cache — a truncated population
+        // must never be memoized as a full one.
+        let adaptive = opts.ci.is_some();
+        let cache = if adaptive { None } else { Some(&self.cache) };
+        let mut on_column = |p: montecarlo::ColumnProgress| {
+            sink(JobEvent::ColumnDone {
+                ix: p.ix,
+                n_cols: p.n_cols,
+                value: p.value,
+                n_trials: p.n_trials,
+            });
+        };
+        let run = montecarlo::scheduler::run_sweep(&spec, &opts, &backend_tag, cache, &mut on_column)?;
+        let outs = run.outputs;
+        let cell_stats = run.stats;
 
         std::fs::create_dir_all(&opts.out_dir).map_err(|e| e.to_string())?;
         let mut summary = String::new();
         let mut files = Vec::new();
         let mut panels = Vec::new();
-        for (m, out) in measures.iter().zip(outs) {
+        for (mi, (m, out)) in measures.iter().zip(outs).enumerate() {
             let slug = m.slug();
             match out {
                 SweepOutput::Curve(series) => {
@@ -219,6 +227,7 @@ impl ArbiterService {
                         x: shmoo.x,
                         tr_nm: shmoo.y,
                         cells: shmoo.cells,
+                        stats: cell_stats.as_ref().and_then(|s| s[mi].clone()),
                     });
                 }
             }
@@ -230,16 +239,26 @@ impl ArbiterService {
         let uses_ideal = measures
             .iter()
             .any(|m| !matches!(m, Measure::MinTrAliasAware(_)));
-        let backend = if uses_ideal { eval.name() } else { "none" };
+        let backend = if uses_ideal { run.backend } else { "none" };
         // `data` carries the sweep metadata only; the panel arrays live in
         // the response's `panels` field (no double payload on the wire).
         // The sweep.json file keeps the full PR-1 schema: metadata + panels.
-        let meta = vec![
+        let mut meta = vec![
             ("axis", Json::str(axis.name())),
             ("values", Json::arr_f64(values)),
             ("backend", Json::str(backend)),
             ("trials_per_point", Json::num(opts.trials_per_point() as f64)),
         ];
+        if let Some(ad) = &opts.ci {
+            meta.push((
+                "ci",
+                Json::obj(vec![
+                    ("width", Json::num(ad.width)),
+                    ("min_trials", Json::num(ad.min_trials.min(opts.trials_per_point()) as f64)),
+                    ("max_trials", Json::num(ad.max_trials.min(opts.trials_per_point()) as f64)),
+                ]),
+            ));
+        }
         let mut file_pairs = meta.clone();
         file_pairs.push(("panels", Json::Arr(panels.iter().map(Panel::to_json).collect())));
         let json_path = opts.out_dir.join("sweep.json");
@@ -518,6 +537,60 @@ mod tests {
         assert_eq!(json.get("axis").unwrap().as_str(), Some("ring-local"));
         assert_eq!(json.get("backend").unwrap().as_str(), Some("rust-f64"));
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn adaptive_sweep_records_trials_and_intervals() {
+        let dir = test_dir("svc-ci");
+        let service = ArbiterService::new(Backend::Rust, 2);
+        let job = JobRequest::from_json_str(&format!(
+            r#"{{"type":"sweep","axis":"ring-local","values":[1.12,2.24],"tr":[2,6],
+                "measures":"cafp:vt-rs-ssm",
+                "options":{{"lasers":8,"rows":8,"ci":0.5,"min_trials":16,"out":"{}"}}}}"#,
+            dir.display()
+        ))
+        .unwrap();
+        let mut events = Vec::new();
+        let resp = service.submit_with(&job, &mut |e| events.push(e));
+        assert!(resp.ok, "{:?}", resp.error);
+        // Adaptive sweeps bypass the population cache by design.
+        assert_eq!(resp.cache.hits + resp.cache.misses, 0);
+        let Panel::Grid { stats: Some(stats), cells, .. } = &resp.panels[0] else {
+            panic!("adaptive sweep must attach per-cell stats")
+        };
+        assert_eq!(stats.n_trials.len(), cells.len());
+        for (i, &n) in stats.n_trials.iter().enumerate() {
+            assert!((16..=64).contains(&n), "min_trials <= {n} <= population");
+            assert!(stats.ci_lo[i] <= stats.ci_hi[i]);
+        }
+        // Per-column progress streamed while the sweep ran.
+        let cols = events
+            .iter()
+            .filter(|e| matches!(e, JobEvent::ColumnDone { .. }))
+            .count();
+        assert_eq!(cols, 2, "one event per column");
+        // sweep.json is statistically self-describing.
+        let json =
+            Json::parse(&std::fs::read_to_string(dir.join("sweep.json")).unwrap()).unwrap();
+        assert!(json.get("ci").is_some(), "adaptive metadata recorded");
+        let panel = &json.get("panels").unwrap().as_arr().unwrap()[0];
+        assert!(panel.get("n_trials").is_some());
+        assert!(panel.get("ci_lo").is_some());
+        assert!(panel.get("ci_hi").is_some());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn adaptive_sweep_rejects_curve_measures() {
+        let service = ArbiterService::new(Backend::Rust, 0);
+        let job = JobRequest::from_json_str(
+            r#"{"type":"sweep","axis":"ring-local","values":[1.12],
+                "measures":"min-tr:ltc","options":{"fast":true,"ci":0.1}}"#,
+        )
+        .unwrap();
+        let resp = service.submit(&job);
+        assert!(!resp.ok);
+        assert!(resp.error.as_ref().unwrap().contains("min-tr"), "{:?}", resp.error);
     }
 
     #[test]

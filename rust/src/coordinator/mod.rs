@@ -57,6 +57,32 @@ impl Backend {
     }
 }
 
+/// A `Backend` is the canonical evaluator factory for column-parallel
+/// sweeps: each column worker builds its own (possibly `!Sync`) evaluator
+/// instance from the shared `Copy` tag.
+impl crate::montecarlo::scheduler::EvalFactory for Backend {
+    fn make(&self, threads: usize) -> Box<dyn IdealEvaluator> {
+        self.evaluator(threads)
+    }
+}
+
+/// Adaptive trial allocation (`--ci`): sample a column's trials in blocks
+/// and stop once the 95 % Wilson score interval on every AFP/CAFP cell is
+/// narrower than `width` (paper §IV's Monte-Carlo estimates are binomial
+/// proportions, so the interval is exact-ish and cheap).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveCfg {
+    /// Target interval width (hi − lo), e.g. 0.01.
+    pub width: f64,
+    /// Never stop a cell before this many trials (guards tiny-sample
+    /// intervals that are narrow only because p̂ pinned to 0 or 1).
+    pub min_trials: usize,
+    /// Hard ceiling per cell; clamped to the population size at run time
+    /// and rounded **down** to whole-laser blocks (minimum one block of
+    /// `n_rows` trials), so recorded `n_trials` never exceeds it.
+    pub max_trials: usize,
+}
+
 /// Options shared by every experiment run.
 #[derive(Debug, Clone)]
 pub struct RunOptions {
@@ -69,6 +95,13 @@ pub struct RunOptions {
     pub backend: Backend,
     /// Reduced sweep resolution + population for quick runs / CI.
     pub fast: bool,
+    /// Cap on concurrently in-flight sweep columns (each holds one
+    /// population); 0 = one per worker thread.
+    pub max_inflight: usize,
+    /// Adaptive trial allocation for sweep jobs; `None` = evaluate the
+    /// full population per column. Paper experiments always run full
+    /// populations (the flag is a `sweep` knob).
+    pub ci: Option<AdaptiveCfg>,
 }
 
 impl Default for RunOptions {
@@ -81,6 +114,8 @@ impl Default for RunOptions {
             threads: 0,
             backend: Backend::Rust,
             fast: false,
+            max_inflight: 0,
+            ci: None,
         }
     }
 }

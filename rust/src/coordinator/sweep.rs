@@ -23,7 +23,7 @@ use crate::coordinator::RunOptions;
 use crate::metrics::TrialTally;
 use crate::model::{DwdmGrid, SpectralOrdering};
 use crate::montecarlo::sweep::{Series, Shmoo};
-use crate::montecarlo::{afp_at, alias_aware_min_trs, min_tr_complete, TrialEngine};
+use crate::montecarlo::{afp_at, alias_aware_min_trs, min_tr_complete, Population, TrialEngine};
 use crate::oblivious::Scheme;
 use crate::rng::derive_seed;
 
@@ -231,7 +231,7 @@ impl Measure {
 }
 
 /// One measure's sweep result.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum SweepOutput {
     /// Per-column scalar (curve measures).
     Curve(Series),
@@ -326,8 +326,9 @@ impl SweepSpec {
 
     /// Ideal-model policies the engine must evaluate per column: one entry
     /// per distinct AFP/curve policy, plus LtC when any CAFP measure needs
-    /// its gate.
-    fn column_policies(&self) -> Vec<Policy> {
+    /// its gate. Public so the column-parallel scheduler
+    /// ([`crate::montecarlo::scheduler`]) requests identical populations.
+    pub fn column_policies(&self) -> Vec<Policy> {
         fn push_unique(policies: &mut Vec<Policy>, p: Policy) {
             if !policies.contains(&p) {
                 policies.push(p);
@@ -348,15 +349,12 @@ impl SweepSpec {
         policies
     }
 
-    /// Execute the sweep: per column, sample once, evaluate the ideal model
-    /// once, then fill every measure's cells. Outputs are parallel to
-    /// [`Self::measures`].
-    pub fn run(&self, engine: &TrialEngine<'_>, opts: &RunOptions) -> Vec<SweepOutput> {
-        let policies = self.column_policies();
+    /// Allocate zeroed outputs, parallel to [`Self::measures`]. Hard assert
+    /// (not debug-only): a grid measure without threshold rows would
+    /// silently produce empty shmoos in release builds.
+    pub fn empty_outputs(&self) -> Vec<SweepOutput> {
         let nx = self.values.len();
         let ny = self.tr_values.len();
-        // Hard assert (not debug-only): a grid measure without threshold
-        // rows would silently produce empty shmoos in release builds.
         assert!(
             ny > 0
                 || self
@@ -365,9 +363,7 @@ impl SweepSpec {
                     .all(|m| matches!(m, Measure::MinTrComplete(_) | Measure::MinTrAliasAware(_))),
             "SweepSpec: AFP/CAFP measures need thresholds() rows"
         );
-
-        let mut outs: Vec<SweepOutput> = self
-            .measures
+        self.measures
             .iter()
             .map(|m| match m {
                 Measure::MinTrComplete(p) => SweepOutput::Curve(Series::new(
@@ -394,47 +390,106 @@ impl SweepSpec {
                     tallies: vec![TrialTally::default(); nx * ny],
                 },
             })
-            .collect();
+            .collect()
+    }
 
+    /// Evaluate every measure's cells for one column over its (shared)
+    /// population. The unit of work the column-parallel scheduler
+    /// dispatches; the sequential [`Self::run`] loop uses the same code, so
+    /// both paths are bit-identical by construction.
+    pub fn eval_column(
+        &self,
+        cfg: &SystemConfig,
+        pop: &Population,
+        engine: &TrialEngine<'_>,
+    ) -> ColumnEval {
+        let cells = self
+            .measures
+            .iter()
+            .map(|m| match m {
+                Measure::MinTrComplete(p) => {
+                    let trs = pop.min_trs_for(*p).expect("policy evaluated per column");
+                    MeasureColumn::Curve(min_tr_complete(trs))
+                }
+                Measure::MinTrAliasAware(p) => {
+                    let trs =
+                        alias_aware_min_trs(cfg, &pop.sampler, *p, ALIAS_EPS_NM, engine.threads());
+                    MeasureColumn::Curve(min_tr_complete(&trs))
+                }
+                Measure::Afp(p) => {
+                    let trs = pop.min_trs_for(*p).expect("policy evaluated per column");
+                    MeasureColumn::Grid(
+                        self.tr_values.iter().map(|&tr| afp_at(trs, tr)).collect(),
+                    )
+                }
+                Measure::Cafp(s) => MeasureColumn::CafpGrid(
+                    self.tr_values
+                        .iter()
+                        .map(|&tr| engine.cafp(pop, *s, tr))
+                        .collect(),
+                ),
+            })
+            .collect();
+        ColumnEval { cells }
+    }
+
+    /// Write one column's cells into the outputs at column `ix`.
+    pub fn scatter(&self, outs: &mut [SweepOutput], ix: usize, col: ColumnEval) {
+        let nx = self.values.len();
+        for (out, cell) in outs.iter_mut().zip(col.cells) {
+            match (out, cell) {
+                (SweepOutput::Curve(series), MeasureColumn::Curve(v)) => series.y[ix] = v,
+                (SweepOutput::Grid(shmoo), MeasureColumn::Grid(row)) => {
+                    for (iy, v) in row.into_iter().enumerate() {
+                        shmoo.set(ix, iy, v);
+                    }
+                }
+                (SweepOutput::CafpGrid { cafp, tallies }, MeasureColumn::CafpGrid(row)) => {
+                    for (iy, t) in row.into_iter().enumerate() {
+                        cafp.set(ix, iy, t.cafp());
+                        tallies[iy * nx + ix] = t;
+                    }
+                }
+                _ => unreachable!("sweep output shape mismatch"),
+            }
+        }
+    }
+
+    /// Execute the sweep sequentially: per column, sample once, evaluate
+    /// the ideal model once, then fill every measure's cells. Outputs are
+    /// parallel to [`Self::measures`]. Wide sweeps should prefer the
+    /// column-parallel [`crate::montecarlo::scheduler::run_sweep`], which
+    /// produces bit-identical outputs.
+    pub fn run(&self, engine: &TrialEngine<'_>, opts: &RunOptions) -> Vec<SweepOutput> {
+        let policies = self.column_policies();
+        let mut outs = self.empty_outputs();
         for (ix, &v) in self.values.iter().enumerate() {
             let cfg = self.axis.apply(&self.base, v);
             let seed = column_seed(opts.seed, &self.tag, self.lane, ix);
             let pop = engine.population(&cfg, opts.n_lasers, opts.n_rows, seed, &policies);
-            for (m, out) in self.measures.iter().zip(outs.iter_mut()) {
-                match (m, out) {
-                    (Measure::MinTrComplete(p), SweepOutput::Curve(series)) => {
-                        let trs = pop.min_trs_for(*p).expect("policy evaluated per column");
-                        series.y[ix] = min_tr_complete(trs);
-                    }
-                    (Measure::MinTrAliasAware(p), SweepOutput::Curve(series)) => {
-                        let trs = alias_aware_min_trs(
-                            &cfg,
-                            &pop.sampler,
-                            *p,
-                            ALIAS_EPS_NM,
-                            engine.threads(),
-                        );
-                        series.y[ix] = min_tr_complete(&trs);
-                    }
-                    (Measure::Afp(p), SweepOutput::Grid(shmoo)) => {
-                        let trs = pop.min_trs_for(*p).expect("policy evaluated per column");
-                        for (iy, &tr) in self.tr_values.iter().enumerate() {
-                            shmoo.set(ix, iy, afp_at(trs, tr));
-                        }
-                    }
-                    (Measure::Cafp(s), SweepOutput::CafpGrid { cafp, tallies }) => {
-                        for (iy, &tr) in self.tr_values.iter().enumerate() {
-                            let tally = engine.cafp(&pop, *s, tr);
-                            cafp.set(ix, iy, tally.cafp());
-                            tallies[iy * nx + ix] = tally;
-                        }
-                    }
-                    _ => unreachable!("sweep output shape mismatch"),
-                }
-            }
+            let col = self.eval_column(&cfg, &pop, engine);
+            self.scatter(&mut outs, ix, col);
         }
         outs
     }
+}
+
+/// One column's evaluated cells, parallel to [`SweepSpec::measures`] —
+/// the transferable unit between column workers and the output scatter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ColumnEval {
+    pub cells: Vec<MeasureColumn>,
+}
+
+/// One measure's cells for a single column.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MeasureColumn {
+    /// Curve measures: one scalar per column.
+    Curve(f64),
+    /// AFP grids: one value per λ̄_TR row.
+    Grid(Vec<f64>),
+    /// CAFP grids: one full tally per λ̄_TR row.
+    CafpGrid(Vec<TrialTally>),
 }
 
 /// Deterministic per-column seed: bit-identical to

@@ -12,10 +12,9 @@ use crate::config::SystemConfig;
 use crate::coordinator::report::{curve_table, write_csv_series};
 use crate::coordinator::sweep::{ConfigAxis, Measure, SweepSpec};
 use crate::coordinator::{Experiment, ExperimentReport, RunOptions};
-use crate::experiments::tr_sweep;
+use crate::experiments::{run_spec, tr_sweep};
 use crate::model::VariationConfig;
 use crate::montecarlo::sweep::Series;
-use crate::montecarlo::TrialEngine;
 use crate::oblivious::Scheme;
 use crate::util::json::Json;
 
@@ -34,7 +33,6 @@ impl Experiment for Fig15 {
         let base = SystemConfig::default();
         let tr_values = tr_sweep(base.grid.spacing_nm, if opts.fast { 0.5 } else { 0.25 });
         let eval = opts.backend.evaluator(opts.threads);
-        let engine = TrialEngine::new(eval.as_ref(), opts.threads);
 
         let mut summary = String::new();
         let mut files = Vec::new();
@@ -52,13 +50,11 @@ impl Experiment for Fig15 {
             // axis), λ̄_TR rows over a single shared population — the
             // ideal gate is evaluated once per panel, not per point.
             let rlv = cfg.variation.ring_local_nm;
-            let (_, tallies) = SweepSpec::new(self.id(), cfg.clone(), ConfigAxis::RingLocalNm, vec![rlv])
+            let spec = SweepSpec::new(self.id(), cfg.clone(), ConfigAxis::RingLocalNm, vec![rlv])
                 .lane(pi)
                 .thresholds(tr_values.clone())
-                .measure(Measure::Cafp(Scheme::Sequential))
-                .run(&engine, opts)
-                .remove(0)
-                .into_cafp();
+                .measure(Measure::Cafp(Scheme::Sequential));
+            let (_, tallies) = run_spec(&spec, opts, eval.as_ref()).remove(0).into_cafp();
             let lock: Vec<f64> = tallies.iter().map(|t| t.lock_error_rate()).collect();
             let order: Vec<f64> = tallies.iter().map(|t| t.lane_order_rate()).collect();
             let total: Vec<f64> = tallies.iter().map(|t| t.cafp()).collect();

@@ -14,10 +14,10 @@ pub mod tables;
 
 use crate::arbiter::Policy;
 use crate::config::SystemConfig;
-use crate::coordinator::sweep::{ConfigAxis, Measure, SweepSpec};
-use crate::coordinator::{Experiment, RunOptions};
+use crate::coordinator::sweep::{ConfigAxis, Measure, SweepOutput, SweepSpec};
+use crate::coordinator::{Backend, Experiment, RunOptions};
 use crate::montecarlo::sweep::{Series, Shmoo};
-use crate::montecarlo::{IdealEvaluator, TrialEngine};
+use crate::montecarlo::{scheduler, IdealEvaluator, TrialEngine};
 use crate::oblivious::Scheme;
 use crate::rng::derive_seed;
 
@@ -50,6 +50,23 @@ pub fn point_seed(opts: &RunOptions, exp_id: &str, point: usize) -> u64 {
     derive_seed(opts.seed, &[crate::rng::tag_hash(exp_id), point as u64])
 }
 
+/// Execute a spec for a paper experiment: column-parallel on the Rust
+/// backend (one worker evaluator per column worker), sequential on the
+/// given evaluator otherwise (one PJRT client per worker is not worth
+/// spinning up). Experiments always evaluate **full** populations — `--ci`
+/// is a `sweep`-job knob — and both paths are bit-identical, which the
+/// golden-digest suite pins.
+pub fn run_spec(spec: &SweepSpec, opts: &RunOptions, eval: &dyn IdealEvaluator) -> Vec<SweepOutput> {
+    if opts.backend == Backend::Rust {
+        let exact = RunOptions { ci: None, ..opts.clone() };
+        if let Ok(run) = scheduler::run_sweep(spec, &exact, &Backend::Rust, None, &mut |_| {}) {
+            return run.outputs;
+        }
+    }
+    let engine = TrialEngine::new(eval, opts.threads);
+    spec.run(&engine, opts)
+}
+
 /// Minimum tuning range for complete success, swept along `axis` over
 /// `values` from `base`. One population + one ideal evaluation per point
 /// ([`SweepSpec`] path).
@@ -65,13 +82,10 @@ pub fn min_tr_curve(
     exp_id: &str,
     lane: usize,
 ) -> Series {
-    let engine = TrialEngine::new(eval, opts.threads);
-    let mut series = SweepSpec::new(exp_id, base.clone(), axis, values.to_vec())
+    let spec = SweepSpec::new(exp_id, base.clone(), axis, values.to_vec())
         .lane(lane)
-        .measure(Measure::MinTrComplete(policy))
-        .run(&engine, opts)
-        .remove(0)
-        .into_series();
+        .measure(Measure::MinTrComplete(policy));
+    let mut series = run_spec(&spec, opts, eval).remove(0).into_series();
     series.label = label.to_string();
     series
 }
@@ -87,11 +101,10 @@ pub fn afp_shmoos(
     eval: &dyn IdealEvaluator,
     exp_id: &str,
 ) -> Vec<Shmoo> {
-    let engine = TrialEngine::new(eval, opts.threads);
-    SweepSpec::new(exp_id, cfg_base.clone(), ConfigAxis::RingLocalNm, rlv_values.to_vec())
+    let spec = SweepSpec::new(exp_id, cfg_base.clone(), ConfigAxis::RingLocalNm, rlv_values.to_vec())
         .thresholds(tr_values.to_vec())
-        .measures(policies.iter().map(|&p| Measure::Afp(p)))
-        .run(&engine, opts)
+        .measures(policies.iter().map(|&p| Measure::Afp(p)));
+    run_spec(&spec, opts, eval)
         .into_iter()
         .map(|o| o.into_shmoo())
         .collect()
@@ -113,12 +126,11 @@ pub fn cafp_shmoos(
     exp_id: &str,
     lane: usize,
 ) -> Vec<Shmoo> {
-    let engine = TrialEngine::new(eval, opts.threads);
-    SweepSpec::new(exp_id, cfg_base.clone(), ConfigAxis::RingLocalNm, rlv_values.to_vec())
+    let spec = SweepSpec::new(exp_id, cfg_base.clone(), ConfigAxis::RingLocalNm, rlv_values.to_vec())
         .lane(lane)
         .thresholds(tr_values.to_vec())
-        .measures(schemes.iter().map(|&s| Measure::Cafp(s)))
-        .run(&engine, opts)
+        .measures(schemes.iter().map(|&s| Measure::Cafp(s)));
+    run_spec(&spec, opts, eval)
         .into_iter()
         .map(|o| o.into_shmoo())
         .collect()

@@ -25,7 +25,12 @@
 //!   per-column population reuse — one sampled population and one
 //!   ideal-model evaluation per sweep column, AFP by thresholding, CAFP
 //!   gated on the precomputed ideal-LtC vector with per-worker arbitration
-//!   workspaces ([`oblivious::Workspace`]).
+//!   workspaces ([`oblivious::Workspace`]). The **sweep scheduler**
+//!   ([`montecarlo::scheduler`]) adds column-level parallelism on top: a
+//!   work queue of whole columns with deterministic per-column seeds
+//!   (panels bit-identical for any thread count), a bounded in-flight
+//!   population count, a thread-safe coalescing population cache, and
+//!   optional Wilson-interval adaptive trial allocation (`--ci`).
 //! * [`coordinator::sweep`] — declarative **SweepSpec** layer: experiments
 //!   submit (base config, column axis, λ̄_TR thresholds, measures) instead
 //!   of hand-rolled nested loops; the `wdm-arbiter sweep` subcommand

@@ -46,6 +46,7 @@ USAGE:
                   [--tr LO:HI:STEP|A,B,C] [--measure M1,M2,...]
                   [--config FILE.toml] [--permuted] [--out DIR] [--fast]
                   [--lasers N] [--rows N] [--seed S] [--threads T]
+                  [--inflight N] [--ci W] [--min-trials N] [--max-trials N]
                   [--backend rust|xla]
       Ad-hoc Monte-Carlo grid over one config axis x the tuning-range axis.
       AXIS: ring-local | grid-offset | laser-local | tr-frac | fsr-frac |
@@ -53,7 +54,12 @@ USAGE:
       Measures: afp:<lta|ltc|ltd>  cafp:<seq|rs-ssm|vt-rs-ssm>
                 min-tr:<policy>  alias-min-tr:<policy>   (default afp:ltc)
       Each axis value samples ONE population, evaluated by the ideal model
-      once; every λ̄_TR row reuses it.
+      once; every λ̄_TR row reuses it. Columns run in parallel across
+      --threads workers (seeded per column: results are bit-identical for
+      any thread count); --inflight caps concurrently resident populations.
+      --ci W samples trials in blocks and stops each AFP/CAFP cell once its
+      95% Wilson interval is narrower than W (bounded by --min-trials /
+      --max-trials); panels then record per-cell n_trials + interval.
   wdm-arbiter arbitrate [--scheme seq|rs-ssm|vt-rs-ssm] [--tr NM] [--seed S]
                   [--config FILE.toml] [--permuted]
       Run a single arbitration trial end-to-end and print the outcome.
@@ -177,11 +183,14 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Aggregate `run all` manifest: per-experiment id, outcome, elapsed, the
-/// evaluator that actually ran, and the files written.
+/// evaluator that actually ran, and the files written. Entries are sorted
+/// by experiment id so the manifest is byte-stable whatever order the
+/// experiments completed in.
 fn write_manifest(out_dir: &Path, batch: &JobResponse) -> anyhow::Result<PathBuf> {
     std::fs::create_dir_all(out_dir)?;
-    let jobs: Vec<Json> = batch
-        .jobs
+    let mut children: Vec<&JobResponse> = batch.jobs.iter().collect();
+    children.sort_by(|a, b| a.label.cmp(&b.label));
+    let jobs: Vec<Json> = children
         .iter()
         .map(|c| {
             let mut pairs = vec![

@@ -87,6 +87,18 @@ impl SystemSampler {
         let (l, r) = self.trial(t);
         SystemUnderTest { laser: l.clone(), rings: r.clone() }
     }
+
+    /// Sub-sampler over lasers `[lo, hi)` with every row. Because each
+    /// laser/row draws from its own derived stream, trial `t` of the slice
+    /// is bit-identical to trial `lo·n_rows + t` of the full sampler —
+    /// the adaptive scheduler grows a column's evaluated prefix in
+    /// whole-laser blocks through exactly this window.
+    pub fn slice_lasers(&self, lo: usize, hi: usize) -> SystemSampler {
+        SystemSampler {
+            lasers: self.lasers[lo..hi].to_vec(),
+            rows: self.rows.clone(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +131,20 @@ mod tests {
         let (l, r) = s.trial(7); // laser 1, row 3
         assert_eq!(l, &s.lasers[1]);
         assert_eq!(r, &s.rows[3]);
+    }
+
+    #[test]
+    fn laser_slice_matches_full_sampler_trials() {
+        let cfg = SystemConfig::default();
+        let full = SystemSampler::new(&cfg, 6, 4, 77);
+        let slice = full.slice_lasers(2, 5);
+        assert_eq!(slice.n_trials(), 12);
+        for t in 0..slice.n_trials() {
+            let (l, r) = slice.trial(t);
+            let (fl, fr) = full.trial(2 * 4 + t);
+            assert_eq!(l, fl, "trial {t}");
+            assert_eq!(r, fr, "trial {t}");
+        }
     }
 
     #[test]

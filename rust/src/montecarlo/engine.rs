@@ -21,9 +21,9 @@
 //! sampling and ideal-model work — the dominant cost at low tuning ranges,
 //! where most trials fail the gate and no oblivious simulation runs.
 
-use std::cell::{Cell, RefCell};
 use std::collections::{HashMap, VecDeque};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::arbiter::Policy;
 use crate::config::SystemConfig;
@@ -162,6 +162,67 @@ impl CacheStats {
 /// f64s formatted losslessly) × population shape × seed lane.
 type PopKey = (String, usize, usize, u64);
 
+/// One cache slot: a finished population, or a build in flight that other
+/// requesters should wait on instead of sampling the same column twice.
+#[derive(Debug)]
+enum Slot {
+    Ready(Arc<Population>),
+    Building(Arc<BuildGate>),
+}
+
+/// Rendezvous point for coalesced builds: the claiming thread publishes the
+/// finished population here; waiters block on the condvar.
+#[derive(Debug)]
+struct BuildGate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+#[derive(Debug)]
+enum GateState {
+    Pending,
+    Done(Arc<Population>),
+    /// The builder panicked or bailed; waiters must retry the lookup.
+    Abandoned,
+}
+
+impl BuildGate {
+    fn new() -> Self {
+        Self { state: Mutex::new(GateState::Pending), cv: Condvar::new() }
+    }
+
+    /// Block until the build completes; `None` when it was abandoned.
+    fn wait(&self) -> Option<Arc<Population>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match &*st {
+                GateState::Pending => st = self.cv.wait(st).unwrap(),
+                GateState::Done(pop) => return Some(Arc::clone(pop)),
+                GateState::Abandoned => return None,
+            }
+        }
+    }
+
+    fn publish(&self, pop: Arc<Population>) {
+        *self.state.lock().unwrap() = GateState::Done(pop);
+        self.cv.notify_all();
+    }
+
+    fn abandon(&self) {
+        *self.state.lock().unwrap() = GateState::Abandoned;
+        self.cv.notify_all();
+    }
+}
+
+#[derive(Debug)]
+struct CacheInner {
+    entries: HashMap<PopKey, Slot>,
+    /// Completed-build insertion order for FIFO eviction. In-flight builds
+    /// are never listed here, so eviction can never orphan waiters; a
+    /// policy upgrade removes its key and re-enters on completion.
+    order: VecDeque<PopKey>,
+}
+
 /// Memoizes per-column [`Population`]s across requests, so repeated or
 /// overlapping jobs submitted to a long-lived service never resample or
 /// re-evaluate a column they have already paid for.
@@ -176,17 +237,50 @@ type PopKey = (String, usize, usize, u64);
 /// insertion is evicted first, so a long-lived serve session cannot grow
 /// without limit.
 ///
-/// Single-threaded by design (interior `RefCell`), matching
-/// [`IdealEvaluator`]'s deliberate `!Send + !Sync`: parallelism lives
-/// *inside* the evaluators, not across cache consumers.
+/// Thread-safe: the sweep scheduler runs whole columns concurrently, so
+/// the cache is shared across column workers. Concurrent requests for the
+/// **same** column coalesce — the first claims the build, the rest block on
+/// its [`BuildGate`] and count as hits once it lands — so a column is never
+/// sampled twice however many workers want it.
 #[derive(Debug)]
 pub struct PopulationCache {
-    entries: RefCell<HashMap<PopKey, Arc<Population>>>,
-    /// Insertion order for FIFO eviction (policy upgrades keep their slot).
-    order: RefCell<VecDeque<PopKey>>,
+    inner: Mutex<CacheInner>,
     capacity: usize,
-    hits: Cell<usize>,
-    misses: Cell<usize>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+/// Outcome of one locked lookup that could not be served in place: build
+/// the population ourselves, or wait for another builder's gate. (Plain
+/// hits return directly from under the lock.)
+enum Lookup {
+    Build { union: Vec<Policy>, gate: Arc<BuildGate> },
+    Wait(Arc<BuildGate>),
+}
+
+/// Removes an in-flight claim (and wakes waiters to retry) if the build
+/// unwinds before publishing, so a panicking worker cannot wedge the cache.
+struct ClaimGuard<'a> {
+    cache: &'a PopulationCache,
+    key: &'a PopKey,
+    gate: &'a Arc<BuildGate>,
+    done: bool,
+}
+
+impl Drop for ClaimGuard<'_> {
+    fn drop(&mut self) {
+        if self.done {
+            return;
+        }
+        let mut inner = self.cache.inner.lock().unwrap();
+        if let Some(Slot::Building(g)) = inner.entries.get(self.key) {
+            if Arc::ptr_eq(g, self.gate) {
+                inner.entries.remove(self.key);
+            }
+        }
+        drop(inner);
+        self.gate.abandon();
+    }
 }
 
 impl Default for PopulationCache {
@@ -203,11 +297,10 @@ impl PopulationCache {
     /// A cache holding at most `capacity` populations (min 1).
     pub fn with_capacity(capacity: usize) -> Self {
         Self {
-            entries: RefCell::new(HashMap::new()),
-            order: RefCell::new(VecDeque::new()),
+            inner: Mutex::new(CacheInner { entries: HashMap::new(), order: VecDeque::new() }),
             capacity: capacity.max(1),
-            hits: Cell::new(0),
-            misses: Cell::new(0),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
         }
     }
 
@@ -219,45 +312,109 @@ impl PopulationCache {
         (format!("{cfg:?}"), n_lasers, n_rows, seed)
     }
 
-    /// Insert (or upgrade) an entry, evicting the oldest insertions once
-    /// the capacity is reached.
-    fn insert(&self, key: PopKey, pop: Arc<Population>) {
-        let mut entries = self.entries.borrow_mut();
-        let mut order = self.order.borrow_mut();
-        if !entries.contains_key(&key) {
-            while entries.len() >= self.capacity {
-                match order.pop_front() {
-                    Some(old) => {
-                        entries.remove(&old);
+    /// Return the memoized population for this column, building it (or
+    /// upgrading it to the policy union) via `build` on a miss. Concurrent
+    /// callers with the same key coalesce onto one build.
+    pub fn get_or_build(
+        &self,
+        cfg: &SystemConfig,
+        n_lasers: usize,
+        n_rows: usize,
+        seed: u64,
+        policies: &[Policy],
+        build: &dyn Fn(&[Policy]) -> Population,
+    ) -> Arc<Population> {
+        let key = Self::key(cfg, n_lasers, n_rows, seed);
+        loop {
+            let lookup = {
+                let mut inner = self.inner.lock().unwrap();
+                match inner.entries.get(&key) {
+                    Some(Slot::Ready(pop)) => {
+                        if policies.iter().all(|p| pop.policies.contains(p)) {
+                            self.hits.fetch_add(1, Ordering::Relaxed);
+                            return Arc::clone(pop);
+                        }
+                        // Upgrade: claim the slot and rebuild with the
+                        // union of old and new policies.
+                        let mut union = pop.policies.clone();
+                        for &p in policies {
+                            if !union.contains(&p) {
+                                union.push(p);
+                            }
+                        }
+                        let gate = Arc::new(BuildGate::new());
+                        inner.entries.insert(key.clone(), Slot::Building(Arc::clone(&gate)));
+                        inner.order.retain(|k| k != &key); // re-enters on completion
+                        Lookup::Build { union, gate }
                     }
-                    None => break,
+                    Some(Slot::Building(gate)) => Lookup::Wait(Arc::clone(gate)),
+                    None => {
+                        let gate = Arc::new(BuildGate::new());
+                        inner.entries.insert(key.clone(), Slot::Building(Arc::clone(&gate)));
+                        Lookup::Build { union: policies.to_vec(), gate }
+                    }
+                }
+            };
+            match lookup {
+                Lookup::Wait(gate) => match gate.wait() {
+                    Some(pop) if policies.iter().all(|p| pop.policies.contains(p)) => {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        return pop;
+                    }
+                    // Builder abandoned, or the landed entry still misses a
+                    // policy we need: retry the lookup from scratch.
+                    _ => continue,
+                },
+                Lookup::Build { union, gate } => {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    let mut guard = ClaimGuard { cache: self, key: &key, gate: &gate, done: false };
+                    let pop = Arc::new(build(&union));
+                    {
+                        let mut inner = self.inner.lock().unwrap();
+                        inner.entries.insert(key.clone(), Slot::Ready(Arc::clone(&pop)));
+                        inner.order.push_back(key.clone());
+                        while inner.order.len() > self.capacity {
+                            match inner.order.pop_front() {
+                                Some(old) => {
+                                    if matches!(inner.entries.get(&old), Some(Slot::Ready(_))) {
+                                        inner.entries.remove(&old);
+                                    }
+                                }
+                                None => break,
+                            }
+                        }
+                    }
+                    guard.done = true;
+                    gate.publish(Arc::clone(&pop));
+                    return pop;
                 }
             }
-            order.push_back(key.clone());
         }
-        entries.insert(key, pop);
     }
 
     pub fn stats(&self) -> CacheStats {
         CacheStats {
-            hits: self.hits.get(),
-            misses: self.misses.get(),
-            entries: self.entries.borrow().len(),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.len(),
         }
     }
 
+    /// Completed (ready) populations currently memoized.
     pub fn len(&self) -> usize {
-        self.entries.borrow().len()
+        self.inner.lock().unwrap().order.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.borrow().is_empty()
+        self.len() == 0
     }
 
-    /// Drop every memoized population (counters keep accumulating).
+    /// Drop every memoized population (counters keep accumulating;
+    /// in-flight builds are left to land normally).
     pub fn clear(&self) {
-        self.entries.borrow_mut().clear();
-        self.order.borrow_mut().clear();
+        let mut inner = self.inner.lock().unwrap();
+        inner.order.clear();
+        inner.entries.retain(|_, s| matches!(s, Slot::Building(_)));
     }
 }
 
@@ -306,27 +463,12 @@ impl<'a> TrialEngine<'a> {
         seed: u64,
         policies: &[Policy],
     ) -> Arc<Population> {
-        let Some(cache) = self.cache else {
-            return Arc::new(self.build_population(cfg, n_lasers, n_rows, seed, policies));
-        };
-        let key = PopulationCache::key(cfg, n_lasers, n_rows, seed);
-        let mut union: Vec<Policy> = Vec::new();
-        if let Some(hit) = cache.entries.borrow().get(&key) {
-            if policies.iter().all(|p| hit.policies.contains(p)) {
-                cache.hits.set(cache.hits.get() + 1);
-                return Arc::clone(hit);
-            }
-            union = hit.policies.clone();
+        match self.cache {
+            None => Arc::new(self.build_population(cfg, n_lasers, n_rows, seed, policies)),
+            Some(cache) => cache.get_or_build(cfg, n_lasers, n_rows, seed, policies, &|union| {
+                self.build_population(cfg, n_lasers, n_rows, seed, union)
+            }),
         }
-        for &p in policies {
-            if !union.contains(&p) {
-                union.push(p);
-            }
-        }
-        cache.misses.set(cache.misses.get() + 1);
-        let pop = Arc::new(self.build_population(cfg, n_lasers, n_rows, seed, &union));
-        cache.insert(key, Arc::clone(&pop));
-        pop
     }
 
     fn build_population(
@@ -522,6 +664,81 @@ mod tests {
             .population(&cfg, 5, 5, 11, &[Policy::LtC]);
         assert_eq!(plain.min_trs, cached.min_trs);
         assert_eq!(plain.seed, cached.seed);
+    }
+
+    #[test]
+    fn population_and_cache_are_shareable_across_threads() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Population>();
+        assert_send_sync::<PopulationCache>();
+        assert_send_sync::<CacheStats>();
+    }
+
+    /// Same config fingerprint + seed but differing shapes — including
+    /// transposed shapes with equal trial counts — must be distinct entries.
+    #[test]
+    fn cache_keys_distinguish_shapes_with_identical_fingerprints() {
+        let ideal_eval = RustIdeal::default();
+        let cache = PopulationCache::new();
+        let engine = TrialEngine::new(&ideal_eval, 0).with_cache(&cache);
+        let cfg = SystemConfig::default();
+        let a = engine.population(&cfg, 4, 3, 7, &[Policy::LtC]);
+        let b = engine.population(&cfg, 3, 4, 7, &[Policy::LtC]);
+        let c = engine.population(&cfg, 4, 4, 7, &[Policy::LtC]);
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 3, entries: 3 });
+        assert_eq!(a.n_trials(), b.n_trials(), "same trial count, different shape");
+        assert!(!Arc::ptr_eq(&a, &b), "shape is part of the key");
+        // The transposed population really is a different sample layout.
+        assert_ne!(a.ideal_ltc(), b.ideal_ltc());
+        assert_eq!(c.n_trials(), 16);
+    }
+
+    /// The default bound (256) evicts oldest-first like any explicit one.
+    #[test]
+    fn cache_default_capacity_bounds_at_256() {
+        let ideal_eval = RustIdeal::default();
+        let cache = PopulationCache::new();
+        assert_eq!(cache.capacity(), 256);
+        let engine = TrialEngine::new(&ideal_eval, 1).with_cache(&cache);
+        let cfg = SystemConfig::default();
+        for seed in 0..260u64 {
+            // Empty policy set: no ideal pass, so 260 builds stay cheap.
+            engine.population(&cfg, 1, 1, seed, &[]);
+        }
+        assert_eq!(cache.len(), 256, "bounded at the default capacity");
+        engine.population(&cfg, 1, 1, 259, &[]); // newest retained
+        assert_eq!(cache.stats().hits, 1);
+        engine.population(&cfg, 1, 1, 0, &[]); // oldest evicted
+        assert_eq!(cache.stats().misses, 261);
+    }
+
+    /// Tentpole contract: concurrent requests for the same column coalesce
+    /// onto one build instead of sampling twice.
+    #[test]
+    fn concurrent_requests_for_same_column_coalesce() {
+        let cache = PopulationCache::new();
+        let cfg = SystemConfig::default();
+        let pops: Vec<Arc<Population>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let cache = &cache;
+                    let cfg = &cfg;
+                    s.spawn(move || {
+                        let ideal_eval = RustIdeal { threads: 1 };
+                        let engine = TrialEngine::new(&ideal_eval, 1).with_cache(cache);
+                        engine.population(cfg, 6, 6, 77, &[Policy::LtC])
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 1, "exactly one thread sampled");
+        assert_eq!(stats.hits, 3, "the rest were served the shared build");
+        assert_eq!(stats.entries, 1);
+        for p in &pops[1..] {
+            assert!(Arc::ptr_eq(&pops[0], p), "coalesced requests share one allocation");
+        }
     }
 
     #[test]

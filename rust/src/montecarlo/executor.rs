@@ -5,6 +5,48 @@
 //! splits the index range into contiguous chunks, workers fill disjoint
 //! slices, and results come back in deterministic index order regardless of
 //! scheduling.
+//!
+//! [`WorkQueue`] is the second primitive: a dynamic index queue for
+//! *coarse, uneven* tasks (whole sweep columns — see
+//! [`crate::montecarlo::scheduler`]) where static chunking would leave
+//! workers idle behind one slow chunk. Results stay deterministic because
+//! callers scatter by index, not by completion order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A lock-free dynamic work queue over `0..n`: each call to [`Self::pop`]
+/// hands out the next unclaimed index. Workers pull as they finish, so a
+/// slow task never stalls the rest of the queue.
+#[derive(Debug)]
+pub struct WorkQueue {
+    next: AtomicUsize,
+    n: usize,
+}
+
+impl WorkQueue {
+    pub fn new(n: usize) -> Self {
+        Self { next: AtomicUsize::new(0), n }
+    }
+
+    /// Claim the next index, or `None` when the queue is drained.
+    #[inline]
+    pub fn pop(&self) -> Option<usize> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        if i < self.n {
+            Some(i)
+        } else {
+            None
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+}
 
 /// Number of workers to use: `threads` if nonzero, else all available cores.
 pub fn effective_threads(threads: usize) -> usize {
@@ -119,5 +161,38 @@ mod tests {
     fn effective_threads_positive() {
         assert!(effective_threads(0) >= 1);
         assert_eq!(effective_threads(3), 3);
+    }
+
+    #[test]
+    fn work_queue_hands_out_each_index_once() {
+        let q = WorkQueue::new(100);
+        assert_eq!(q.len(), 100);
+        assert!(!q.is_empty());
+        let claimed: Vec<Vec<usize>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let q = &q;
+                    s.spawn(move || {
+                        let mut mine = Vec::new();
+                        while let Some(i) = q.pop() {
+                            mine.push(i);
+                        }
+                        mine
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut all: Vec<usize> = claimed.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+        assert_eq!(q.pop(), None, "drained queue stays drained");
+    }
+
+    #[test]
+    fn work_queue_empty() {
+        let q = WorkQueue::new(0);
+        assert!(q.is_empty());
+        assert_eq!(q.pop(), None);
     }
 }

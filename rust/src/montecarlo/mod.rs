@@ -15,14 +15,21 @@
 //! [`Population`] (one sample + one ideal evaluation per column) and take
 //! AFP by thresholding and CAFP through a [`SchemeEvaluator`] that gates
 //! on the precomputed ideal-LtC vector.
+//!
+//! The [`scheduler`] module adds the second parallelism level: whole sweep
+//! columns run concurrently over a work queue with deterministic per-column
+//! seeds, sharing the (thread-safe, coalescing) [`PopulationCache`], with
+//! optional Wilson-interval adaptive trial allocation per cell.
 
 pub mod engine;
 pub mod executor;
+pub mod scheduler;
 pub mod sweep;
 
 pub use engine::{
     CacheStats, Population, PopulationCache, RustOblivious, SchemeEvaluator, TrialEngine,
 };
+pub use scheduler::{ColumnProgress, EvalFactory, GridStats, SweepRun};
 
 use crate::arbiter::{ideal, Policy};
 use crate::config::SystemConfig;

@@ -1,0 +1,620 @@
+//! Column-parallel sweep scheduler with adaptive trial allocation.
+//!
+//! PR 1's [`TrialEngine`] parallelizes *within* a column (the trial loop);
+//! this module adds the second level: whole columns run concurrently on the
+//! same `std::thread::scope` substrate (no rayon — offline environment).
+//!
+//! * **Work queue** — columns are coarse and uneven (a high-σ column runs
+//!   far more oblivious simulations than a low-σ one), so workers pull the
+//!   next column index from a dynamic [`executor::WorkQueue`] instead of
+//!   static chunks.
+//! * **Determinism** — every column derives its seed from its *index*
+//!   ([`column_seed`] → [`crate::rng::derive_seed`]) and results scatter
+//!   back by index, so panels are bit-identical regardless of thread
+//!   count, queue order, or completion order.
+//! * **Bounded memory** — each worker holds at most one in-flight
+//!   [`crate::montecarlo::Population`]; `RunOptions::max_inflight` caps
+//!   the worker count, bounding resident populations.
+//! * **Cache coalescing** — workers share the (now thread-safe)
+//!   [`PopulationCache`]; concurrent requests for the same column block on
+//!   one build instead of sampling twice.
+//! * **Adaptive trial allocation** (`--ci`) — a column samples trials in
+//!   doubling blocks of whole lasers and freezes each AFP/CAFP cell once
+//!   its 95 % Wilson interval is narrower than the target, recording
+//!   `n_trials_used` and the interval per cell. The sampler's per-laser /
+//!   per-row derived streams make every prefix bit-identical to the full
+//!   run, so adaptive estimates are consistent truncations, not different
+//!   experiments.
+//!
+//! Evaluator backends stay `!Sync` by design (the PJRT client is
+//! single-threaded), so workers build their own instance through a shared
+//! [`EvalFactory`] (implemented by `coordinator::Backend`).
+
+use std::sync::mpsc;
+
+use crate::arbiter::Policy;
+use crate::config::SystemConfig;
+use crate::coordinator::sweep::{column_seed, ColumnEval, Measure, MeasureColumn, SweepOutput, SweepSpec};
+use crate::coordinator::{AdaptiveCfg, RunOptions};
+use crate::metrics::TrialTally;
+use crate::model::system::SystemSampler;
+use crate::montecarlo::{executor, IdealEvaluator, PopulationCache, TrialEngine};
+use crate::oblivious::{run_scheme_with, Workspace};
+use crate::util::stats::wilson_interval;
+
+/// Per-worker evaluator construction for column-parallel sweeps. The
+/// factory itself is shared across workers (`Sync`); the evaluators it
+/// builds never leave their worker thread, so `!Sync` backends (PJRT) work.
+pub trait EvalFactory: Sync {
+    fn make(&self, threads: usize) -> Box<dyn IdealEvaluator>;
+}
+
+/// Queue hand-out order. Results are scattered by column index, so the
+/// order never affects output — [`ColumnOrder::Reverse`] exists for the
+/// determinism test suite to prove exactly that.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColumnOrder {
+    Forward,
+    Reverse,
+}
+
+/// One column finished (streamed to the caller on the leader thread while
+/// workers keep running).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ColumnProgress {
+    /// Column index within the sweep.
+    pub ix: usize,
+    pub n_cols: usize,
+    /// The axis value this column evaluated.
+    pub value: f64,
+    /// Trials actually evaluated (less than the population size when
+    /// adaptive allocation stopped early).
+    pub n_trials: usize,
+}
+
+/// Adaptive per-cell statistics for one column, one entry per λ̄_TR row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ColumnStats {
+    pub n_trials: Vec<usize>,
+    pub ci_lo: Vec<f64>,
+    pub ci_hi: Vec<f64>,
+}
+
+/// Adaptive per-cell statistics for a whole grid measure, row-major
+/// `[iy * n_columns + ix]` (the same layout as `Shmoo::cells`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridStats {
+    pub n_trials: Vec<usize>,
+    pub ci_lo: Vec<f64>,
+    pub ci_hi: Vec<f64>,
+}
+
+/// A scheduled sweep's results.
+#[derive(Debug)]
+pub struct SweepRun {
+    /// Outputs parallel to the spec's measures — bit-identical to the
+    /// sequential [`SweepSpec::run`] path.
+    pub outputs: Vec<SweepOutput>,
+    /// `name()` of the evaluator the workers actually ran.
+    pub backend: &'static str,
+    /// Present only for adaptive (`--ci`) runs: per-measure cell stats
+    /// (`None` for curve measures, which adaptive mode rejects anyway).
+    pub stats: Option<Vec<Option<GridStats>>>,
+}
+
+/// One finished column in a worker's backlog: index, cells, adaptive stats.
+type ColumnResult = (usize, ColumnEval, Option<Vec<Option<ColumnStats>>>);
+
+/// Run a sweep with columns in parallel. See [`run_sweep_ordered`].
+pub fn run_sweep(
+    spec: &SweepSpec,
+    opts: &RunOptions,
+    factory: &dyn EvalFactory,
+    cache: Option<&PopulationCache>,
+    progress: &mut dyn FnMut(ColumnProgress),
+) -> Result<SweepRun, String> {
+    run_sweep_ordered(spec, opts, factory, cache, ColumnOrder::Forward, progress)
+}
+
+/// Run a sweep with columns in parallel, pulling queue slots in `order`.
+///
+/// Worker budget: `effective_threads(opts.threads)` total, capped by
+/// `opts.max_inflight` (each worker holds one in-flight population) and by
+/// the column count; leftover threads go to the *inner* trial loops
+/// (`inner = total / workers`), so narrow sweeps still use the machine.
+///
+/// With `opts.ci` set, columns run the adaptive allocator instead of full
+/// populations; the population cache is bypassed (a truncated population
+/// must not masquerade as a full one).
+pub fn run_sweep_ordered(
+    spec: &SweepSpec,
+    opts: &RunOptions,
+    factory: &dyn EvalFactory,
+    cache: Option<&PopulationCache>,
+    order: ColumnOrder,
+    progress: &mut dyn FnMut(ColumnProgress),
+) -> Result<SweepRun, String> {
+    let adaptive = opts.ci;
+    if let Some(ad) = &adaptive {
+        validate_adaptive(spec, ad)?;
+    }
+    let mut outs = spec.empty_outputs();
+    let n_cols = spec.values.len();
+    let ny = spec.tr_values.len();
+    let mut stats: Option<Vec<Option<GridStats>>> = adaptive.map(|_| {
+        spec.measures
+            .iter()
+            .map(|m| match m {
+                Measure::Afp(_) | Measure::Cafp(_) => Some(GridStats {
+                    n_trials: vec![0; n_cols * ny],
+                    ci_lo: vec![0.0; n_cols * ny],
+                    ci_hi: vec![0.0; n_cols * ny],
+                }),
+                _ => None,
+            })
+            .collect()
+    });
+    if n_cols == 0 {
+        return Ok(SweepRun { outputs: outs, backend: "none", stats });
+    }
+
+    let policies = spec.column_policies();
+    let total = executor::effective_threads(opts.threads);
+    let cap = if opts.max_inflight > 0 { opts.max_inflight } else { total };
+    let workers = total.min(cap).min(n_cols).max(1);
+    let inner_threads = (total / workers).max(1);
+    let queue = executor::WorkQueue::new(n_cols);
+    let (tx, rx) = mpsc::channel::<ColumnProgress>();
+    let mut backend = "none";
+
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let queue = &queue;
+            let policies = &policies;
+            let adaptive = adaptive.as_ref();
+            handles.push(s.spawn(move || {
+                let eval = factory.make(inner_threads);
+                let mut engine = TrialEngine::new(eval.as_ref(), inner_threads);
+                if let Some(c) = cache {
+                    engine = engine.with_cache(c);
+                }
+                let mut done: Vec<ColumnResult> = Vec::new();
+                while let Some(slot) = queue.pop() {
+                    let ix = match order {
+                        ColumnOrder::Forward => slot,
+                        ColumnOrder::Reverse => n_cols - 1 - slot,
+                    };
+                    let value = spec.values[ix];
+                    let cfg = spec.axis.apply(&spec.base, value);
+                    let seed = column_seed(opts.seed, &spec.tag, spec.lane, ix);
+                    let (col, col_stats, n_trials) = match adaptive {
+                        Some(ad) => {
+                            let (col, st, n) =
+                                run_adaptive_column(spec, &cfg, seed, opts, ad, eval.as_ref());
+                            (col, Some(st), n)
+                        }
+                        None => {
+                            let pop = engine.population(
+                                &cfg,
+                                opts.n_lasers,
+                                opts.n_rows,
+                                seed,
+                                policies,
+                            );
+                            let col = spec.eval_column(&cfg, &pop, &engine);
+                            let n = pop.n_trials();
+                            (col, None, n)
+                        }
+                    };
+                    let _ = tx.send(ColumnProgress { ix, n_cols, value, n_trials });
+                    done.push((ix, col, col_stats));
+                }
+                (eval.name(), done)
+            }));
+        }
+        drop(tx);
+        // Stream per-column progress on the leader while workers run.
+        for p in rx {
+            progress(p);
+        }
+        for h in handles {
+            let (name, cols) = h.join().expect("sweep column worker panicked");
+            backend = name;
+            for (ix, col, col_stats) in cols {
+                spec.scatter(&mut outs, ix, col);
+                if let (Some(grids), Some(per_measure)) = (stats.as_mut(), col_stats) {
+                    for (mi, rows) in per_measure.into_iter().enumerate() {
+                        if let (Some(grid), Some(rows)) = (grids[mi].as_mut(), rows) {
+                            for iy in 0..ny {
+                                let cell = iy * n_cols + ix;
+                                grid.n_trials[cell] = rows.n_trials[iy];
+                                grid.ci_lo[cell] = rows.ci_lo[iy];
+                                grid.ci_hi[cell] = rows.ci_hi[iy];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+
+    Ok(SweepRun { outputs: outs, backend, stats })
+}
+
+fn validate_adaptive(spec: &SweepSpec, ad: &AdaptiveCfg) -> Result<(), String> {
+    if !(ad.width > 0.0 && ad.width < 1.0) {
+        return Err(format!("adaptive sweep: ci width must be in (0, 1), got {}", ad.width));
+    }
+    if ad.min_trials == 0 {
+        return Err("adaptive sweep: min_trials must be at least 1".to_string());
+    }
+    if ad.max_trials < ad.min_trials {
+        return Err(format!(
+            "adaptive sweep: max_trials ({}) below min_trials ({})",
+            ad.max_trials, ad.min_trials
+        ));
+    }
+    if spec
+        .measures
+        .iter()
+        .any(|m| matches!(m, Measure::MinTrComplete(_) | Measure::MinTrAliasAware(_)))
+    {
+        return Err(
+            "adaptive sweep (--ci) applies to afp/cafp measures; min-tr and alias-min-tr \
+             need the full population"
+                .to_string(),
+        );
+    }
+    Ok(())
+}
+
+/// Evaluate one column adaptively: grow the evaluated prefix in doubling
+/// blocks of whole lasers, freeze each cell once its Wilson interval is
+/// narrow enough, stop when every cell froze or the population is spent.
+///
+/// Trials are appended in whole-laser blocks (`block × n_rows` trials), so
+/// every per-trial value is bit-identical to the same trial in a full run
+/// — see `model::system::SystemSampler::slice_lasers`.
+fn run_adaptive_column(
+    spec: &SweepSpec,
+    cfg: &SystemConfig,
+    seed: u64,
+    opts: &RunOptions,
+    ad: &AdaptiveCfg,
+    eval: &dyn IdealEvaluator,
+) -> (ColumnEval, Vec<Option<ColumnStats>>, usize) {
+    let n_rows = opts.n_rows.max(1);
+    let lasers_total = opts.n_lasers.max(1);
+    let full = SystemSampler::new(cfg, lasers_total, n_rows, seed);
+    // Blocks are whole lasers (n_rows trials each). The ceiling rounds
+    // *down* so recorded n_trials never exceeds max_trials (one block is
+    // the floor — a cap below n_rows is clamped up to it); min_trials
+    // rounds up but never past the ceiling.
+    let max_lasers = (ad.max_trials / n_rows).clamp(1, lasers_total);
+    let min_lasers = ad.min_trials.div_ceil(n_rows).clamp(1, max_lasers);
+    let policies = spec.column_policies();
+    let ny = spec.tr_values.len();
+
+    #[derive(Clone, Copy, Default)]
+    struct Cell {
+        /// AFP numerator (threshold test on the ideal vectors).
+        afp_fails: usize,
+        /// CAFP tally (gated oblivious simulation).
+        tally: TrialTally,
+        /// Trials incorporated when the cell froze (or at the final block).
+        n: usize,
+        lo: f64,
+        hi: f64,
+        converged: bool,
+    }
+    let mut cells: Vec<Vec<Cell>> =
+        spec.measures.iter().map(|_| vec![Cell::default(); ny]).collect();
+    let mut min_trs: Vec<Vec<f64>> = vec![Vec::new(); policies.len()];
+    let mut ws = Workspace::new();
+    let mut done_lasers = 0usize;
+
+    while done_lasers < max_lasers {
+        let next = if done_lasers == 0 {
+            min_lasers
+        } else {
+            (done_lasers * 2).min(max_lasers)
+        };
+        // Ideal model over the new block only: the sampler's derived
+        // per-laser/per-row streams make this prefix-extension exact.
+        let block = full.slice_lasers(done_lasers, next);
+        for (k, mut v) in eval.min_trs_multi(cfg, &block, &policies).into_iter().enumerate() {
+            min_trs[k].append(&mut v);
+        }
+        let (n0, n1) = (done_lasers * n_rows, next * n_rows);
+        for (mi, m) in spec.measures.iter().enumerate() {
+            match m {
+                Measure::Afp(p) => {
+                    let k = policies.iter().position(|q| q == p).expect("afp policy evaluated");
+                    let trs = &min_trs[k];
+                    for (iy, &tr) in spec.tr_values.iter().enumerate() {
+                        let cell = &mut cells[mi][iy];
+                        if cell.converged {
+                            continue;
+                        }
+                        cell.afp_fails += trs[n0..n1].iter().filter(|&&v| v > tr).count();
+                        cell.n = n1;
+                        let (lo, hi) = wilson_interval(cell.afp_fails, cell.n);
+                        cell.lo = lo;
+                        cell.hi = hi;
+                        if cell.n >= ad.min_trials && hi - lo <= ad.width {
+                            cell.converged = true;
+                        }
+                    }
+                }
+                Measure::Cafp(s) => {
+                    let k = policies
+                        .iter()
+                        .position(|&q| q == Policy::LtC)
+                        .expect("LtC gate evaluated for cafp measures");
+                    let gate = &min_trs[k];
+                    for (iy, &tr) in spec.tr_values.iter().enumerate() {
+                        let cell = &mut cells[mi][iy];
+                        if cell.converged {
+                            continue;
+                        }
+                        for t in n0..n1 {
+                            let ideal_ok = gate[t] <= tr;
+                            let class = if ideal_ok {
+                                let (laser, rings) = full.trial(t);
+                                Some(
+                                    run_scheme_with(*s, laser, rings, &cfg.target_order, tr, &mut ws)
+                                        .class,
+                                )
+                            } else {
+                                None
+                            };
+                            cell.tally.record(ideal_ok, class);
+                        }
+                        cell.n = n1;
+                        let (lo, hi) = cell.tally.cafp_interval();
+                        cell.lo = lo;
+                        cell.hi = hi;
+                        if cell.n >= ad.min_trials && hi - lo <= ad.width {
+                            cell.converged = true;
+                        }
+                    }
+                }
+                _ => unreachable!("validated: adaptive sweeps carry afp/cafp measures only"),
+            }
+        }
+        done_lasers = next;
+        if cells.iter().flatten().all(|c| c.converged) {
+            break;
+        }
+    }
+
+    let out_cells = spec
+        .measures
+        .iter()
+        .enumerate()
+        .map(|(mi, m)| match m {
+            Measure::Afp(_) => MeasureColumn::Grid(
+                cells[mi]
+                    .iter()
+                    .map(|c| if c.n == 0 { 0.0 } else { c.afp_fails as f64 / c.n as f64 })
+                    .collect(),
+            ),
+            Measure::Cafp(_) => {
+                MeasureColumn::CafpGrid(cells[mi].iter().map(|c| c.tally).collect())
+            }
+            _ => unreachable!("validated: adaptive sweeps carry afp/cafp measures only"),
+        })
+        .collect();
+    let stats = cells
+        .iter()
+        .map(|rows| {
+            Some(ColumnStats {
+                n_trials: rows.iter().map(|c| c.n).collect(),
+                ci_lo: rows.iter().map(|c| c.lo).collect(),
+                ci_hi: rows.iter().map(|c| c.hi).collect(),
+            })
+        })
+        .collect();
+    (ColumnEval { cells: out_cells }, stats, done_lasers * n_rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sweep::ConfigAxis;
+    use crate::coordinator::Backend;
+    use crate::montecarlo::RustIdeal;
+    use crate::oblivious::Scheme;
+
+    fn small_spec() -> SweepSpec {
+        SweepSpec::new(
+            "sched-test",
+            SystemConfig::default(),
+            ConfigAxis::RingLocalNm,
+            vec![1.12, 2.24, 3.36, 4.48],
+        )
+        .thresholds(vec![2.0, 6.0, 9.0])
+        .measures([
+            Measure::Afp(Policy::LtC),
+            Measure::Cafp(Scheme::VtRsSsm),
+        ])
+    }
+
+    fn opts(threads: usize) -> RunOptions {
+        RunOptions { n_lasers: 5, n_rows: 5, threads, ..RunOptions::fast() }
+    }
+
+    #[test]
+    fn scheduled_matches_sequential_engine_run() {
+        let spec = small_spec();
+        let sequential = {
+            let ideal = RustIdeal { threads: 1 };
+            let engine = TrialEngine::new(&ideal, 1);
+            spec.run(&engine, &opts(1))
+        };
+        for threads in [1, 3, 8] {
+            let mut seen = Vec::new();
+            let run = run_sweep(&spec, &opts(threads), &Backend::Rust, None, &mut |p| {
+                seen.push(p.ix)
+            })
+            .unwrap();
+            assert_eq!(run.outputs, sequential, "threads={threads}");
+            assert_eq!(run.backend, "rust-f64");
+            assert!(run.stats.is_none());
+            seen.sort_unstable();
+            assert_eq!(seen, vec![0, 1, 2, 3], "every column reported progress");
+        }
+    }
+
+    #[test]
+    fn queue_order_never_changes_results() {
+        let spec = small_spec();
+        let fwd =
+            run_sweep_ordered(&spec, &opts(2), &Backend::Rust, None, ColumnOrder::Forward, &mut |_| {})
+                .unwrap();
+        let rev =
+            run_sweep_ordered(&spec, &opts(2), &Backend::Rust, None, ColumnOrder::Reverse, &mut |_| {})
+                .unwrap();
+        assert_eq!(fwd.outputs, rev.outputs);
+    }
+
+    #[test]
+    fn max_inflight_bounds_do_not_change_results() {
+        let spec = small_spec();
+        let unbounded = run_sweep(&spec, &opts(4), &Backend::Rust, None, &mut |_| {}).unwrap();
+        let bounded = run_sweep(
+            &spec,
+            &RunOptions { max_inflight: 1, ..opts(4) },
+            &Backend::Rust,
+            None,
+            &mut |_| {},
+        )
+        .unwrap();
+        assert_eq!(unbounded.outputs, bounded.outputs);
+    }
+
+    #[test]
+    fn scheduled_sweep_coalesces_through_shared_cache() {
+        let spec = small_spec();
+        let cache = PopulationCache::new();
+        let first = run_sweep(&spec, &opts(4), &Backend::Rust, Some(&cache), &mut |_| {}).unwrap();
+        assert_eq!(cache.stats().misses, 4, "one build per column");
+        let second = run_sweep(&spec, &opts(4), &Backend::Rust, Some(&cache), &mut |_| {}).unwrap();
+        assert_eq!(cache.stats().misses, 4, "second run fully cached");
+        assert_eq!(cache.stats().hits, 4);
+        assert_eq!(first.outputs, second.outputs);
+    }
+
+    #[test]
+    fn adaptive_rejects_curve_measures_and_bad_bounds() {
+        let spec = SweepSpec::new(
+            "sched-test",
+            SystemConfig::default(),
+            ConfigAxis::RingLocalNm,
+            vec![1.12],
+        )
+        .measure(Measure::MinTrComplete(Policy::LtC));
+        let bad = RunOptions {
+            ci: Some(AdaptiveCfg { width: 0.1, min_trials: 25, max_trials: 100 }),
+            ..opts(1)
+        };
+        assert!(run_sweep(&spec, &bad, &Backend::Rust, None, &mut |_| {}).is_err());
+        let spec = small_spec();
+        for ad in [
+            AdaptiveCfg { width: 0.0, min_trials: 1, max_trials: 10 },
+            AdaptiveCfg { width: 0.1, min_trials: 0, max_trials: 10 },
+            AdaptiveCfg { width: 0.1, min_trials: 20, max_trials: 10 },
+        ] {
+            let o = RunOptions { ci: Some(ad), ..opts(1) };
+            assert!(run_sweep(&spec, &o, &Backend::Rust, None, &mut |_| {}).is_err(), "{ad:?}");
+        }
+    }
+
+    /// A loose interval converges on the first block; a tight one runs the
+    /// column to the full population. Both record per-cell stats.
+    #[test]
+    fn adaptive_allocates_between_min_and_max() {
+        let spec = small_spec();
+        let base = RunOptions { n_lasers: 12, n_rows: 12, ..RunOptions::fast() };
+        let loose = RunOptions {
+            ci: Some(AdaptiveCfg { width: 0.9, min_trials: 24, max_trials: 144 }),
+            ..base.clone()
+        };
+        let run = run_sweep(&spec, &loose, &Backend::Rust, None, &mut |_| {}).unwrap();
+        let stats = run.stats.expect("adaptive runs carry stats");
+        for grid in stats.iter().flatten() {
+            for (&n, (&lo, &hi)) in
+                grid.n_trials.iter().zip(grid.ci_lo.iter().zip(grid.ci_hi.iter()))
+            {
+                assert_eq!(n, 24, "0.9-wide target converges at the first block");
+                assert!(lo <= hi);
+                assert!(hi - lo <= 0.9 + 1e-12);
+            }
+        }
+
+        let tight = RunOptions {
+            ci: Some(AdaptiveCfg { width: 1e-6, min_trials: 24, max_trials: usize::MAX }),
+            ..base.clone()
+        };
+        let run = run_sweep(&spec, &tight, &Backend::Rust, None, &mut |_| {}).unwrap();
+        for grid in run.stats.expect("stats").iter().flatten() {
+            for &n in &grid.n_trials {
+                assert_eq!(n, 144, "unreachable target runs the population out");
+            }
+        }
+
+        // max_trials is a true ceiling: a cap that is not a whole-laser
+        // multiple rounds DOWN (30 trials at 12 rows → 2 lasers = 24),
+        // never up past the cap.
+        let capped = RunOptions {
+            ci: Some(AdaptiveCfg { width: 1e-6, min_trials: 12, max_trials: 30 }),
+            ..base
+        };
+        let run = run_sweep(&spec, &capped, &Backend::Rust, None, &mut |_| {}).unwrap();
+        for grid in run.stats.expect("stats").iter().flatten() {
+            for &n in &grid.n_trials {
+                assert!(n <= 30, "n_trials {n} must respect max_trials=30");
+                assert_eq!(n, 24, "whole-laser rounding goes down");
+            }
+        }
+    }
+
+    /// Adaptive estimates are consistent truncations of the full run: every
+    /// frozen AFP cell equals the full-population AFP over its own prefix,
+    /// and the whole adaptive sweep is thread-count invariant.
+    #[test]
+    fn adaptive_is_deterministic_and_prefix_consistent() {
+        let spec = small_spec();
+        let base = RunOptions { n_lasers: 8, n_rows: 8, ..RunOptions::fast() };
+        let ad = RunOptions {
+            ci: Some(AdaptiveCfg { width: 0.25, min_trials: 16, max_trials: 64 }),
+            ..base.clone()
+        };
+        let a = run_sweep(&spec, &ad, &Backend::Rust, None, &mut |_| {}).unwrap();
+        let b = run_sweep(&spec, &RunOptions { threads: 7, ..ad.clone() }, &Backend::Rust, None, &mut |_| {})
+            .unwrap();
+        assert_eq!(a.outputs, b.outputs);
+        assert_eq!(a.stats.as_ref().unwrap(), b.stats.as_ref().unwrap());
+
+        // Prefix consistency against the exact sequential run.
+        let full = {
+            let ideal = RustIdeal { threads: 1 };
+            let engine = TrialEngine::new(&ideal, 1);
+            spec.run(&engine, &base)
+        };
+        let (SweepOutput::Grid(adaptive_afp), SweepOutput::Grid(full_afp)) =
+            (&a.outputs[0], &full[0])
+        else {
+            panic!("first measure is an AFP grid");
+        };
+        let stats = a.stats.as_ref().unwrap()[0].as_ref().unwrap();
+        for (cell, &n) in stats.n_trials.iter().enumerate() {
+            assert!((16..=64).contains(&n), "16 <= {n} <= 64");
+            if n == 64 {
+                assert_eq!(adaptive_afp.cells[cell], full_afp.cells[cell]);
+            }
+        }
+    }
+}

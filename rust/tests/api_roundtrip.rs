@@ -33,6 +33,12 @@ fn every_cli_invocation_round_trips_through_json() {
             "--seed", "3",
         ],
         vec!["sweep", "--axis", "channels", "--values", "4,8,16"],
+        // adaptive allocation + scheduler knobs
+        vec![
+            "sweep", "--axis", "ring-local", "--values", "1.12,2.24", "--tr", "2,6",
+            "--measure", "cafp:vt-rs-ssm", "--ci", "0.01", "--min-trials", "200",
+            "--max-trials", "10000", "--inflight", "4", "--threads", "8",
+        ],
         vec!["sweep", "--axis", "permuted", "--values", "0,1", "--measure", "cafp:seq"],
         vec!["sweep", "--axis", "fsr-mean", "--values", "7:11:0.5", "--measure", "min-tr:ltc"],
         // arbitrate — defaults, every flag, each scheme alias.

@@ -1,0 +1,183 @@
+//! Determinism property tests for the column-parallel sweep scheduler:
+//! a sweep's full panel output must be **bit-identical** across worker
+//! thread counts, across queue hand-out orderings, across in-flight
+//! bounds, and across cache-cold vs cache-warm service runs. Together with
+//! `tests/golden.rs` these lock the scheduler's seeded reproducibility
+//! down so future refactors cannot silently perturb sampling or tally
+//! order.
+//!
+//! CI runs the whole test suite under a `threads={1,4}` matrix via the
+//! `WDM_TEST_THREADS` env var; these tests additionally fold that value
+//! into their thread sets so the matrix exercises distinct schedules.
+
+use wdm_arbiter::arbiter::Policy;
+use wdm_arbiter::api::{ArbiterService, JobRequest};
+use wdm_arbiter::config::SystemConfig;
+use wdm_arbiter::coordinator::sweep::{ConfigAxis, Measure, SweepSpec};
+use wdm_arbiter::coordinator::{AdaptiveCfg, Backend, RunOptions};
+use wdm_arbiter::montecarlo::scheduler::{run_sweep, run_sweep_ordered, ColumnOrder};
+use wdm_arbiter::montecarlo::{RustIdeal, TrialEngine};
+use wdm_arbiter::oblivious::Scheme;
+
+/// Thread counts to exercise: the ISSUE's {1, 2, 8} plus the CI matrix
+/// value (if any).
+fn thread_counts() -> Vec<usize> {
+    let mut counts = vec![1, 2, 8];
+    if let Ok(v) = std::env::var("WDM_TEST_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if !counts.contains(&n) {
+                counts.push(n);
+            }
+        }
+    }
+    counts
+}
+
+fn spec() -> SweepSpec {
+    SweepSpec::new(
+        "determinism",
+        SystemConfig::default(),
+        ConfigAxis::RingLocalNm,
+        vec![0.56, 1.12, 2.24, 3.36, 4.48],
+    )
+    .thresholds(vec![2.0, 4.0, 6.0, 9.0])
+    .measures([
+        Measure::Afp(Policy::LtC),
+        Measure::Cafp(Scheme::VtRsSsm),
+        Measure::MinTrComplete(Policy::LtA),
+    ])
+}
+
+fn opts(threads: usize) -> RunOptions {
+    RunOptions { n_lasers: 6, n_rows: 6, threads, ..RunOptions::fast() }
+}
+
+/// Panels are bit-identical for every worker thread count, and identical
+/// to the sequential single-engine reference.
+#[test]
+fn sweep_panels_identical_across_thread_counts() {
+    let spec = spec();
+    let reference = {
+        let ideal = RustIdeal { threads: 1 };
+        let engine = TrialEngine::new(&ideal, 1);
+        spec.run(&engine, &opts(1))
+    };
+    for threads in thread_counts() {
+        let run = run_sweep(&spec, &opts(threads), &Backend::Rust, None, &mut |_| {}).unwrap();
+        assert_eq!(
+            run.outputs, reference,
+            "threads={threads} must be bit-identical to the sequential run"
+        );
+    }
+}
+
+/// Queue hand-out order (and therefore completion order) never affects
+/// the output: forward and reverse orderings agree bit-for-bit.
+#[test]
+fn sweep_panels_identical_across_column_orderings() {
+    let spec = spec();
+    for threads in [2, 8] {
+        let fwd = run_sweep_ordered(
+            &spec,
+            &opts(threads),
+            &Backend::Rust,
+            None,
+            ColumnOrder::Forward,
+            &mut |_| {},
+        )
+        .unwrap();
+        let rev = run_sweep_ordered(
+            &spec,
+            &opts(threads),
+            &Backend::Rust,
+            None,
+            ColumnOrder::Reverse,
+            &mut |_| {},
+        )
+        .unwrap();
+        assert_eq!(fwd.outputs, rev.outputs, "threads={threads}");
+    }
+}
+
+/// Bounding in-flight populations reshapes the schedule, not the result.
+#[test]
+fn sweep_panels_identical_under_inflight_bounds() {
+    let spec = spec();
+    let unbounded = run_sweep(&spec, &opts(8), &Backend::Rust, None, &mut |_| {}).unwrap();
+    for inflight in [1, 2, 3] {
+        let bounded = run_sweep(
+            &spec,
+            &RunOptions { max_inflight: inflight, ..opts(8) },
+            &Backend::Rust,
+            None,
+            &mut |_| {},
+        )
+        .unwrap();
+        assert_eq!(unbounded.outputs, bounded.outputs, "inflight={inflight}");
+    }
+}
+
+/// Adaptive (--ci) allocation is just as deterministic: same panels and
+/// same per-cell trial counts for any thread count.
+#[test]
+fn adaptive_sweep_identical_across_thread_counts() {
+    let spec = SweepSpec::new(
+        "determinism-ci",
+        SystemConfig::default(),
+        ConfigAxis::RingLocalNm,
+        vec![1.12, 2.24, 4.48],
+    )
+    .thresholds(vec![2.0, 6.0])
+    .measures([Measure::Afp(Policy::LtC), Measure::Cafp(Scheme::RsSsm)]);
+    let ci = Some(AdaptiveCfg { width: 0.3, min_trials: 12, max_trials: 36 });
+    let base = RunOptions { n_lasers: 6, n_rows: 6, ci, ..RunOptions::fast() };
+    let reference = run_sweep(&spec, &base, &Backend::Rust, None, &mut |_| {}).unwrap();
+    for threads in thread_counts() {
+        let run = run_sweep(
+            &spec,
+            &RunOptions { threads, ..base.clone() },
+            &Backend::Rust,
+            None,
+            &mut |_| {},
+        )
+        .unwrap();
+        assert_eq!(run.outputs, reference.outputs, "threads={threads}");
+        assert_eq!(
+            run.stats.as_ref().unwrap(),
+            reference.stats.as_ref().unwrap(),
+            "threads={threads}: per-cell n_trials and intervals must match"
+        );
+    }
+}
+
+fn sweep_job(out: &std::path::Path) -> JobRequest {
+    JobRequest::from_json_str(&format!(
+        r#"{{"type":"sweep","axis":"ring-local","values":[1.12,2.24,3.36],"tr":[2,6],
+            "measures":["afp:ltc","cafp:vt-rs-ssm"],
+            "options":{{"fast":true,"lasers":4,"rows":4,"out":"{}"}}}}"#,
+        out.display()
+    ))
+    .unwrap()
+}
+
+/// A cache-warm `ArbiterService` run (second submission, populations all
+/// memoized) produces panels bit-identical to its cache-cold first run —
+/// and to a fresh service entirely.
+#[test]
+fn service_runs_identical_cache_cold_and_warm() {
+    let dir = std::env::temp_dir().join(format!("wdm-det-svc-{}", std::process::id()));
+    let job = sweep_job(&dir);
+
+    let service = ArbiterService::new(Backend::Rust, 2);
+    let cold = service.submit(&job);
+    assert!(cold.ok, "{:?}", cold.error);
+    assert!(cold.cache.misses > 0, "first run samples");
+    let warm = service.submit(&job);
+    assert!(warm.ok, "{:?}", warm.error);
+    assert_eq!(warm.cache.misses, 0, "second run is fully cached");
+    assert_eq!(cold.panels, warm.panels, "cache state must not perturb panels");
+
+    let fresh = ArbiterService::new(Backend::Rust, 2).submit(&job);
+    assert_eq!(fresh.panels, cold.panels, "fresh service agrees too");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -97,6 +97,55 @@ fn sweep_range_syntax_and_curve_measure() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Acceptance: a `--ci` sweep records per-cell `n_trials` (≤ the
+/// population) and the Wilson interval in the JSON panel output.
+#[test]
+fn sweep_ci_records_adaptive_stats_in_json() {
+    let dir = std::env::temp_dir().join(format!("wdm-e2e-ci-{}", std::process::id()));
+    let out = bin()
+        .args([
+            "sweep", "--axis", "ring-local", "--values", "1.12,2.24", "--tr", "2,6",
+            "--measure", "cafp:vt-rs-ssm", "--fast", "--lasers", "8", "--rows", "8",
+            "--ci", "0.5", "--min-trials", "16", "--out",
+        ])
+        .arg(&dir)
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let json = std::fs::read_to_string(dir.join("sweep.json")).unwrap();
+    assert!(json.contains("\"ci\""), "{json}");
+    assert!(json.contains("\"n_trials\""), "{json}");
+    assert!(json.contains("\"ci_lo\""), "{json}");
+    assert!(json.contains("\"ci_hi\""), "{json}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Both scheduler paths (full and adaptive) honor --threads without
+/// changing results: byte-identical sweep.json at 1 vs 8 workers.
+#[test]
+fn sweep_json_byte_identical_across_thread_counts() {
+    let run_with = |threads: &str, tag: &str| {
+        let dir = std::env::temp_dir().join(format!(
+            "wdm-e2e-thr{tag}-{}",
+            std::process::id()
+        ));
+        let out = bin()
+            .args([
+                "sweep", "--axis", "ring-local", "--values", "1.12,2.24,3.36", "--tr", "2,6",
+                "--measure", "afp:ltc,cafp:vt-rs-ssm", "--fast", "--lasers", "4", "--rows",
+                "4", "--threads", threads, "--out",
+            ])
+            .arg(&dir)
+            .output()
+            .expect("run");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let json = std::fs::read_to_string(dir.join("sweep.json")).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        json
+    };
+    assert_eq!(run_with("1", "a"), run_with("8", "b"));
+}
+
 #[test]
 fn sweep_rejects_bad_axis() {
     let out = bin()
@@ -263,6 +312,12 @@ fn run_all_writes_manifest_and_reports_backend() {
     assert!(manifest.contains("\"id\": \"fig14\""), "{manifest}");
     assert!(manifest.contains("\"failures\": 0"), "{manifest}");
     assert!(manifest.contains("\"backend\""), "{manifest}");
+    // Entries are sorted by experiment id, so the manifest stays stable
+    // whatever order the concurrent scheduler finishes experiments in.
+    let pos = |id: &str| manifest.find(&format!("\"id\": \"{id}\"")).expect(id);
+    assert!(pos("fig14") < pos("fig4"), "lexicographic id order");
+    assert!(pos("fig4") < pos("table1"), "lexicographic id order");
+    assert!(pos("table1") < pos("table2"), "lexicographic id order");
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("wrote"), "{text}");
     std::fs::remove_dir_all(&dir).ok();

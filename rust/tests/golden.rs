@@ -1,0 +1,229 @@
+//! Golden-digest regression tests: pin a stable FNV-1a digest of each
+//! fig4/fig7/fig14-style panel at 64 trials (8×8) so any future refactor
+//! that perturbs sampling, seed derivation, policy evaluation, or tally
+//! order fails loudly.
+//!
+//! The pinned digests live in `tests/golden_digests.json`. On a machine
+//! where an entry is missing the test computes and **blesses** it (writes
+//! the file and passes) — commit the updated file to activate the pin.
+//! `WDM_BLESS_GOLDEN=1 cargo test -q golden` re-blesses everything after
+//! an *intentional* change to sampling or seeding.
+//!
+//! Independently of the pin file, this suite hard-asserts that the
+//! sequential engine path and the column-parallel scheduler produce the
+//! same digest at every thread count — the scheduler can never drift from
+//! the reference implementation unnoticed.
+
+use std::collections::BTreeMap;
+
+use wdm_arbiter::arbiter::Policy;
+use wdm_arbiter::config::SystemConfig;
+use wdm_arbiter::coordinator::sweep::{ConfigAxis, Measure, SweepOutput, SweepSpec};
+use wdm_arbiter::coordinator::{Backend, RunOptions};
+use wdm_arbiter::montecarlo::scheduler::run_sweep;
+use wdm_arbiter::montecarlo::{RustIdeal, TrialEngine};
+use wdm_arbiter::oblivious::Scheme;
+use wdm_arbiter::util::json::Json;
+
+const GOLDEN_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden_digests.json");
+
+/// FNV-1a 64-bit over a byte stream.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn push(&mut self, byte: u8) {
+        self.0 ^= byte as u64;
+        self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    fn f64s(&mut self, xs: &[f64]) {
+        for x in xs {
+            for b in x.to_bits().to_le_bytes() {
+                self.push(b);
+            }
+        }
+    }
+
+    fn u64(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.push(b);
+        }
+    }
+
+    fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
+/// Stable digest of one sweep output: axes, cells, and (for CAFP) the full
+/// tally breakdown, so a change to any recorded number trips the pin.
+fn output_digest(out: &SweepOutput) -> String {
+    let mut h = Fnv::new();
+    match out {
+        SweepOutput::Curve(series) => {
+            h.u64(1);
+            h.f64s(&series.x);
+            h.f64s(&series.y);
+        }
+        SweepOutput::Grid(shmoo) => {
+            h.u64(2);
+            h.f64s(&shmoo.x);
+            h.f64s(&shmoo.y);
+            h.f64s(&shmoo.cells);
+        }
+        SweepOutput::CafpGrid { cafp, tallies } => {
+            h.u64(3);
+            h.f64s(&cafp.x);
+            h.f64s(&cafp.y);
+            h.f64s(&cafp.cells);
+            for t in tallies {
+                h.u64(t.trials as u64);
+                h.u64(t.policy_failures as u64);
+                h.u64(t.conditional_failures as u64);
+                h.u64(t.lock_errors as u64);
+                h.u64(t.lane_order_errors as u64);
+            }
+        }
+    }
+    h.hex()
+}
+
+/// The pinned panels: fig4 (AFP shmoos, three policies), fig7 (min-TR
+/// curve over grid offset), fig14 (CAFP shmoos, all schemes) — each at the
+/// experiment's real tag + seed stream, 8×8 = 64 trials.
+fn golden_specs() -> Vec<SweepSpec> {
+    vec![
+        SweepSpec::new(
+            "fig4",
+            SystemConfig::default(),
+            ConfigAxis::RingLocalNm,
+            vec![1.12, 2.24, 4.48],
+        )
+        .thresholds(vec![2.0, 4.0, 6.0, 9.0])
+        .measures([
+            Measure::Afp(Policy::LtA),
+            Measure::Afp(Policy::LtC),
+            Measure::Afp(Policy::LtD),
+        ]),
+        SweepSpec::new(
+            "fig7",
+            SystemConfig::default(),
+            ConfigAxis::GridOffsetNm,
+            vec![0.0, 5.0, 10.0, 15.0],
+        )
+        .measures([Measure::MinTrComplete(Policy::LtC), Measure::MinTrComplete(Policy::LtA)]),
+        SweepSpec::new(
+            "fig14",
+            SystemConfig::default(),
+            ConfigAxis::RingLocalNm,
+            vec![1.12, 2.24],
+        )
+        .thresholds(vec![2.0, 6.0, 9.0])
+        .measures(Scheme::all().into_iter().map(Measure::Cafp)),
+    ]
+}
+
+fn opts(threads: usize) -> RunOptions {
+    // 8×8 = 64 trials per column, the ISSUE's small-trial-count pin shape.
+    RunOptions { n_lasers: 8, n_rows: 8, threads, ..RunOptions::fast() }
+}
+
+/// name → digest for every (spec, measure) panel, computed via `run`.
+fn compute_digests(run: impl Fn(&SweepSpec) -> Vec<SweepOutput>) -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    for spec in golden_specs() {
+        let outputs = run(&spec);
+        for (m, o) in spec.measures.iter().zip(&outputs) {
+            out.insert(format!("{}/{}", spec.tag, m.slug()), output_digest(o));
+        }
+    }
+    out
+}
+
+fn load_pins() -> BTreeMap<String, String> {
+    let Ok(text) = std::fs::read_to_string(GOLDEN_PATH) else {
+        return BTreeMap::new();
+    };
+    let Ok(json) = Json::parse(&text) else {
+        return BTreeMap::new();
+    };
+    let Json::Obj(pairs) = json else {
+        return BTreeMap::new();
+    };
+    pairs
+        .into_iter()
+        .filter_map(|(k, v)| v.as_str().map(|s| (k, s.to_string())))
+        .collect()
+}
+
+fn save_pins(pins: &BTreeMap<String, String>) {
+    let pairs: Vec<(&str, Json)> =
+        pins.iter().map(|(k, v)| (k.as_str(), Json::str(v.clone()))).collect();
+    std::fs::write(GOLDEN_PATH, Json::obj(pairs).to_pretty()).expect("write golden pins");
+}
+
+/// The one test that owns the pin file (single test fn → no write races):
+/// computes digests through the sequential engine, checks the scheduler
+/// agrees at several thread counts, then compares against the pins —
+/// blessing any entry the file does not have yet.
+#[test]
+fn golden_panel_digests() {
+    let sequential = compute_digests(|spec| {
+        let ideal = RustIdeal { threads: 1 };
+        let engine = TrialEngine::new(&ideal, 1);
+        spec.run(&engine, &opts(1))
+    });
+
+    // Scheduler agreement at every thread count (incl. the CI matrix's).
+    let mut threads = vec![1, 2, 8];
+    if let Ok(v) = std::env::var("WDM_TEST_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if !threads.contains(&n) {
+                threads.push(n);
+            }
+        }
+    }
+    for t in threads {
+        let scheduled = compute_digests(|spec| {
+            run_sweep(spec, &opts(t), &Backend::Rust, None, &mut |_| {})
+                .expect("scheduled sweep")
+                .outputs
+        });
+        assert_eq!(
+            scheduled, sequential,
+            "threads={t}: scheduler digests must match the sequential engine"
+        );
+    }
+
+    // Pin check / bless.
+    let bless_all = std::env::var("WDM_BLESS_GOLDEN").is_ok_and(|v| v == "1");
+    let mut pins = load_pins();
+    let mut blessed = Vec::new();
+    for (name, digest) in &sequential {
+        match pins.get(name) {
+            Some(want) if !bless_all => assert_eq!(
+                digest, want,
+                "golden digest drifted for panel '{name}'.\n\
+                 If the sampling/seed change was intentional, re-bless with\n\
+                 `WDM_BLESS_GOLDEN=1 cargo test -q golden` and commit\n\
+                 tests/golden_digests.json; otherwise this is a regression."
+            ),
+            _ => {
+                pins.insert(name.clone(), digest.clone());
+                blessed.push(name.clone());
+            }
+        }
+    }
+    if !blessed.is_empty() {
+        save_pins(&pins);
+        eprintln!(
+            "golden: blessed {} digest(s) into {GOLDEN_PATH}: {}",
+            blessed.len(),
+            blessed.join(", ")
+        );
+    }
+}
