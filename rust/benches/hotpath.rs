@@ -54,6 +54,17 @@ fn main() {
     run("distance_matrix_n16", &mut || {
         black_box(distance::scaled_distance_matrix(black_box(&sut16)));
     });
+    {
+        // Fault-injected trial: the mask pass only runs when flags exist.
+        let mut sut_faulted = sut8.clone();
+        sut_faulted.laser.dead = vec![false; 8];
+        sut_faulted.laser.dead[2] = true;
+        sut_faulted.rings.dark = vec![false; 8];
+        sut_faulted.rings.dark[5] = true;
+        run("distance_matrix_n8_faulted", &mut || {
+            black_box(distance::scaled_distance_matrix(black_box(&sut_faulted)));
+        });
+    }
     run("ideal_ltc_n8", &mut || {
         black_box(ideal::min_tuning_range(Policy::LtC, black_box(&dist8), &order8));
     });
@@ -231,15 +242,40 @@ fn fig14_grid_comparison() {
         best
     };
 
+    // (d) Correlated trimmed-Gaussian scenario through the same 1-thread
+    // engine path: sampling cost moves per column (one gradient draw + the
+    // AR(1) blend), while the per-trial hot path (distance matrices,
+    // oblivious workspaces) is untouched — the column must stay within
+    // noise of the uniform one, proving the scenario layer adds no
+    // hot-path allocation or work.
+    let mut cfg_corr = cfg.clone();
+    cfg_corr.scenario.distribution =
+        wdm_arbiter::model::Distribution::by_name("trimmed-gaussian").expect("family");
+    cfg_corr.scenario.correlation =
+        wdm_arbiter::model::CorrelationConfig { gradient_nm: 2.0, corr_len: 3.0 };
+    let spec_corr = SweepSpec::new("bench-corr", cfg_corr, ConfigAxis::RingLocalNm, rlv.clone())
+        .thresholds(trs.clone())
+        .measures(schemes.iter().map(|&s| Measure::Cafp(s)));
+    let corr_structure = || -> f64 {
+        let ideal_eval = RustIdeal { threads: 1 };
+        let engine = TrialEngine::new(&ideal_eval, 1);
+        let outs = spec_corr.run(&engine, &opts);
+        outs.into_iter()
+            .map(|o| o.into_shmoo().cells.iter().sum::<f64>())
+            .sum()
+    };
+
     let t_seed = time_min(&seed_structure);
     let t_engine = time_min(&engine_structure);
     let t_sched = time_min(&scheduler_structure);
+    let t_corr = time_min(&corr_structure);
     let cells = schemes.len() * rlv.len() * trs.len();
     println!(
         "\nfig14_grid ({} cells x {} trials):\n  \
          seed structure (per-cell sample + ideal): {:>8.1} ms\n  \
          trial-engine, 1 thread (column reuse):    {:>8.1} ms\n  \
          scheduler, 8 column workers:              {:>8.1} ms\n  \
+         correlated scenario, 1-thread engine:     {:>8.1} ms ({:.2}x vs uniform)\n  \
          engine speedup: {:.1}x (acceptance floor: 3x)\n  \
          column-parallel speedup over 1-thread engine: {:.1}x",
         cells,
@@ -247,6 +283,8 @@ fn fig14_grid_comparison() {
         t_seed * 1e3,
         t_engine * 1e3,
         t_sched * 1e3,
+        t_corr * 1e3,
+        t_corr / t_engine,
         t_seed / t_engine,
         t_engine / t_sched
     );

@@ -848,6 +848,7 @@ mod tests {
                     seed: Some(99),
                     threads: Some(2),
                     backend: Some(Backend::Xla),
+                    ..JobOptions::default()
                 },
             },
             sweep_job(),
@@ -987,6 +988,49 @@ id = "table1"
         assert_eq!(
             JobRequest::from_json_str(&from_toml.to_json_string()).unwrap(),
             from_json
+        );
+    }
+
+    /// Acceptance: scenario knobs (scenario axes + an inline scenario
+    /// config) survive the JobRequest JSON↔TOML round-trip.
+    #[test]
+    fn scenario_knobs_round_trip_json_and_toml() {
+        // Every scenario axis is a first-class sweep axis on the wire.
+        for axis_name in
+            ["dist-kind", "gradient-nm", "corr-len", "dead-tone-p", "dark-ring-p", "weak-ring-p"]
+        {
+            let job = JobRequest::Sweep {
+                axis: ConfigAxis::by_name(axis_name).unwrap(),
+                values: vec![0.0, 0.05, 0.1],
+                thresholds: Some(vec![4.48]),
+                measures: vec![Measure::Afp(Policy::LtC), Measure::Cafp(Scheme::VtRsSsm)],
+                config: ConfigSpec::default(),
+                options: JobOptions::default(),
+            };
+            let back = JobRequest::from_json_str(&job.to_json_string()).unwrap();
+            assert_eq!(back, job, "{axis_name}");
+        }
+        // An inline scenario config (JSON strings carry the newlines) parses
+        // into the same job as the equivalent TOML job file using a path.
+        let json = r#"{"type":"sweep","axis":"ring-local","values":[1.12],
+            "tr":[6],"measures":"afp:ltc",
+            "config":{"toml":"[scenario]\ndistribution = \"bimodal\"\n"}}"#;
+        let job = JobRequest::from_json_str(json).unwrap();
+        let JobRequest::Sweep { config, .. } = &job else { panic!("sweep") };
+        let cfg = config.load().unwrap();
+        assert_eq!(cfg.scenario.distribution.name(), "bimodal");
+        assert_eq!(JobRequest::from_json_str(&job.to_json_string()).unwrap(), job);
+
+        // TOML job files accept the scenario axes symmetrically.
+        let toml = "[job]\ntype = \"sweep\"\naxis = \"dead-tone-p\"\n\
+                    values = [0.0, 0.1]\ntr = [6.0]\nmeasures = \"afp:ltc\"\n";
+        let from_toml = JobRequest::from_toml(toml).unwrap();
+        let JobRequest::Sweep { axis, values, .. } = &from_toml else { panic!("sweep") };
+        assert_eq!(*axis, ConfigAxis::DeadToneP);
+        assert_eq!(values, &vec![0.0, 0.1]);
+        assert_eq!(
+            JobRequest::from_json_str(&from_toml.to_json_string()).unwrap(),
+            from_toml
         );
     }
 

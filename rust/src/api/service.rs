@@ -152,6 +152,15 @@ impl ArbiterService {
         if measures.is_empty() {
             return Err("sweep: needs at least one measure".to_string());
         }
+        // Validate every column's applied configuration up front (scenario
+        // probabilities, negative sigmas): a bad axis value fails the job
+        // with a structured error before any population is sampled, instead
+        // of panicking (or spinning) deep inside a sampler worker.
+        for &v in values {
+            axis.apply(&cfg, v)
+                .validate()
+                .map_err(|e| format!("sweep: {} = {v}: {e}", axis.name()))?;
+        }
         let backend_tag = options.backend.unwrap_or(self.backend);
 
         let needs_tr = measures
@@ -405,6 +414,7 @@ impl ArbiterService {
             "orders:      r_i = {}  s_i = {}\n",
             cfg.pre_fab_order, cfg.target_order
         ));
+        summary.push_str(&scenario_summary(&cfg.scenario));
         r.summary = summary;
         r.data = config_json(&cfg);
         Ok(r)
@@ -452,6 +462,57 @@ impl ArbiterService {
     }
 }
 
+/// The `show-config` scenario lines: distribution family (with its
+/// parameters), correlation, and fault knobs.
+fn scenario_summary(s: &crate::model::ScenarioConfig) -> String {
+    use crate::model::Distribution;
+    let dist = match s.distribution {
+        Distribution::Uniform => "uniform (paper §II-C)".to_string(),
+        Distribution::TrimmedGaussian { sigma_frac, clip } => {
+            format!("trimmed-gaussian (sigma_frac {sigma_frac}, clip {clip})")
+        }
+        Distribution::Bimodal { separation_frac, jitter_frac } => {
+            format!("bimodal (separation {separation_frac}, jitter {jitter_frac})")
+        }
+    };
+    format!(
+        "scenario:    dist {dist}\n\
+         correlation: gradient ±{} nm, corr-len {} rings\n\
+         faults:      dead-tone {}%, dark-ring {}%, weak-ring {}% (TR x{})\n",
+        s.correlation.gradient_nm,
+        s.correlation.corr_len,
+        s.faults.dead_tone_p * 100.0,
+        s.faults.dark_ring_p * 100.0,
+        s.faults.weak_ring_p * 100.0,
+        s.faults.weak_tr_factor,
+    )
+}
+
+fn scenario_json(s: &crate::model::ScenarioConfig) -> Json {
+    use crate::model::Distribution;
+    let mut dist_pairs = vec![("kind", Json::str(s.distribution.name()))];
+    match s.distribution {
+        Distribution::Uniform => {}
+        Distribution::TrimmedGaussian { sigma_frac, clip } => {
+            dist_pairs.push(("sigma_frac", Json::num(sigma_frac)));
+            dist_pairs.push(("clip", Json::num(clip)));
+        }
+        Distribution::Bimodal { separation_frac, jitter_frac } => {
+            dist_pairs.push(("separation_frac", Json::num(separation_frac)));
+            dist_pairs.push(("jitter_frac", Json::num(jitter_frac)));
+        }
+    }
+    Json::obj(vec![
+        ("distribution", Json::obj(dist_pairs)),
+        ("gradient_nm", Json::num(s.correlation.gradient_nm)),
+        ("corr_len", Json::num(s.correlation.corr_len)),
+        ("dead_tone_p", Json::num(s.faults.dead_tone_p)),
+        ("dark_ring_p", Json::num(s.faults.dark_ring_p)),
+        ("weak_ring_p", Json::num(s.faults.weak_ring_p)),
+        ("weak_tr_factor", Json::num(s.faults.weak_tr_factor)),
+    ])
+}
+
 fn config_json(cfg: &SystemConfig) -> Json {
     Json::obj(vec![
         (
@@ -474,6 +535,7 @@ fn config_json(cfg: &SystemConfig) -> Json {
                 ("tr_frac", Json::num(cfg.variation.tr_frac)),
             ]),
         ),
+        ("scenario", scenario_json(&cfg.scenario)),
         ("pre_fab_order", Json::arr_usize(cfg.pre_fab_order.as_slice())),
         ("target_order", Json::arr_usize(cfg.target_order.as_slice())),
     ])
@@ -633,6 +695,81 @@ mod tests {
         .unwrap();
         let r = service.submit(&bad);
         assert!(!r.ok);
+    }
+
+    #[test]
+    fn show_config_renders_scenario_and_json() {
+        let service = ArbiterService::new(Backend::Rust, 0);
+        let req = JobRequest::ShowConfig {
+            cases: false,
+            config: ConfigSpec {
+                path: None,
+                inline_toml: Some(
+                    "[scenario]\ndistribution = \"trimmed-gaussian\"\ndead_tone_p = 0.05\n"
+                        .to_string(),
+                ),
+                permuted: false,
+            },
+        };
+        let resp = service.submit(&req);
+        assert!(resp.ok, "{:?}", resp.error);
+        assert!(resp.summary.contains("trimmed-gaussian"), "{}", resp.summary);
+        assert!(resp.summary.contains("dead-tone 5%"), "{}", resp.summary);
+        let scenario = resp.data.get("scenario").unwrap();
+        assert_eq!(
+            scenario.get("distribution").unwrap().get("kind").unwrap().as_str(),
+            Some("trimmed-gaussian")
+        );
+        assert_eq!(scenario.get("dead_tone_p").unwrap().as_f64(), Some(0.05));
+    }
+
+    #[test]
+    fn sweep_rejects_invalid_scenario_values_with_structured_error() {
+        let service = ArbiterService::new(Backend::Rust, 0);
+        // Probability > 1 on a fault axis: rejected before sampling.
+        let bad = JobRequest::from_json_str(
+            r#"{"type":"sweep","axis":"dead-tone-p","values":[0.0,1.5],
+                "measures":"afp:ltc","tr":[6],"options":{"fast":true}}"#,
+        )
+        .unwrap();
+        let resp = service.submit(&bad);
+        assert!(!resp.ok);
+        let err = resp.error.unwrap();
+        assert!(err.contains("dead-tone-p = 1.5"), "{err}");
+        assert!(err.contains("probability"), "{err}");
+        // Negative sigma on a variation axis: same structured rejection.
+        let bad = JobRequest::from_json_str(
+            r#"{"type":"sweep","axis":"ring-local","values":[-1.0],
+                "measures":"afp:ltc","tr":[6],"options":{"fast":true}}"#,
+        )
+        .unwrap();
+        let resp = service.submit(&bad);
+        assert!(!resp.ok);
+        assert!(resp.error.unwrap().contains("sigma must be >= 0"));
+    }
+
+    #[test]
+    fn fault_axis_sweep_degrades_gracefully_end_to_end() {
+        let dir = test_dir("svc-faults");
+        let service = ArbiterService::new(Backend::Rust, 2);
+        // tr = 10.5 nm exceeds every scaled mod-FSR distance
+        // (< 8.96·1.01/0.9 ≈ 10.06 nm), so the healthy column succeeds on
+        // every trial while the all-dead column stays infeasible.
+        let job = JobRequest::from_json_str(&format!(
+            r#"{{"type":"sweep","axis":"dead-tone-p","values":[0.0,1.0],"tr":[10.5],
+                "measures":"afp:ltc,cafp:vt-rs-ssm",
+                "options":{{"fast":true,"lasers":4,"rows":4,"out":"{}"}}}}"#,
+            dir.display()
+        ))
+        .unwrap();
+        let resp = service.submit(&job);
+        assert!(resp.ok, "{:?}", resp.error);
+        let Panel::Grid { cells: afp, .. } = &resp.panels[0] else { panic!("afp grid") };
+        assert_eq!(afp[0], 0.0, "fault-free column succeeds at tr beyond the FSR");
+        assert_eq!(afp[1], 1.0, "every tone dead: LtC infeasible on every trial");
+        let Panel::Grid { cells: cafp, .. } = &resp.panels[1] else { panic!("cafp grid") };
+        assert_eq!(cafp[1], 0.0, "CAFP conditions on ideal success: gated out, not a panic");
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

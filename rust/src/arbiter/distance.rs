@@ -45,7 +45,32 @@ pub fn scaled_distance_parts(laser: &MwlSample, rings: &RingRowSample) -> Distan
             d.push(red_shift_distance(laser.tones_nm[j] - res, fsr) * inv_scale);
         }
     }
-    DistanceMatrix { n, d }
+    let mut m = DistanceMatrix { n, d };
+    apply_fault_masks(laser, rings, &mut m);
+    m
+}
+
+/// Fault injection in distance space: a dark ring's row and a dead tone's
+/// column become infinite, so every ideal policy sees the assignment as
+/// infeasible at any tuning range (LtD/LtC/LtA all degrade to AFP = 1
+/// on affected trials — no panic, no special-casing downstream). No-op
+/// (and branch-free per trial) for fault-free samples.
+fn apply_fault_masks(laser: &MwlSample, rings: &RingRowSample, m: &mut DistanceMatrix) {
+    if laser.dead.is_empty() && rings.dark.is_empty() {
+        return;
+    }
+    let n = m.n;
+    for i in 0..n {
+        if rings.ring_dark(i) {
+            m.d[i * n..(i + 1) * n].fill(f64::INFINITY);
+            continue;
+        }
+        for j in 0..n {
+            if laser.tone_dead(j) {
+                m.d[i * n + j] = f64::INFINITY;
+            }
+        }
+    }
 }
 
 /// Sentinel distance for assignments invalidated by resonance aliasing:
@@ -110,6 +135,7 @@ pub fn scaled_distance_into(laser: &MwlSample, rings: &RingRowSample, out: &mut 
             out.d.push(red_shift_distance(laser.tones_nm[j] - res, fsr) * inv_scale);
         }
     }
+    apply_fault_masks(laser, rings, out);
 }
 
 #[cfg(test)]
@@ -122,11 +148,12 @@ mod tests {
     #[test]
     fn hand_case_matches_python_oracle() {
         // Mirrors python/tests/test_kernel.py::test_distance_semantics_hand_case.
-        let laser = MwlSample { tones_nm: vec![0.0, 2.0], grid_offset_nm: 0.0 };
+        let laser = MwlSample { tones_nm: vec![0.0, 2.0], grid_offset_nm: 0.0, dead: vec![] };
         let rings = RingRowSample {
             resonance_nm: vec![-1.0, 3.0],
             fsr_nm: vec![10.0, 10.0],
             tr_scale: vec![1.0, 1.0],
+            dark: vec![],
         };
         let m = scaled_distance_parts(&laser, &rings);
         let want = [1.0, 3.0, 7.0, 9.0];
@@ -137,14 +164,42 @@ mod tests {
 
     #[test]
     fn tr_scale_divides() {
-        let laser = MwlSample { tones_nm: vec![1.0], grid_offset_nm: 0.0 };
+        let laser = MwlSample { tones_nm: vec![1.0], grid_offset_nm: 0.0, dead: vec![] };
         let rings = RingRowSample {
             resonance_nm: vec![0.0],
             fsr_nm: vec![8.96],
             tr_scale: vec![2.0],
+            dark: vec![],
         };
         let m = scaled_distance_parts(&laser, &rings);
         assert!((m.at(0, 0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fault_masks_make_rows_and_columns_infeasible() {
+        let laser = MwlSample {
+            tones_nm: vec![0.0, 2.0],
+            grid_offset_nm: 0.0,
+            dead: vec![false, true], // tone 1 dead
+        };
+        let rings = RingRowSample {
+            resonance_nm: vec![-1.0, 3.0],
+            fsr_nm: vec![10.0, 10.0],
+            tr_scale: vec![1.0, 1.0],
+            dark: vec![true, false], // ring 0 dark
+        };
+        let m = scaled_distance_parts(&laser, &rings);
+        assert!(m.at(0, 0).is_infinite(), "dark ring row");
+        assert!(m.at(0, 1).is_infinite(), "dark ring row");
+        assert!(m.at(1, 1).is_infinite(), "dead tone column");
+        assert!((m.at(1, 0) - 7.0).abs() < 1e-12, "healthy cell untouched");
+        // The in-place variant applies the same masks.
+        let mut b = DistanceMatrix { n: 0, d: Vec::new() };
+        scaled_distance_into(&laser, &rings, &mut b);
+        assert_eq!(m, b);
+        // No NaNs anywhere: infinities stay comparison-safe for the
+        // policy reductions and the bottleneck matcher.
+        assert!(m.d.iter().all(|x| !x.is_nan()));
     }
 
     #[test]

@@ -3,16 +3,20 @@
 pub mod presets;
 pub mod toml;
 
-use crate::model::{DwdmGrid, SpectralOrdering, VariationConfig};
+use crate::model::{DwdmGrid, ScenarioConfig, SpectralOrdering, VariationConfig};
 
 /// Complete description of one system-under-test *population*: everything
 /// needed to sample MWL + MRR-row pairs and arbitrate them.
 ///
-/// Defaults are the paper's Table I (wdm8 / 200 GHz).
+/// Defaults are the paper's Table I (wdm8 / 200 GHz) under the paper's
+/// scenario (uniform variation, no correlation, no faults).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SystemConfig {
     pub grid: DwdmGrid,
     pub variation: VariationConfig,
+    /// Scenario model: variation distribution family, correlated /
+    /// systematic components, and fault injection (generalizes §II-C).
+    pub scenario: ScenarioConfig,
     /// Microring resonance blue-bias λ_rB, nm (Table I: 4.48 nm).
     pub ring_bias_nm: f64,
     /// FSR mean λ̄_FSR, nm (Table I: 8.96 nm = N_ch · λ_gS).
@@ -32,22 +36,28 @@ impl Default for SystemConfig {
 
 impl SystemConfig {
     /// Table I defaults for an arbitrary grid: λ_rB = 4 · λ_gS,
-    /// λ̄_FSR = N_ch · λ_gS, natural orderings.
+    /// λ̄_FSR = N_ch · λ_gS, natural orderings, the paper's scenario.
     ///
     /// The paper gives absolute values for wdm8-200g (λ_rB = 4.48 nm,
     /// λ̄_FSR = 8.96 nm); for the other Fig-5 grids we keep the same
     /// *relative* design rules (bias = 4 grid steps, FSR tiles the grid)
     /// and scale σ_rLV's default with the grid spacing.
+    ///
+    /// Built via struct literals end-to-end so a future field added to
+    /// [`VariationConfig`] or [`ScenarioConfig`] cannot leave this
+    /// constructor half-initialized and still compile.
     pub fn table1(grid: DwdmGrid) -> Self {
-        let mut variation = VariationConfig::default();
-        variation.ring_local_nm = 2.0 * grid.spacing_nm;
         Self {
+            variation: VariationConfig {
+                ring_local_nm: 2.0 * grid.spacing_nm,
+                ..VariationConfig::default()
+            },
+            scenario: ScenarioConfig::table1(),
             ring_bias_nm: 4.0 * grid.spacing_nm,
             fsr_mean_nm: grid.nominal_fsr_nm(),
             pre_fab_order: SpectralOrdering::natural(grid.n_ch),
             target_order: SpectralOrdering::natural(grid.n_ch),
             grid,
-            variation,
         }
     }
 
@@ -62,11 +72,49 @@ impl SystemConfig {
     pub fn n_ch(&self) -> usize {
         self.grid.n_ch
     }
+
+    /// Structured validation of every user-settable knob: negative σ values
+    /// and out-of-range scenario probabilities are rejected with an error
+    /// message instead of panicking (or looping) deep inside a sampler.
+    pub fn validate(&self) -> Result<(), String> {
+        let v = &self.variation;
+        for (name, x) in [
+            ("grid_offset_nm", v.grid_offset_nm),
+            ("laser_local_frac", v.laser_local_frac),
+            ("ring_local_nm", v.ring_local_nm),
+            ("fsr_frac", v.fsr_frac),
+            ("tr_frac", v.tr_frac),
+        ] {
+            // NaN fails the comparison too and must be rejected.
+            if x < 0.0 || x.is_nan() {
+                return Err(format!("variation.{name}: sigma must be >= 0, got {x}"));
+            }
+        }
+        self.scenario.validate()?;
+        // The multiplicative variations (1 + draw) must stay positive: a
+        // draw reaching −1 would produce a zero/negative tuning range or
+        // FSR and poison the scaled distance matrix. The uniform model
+        // guarantees |draw| ≤ σ; wider-support scenario distributions must
+        // satisfy the same invariant at their full support.
+        for (name, frac) in [("tr_frac", v.tr_frac), ("fsr_frac", v.fsr_frac)] {
+            let support = self.scenario.distribution.support_nm(frac);
+            if support >= 1.0 {
+                return Err(format!(
+                    "variation.{name}: the scenario distribution's support \
+                     (±{support:.3}) reaches 1, so sampled tuning ranges/FSRs \
+                     could go non-positive; shrink {name} or the distribution \
+                     parameters"
+                ));
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::Distribution;
 
     #[test]
     fn default_matches_table1() {
@@ -77,6 +125,9 @@ mod tests {
         assert!((c.fsr_mean_nm - 8.96).abs() < 1e-12);
         assert!((c.variation.ring_local_nm - 2.24).abs() < 1e-12);
         assert_eq!(c.pre_fab_order, SpectralOrdering::natural(8));
+        // The default scenario is exactly the paper's model.
+        assert_eq!(c.scenario, ScenarioConfig::table1());
+        assert!(!c.scenario.is_generalized());
     }
 
     #[test]
@@ -92,5 +143,42 @@ mod tests {
         assert!((c.fsr_mean_nm - 35.84).abs() < 1e-12);
         assert!((c.ring_bias_nm - 8.96).abs() < 1e-12);
         assert!((c.variation.ring_local_nm - 4.48).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_rejects_negative_sigma_and_bad_scenario() {
+        assert!(SystemConfig::default().validate().is_ok());
+        let mut c = SystemConfig::default();
+        c.variation.ring_local_nm = -1.0;
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("ring_local_nm"), "{err}");
+
+        let mut c = SystemConfig::default();
+        c.scenario.faults.dark_ring_p = 2.0;
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("dark_ring_p"), "{err}");
+
+        let mut c = SystemConfig::default();
+        c.scenario.distribution = Distribution::TrimmedGaussian { sigma_frac: 0.5, clip: -1.0 };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_supports_reaching_negative_tr_or_fsr() {
+        // Trimmed-Gaussian support is clip·sigma_frac ≈ 1.73× the σ knob:
+        // tr_frac = 0.6 could draw tr_scale ≤ 0 — rejected up front.
+        let mut c = SystemConfig::default();
+        c.scenario.distribution = Distribution::by_name("trimmed-gaussian").unwrap();
+        c.variation.tr_frac = 0.6;
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("tr_frac"), "{err}");
+        c.variation.tr_frac = 0.5; // support ≈ 0.87 < 1: fine
+        assert!(c.validate().is_ok());
+
+        // Same invariant guards the paper's uniform model at σ_TR ≥ 1.
+        let mut c = SystemConfig::default();
+        c.variation.fsr_frac = 1.0;
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("fsr_frac"), "{err}");
     }
 }

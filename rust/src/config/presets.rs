@@ -4,7 +4,7 @@
 use crate::arbiter::Policy;
 use crate::config::toml::TomlDoc;
 use crate::config::SystemConfig;
-use crate::model::{DwdmGrid, SpectralOrdering};
+use crate::model::{Distribution, DwdmGrid, ScenarioConfig, SpectralOrdering};
 
 /// One Table II column: policy + pre-fab/target spectral orderings.
 #[derive(Debug, Clone, PartialEq)]
@@ -52,7 +52,8 @@ pub fn fig5_grids() -> Vec<DwdmGrid> {
 }
 
 /// Load a `SystemConfig` from a TOML-subset file. Unspecified keys fall
-/// back to Table I defaults for the configured grid.
+/// back to Table I defaults for the configured grid (including the paper's
+/// uniform / no-correlation / no-fault scenario).
 ///
 /// ```toml
 /// [grid]
@@ -70,6 +71,18 @@ pub fn fig5_grids() -> Vec<DwdmGrid> {
 /// [orders]
 /// pre_fab = "natural"      # or "permuted" or explicit [0, 4, 1, …]
 /// target = "natural"
+/// [scenario]
+/// distribution = "uniform" # or "trimmed-gaussian" / "bimodal"
+/// sigma_frac = 0.577       # trimmed-gaussian: stddev as a fraction of σ
+/// clip = 3.0               # trimmed-gaussian: trim at ±clip stddevs
+/// separation_frac = 0.7    # bimodal: mode offset as a fraction of σ
+/// jitter_frac = 0.3        # bimodal: per-mode uniform jitter fraction
+/// gradient_nm = 0.0        # wafer-gradient amplitude across the ring row
+/// corr_len = 0.0           # AR(1) neighbor-correlation length (rings)
+/// dead_tone_p = 0.0        # per-tone dead-laser probability
+/// dark_ring_p = 0.0        # per-ring dark/stuck probability
+/// weak_ring_p = 0.0        # per-ring reduced-TR probability
+/// weak_tr_factor = 0.5     # TR multiplier for weak rings, (0, 1]
 /// ```
 pub fn system_config_from_toml(text: &str) -> Result<SystemConfig, String> {
     let doc = TomlDoc::parse(text)?;
@@ -88,7 +101,43 @@ pub fn system_config_from_toml(text: &str) -> Result<SystemConfig, String> {
 
     cfg.pre_fab_order = parse_order(&doc, "orders.pre_fab", grid.n_ch)?;
     cfg.target_order = parse_order(&doc, "orders.target", grid.n_ch)?;
+    cfg.scenario = parse_scenario(&doc)?;
+    cfg.validate()?;
     Ok(cfg)
+}
+
+/// Parse the `[scenario]` section; every key falls back to the paper's
+/// scenario. Parameter keys only apply to the family that owns them.
+fn parse_scenario(doc: &TomlDoc) -> Result<ScenarioConfig, String> {
+    let mut scenario = ScenarioConfig::table1();
+    let name = doc.get_str("scenario.distribution", "uniform");
+    let mut dist = Distribution::by_name(name).ok_or_else(|| {
+        format!(
+            "scenario.distribution: unknown family '{name}' \
+             (uniform | trimmed-gaussian | bimodal)"
+        )
+    })?;
+    match &mut dist {
+        Distribution::Uniform => {}
+        Distribution::TrimmedGaussian { sigma_frac, clip } => {
+            *sigma_frac = doc.get_f64("scenario.sigma_frac", *sigma_frac);
+            *clip = doc.get_f64("scenario.clip", *clip);
+        }
+        Distribution::Bimodal { separation_frac, jitter_frac } => {
+            *separation_frac = doc.get_f64("scenario.separation_frac", *separation_frac);
+            *jitter_frac = doc.get_f64("scenario.jitter_frac", *jitter_frac);
+        }
+    }
+    scenario.distribution = dist;
+    scenario.correlation.gradient_nm =
+        doc.get_f64("scenario.gradient_nm", scenario.correlation.gradient_nm);
+    scenario.correlation.corr_len = doc.get_f64("scenario.corr_len", scenario.correlation.corr_len);
+    scenario.faults.dead_tone_p = doc.get_f64("scenario.dead_tone_p", scenario.faults.dead_tone_p);
+    scenario.faults.dark_ring_p = doc.get_f64("scenario.dark_ring_p", scenario.faults.dark_ring_p);
+    scenario.faults.weak_ring_p = doc.get_f64("scenario.weak_ring_p", scenario.faults.weak_ring_p);
+    scenario.faults.weak_tr_factor =
+        doc.get_f64("scenario.weak_tr_factor", scenario.faults.weak_tr_factor);
+    Ok(scenario)
 }
 
 fn parse_order(doc: &TomlDoc, key: &str, n: usize) -> Result<SpectralOrdering, String> {
@@ -152,5 +201,60 @@ target = [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15]
     fn bad_order_rejected() {
         assert!(system_config_from_toml("[orders]\npre_fab = \"zigzag\"").is_err());
         assert!(system_config_from_toml("[orders]\npre_fab = [0, 0, 1]").is_err());
+    }
+
+    #[test]
+    fn scenario_section_parses() {
+        let cfg = system_config_from_toml(
+            "[scenario]\n\
+             distribution = \"trimmed-gaussian\"\n\
+             sigma_frac = 0.5\n\
+             clip = 2.5\n\
+             gradient_nm = 1.5\n\
+             corr_len = 4.0\n\
+             dead_tone_p = 0.02\n\
+             dark_ring_p = 0.01\n\
+             weak_ring_p = 0.05\n\
+             weak_tr_factor = 0.6\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.scenario.distribution,
+            crate::model::Distribution::TrimmedGaussian { sigma_frac: 0.5, clip: 2.5 }
+        );
+        assert_eq!(cfg.scenario.correlation.gradient_nm, 1.5);
+        assert_eq!(cfg.scenario.correlation.corr_len, 4.0);
+        assert_eq!(cfg.scenario.faults.dead_tone_p, 0.02);
+        assert_eq!(cfg.scenario.faults.dark_ring_p, 0.01);
+        assert_eq!(cfg.scenario.faults.weak_ring_p, 0.05);
+        assert_eq!(cfg.scenario.faults.weak_tr_factor, 0.6);
+        assert!(cfg.scenario.is_generalized());
+    }
+
+    #[test]
+    fn bimodal_params_only_apply_to_bimodal() {
+        let cfg = system_config_from_toml(
+            "[scenario]\ndistribution = \"bimodal\"\nseparation_frac = 0.9\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.scenario.distribution,
+            crate::model::Distribution::Bimodal { separation_frac: 0.9, jitter_frac: 0.3 }
+        );
+        // A sigma_frac key under uniform is simply unused.
+        let cfg = system_config_from_toml("[scenario]\nsigma_frac = 0.9\n").unwrap();
+        assert_eq!(cfg.scenario.distribution, crate::model::Distribution::Uniform);
+    }
+
+    #[test]
+    fn invalid_scenario_and_sigma_rejected_with_structured_errors() {
+        let err = system_config_from_toml("[scenario]\ndistribution = \"cauchy\"\n").unwrap_err();
+        assert!(err.contains("unknown family"), "{err}");
+        let err = system_config_from_toml("[scenario]\ndead_tone_p = 1.5\n").unwrap_err();
+        assert!(err.contains("dead_tone_p"), "{err}");
+        let err = system_config_from_toml("[variation]\nring_local_nm = -2.0\n").unwrap_err();
+        assert!(err.contains("ring_local_nm"), "{err}");
+        let err = system_config_from_toml("[scenario]\nweak_tr_factor = 0.0\n").unwrap_err();
+        assert!(err.contains("weak_tr_factor"), "{err}");
     }
 }

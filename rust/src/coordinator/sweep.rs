@@ -14,7 +14,9 @@
 //!
 //! The `wdm-arbiter sweep` subcommand exposes ad-hoc grids over the same
 //! axes (σ_rLV, σ_gO, σ_lLV, σ_TR, σ_FSR, λ̄_FSR, channel count, grid
-//! spacing, target-order permutation).
+//! spacing, target-order permutation) plus the scenario-layer axes
+//! (distribution kind, wafer gradient, correlation length, and the three
+//! fault probabilities).
 
 use crate::arbiter::distance::ALIAS_EPS_NM;
 use crate::arbiter::Policy;
@@ -53,10 +55,23 @@ pub enum ConfigAxis {
     /// other value the permuted ones (both r_i and s_i — the paper's N/N
     /// vs P/P cases).
     Permuted,
+    /// Scenario distribution kind: 0 = uniform, 1 = trimmed-gaussian,
+    /// 2 = bimodal (default parameterizations; out-of-range clamps).
+    DistKind,
+    /// Scenario wafer-gradient amplitude across the ring row (nm).
+    GradientNm,
+    /// Scenario AR(1) neighbor-correlation length (rings).
+    CorrLen,
+    /// Scenario dead laser-tone probability.
+    DeadToneP,
+    /// Scenario dark-ring probability.
+    DarkRingP,
+    /// Scenario weak-ring (reduced tuning range) probability.
+    WeakRingP,
 }
 
 impl ConfigAxis {
-    pub fn all() -> [ConfigAxis; 9] {
+    pub fn all() -> [ConfigAxis; 15] {
         [
             ConfigAxis::RingLocalNm,
             ConfigAxis::GridOffsetNm,
@@ -67,6 +82,12 @@ impl ConfigAxis {
             ConfigAxis::Channels,
             ConfigAxis::SpacingNm,
             ConfigAxis::Permuted,
+            ConfigAxis::DistKind,
+            ConfigAxis::GradientNm,
+            ConfigAxis::CorrLen,
+            ConfigAxis::DeadToneP,
+            ConfigAxis::DarkRingP,
+            ConfigAxis::WeakRingP,
         ]
     }
 
@@ -81,6 +102,12 @@ impl ConfigAxis {
             ConfigAxis::Channels => "channels",
             ConfigAxis::SpacingNm => "spacing",
             ConfigAxis::Permuted => "permuted",
+            ConfigAxis::DistKind => "dist-kind",
+            ConfigAxis::GradientNm => "gradient-nm",
+            ConfigAxis::CorrLen => "corr-len",
+            ConfigAxis::DeadToneP => "dead-tone-p",
+            ConfigAxis::DarkRingP => "dark-ring-p",
+            ConfigAxis::WeakRingP => "weak-ring-p",
         }
     }
 
@@ -116,18 +143,27 @@ impl ConfigAxis {
                     cfg.target_order = SpectralOrdering::natural(n);
                 }
             }
+            ConfigAxis::DistKind => {
+                cfg.scenario.distribution = crate::model::Distribution::from_kind_index(v)
+            }
+            ConfigAxis::GradientNm => cfg.scenario.correlation.gradient_nm = v,
+            ConfigAxis::CorrLen => cfg.scenario.correlation.corr_len = v,
+            ConfigAxis::DeadToneP => cfg.scenario.faults.dead_tone_p = v,
+            ConfigAxis::DarkRingP => cfg.scenario.faults.dark_ring_p = v,
+            ConfigAxis::WeakRingP => cfg.scenario.faults.weak_ring_p = v,
         }
         cfg
     }
 }
 
 /// Rebuild Table-I design rules for `grid`, preserving the base config's
-/// variation settings and carrying each spectral ordering across
-/// independently (mixed N/P cases and custom orderings survive).
+/// variation + scenario settings and carrying each spectral ordering
+/// across independently (mixed N/P cases and custom orderings survive).
 fn regrid(base: &SystemConfig, grid: DwdmGrid) -> SystemConfig {
     let new_n = grid.n_ch;
     let mut cfg = SystemConfig::table1(grid);
     cfg.variation = base.variation;
+    cfg.scenario = base.scenario;
     cfg.pre_fab_order = remap_order(&base.pre_fab_order, base.grid.n_ch, new_n);
     cfg.target_order = remap_order(&base.target_order, base.grid.n_ch, new_n);
     cfg
@@ -542,6 +578,59 @@ mod tests {
         assert_eq!(p.target_order, SpectralOrdering::permuted(8));
         let n = ConfigAxis::Permuted.apply(&p, 0.0);
         assert_eq!(n.target_order, SpectralOrdering::natural(8));
+    }
+
+    #[test]
+    fn scenario_axes_apply_scenario_fields() {
+        use crate::model::Distribution;
+        let base = SystemConfig::default();
+        assert_eq!(
+            ConfigAxis::DistKind.apply(&base, 0.0).scenario.distribution,
+            Distribution::Uniform
+        );
+        assert_eq!(
+            ConfigAxis::DistKind.apply(&base, 1.0).scenario.distribution.name(),
+            "trimmed-gaussian"
+        );
+        assert_eq!(
+            ConfigAxis::DistKind.apply(&base, 2.0).scenario.distribution.name(),
+            "bimodal"
+        );
+        assert_eq!(
+            ConfigAxis::GradientNm.apply(&base, 2.5).scenario.correlation.gradient_nm,
+            2.5
+        );
+        assert_eq!(ConfigAxis::CorrLen.apply(&base, 4.0).scenario.correlation.corr_len, 4.0);
+        assert_eq!(
+            ConfigAxis::DeadToneP.apply(&base, 0.05).scenario.faults.dead_tone_p,
+            0.05
+        );
+        assert_eq!(
+            ConfigAxis::DarkRingP.apply(&base, 0.02).scenario.faults.dark_ring_p,
+            0.02
+        );
+        assert_eq!(
+            ConfigAxis::WeakRingP.apply(&base, 0.1).scenario.faults.weak_ring_p,
+            0.1
+        );
+        // Non-scenario knobs stay at the base values.
+        let c = ConfigAxis::DeadToneP.apply(&base, 0.05);
+        assert_eq!(c.variation, base.variation);
+        assert_eq!(c.grid, base.grid);
+        // Out-of-range probability values survive apply() and are caught by
+        // validate() at job level — not by a panic here.
+        assert!(ConfigAxis::DeadToneP.apply(&base, 1.5).validate().is_err());
+    }
+
+    #[test]
+    fn regrid_carries_scenario_across() {
+        let mut base = SystemConfig::default();
+        base.scenario.faults.dead_tone_p = 0.03;
+        base.scenario.correlation.corr_len = 2.0;
+        let c = ConfigAxis::Channels.apply(&base, 16.0);
+        assert_eq!(c.scenario, base.scenario, "regrid must keep the scenario");
+        let s = ConfigAxis::SpacingNm.apply(&base, 2.24);
+        assert_eq!(s.scenario, base.scenario);
     }
 
     #[test]

@@ -51,8 +51,14 @@ USAGE:
       Ad-hoc Monte-Carlo grid over one config axis x the tuning-range axis.
       AXIS: ring-local | grid-offset | laser-local | tr-frac | fsr-frac |
             fsr-mean | channels | spacing | permuted
+            scenario axes: dist-kind (0 uniform, 1 trimmed-gaussian,
+            2 bimodal) | gradient-nm | corr-len | dead-tone-p |
+            dark-ring-p | weak-ring-p
       Measures: afp:<lta|ltc|ltd>  cafp:<seq|rs-ssm|vt-rs-ssm>
                 min-tr:<policy>  alias-min-tr:<policy>   (default afp:ltc)
+      Scenario models (distribution family, correlated variation, fault
+      injection) load from the [scenario] section of --config FILE.toml;
+      see README "Scenario models".
       Each axis value samples ONE population, evaluated by the ideal model
       once; every λ̄_TR row reuses it. Columns run in parallel across
       --threads workers (seeded per column: results are bit-identical for

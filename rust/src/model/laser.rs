@@ -1,28 +1,44 @@
 //! Multi-wavelength-laser (MWL) model (paper Eq. (1) and (3)).
 
-use crate::model::{DwdmGrid, VariationConfig};
+use crate::model::{DwdmGrid, ScenarioConfig, VariationConfig};
 use crate::rng::Rng;
 
 /// One sampled multi-wavelength laser: `N_ch` tone wavelengths,
-/// center-relative nm, index-ordered (tone `i` is the i-th grid slot; local
-/// variation is bounded by ±σ_lLV·λ_gS ≤ 0.45·λ_gS in all experiments, so
-/// index order equals wavelength order).
+/// center-relative nm, index-ordered (tone `i` is the i-th grid slot; under
+/// the paper's uniform scenario local variation is bounded by
+/// ±σ_lLV·λ_gS ≤ 0.45·λ_gS in all experiments, so index order equals
+/// wavelength order — heavy-tailed scenario distributions may relax this).
+///
+/// A *dumb data* record: fault flags are injected by the sampler, never
+/// interpreted here.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MwlSample {
     pub tones_nm: Vec<f64>,
     /// The sampled grid offset Δ_gO that was applied (kept for diagnostics).
     pub grid_offset_nm: f64,
+    /// Per-tone dead flags (scenario fault injection: no optical power on
+    /// that tone). Empty = every tone alive — the fault-free common case.
+    pub dead: Vec<bool>,
 }
 
 impl MwlSample {
-    /// Paper Eq. (3): `λ_laser,i = slot_i + Δ_gO + Δ_lLV,i` (center-relative).
-    pub fn sample(grid: &DwdmGrid, var: &VariationConfig, rng: &mut Rng) -> Self {
-        let offset = rng.half_range(var.grid_offset_nm);
+    /// Paper Eq. (3): `λ_laser,i = slot_i + Δ_gO + Δ_lLV,i` (center-relative),
+    /// with each Δ drawn from the scenario's [`crate::model::Distribution`]
+    /// and dead tones injected per the scenario's fault model.
+    pub fn sample(
+        grid: &DwdmGrid,
+        var: &VariationConfig,
+        scenario: &ScenarioConfig,
+        rng: &mut Rng,
+    ) -> Self {
+        let dist = scenario.distribution;
+        let offset = dist.sample(var.grid_offset_nm, rng);
         let local_half = var.laser_local_frac * grid.spacing_nm;
         let tones_nm = (0..grid.n_ch)
-            .map(|i| grid.slot_nm(i) + offset + rng.half_range(local_half))
+            .map(|i| grid.slot_nm(i) + offset + dist.sample(local_half, rng))
             .collect();
-        Self { tones_nm, grid_offset_nm: offset }
+        let dead = scenario.faults.sample_dead_tones(grid.n_ch, rng);
+        Self { tones_nm, grid_offset_nm: offset, dead }
     }
 
     /// Pre-fabrication / specification tones (paper Eq. (1)): no variation.
@@ -30,12 +46,26 @@ impl MwlSample {
         Self {
             tones_nm: (0..grid.n_ch).map(|i| grid.slot_nm(i)).collect(),
             grid_offset_nm: 0.0,
+            dead: Vec::new(),
         }
     }
 
     #[inline]
     pub fn n_ch(&self) -> usize {
         self.tones_nm.len()
+    }
+
+    /// Is tone `j` dead (fault-injected)? Always false for fault-free
+    /// samples, whose `dead` vector is empty.
+    #[inline]
+    pub fn tone_dead(&self, j: usize) -> bool {
+        self.dead.get(j).copied().unwrap_or(false)
+    }
+
+    /// Any dead tone on this laser?
+    #[inline]
+    pub fn any_dead(&self) -> bool {
+        self.dead.iter().any(|&d| d)
     }
 }
 
@@ -47,9 +77,10 @@ mod tests {
     fn tones_monotone_under_default_variation() {
         let grid = DwdmGrid::wdm8_g200();
         let var = VariationConfig::default();
+        let scenario = ScenarioConfig::default();
         let mut rng = Rng::seed_from(11);
         for _ in 0..200 {
-            let mwl = MwlSample::sample(&grid, &var, &mut rng);
+            let mwl = MwlSample::sample(&grid, &var, &scenario, &mut rng);
             for w in mwl.tones_nm.windows(2) {
                 assert!(w[1] > w[0], "tones must stay index-ordered");
             }
@@ -60,9 +91,10 @@ mod tests {
     fn offset_bounded() {
         let grid = DwdmGrid::wdm8_g200();
         let var = VariationConfig::default();
+        let scenario = ScenarioConfig::default();
         let mut rng = Rng::seed_from(12);
         for _ in 0..200 {
-            let mwl = MwlSample::sample(&grid, &var, &mut rng);
+            let mwl = MwlSample::sample(&grid, &var, &scenario, &mut rng);
             assert!(mwl.grid_offset_nm.abs() <= var.grid_offset_nm);
         }
     }
@@ -73,18 +105,58 @@ mod tests {
         let mwl = MwlSample::nominal(&grid);
         assert!((mwl.tones_nm[0] + 3.5 * 1.12).abs() < 1e-12);
         assert!((mwl.tones_nm[7] - 3.5 * 1.12).abs() < 1e-12);
+        assert!(!mwl.any_dead());
     }
 
     #[test]
     fn local_variation_bounded() {
         let grid = DwdmGrid::wdm8_g200();
         let var = VariationConfig { grid_offset_nm: 0.0, ..VariationConfig::default() };
+        let scenario = ScenarioConfig::default();
         let mut rng = Rng::seed_from(13);
         for _ in 0..500 {
-            let mwl = MwlSample::sample(&grid, &var, &mut rng);
+            let mwl = MwlSample::sample(&grid, &var, &scenario, &mut rng);
             for (i, &t) in mwl.tones_nm.iter().enumerate() {
                 assert!((t - grid.slot_nm(i)).abs() <= 0.25 * grid.spacing_nm + 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn scenario_distribution_bounds_scale_with_support() {
+        let grid = DwdmGrid::wdm8_g200();
+        let var = VariationConfig { grid_offset_nm: 0.0, ..VariationConfig::default() };
+        let scenario = ScenarioConfig {
+            distribution: crate::model::Distribution::by_name("trimmed-gaussian").unwrap(),
+            ..ScenarioConfig::default()
+        };
+        let support = scenario.distribution.support_nm(var.laser_local_frac * grid.spacing_nm);
+        let mut rng = Rng::seed_from(14);
+        for _ in 0..300 {
+            let mwl = MwlSample::sample(&grid, &var, &scenario, &mut rng);
+            for (i, &t) in mwl.tones_nm.iter().enumerate() {
+                assert!((t - grid.slot_nm(i)).abs() <= support + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn dead_tone_injection_flags_tones() {
+        let grid = DwdmGrid::wdm8_g200();
+        let var = VariationConfig::default();
+        let scenario = ScenarioConfig {
+            faults: crate::model::FaultsConfig { dead_tone_p: 1.0, ..Default::default() },
+            ..ScenarioConfig::default()
+        };
+        let mut rng = Rng::seed_from(15);
+        let mwl = MwlSample::sample(&grid, &var, &scenario, &mut rng);
+        assert_eq!(mwl.dead.len(), 8);
+        assert!((0..8).all(|j| mwl.tone_dead(j)));
+        assert!(mwl.any_dead());
+
+        // Fault-free samples never allocate fault flags.
+        let clean = MwlSample::sample(&grid, &var, &ScenarioConfig::default(), &mut rng);
+        assert!(clean.dead.is_empty());
+        assert!(!clean.tone_dead(0));
     }
 }

@@ -8,6 +8,7 @@ pub mod grid;
 pub mod laser;
 pub mod ordering;
 pub mod ring;
+pub mod scenario;
 pub mod system;
 pub mod variation;
 
@@ -15,5 +16,6 @@ pub use grid::DwdmGrid;
 pub use laser::MwlSample;
 pub use ordering::SpectralOrdering;
 pub use ring::RingRowSample;
+pub use scenario::{CorrelationConfig, Distribution, FaultsConfig, ScenarioConfig};
 pub use system::SystemUnderTest;
 pub use variation::VariationConfig;

@@ -1,6 +1,6 @@
 //! Microring-resonator row model (paper Eq. (2), (4), (5)).
 
-use crate::model::{DwdmGrid, SpectralOrdering, VariationConfig};
+use crate::model::{DwdmGrid, ScenarioConfig, SpectralOrdering, VariationConfig};
 use crate::rng::Rng;
 
 /// One sampled microring row.
@@ -10,37 +10,80 @@ use crate::rng::Rng;
 /// red-shifts it by a heat `h ∈ [0, TR_i]`, with FSR-periodic images
 /// (paper Eq. (5)). `TR_i = λ̄_TR · tr_scale[i]` where the mean tuning range
 /// `λ̄_TR` is a sweep parameter supplied at evaluation time.
+///
+/// A *dumb data* record: scenario sampling (distribution family,
+/// correlation, fault injection) happens in [`RingRowSample::sample`]; the
+/// stored vectors carry no scenario logic.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RingRowSample {
     pub resonance_nm: Vec<f64>,
     pub fsr_nm: Vec<f64>,
-    /// Multiplicative TR variation factor `1 + u_i · σ_TR`, `u ∈ [−1, 1)`.
+    /// Multiplicative TR variation factor (`1 + draw`, weak-ring faults
+    /// fold in as a further multiplier).
     pub tr_scale: Vec<f64>,
+    /// Per-ring dark flags (scenario fault injection: a stuck/dead ring
+    /// that never sees a peak and never locks). Empty = all rings healthy.
+    pub dark: Vec<bool>,
 }
 
 impl RingRowSample {
     /// Paper Eq. (4): `λ_ring,i = slot(r_i) − λ_rB + Δ_rLV,i` plus sampled
-    /// per-ring FSR and TR-scale variation.
+    /// per-ring FSR and TR-scale variation, generalized by the scenario:
+    ///
+    /// * every Δ draws from the scenario's distribution family;
+    /// * local resonance offsets gain a wafer-gradient tilt and AR(1)
+    ///   neighbor correlation when configured;
+    /// * dark-ring and weak-ring faults are injected after the row is
+    ///   sampled.
+    ///
+    /// With the default scenario every branch is gated off and the RNG
+    /// stream is bit-identical to the paper's uniform model.
     pub fn sample(
         grid: &DwdmGrid,
         pre_fab_order: &SpectralOrdering,
         ring_bias_nm: f64,
         fsr_mean_nm: f64,
         var: &VariationConfig,
+        scenario: &ScenarioConfig,
         rng: &mut Rng,
     ) -> Self {
         let n = grid.n_ch;
         assert_eq!(pre_fab_order.len(), n, "ordering must cover all rings");
+        let dist = scenario.distribution;
+        let corr = scenario.correlation;
+        // Wafer gradient: one slope draw per row, only when enabled.
+        let slope = if corr.gradient_nm != 0.0 {
+            rng.half_range(corr.gradient_nm)
+        } else {
+            0.0
+        };
+        let rho = corr.rho();
+        let blend = (1.0 - rho * rho).sqrt();
+        let mut prev = 0.0f64;
         let mut resonance_nm = Vec::with_capacity(n);
         let mut fsr_nm = Vec::with_capacity(n);
         let mut tr_scale = Vec::with_capacity(n);
         for i in 0..n {
             let slot = grid.slot_nm(pre_fab_order.slot_of(i));
-            resonance_nm.push(slot - ring_bias_nm + rng.half_range(var.ring_local_nm));
-            fsr_nm.push(fsr_mean_nm * (1.0 + rng.half_range(var.fsr_frac)));
-            tr_scale.push(1.0 + rng.half_range(var.tr_frac));
+            let z = dist.sample(var.ring_local_nm, rng);
+            // AR(1) neighbor correlation; ρ = 0 passes the i.i.d. draw
+            // through untouched (bit-identical default path). The chain
+            // starts stationary (e_0 = z_0), so every ring — edge rings
+            // included — keeps the full marginal spread.
+            let local = if rho == 0.0 || i == 0 { z } else { rho * prev + blend * z };
+            prev = local;
+            let base = slot - ring_bias_nm + local;
+            resonance_nm.push(if slope == 0.0 {
+                base
+            } else {
+                base + slope * (i as f64 / (n - 1).max(1) as f64 - 0.5)
+            });
+            fsr_nm.push(fsr_mean_nm * (1.0 + dist.sample(var.fsr_frac, rng)));
+            tr_scale.push(1.0 + dist.sample(var.tr_frac, rng));
         }
-        Self { resonance_nm, fsr_nm, tr_scale }
+        let dark = scenario.faults.sample_dark_rings(n, rng);
+        scenario.faults.apply_weak_rings(&mut tr_scale, rng);
+        Self { resonance_nm, fsr_nm, tr_scale, dark }
     }
 
     /// Pre-fabrication row (paper Eq. (2)): design intent, no variation.
@@ -57,12 +100,26 @@ impl RingRowSample {
                 .collect(),
             fsr_nm: vec![fsr_mean_nm; n],
             tr_scale: vec![1.0; n],
+            dark: Vec::new(),
         }
     }
 
     #[inline]
     pub fn n_rings(&self) -> usize {
         self.resonance_nm.len()
+    }
+
+    /// Is ring `i` dark (fault-injected, never locks)? Always false for
+    /// fault-free rows, whose `dark` vector is empty.
+    #[inline]
+    pub fn ring_dark(&self, i: usize) -> bool {
+        self.dark.get(i).copied().unwrap_or(false)
+    }
+
+    /// Any dark ring in this row?
+    #[inline]
+    pub fn any_dark(&self) -> bool {
+        self.dark.iter().any(|&d| d)
     }
 
     /// Actual tuning range of ring `i` at mean tuning range `mean_tr_nm`.
@@ -73,7 +130,11 @@ impl RingRowSample {
 
     /// Can ring `i` reach wavelength `lambda_nm` at `mean_tr_nm`?
     /// Membership in the union-of-intervals Λ_TR,i of paper Eq. (5).
+    /// A dark ring reaches nothing.
     pub fn can_reach(&self, i: usize, lambda_nm: f64, mean_tr_nm: f64) -> bool {
+        if self.ring_dark(i) {
+            return false;
+        }
         let d = red_shift_distance(lambda_nm - self.resonance_nm[i], self.fsr_nm[i]);
         d <= self.tuning_range_nm(i, mean_tr_nm)
     }
@@ -96,9 +157,22 @@ pub fn red_shift_distance(delta_nm: f64, fsr_nm: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::{CorrelationConfig, FaultsConfig};
 
     fn grid() -> DwdmGrid {
         DwdmGrid::wdm8_g200()
+    }
+
+    fn sample_default(var: &VariationConfig, rng: &mut Rng) -> RingRowSample {
+        RingRowSample::sample(
+            &grid(),
+            &SpectralOrdering::natural(8),
+            4.48,
+            8.96,
+            var,
+            &ScenarioConfig::default(),
+            rng,
+        )
     }
 
     #[test]
@@ -115,6 +189,7 @@ mod tests {
         for i in 0..8 {
             assert!((row.resonance_nm[i] - (grid().slot_nm(i) - 4.48)).abs() < 1e-12);
         }
+        assert!(!row.any_dark());
     }
 
     #[test]
@@ -130,7 +205,7 @@ mod tests {
         let var = VariationConfig::default();
         let mut rng = crate::rng::Rng::seed_from(5);
         for _ in 0..100 {
-            let row = RingRowSample::sample(&grid(), &SpectralOrdering::natural(8), 4.48, 8.96, &var, &mut rng);
+            let row = sample_default(&var, &mut rng);
             for i in 0..8 {
                 let nominal = grid().slot_nm(i) - 4.48;
                 assert!((row.resonance_nm[i] - nominal).abs() <= var.ring_local_nm + 1e-12);
@@ -151,5 +226,125 @@ mod tests {
         let blue = row.resonance_nm[0] - 1.0;
         assert!(!row.can_reach(0, blue, 7.0));
         assert!(row.can_reach(0, blue, 7.97));
+    }
+
+    #[test]
+    fn wafer_gradient_tilts_row_systematically() {
+        // Pure gradient: no local variation, so the realized resonances are
+        // exactly nominal + slope·(i/(n−1) − ½) — a straight line.
+        let var = VariationConfig::zero();
+        let scenario = ScenarioConfig {
+            correlation: CorrelationConfig { gradient_nm: 4.0, corr_len: 0.0 },
+            ..ScenarioConfig::default()
+        };
+        let mut rng = Rng::seed_from(31);
+        for _ in 0..20 {
+            let row = RingRowSample::sample(
+                &grid(),
+                &SpectralOrdering::natural(8),
+                0.0,
+                8.96,
+                &var,
+                &scenario,
+                &mut rng,
+            );
+            let offs: Vec<f64> = (0..8)
+                .map(|i| row.resonance_nm[i] - grid().slot_nm(i))
+                .collect();
+            // Linear in i: second differences vanish, endpoints within the
+            // tilt bound (slope ≤ 4 ⇒ per-ring span ≤ 2 nm).
+            for w in offs.windows(3) {
+                assert!(((w[2] - w[1]) - (w[1] - w[0])).abs() < 1e-9);
+            }
+            assert!(offs[0].abs() <= 2.0 + 1e-12);
+            assert!((offs[7] + offs[0]).abs() < 1e-9, "tilt is centered");
+        }
+    }
+
+    #[test]
+    fn neighbor_correlation_smooths_offsets() {
+        // Mean squared neighbor difference shrinks under correlation while
+        // the marginal spread stays comparable (AR(1) preserves scale).
+        let var = VariationConfig { ring_local_nm: 2.24, ..VariationConfig::zero() };
+        let iid = ScenarioConfig::default();
+        let corr = ScenarioConfig {
+            correlation: CorrelationConfig { gradient_nm: 0.0, corr_len: 4.0 },
+            ..ScenarioConfig::default()
+        };
+        let stats = |scenario: &ScenarioConfig, seed: u64| -> (f64, f64) {
+            let mut rng = Rng::seed_from(seed);
+            let mut var_acc = 0.0;
+            let mut diff_acc = 0.0;
+            let mut n_var = 0usize;
+            let mut n_diff = 0usize;
+            for _ in 0..400 {
+                let row = RingRowSample::sample(
+                    &grid(),
+                    &SpectralOrdering::natural(8),
+                    0.0,
+                    8.96,
+                    &var,
+                    scenario,
+                    &mut rng,
+                );
+                let offs: Vec<f64> =
+                    (0..8).map(|i| row.resonance_nm[i] - grid().slot_nm(i)).collect();
+                for &o in &offs {
+                    var_acc += o * o;
+                    n_var += 1;
+                }
+                for w in offs.windows(2) {
+                    diff_acc += (w[1] - w[0]) * (w[1] - w[0]);
+                    n_diff += 1;
+                }
+            }
+            (var_acc / n_var as f64, diff_acc / n_diff as f64)
+        };
+        let (v_iid, d_iid) = stats(&iid, 77);
+        let (v_corr, d_corr) = stats(&corr, 77);
+        assert!(
+            d_corr < 0.6 * d_iid,
+            "correlated neighbor diffs {d_corr} should be well below i.i.d. {d_iid}"
+        );
+        assert!(
+            (v_corr / v_iid) > 0.5 && (v_corr / v_iid) < 1.5,
+            "marginal variance roughly preserved: {v_corr} vs {v_iid}"
+        );
+    }
+
+    #[test]
+    fn fault_injection_marks_dark_and_weak_rings() {
+        let var = VariationConfig::default();
+        let scenario = ScenarioConfig {
+            faults: FaultsConfig {
+                dark_ring_p: 1.0,
+                weak_ring_p: 1.0,
+                weak_tr_factor: 0.25,
+                ..FaultsConfig::default()
+            },
+            ..ScenarioConfig::default()
+        };
+        let mut rng = Rng::seed_from(9);
+        let row = RingRowSample::sample(
+            &grid(),
+            &SpectralOrdering::natural(8),
+            4.48,
+            8.96,
+            &var,
+            &scenario,
+            &mut rng,
+        );
+        assert!((0..8).all(|i| row.ring_dark(i)));
+        assert!(!row.can_reach(0, row.resonance_nm[0], 8.96), "dark rings reach nothing");
+        // Weak rings: tr_scale shrunk to ~0.25 of the sampled value.
+        for &s in &row.tr_scale {
+            assert!(s <= 0.25 * (1.0 + var.tr_frac) + 1e-12);
+            assert!(s > 0.0);
+        }
+
+        // Fault-free rows allocate no flags.
+        let clean = sample_default(&var, &mut rng);
+        assert!(clean.dark.is_empty());
+        assert!(!clean.ring_dark(0));
     }
 }

@@ -1,0 +1,528 @@
+//! Scenario layer: distribution-generic variation sampling, correlated /
+//! systematic variation, and fault injection.
+//!
+//! The paper models every device variation as a **uniform half-range** —
+//! an explicitly conservative approximation of a trimmed Gaussian (§II-C,
+//! Table I). This module generalizes that single choice into a first-class
+//! [`ScenarioConfig`] threaded from [`crate::config::SystemConfig`] down to
+//! the samplers:
+//!
+//! * [`Distribution`] — the shared sampling entry point. `Uniform` is the
+//!   paper default and draws **bit-identically** to the historical
+//!   `Rng::half_range` path; `TrimmedGaussian` and `Bimodal` reinterpret
+//!   the same σ knobs under other families.
+//! * [`CorrelationConfig`] — spatially systematic variation on top of the
+//!   i.i.d. local draws: a per-row wafer-gradient tilt and AR(1)
+//!   neighbor-correlated ring offsets (cf. Mak et al., resonance alignment
+//!   of high-order microring filters, where neighboring rings drift
+//!   together).
+//! * [`FaultsConfig`] — outright defective devices: dead laser tones,
+//!   dark (stuck) rings that never lock, and weak rings with a reduced
+//!   tuning range.
+//!
+//! The default scenario (uniform, no correlation, no faults) consumes
+//! exactly the same RNG stream as the pre-scenario code, so every golden
+//! digest and seeded experiment is unchanged.
+
+use crate::rng::Rng;
+
+/// Variation distribution family. `sigma` arguments below always refer to
+/// the config's σ knobs (Table I), which for the paper's uniform model are
+/// *half-ranges*, not standard deviations.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Distribution {
+    /// Uniform over `[-σ, +σ)` — the paper's model (§II-C). One RNG draw,
+    /// bit-identical to `Rng::half_range`.
+    #[default]
+    Uniform,
+    /// Gaussian with standard deviation `sigma_frac · σ`, rejection-trimmed
+    /// to `±clip` standard deviations (support `±clip·sigma_frac·σ`). The
+    /// default `sigma_frac = 1/√3` matches the uniform half-range's
+    /// standard deviation, making the two families moment-comparable.
+    TrimmedGaussian { sigma_frac: f64, clip: f64 },
+    /// Symmetric two-mode mixture: a fair-coin mode at `±separation_frac·σ`
+    /// plus uniform jitter of half-range `jitter_frac·σ` — a stand-in for
+    /// bi-populated wafers (two etch/litho populations).
+    Bimodal { separation_frac: f64, jitter_frac: f64 },
+}
+
+/// `1/√3`: the standard deviation of a unit-half-range uniform draw.
+pub const UNIFORM_EQUIV_SIGMA_FRAC: f64 = 0.577_350_269_189_625_8;
+
+/// Smallest accepted `TrimmedGaussian` clip. `P(|z| <= 0.1) ≈ 8 %`, so the
+/// rejection loop stays ~a dozen draws even at the floor; below it the
+/// loop degenerates into a near-infinite spin that `validate` exists to
+/// prevent.
+pub const MIN_CLIP: f64 = 0.1;
+
+impl Distribution {
+    /// Canonical kind name (`by_name` inverse).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Distribution::Uniform => "uniform",
+            Distribution::TrimmedGaussian { .. } => "trimmed-gaussian",
+            Distribution::Bimodal { .. } => "bimodal",
+        }
+    }
+
+    /// Kind by name, with the default parameterization for parametric
+    /// families (override the fields afterwards to customize).
+    pub fn by_name(name: &str) -> Option<Distribution> {
+        match name {
+            "uniform" => Some(Distribution::Uniform),
+            "trimmed-gaussian" | "gaussian" => Some(Distribution::TrimmedGaussian {
+                sigma_frac: UNIFORM_EQUIV_SIGMA_FRAC,
+                clip: 3.0,
+            }),
+            "bimodal" => Some(Distribution::Bimodal { separation_frac: 0.7, jitter_frac: 0.3 }),
+            _ => None,
+        }
+    }
+
+    /// Kind index for the `dist-kind` sweep axis: 0 = uniform,
+    /// 1 = trimmed-gaussian, 2 = bimodal (defaults). Out-of-range values
+    /// clamp to the nearest kind so a sweep axis cannot panic mid-column.
+    pub fn from_kind_index(v: f64) -> Distribution {
+        match v.round().clamp(0.0, 2.0) as usize {
+            0 => Distribution::Uniform,
+            1 => Distribution::by_name("trimmed-gaussian").unwrap(),
+            _ => Distribution::by_name("bimodal").unwrap(),
+        }
+    }
+
+    /// Draw one variation of scale `sigma` (σ = half-range under the
+    /// paper's uniform model). The single sampling entry point every model
+    /// component goes through.
+    #[inline]
+    pub fn sample(&self, sigma: f64, rng: &mut Rng) -> f64 {
+        match *self {
+            Distribution::Uniform => rng.half_range(sigma),
+            Distribution::TrimmedGaussian { sigma_frac, clip } => {
+                // Rejection-trimmed Box–Muller; `validate` pins
+                // clip >= MIN_CLIP so the loop stays short
+                // (P(|z| <= clip) >= 8 %).
+                let z = loop {
+                    let z = gaussian01(rng);
+                    if z.abs() <= clip {
+                        break z;
+                    }
+                };
+                z * sigma_frac * sigma
+            }
+            Distribution::Bimodal { separation_frac, jitter_frac } => {
+                let sign = if rng.uniform01() < 0.5 { -1.0 } else { 1.0 };
+                sign * separation_frac * sigma + rng.half_range(jitter_frac * sigma)
+            }
+        }
+    }
+
+    /// Upper bound on `|sample(sigma, ..)|` (support half-width).
+    pub fn support_nm(&self, sigma: f64) -> f64 {
+        match *self {
+            Distribution::Uniform => sigma,
+            Distribution::TrimmedGaussian { sigma_frac, clip } => clip * sigma_frac * sigma,
+            Distribution::Bimodal { separation_frac, jitter_frac } => {
+                (separation_frac + jitter_frac) * sigma
+            }
+        }
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        match *self {
+            Distribution::Uniform => Ok(()),
+            Distribution::TrimmedGaussian { sigma_frac, clip } => {
+                // NaN fails both comparisons below, so it is rejected too.
+                if sigma_frac < 0.0 || sigma_frac.is_nan() {
+                    return Err(format!(
+                        "scenario.sigma_frac: must be >= 0, got {sigma_frac}"
+                    ));
+                }
+                if clip < MIN_CLIP || clip.is_nan() {
+                    return Err(format!(
+                        "scenario.clip: must be >= {MIN_CLIP}, got {clip} (smaller \
+                         values make the ±clip rejection loop pathologically slow)"
+                    ));
+                }
+                Ok(())
+            }
+            Distribution::Bimodal { separation_frac, jitter_frac } => {
+                if separation_frac < 0.0 || separation_frac.is_nan() {
+                    return Err(format!(
+                        "scenario.separation_frac: must be >= 0, got {separation_frac}"
+                    ));
+                }
+                if jitter_frac < 0.0 || jitter_frac.is_nan() {
+                    return Err(format!(
+                        "scenario.jitter_frac: must be >= 0, got {jitter_frac}"
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// One standard Gaussian draw (Box–Muller, cosine branch; two uniforms).
+#[inline]
+fn gaussian01(rng: &mut Rng) -> f64 {
+    // 1 − u ∈ (0, 1]: keeps ln away from 0.
+    let u1 = 1.0 - rng.uniform01();
+    let u2 = rng.uniform01();
+    (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+}
+
+/// Spatially systematic variation applied to the microring row's local
+/// resonance offsets. Both knobs default to 0 (disabled), in which case
+/// the sampler consumes exactly the i.i.d. stream.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CorrelationConfig {
+    /// Wafer-gradient amplitude (nm): each sampled row draws one slope
+    /// `s ∈ [-gradient_nm, +gradient_nm)` and ring `i` of `n` receives the
+    /// systematic offset `s · (i/(n−1) − ½)` — a linear tilt of up to
+    /// `±gradient_nm/2` across the row.
+    pub gradient_nm: f64,
+    /// Neighbor-correlation length in rings: local offsets become an AR(1)
+    /// chain `e_0 = z_0`, `e_i = ρ·e_{i−1} + √(1−ρ²)·z_i` with
+    /// `ρ = exp(−1/corr_len)` — initialized stationary, so the marginal
+    /// scale is preserved at every ring while neighbors correlate. 0 keeps
+    /// the draws i.i.d.
+    pub corr_len: f64,
+}
+
+impl CorrelationConfig {
+    /// AR(1) coefficient for the configured correlation length.
+    #[inline]
+    pub fn rho(&self) -> f64 {
+        if self.corr_len > 0.0 {
+            (-1.0 / self.corr_len).exp()
+        } else {
+            0.0
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.gradient_nm != 0.0 || self.corr_len > 0.0
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.gradient_nm < 0.0 || self.gradient_nm.is_nan() {
+            return Err(format!(
+                "scenario.gradient_nm: must be >= 0, got {}",
+                self.gradient_nm
+            ));
+        }
+        if self.corr_len < 0.0 || self.corr_len.is_nan() {
+            return Err(format!("scenario.corr_len: must be >= 0, got {}", self.corr_len));
+        }
+        Ok(())
+    }
+}
+
+/// Defective-device injection, sampled per laser / per ring row at
+/// population-sampling time. All probabilities default to 0 (no faults, no
+/// extra RNG draws).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultsConfig {
+    /// Per-tone probability that a laser tone is dead (no optical power:
+    /// invisible to every ring, unassignable by every policy).
+    pub dead_tone_p: f64,
+    /// Per-ring probability that a ring is dark/stuck: it never sees a
+    /// peak and never locks, making full arbitration infeasible.
+    pub dark_ring_p: f64,
+    /// Per-ring probability of a weak tuner (reduced tuning range).
+    pub weak_ring_p: f64,
+    /// Tuning-range multiplier applied to weak rings, in `(0, 1]`.
+    /// (Model a fully stuck tuner with `dark_ring_p`, not a 0 factor —
+    /// a zero tuning range would poison the scaled distance matrix.)
+    pub weak_tr_factor: f64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        Self { dead_tone_p: 0.0, dark_ring_p: 0.0, weak_ring_p: 0.0, weak_tr_factor: 0.5 }
+    }
+}
+
+impl FaultsConfig {
+    pub fn enabled(&self) -> bool {
+        self.dead_tone_p > 0.0 || self.dark_ring_p > 0.0 || self.weak_ring_p > 0.0
+    }
+
+    /// Per-tone dead flags; empty when dead-tone injection is off (so the
+    /// fault-free path consumes no RNG draws and stays bit-identical).
+    pub fn sample_dead_tones(&self, n: usize, rng: &mut Rng) -> Vec<bool> {
+        if self.dead_tone_p <= 0.0 {
+            return Vec::new();
+        }
+        (0..n).map(|_| rng.uniform01() < self.dead_tone_p).collect()
+    }
+
+    /// Per-ring dark flags; empty when dark-ring injection is off.
+    pub fn sample_dark_rings(&self, n: usize, rng: &mut Rng) -> Vec<bool> {
+        if self.dark_ring_p <= 0.0 {
+            return Vec::new();
+        }
+        (0..n).map(|_| rng.uniform01() < self.dark_ring_p).collect()
+    }
+
+    /// Scale `tr_scale` down for sampled weak rings (no-op when off).
+    pub fn apply_weak_rings(&self, tr_scale: &mut [f64], rng: &mut Rng) {
+        if self.weak_ring_p <= 0.0 {
+            return;
+        }
+        for s in tr_scale.iter_mut() {
+            if rng.uniform01() < self.weak_ring_p {
+                *s *= self.weak_tr_factor;
+            }
+        }
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        for (name, p) in [
+            ("dead_tone_p", self.dead_tone_p),
+            ("dark_ring_p", self.dark_ring_p),
+            ("weak_ring_p", self.weak_ring_p),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!(
+                    "scenario.{name}: probability must be in [0, 1], got {p}"
+                ));
+            }
+        }
+        if !(self.weak_tr_factor > 0.0 && self.weak_tr_factor <= 1.0) {
+            return Err(format!(
+                "scenario.weak_tr_factor: must be in (0, 1], got {} \
+                 (model fully stuck tuners with dark_ring_p)",
+                self.weak_tr_factor
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The full scenario: distribution family + correlated/systematic
+/// components + fault injection. Part of
+/// [`crate::config::SystemConfig`], hashed into the population-cache
+/// fingerprint, and swept by the scenario [`ConfigAxis`] variants
+/// (`dist-kind`, `corr-len`, `gradient-nm`, `dead-tone-p`, `dark-ring-p`,
+/// `weak-ring-p`).
+///
+/// [`ConfigAxis`]: crate::coordinator::sweep::ConfigAxis
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ScenarioConfig {
+    pub distribution: Distribution,
+    pub correlation: CorrelationConfig,
+    pub faults: FaultsConfig,
+}
+
+impl ScenarioConfig {
+    /// The paper's Table-I scenario: uniform, i.i.d., fault-free.
+    pub fn table1() -> Self {
+        Self::default()
+    }
+
+    /// True when this scenario deviates from the paper's model in any way.
+    pub fn is_generalized(&self) -> bool {
+        self.distribution != Distribution::Uniform
+            || self.correlation.enabled()
+            || self.faults.enabled()
+    }
+
+    /// Structured validation of every scenario knob — called at config
+    /// load and at job-request level so bad knobs fail with an error
+    /// message instead of a deep panic (or a silent infinite rejection
+    /// loop).
+    pub fn validate(&self) -> Result<(), String> {
+        self.distribution.validate()?;
+        self.correlation.validate()?;
+        self.faults.validate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const N: usize = 10_000;
+
+    fn draws(dist: Distribution, sigma: f64, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::seed_from(seed);
+        (0..N).map(|_| dist.sample(sigma, &mut rng)).collect()
+    }
+
+    fn mean(xs: &[f64]) -> f64 {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+
+    fn stddev(xs: &[f64]) -> f64 {
+        let m = mean(xs);
+        (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+    }
+
+    #[test]
+    fn uniform_matches_half_range_bitwise() {
+        // The tentpole's bit-identity contract: the default distribution IS
+        // the historical half-range draw, same stream, same bits.
+        let mut a = Rng::seed_from(42);
+        let mut b = Rng::seed_from(42);
+        for _ in 0..1000 {
+            let x = Distribution::Uniform.sample(2.24, &mut a);
+            let y = b.half_range(2.24);
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn uniform_moments_and_support() {
+        let xs = draws(Distribution::Uniform, 2.0, 1);
+        assert!(mean(&xs).abs() < 0.05, "mean {}", mean(&xs));
+        // Uniform half-range σ has stddev σ/√3.
+        let want = 2.0 * UNIFORM_EQUIV_SIGMA_FRAC;
+        assert!((stddev(&xs) - want).abs() < 0.05, "stddev {}", stddev(&xs));
+        assert!(xs.iter().all(|x| x.abs() <= 2.0));
+    }
+
+    #[test]
+    fn trimmed_gaussian_moments_and_support() {
+        let dist = Distribution::by_name("trimmed-gaussian").unwrap();
+        let xs = draws(dist, 2.0, 2);
+        assert!(mean(&xs).abs() < 0.05, "mean {}", mean(&xs));
+        // stddev ≈ sigma_frac·σ (slightly below due to the ±3σ trim).
+        let want = 2.0 * UNIFORM_EQUIV_SIGMA_FRAC;
+        assert!((stddev(&xs) - want).abs() < 0.08, "stddev {}", stddev(&xs));
+        let support = dist.support_nm(2.0);
+        assert!(xs.iter().all(|x| x.abs() <= support + 1e-12));
+        // It is NOT uniform: mass concentrates toward 0 relative to the
+        // support (a uniform over the same support would put ~50% beyond
+        // support/2; the trimmed Gaussian puts ~13%).
+        let outer = xs.iter().filter(|x| x.abs() > support / 2.0).count() as f64 / N as f64;
+        assert!(outer < 0.25, "outer mass {outer}");
+    }
+
+    #[test]
+    fn bimodal_moments_and_support() {
+        let dist = Distribution::Bimodal { separation_frac: 0.7, jitter_frac: 0.2 };
+        let xs = draws(dist, 2.0, 3);
+        assert!(mean(&xs).abs() < 0.05, "mean {}", mean(&xs));
+        assert!(xs.iter().all(|x| x.abs() <= dist.support_nm(2.0) + 1e-12));
+        // Two modes at ±1.4 nm with ±0.4 jitter: nothing lands near 0, and
+        // both signs are populated roughly evenly.
+        assert!(xs.iter().all(|x| x.abs() >= 0.7 * 2.0 - 0.2 * 2.0 - 1e-12));
+        let pos = xs.iter().filter(|x| **x > 0.0).count() as f64 / N as f64;
+        assert!((pos - 0.5).abs() < 0.05, "positive fraction {pos}");
+        // E|x| ≈ separation·σ (jitter is mean-zero per mode).
+        let e_abs = mean(&xs.iter().map(|x| x.abs()).collect::<Vec<_>>());
+        assert!((e_abs - 1.4).abs() < 0.05, "E|x| {e_abs}");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        for name in ["uniform", "trimmed-gaussian", "bimodal"] {
+            let dist = Distribution::by_name(name).unwrap();
+            assert_eq!(draws(dist, 1.5, 7), draws(dist, 1.5, 7), "{name}");
+        }
+    }
+
+    #[test]
+    fn names_round_trip_and_kind_index_clamps() {
+        for name in ["uniform", "trimmed-gaussian", "bimodal"] {
+            let d = Distribution::by_name(name).unwrap();
+            assert_eq!(d.name(), name);
+        }
+        assert_eq!(Distribution::by_name("cauchy"), None);
+        assert_eq!(Distribution::from_kind_index(0.0), Distribution::Uniform);
+        assert_eq!(Distribution::from_kind_index(1.0).name(), "trimmed-gaussian");
+        assert_eq!(Distribution::from_kind_index(2.0).name(), "bimodal");
+        assert_eq!(Distribution::from_kind_index(9.0).name(), "bimodal");
+        assert_eq!(Distribution::from_kind_index(-3.0), Distribution::Uniform);
+    }
+
+    #[test]
+    fn correlation_rho_tracks_length() {
+        let off = CorrelationConfig::default();
+        assert_eq!(off.rho(), 0.0);
+        assert!(!off.enabled());
+        let c3 = CorrelationConfig { gradient_nm: 0.0, corr_len: 3.0 };
+        assert!((c3.rho() - (-1.0f64 / 3.0).exp()).abs() < 1e-15);
+        let c9 = CorrelationConfig { gradient_nm: 0.0, corr_len: 9.0 };
+        assert!(c9.rho() > c3.rho(), "longer correlation length -> larger rho");
+    }
+
+    #[test]
+    fn fault_sampling_rates_and_gating() {
+        let off = FaultsConfig::default();
+        let mut rng = Rng::seed_from(5);
+        assert!(off.sample_dead_tones(8, &mut rng).is_empty());
+        assert!(off.sample_dark_rings(8, &mut rng).is_empty());
+        // Gated paths consumed no draws: the stream is untouched.
+        let mut fresh = Rng::seed_from(5);
+        assert_eq!(rng.next_u64(), fresh.next_u64());
+
+        let faults = FaultsConfig { dead_tone_p: 0.3, ..FaultsConfig::default() };
+        let mut rng = Rng::seed_from(6);
+        let dead: usize = (0..N)
+            .map(|_| faults.sample_dead_tones(1, &mut rng)[0] as usize)
+            .sum();
+        let rate = dead as f64 / N as f64;
+        assert!((rate - 0.3).abs() < 0.02, "dead-tone rate {rate}");
+    }
+
+    #[test]
+    fn weak_rings_scale_tr() {
+        let faults =
+            FaultsConfig { weak_ring_p: 1.0, weak_tr_factor: 0.5, ..FaultsConfig::default() };
+        let mut rng = Rng::seed_from(7);
+        let mut trs = vec![1.0, 0.9, 1.1];
+        faults.apply_weak_rings(&mut trs, &mut rng);
+        assert_eq!(trs, vec![0.5, 0.45, 0.55]);
+    }
+
+    fn with_dist(distribution: Distribution) -> ScenarioConfig {
+        ScenarioConfig { distribution, ..ScenarioConfig::default() }
+    }
+
+    fn with_corr(correlation: CorrelationConfig) -> ScenarioConfig {
+        ScenarioConfig { correlation, ..ScenarioConfig::default() }
+    }
+
+    fn with_faults(faults: FaultsConfig) -> ScenarioConfig {
+        ScenarioConfig { faults, ..ScenarioConfig::default() }
+    }
+
+    #[test]
+    fn validation_rejects_bad_knobs() {
+        assert!(ScenarioConfig::default().validate().is_ok());
+        let bad = |s: ScenarioConfig| s.validate().unwrap_err();
+
+        let s = with_dist(Distribution::TrimmedGaussian { sigma_frac: -0.1, clip: 3.0 });
+        assert!(bad(s).contains("sigma_frac"));
+        let s = with_dist(Distribution::TrimmedGaussian { sigma_frac: 0.5, clip: 0.0 });
+        assert!(bad(s).contains("clip"));
+        // A tiny positive clip would spin the rejection loop ~forever:
+        // rejected at validation, not discovered as a hung worker.
+        let s = with_dist(Distribution::TrimmedGaussian { sigma_frac: 0.5, clip: 0.05 });
+        assert!(bad(s).contains("rejection loop"));
+        let s = with_dist(Distribution::Bimodal { separation_frac: 0.5, jitter_frac: -1.0 });
+        assert!(bad(s).contains("jitter_frac"));
+
+        let s = with_corr(CorrelationConfig { gradient_nm: 0.0, corr_len: -2.0 });
+        assert!(bad(s).contains("corr_len"));
+        let s = with_corr(CorrelationConfig { gradient_nm: -1.0, corr_len: 0.0 });
+        assert!(bad(s).contains("gradient_nm"));
+
+        let s = with_faults(FaultsConfig { dead_tone_p: 1.5, ..FaultsConfig::default() });
+        assert!(bad(s).contains("probability must be in [0, 1]"));
+        let s = with_faults(FaultsConfig { weak_tr_factor: 0.0, ..FaultsConfig::default() });
+        assert!(bad(s).contains("weak_tr_factor"));
+    }
+
+    #[test]
+    fn generalized_flag() {
+        assert!(!ScenarioConfig::table1().is_generalized());
+        assert!(with_faults(FaultsConfig { dead_tone_p: 0.01, ..FaultsConfig::default() })
+            .is_generalized());
+        assert!(with_corr(CorrelationConfig { gradient_nm: 0.0, corr_len: 2.0 })
+            .is_generalized());
+        assert!(with_dist(Distribution::by_name("bimodal").unwrap()).is_generalized());
+    }
+}

@@ -2,6 +2,11 @@
 //! sampled MRR row, plus the cross-product population sampler used by every
 //! experiment (paper §IV: "10,000 trials, using 100 multi-wavelength lasers
 //! and 100 microring row samples").
+//!
+//! All scenario generalization (distribution family, correlation, fault
+//! injection) is applied here, at sampling time, by threading
+//! `cfg.scenario` into the per-device samplers — the sample records stay
+//! dumb data.
 
 use crate::config::SystemConfig;
 use crate::model::{MwlSample, RingRowSample};
@@ -18,13 +23,14 @@ impl SystemUnderTest {
     /// Sample one laser + one ring row from the same stream.
     pub fn sample(cfg: &SystemConfig, rng: &mut Rng) -> Self {
         Self {
-            laser: MwlSample::sample(&cfg.grid, &cfg.variation, rng),
+            laser: MwlSample::sample(&cfg.grid, &cfg.variation, &cfg.scenario, rng),
             rings: RingRowSample::sample(
                 &cfg.grid,
                 &cfg.pre_fab_order,
                 cfg.ring_bias_nm,
                 cfg.fsr_mean_nm,
                 &cfg.variation,
+                &cfg.scenario,
                 rng,
             ),
         }
@@ -37,7 +43,9 @@ impl SystemUnderTest {
 
 /// Cross-product population: `n_lasers × n_rows` trials, each laser/row
 /// sampled from an independent derived stream so the population is
-/// reproducible and order-independent.
+/// reproducible and order-independent — under **every** scenario, since
+/// scenario draws (including fault flags) stay within each device's own
+/// stream.
 #[derive(Debug, Clone)]
 pub struct SystemSampler {
     pub lasers: Vec<MwlSample>,
@@ -49,7 +57,7 @@ impl SystemSampler {
         let lasers = (0..n_lasers)
             .map(|i| {
                 let mut rng = Rng::seed_from(derive_seed(seed, &[0xA5, i as u64]));
-                MwlSample::sample(&cfg.grid, &cfg.variation, &mut rng)
+                MwlSample::sample(&cfg.grid, &cfg.variation, &cfg.scenario, &mut rng)
             })
             .collect();
         let rows = (0..n_rows)
@@ -61,6 +69,7 @@ impl SystemSampler {
                     cfg.ring_bias_nm,
                     cfg.fsr_mean_nm,
                     &cfg.variation,
+                    &cfg.scenario,
                     &mut rng,
                 )
             })
@@ -71,6 +80,12 @@ impl SystemSampler {
     #[inline]
     pub fn n_trials(&self) -> usize {
         self.lasers.len() * self.rows.len()
+    }
+
+    /// Any fault-injected device in this population? (Backends that cannot
+    /// represent faults — the XLA artifact — refuse such populations.)
+    pub fn has_faults(&self) -> bool {
+        self.lasers.iter().any(MwlSample::any_dead) || self.rows.iter().any(RingRowSample::any_dark)
     }
 
     /// Trial `t` = (laser `t / n_rows`, row `t % n_rows`). Cheap clone-free
@@ -105,6 +120,32 @@ impl SystemSampler {
 mod tests {
     use super::*;
     use crate::config::SystemConfig;
+    use crate::model::{CorrelationConfig, Distribution, FaultsConfig, ScenarioConfig};
+
+    /// One representative config per scenario family: the determinism and
+    /// prefix-exactness contracts must hold under every one of them (the
+    /// adaptive `--ci` scheduler depends on it).
+    fn scenario_configs() -> Vec<(&'static str, SystemConfig)> {
+        let mut out = vec![("default", SystemConfig::default())];
+        let mut gauss = SystemConfig::default();
+        gauss.scenario.distribution = Distribution::by_name("trimmed-gaussian").unwrap();
+        out.push(("trimmed-gaussian", gauss));
+        let mut bimodal = SystemConfig::default();
+        bimodal.scenario.distribution = Distribution::by_name("bimodal").unwrap();
+        out.push(("bimodal", bimodal));
+        let mut corr = SystemConfig::default();
+        corr.scenario.correlation = CorrelationConfig { gradient_nm: 2.0, corr_len: 3.0 };
+        out.push(("correlated", corr));
+        let mut faulty = SystemConfig::default();
+        faulty.scenario.faults = FaultsConfig {
+            dead_tone_p: 0.2,
+            dark_ring_p: 0.2,
+            weak_ring_p: 0.2,
+            weak_tr_factor: 0.5,
+        };
+        out.push(("faulty", faulty));
+        out
+    }
 
     #[test]
     fn sampler_is_reproducible() {
@@ -155,5 +196,39 @@ mod tests {
         let big = SystemSampler::new(&cfg, 50, 50, 42);
         assert_eq!(small.lasers[..], big.lasers[..5]);
         assert_eq!(small.rows[..], big.rows[..5]);
+    }
+
+    /// Satellite: determinism + `slice_lasers` prefix exactness under
+    /// every scenario family, so adaptive `--ci` blocks stay exact
+    /// truncations whatever the scenario.
+    #[test]
+    fn scenario_populations_deterministic_and_prefix_exact() {
+        for (name, cfg) in scenario_configs() {
+            let a = SystemSampler::new(&cfg, 6, 6, 123);
+            let b = SystemSampler::new(&cfg, 6, 6, 123);
+            assert_eq!(a.lasers, b.lasers, "{name}: reproducible lasers");
+            assert_eq!(a.rows, b.rows, "{name}: reproducible rows");
+
+            let small = SystemSampler::new(&cfg, 3, 6, 123);
+            assert_eq!(small.lasers[..], a.lasers[..3], "{name}: laser prefix stable");
+            assert_eq!(small.rows[..], a.rows[..], "{name}: rows identical");
+
+            let slice = a.slice_lasers(1, 4);
+            for t in 0..slice.n_trials() {
+                let (l, r) = slice.trial(t);
+                let (fl, fr) = a.trial(6 + t);
+                assert_eq!(l, fl, "{name}: slice trial {t}");
+                assert_eq!(r, fr, "{name}: slice trial {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn fault_flags_surface_through_has_faults() {
+        let (_, faulty) = scenario_configs().pop().unwrap();
+        let s = SystemSampler::new(&faulty, 10, 10, 7);
+        assert!(s.has_faults(), "p = 0.2 over 10 devices: a fault is near-certain");
+        let clean = SystemSampler::new(&SystemConfig::default(), 3, 3, 7);
+        assert!(!clean.has_faults());
     }
 }

@@ -158,8 +158,18 @@ impl CacheStats {
     }
 }
 
-/// Cache key: config fingerprint (exact `Debug` rendering — all fields,
-/// f64s formatted losslessly) × population shape × seed lane.
+/// Exhaustive fingerprint of a [`SystemConfig`] for population memoization:
+/// the exact `Debug` rendering — **every** field including the full
+/// scenario (distribution parameters, correlation, faults), f64s formatted
+/// losslessly. Deriving it from `Debug` means a field added to any nested
+/// config struct is hashed automatically; the exhaustive field-mutation
+/// test in `tests/scenario.rs` guards against a fingerprint that stops
+/// covering a field (which would silently serve stale populations).
+pub fn config_fingerprint(cfg: &SystemConfig) -> String {
+    format!("{cfg:?}")
+}
+
+/// Cache key: [`config_fingerprint`] × population shape × seed lane.
 type PopKey = (String, usize, usize, u64);
 
 /// One cache slot: a finished population, or a build in flight that other
@@ -309,7 +319,7 @@ impl PopulationCache {
     }
 
     fn key(cfg: &SystemConfig, n_lasers: usize, n_rows: usize, seed: u64) -> PopKey {
-        (format!("{cfg:?}"), n_lasers, n_rows, seed)
+        (config_fingerprint(cfg), n_lasers, n_rows, seed)
     }
 
     /// Return the memoized population for this column, building it (or

@@ -27,7 +27,8 @@ pub mod scheduler;
 pub mod sweep;
 
 pub use engine::{
-    CacheStats, Population, PopulationCache, RustOblivious, SchemeEvaluator, TrialEngine,
+    config_fingerprint, CacheStats, Population, PopulationCache, RustOblivious, SchemeEvaluator,
+    TrialEngine,
 };
 pub use scheduler::{ColumnProgress, EvalFactory, GridStats, SweepRun};
 

@@ -80,16 +80,23 @@ impl Bus {
 }
 
 /// Which tone does ring `ring` align with at `heat_nm`? Checks every FSR
-/// image of the tuned resonance.
+/// image of the tuned resonance. Fault-injected devices never align: a
+/// dark ring has no optical response, a dead tone carries no light.
 pub fn aligned_tone(
     laser: &MwlSample,
     rings: &RingRowSample,
     ring: usize,
     heat_nm: f64,
 ) -> Option<usize> {
-    let res = rings.resonance_nm[ring] ;
+    if rings.ring_dark(ring) {
+        return None;
+    }
+    let res = rings.resonance_nm[ring];
     let fsr = rings.fsr_nm[ring];
     for (j, &tone) in laser.tones_nm.iter().enumerate() {
+        if laser.tone_dead(j) {
+            continue;
+        }
         // Alignment ⟺ red-shift distance from the *untuned* resonance to the
         // tone equals the heat modulo the FSR.
         let d = red_shift_distance(tone - res, fsr);
@@ -152,6 +159,22 @@ mod tests {
         bus.unlock(0);
         assert!(bus.tone_visible_to(7, 0));
         assert_eq!(bus.locked_heat(0), None);
+    }
+
+    #[test]
+    fn faulted_devices_never_align_or_lock() {
+        let (mut laser, mut rings) = nominal();
+        laser.dead = vec![false; 8];
+        laser.dead[0] = true;
+        rings.dark = vec![false; 8];
+        rings.dark[2] = true;
+        let mut bus = Bus::new(8);
+        // Ring 0 at tone 0's heat: the tone is dead, nothing is captured.
+        assert_eq!(bus.lock(&laser, &rings, 0, 4.48), None);
+        // A dark ring aligns with nothing even at a perfect heat.
+        assert_eq!(aligned_tone(&laser, &rings, 2, 4.48), None);
+        // Healthy pairs still work.
+        assert_eq!(aligned_tone(&laser, &rings, 1, 4.48), Some(1));
     }
 
     #[test]

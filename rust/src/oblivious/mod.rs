@@ -215,4 +215,47 @@ mod tests {
             }
         }
     }
+
+    /// Tentpole contract: fault-injected trials degrade to a zero-lock
+    /// classification under every oblivious scheme — never a panic.
+    #[test]
+    fn faulty_trials_classify_zero_lock_without_panicking() {
+        use crate::oblivious::outcome::OutcomeClass;
+
+        let mut cfg = SystemConfig::default();
+        cfg.scenario.faults.dead_tone_p = 0.5;
+        cfg.scenario.faults.dark_ring_p = 0.5;
+        let mut rng = Rng::seed_from(123);
+        let mut saw_fault = false;
+        for _ in 0..40 {
+            let sut = SystemUnderTest::sample(&cfg, &mut rng);
+            let faulty = sut.laser.any_dead() || sut.rings.any_dark();
+            saw_fault |= faulty;
+            for scheme in Scheme::all() {
+                let res = run_scheme(scheme, &sut.laser, &sut.rings, &cfg.target_order, 6.0);
+                assert_eq!(res.assignment.len(), 8);
+                if faulty {
+                    // A dead tone or dark ring leaves some ring toneless:
+                    // the adjudicator must report zero-lock (or another
+                    // failure when stealing cascades), never Success.
+                    assert_ne!(
+                        res.class,
+                        OutcomeClass::Success,
+                        "{}: fault-free success is impossible",
+                        scheme.name()
+                    );
+                }
+                // Fault-injected devices never end up assigned.
+                for (i, a) in res.assignment.iter().enumerate() {
+                    if sut.rings.ring_dark(i) {
+                        assert_eq!(*a, None, "dark ring {i} captured a tone");
+                    }
+                    if let Some(t) = a {
+                        assert!(!sut.laser.tone_dead(*t), "dead tone {t} captured");
+                    }
+                }
+            }
+        }
+        assert!(saw_fault, "p = 0.5 scenario must inject faults");
+    }
 }

@@ -86,7 +86,8 @@ pub fn wavelength_search(
 }
 
 /// [`wavelength_search`] into a caller-owned table, reusing its entry
-/// allocation (per-worker workspace reuse — §Perf).
+/// allocation (per-worker workspace reuse — §Perf). A dark (fault-injected)
+/// ring records no peaks; dead tones emit no light and never appear.
 pub fn wavelength_search_into(
     laser: &MwlSample,
     rings: &RingRowSample,
@@ -106,8 +107,11 @@ pub fn wavelength_search_into(
     };
     out.ring = ring;
     out.entries.clear();
+    if rings.ring_dark(ring) {
+        return;
+    }
     for tone in 0..n {
-        if !bus.tone_visible_to(ring, tone) {
+        if laser.tone_dead(tone) || !bus.tone_visible_to(ring, tone) {
             continue;
         }
         let base = red_shift_distance(laser.tones_nm[tone] - res, fsr);
@@ -141,12 +145,15 @@ pub fn first_visible_peak(
     mean_tr_nm: f64,
     bus: &Bus,
 ) -> Option<f64> {
+    if rings.ring_dark(ring) {
+        return None;
+    }
     let tr = rings.tuning_range_nm(ring, mean_tr_nm);
     let fsr = rings.fsr_nm[ring];
     let res = rings.resonance_nm[ring];
     let mut best: Option<f64> = None;
     for tone in 0..laser.n_ch() {
-        if !bus.tone_visible_to(ring, tone) {
+        if laser.tone_dead(tone) || !bus.tone_visible_to(ring, tone) {
             continue;
         }
         let base = red_shift_distance(laser.tones_nm[tone] - res, fsr);
@@ -301,6 +308,29 @@ mod tests {
                 assert_eq!(fast, st.first().map(|e| e.heat_nm));
             }
         }
+    }
+
+    /// Fault injection: dark rings sweep to nothing; dead tones never
+    /// produce a peak — the graceful-degradation substrate for the
+    /// oblivious schemes (zero-lock classification, not a panic).
+    #[test]
+    fn dark_rings_and_dead_tones_invisible_to_search() {
+        let (mut laser, mut rings) = nominal_sut();
+        laser.dead = vec![false; 8];
+        laser.dead[3] = true;
+        rings.dark = vec![false; 8];
+        rings.dark[0] = true;
+        let bus = Bus::new(8);
+
+        let dark = wavelength_search(&laser, &rings, 0, 8.96, &bus);
+        assert!(dark.is_empty(), "dark ring records no peaks");
+        assert_eq!(first_visible_peak(&laser, &rings, 0, 8.96, &bus), None);
+
+        let healthy = wavelength_search(&laser, &rings, 1, 8.96, &bus);
+        assert_eq!(healthy.len(), 7, "one dead tone of 8 is invisible");
+        assert!(healthy.entries.iter().all(|e| e.tone != 3));
+        let fast = first_visible_peak(&laser, &rings, 1, 8.96, &bus);
+        assert_eq!(fast, healthy.first().map(|e| e.heat_nm));
     }
 
     #[test]

@@ -88,11 +88,12 @@ mod tests {
     fn stealing_leaves_later_ring_empty() {
         // Hand-built 2-ring / 2-tone system: ring 0's nearest tone is tone 1
         // (it steals it); ring 1 can only reach tone 1 — which is now gone.
-        let laser = MwlSample { tones_nm: vec![0.0, 1.0], grid_offset_nm: 0.0 };
+        let laser = MwlSample { tones_nm: vec![0.0, 1.0], grid_offset_nm: 0.0, dead: vec![] };
         let rings = RingRowSample {
             resonance_nm: vec![0.5, 0.8],
             fsr_nm: vec![10.0, 10.0],
             tr_scale: vec![1.0, 1.0],
+            dark: vec![],
         };
         // TR = 1.0: ring 0 reaches tone 1 (d = 0.5) only (tone 0 wraps to
         // 9.5). Ring 1 reaches tone 1 (d = 0.2) only.

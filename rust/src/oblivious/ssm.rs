@@ -317,11 +317,12 @@ mod tests {
         // through different FSR images must still find a feasible diagonal.
         // Ring 0 reaches tones {1, 0-next-image}: entries (tone1@0.3,
         // tone0@9.7-ish rows wrap); built from a 2-channel toy system.
-        let laser = MwlSample { tones_nm: vec![0.0, 1.0], grid_offset_nm: 0.0 };
+        let laser = MwlSample { tones_nm: vec![0.0, 1.0], grid_offset_nm: 0.0, dead: vec![] };
         let rings = RingRowSample {
             resonance_nm: vec![0.7, -1.5],
             fsr_nm: vec![2.0, 2.0],
             tr_scale: vec![1.0, 1.0],
+            dark: vec![],
         };
         // Ring 0: d(tone0) = (0−0.7) mod 2 = 1.3; d(tone1) = 0.3.
         // Ring 1: d(tone0) = 1.5; d(tone1) = 0.5.

@@ -104,6 +104,12 @@ impl XlaIdeal {
         sampler: &SystemSampler,
         policy: Policy,
     ) -> Result<Vec<f64>> {
+        if sampler.has_faults() {
+            return Err(anyhow!(
+                "the XLA artifact has no fault-injection path; evaluate fault \
+                 scenarios with the rust backend"
+            ));
+        }
         let n = cfg.n_ch();
         let exe = self.executable(n)?;
         let s: Vec<i32> = cfg.target_order.as_slice().iter().map(|&x| x as i32).collect();
@@ -141,6 +147,12 @@ impl XlaIdeal {
         sampler: &SystemSampler,
         policies: &[Policy],
     ) -> Result<Vec<Vec<f64>>> {
+        if sampler.has_faults() {
+            return Err(anyhow!(
+                "the XLA artifact has no fault-injection path; evaluate fault \
+                 scenarios with the rust backend"
+            ));
+        }
         let n = cfg.n_ch();
         let exe = self.executable(n)?;
         let s: Vec<i32> = cfg.target_order.as_slice().iter().map(|&x| x as i32).collect();

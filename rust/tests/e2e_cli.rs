@@ -146,6 +146,55 @@ fn sweep_json_byte_identical_across_thread_counts() {
     assert_eq!(run_with("1", "a"), run_with("8", "b"));
 }
 
+/// Acceptance: a scenario-axis sweep (fault probability 0 → 0.1) runs
+/// scheduler-parallel end-to-end via the CLI, with byte-identical
+/// sweep.json at 1 vs 4 workers.
+#[test]
+fn scenario_axis_sweep_runs_scheduler_parallel_via_cli() {
+    let run_with = |threads: &str, tag: &str| {
+        let dir = std::env::temp_dir().join(format!(
+            "wdm-e2e-scen{tag}-{}",
+            std::process::id()
+        ));
+        let out = bin()
+            .args([
+                "sweep", "--axis", "dead-tone-p", "--values", "0:0.1:0.05", "--tr",
+                "4.48,6.72", "--measure", "afp:ltc,cafp:vt-rs-ssm", "--fast", "--lasers",
+                "4", "--rows", "4", "--threads", threads, "--out",
+            ])
+            .arg(&dir)
+            .output()
+            .expect("run");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let json = std::fs::read_to_string(dir.join("sweep.json")).unwrap();
+        assert!(json.contains("\"axis\": \"dead-tone-p\""), "{json}");
+        assert!(dir.join("sweep_cafp_vt-rs-ssm.csv").is_file());
+        std::fs::remove_dir_all(&dir).ok();
+        json
+    };
+    assert_eq!(run_with("1", "a"), run_with("4", "b"));
+}
+
+/// Scenario knobs flow from a --config file into show-config (and bad
+/// knobs fail with a structured error, not a panic).
+#[test]
+fn scenario_config_file_renders_and_validates() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("wdm-scen-cfg-{}.toml", std::process::id()));
+    std::fs::write(&path, "[scenario]\ndistribution = \"bimodal\"\ncorr_len = 2.0\n").unwrap();
+    let out = bin().args(["show-config", "--config"]).arg(&path).output().expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("bimodal"), "{text}");
+    assert!(text.contains("corr-len 2"), "{text}");
+
+    std::fs::write(&path, "[scenario]\ndark_ring_p = 7.0\n").unwrap();
+    let out = bin().args(["show-config", "--config"]).arg(&path).output().expect("run");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("dark_ring_p"));
+    std::fs::remove_file(path).ok();
+}
+
 #[test]
 fn sweep_rejects_bad_axis() {
     let out = bin()

@@ -1,0 +1,366 @@
+//! Scenario-layer integration tests:
+//!
+//! * the exhaustive `SystemConfig` fingerprint test — mutate **every**
+//!   field (including each scenario field) one at a time and assert the
+//!   population-cache key changes, so a stale-population bug cannot hide;
+//! * the default-scenario bit-identity contract — uniform / no-correlation
+//!   / no-fault sampling reproduces the paper's RNG stream draw for draw;
+//! * scenario sweeps running scheduler-parallel end-to-end with
+//!   thread-count-independent panels, under fault injection included.
+
+use wdm_arbiter::api::{ArbiterService, JobRequest, Panel};
+use wdm_arbiter::arbiter::Policy;
+use wdm_arbiter::config::SystemConfig;
+use wdm_arbiter::coordinator::sweep::{ConfigAxis, Measure, SweepSpec};
+use wdm_arbiter::coordinator::{Backend, RunOptions};
+use wdm_arbiter::model::system::SystemSampler;
+use wdm_arbiter::model::{
+    CorrelationConfig, Distribution, DwdmGrid, FaultsConfig, MwlSample, RingRowSample,
+    SpectralOrdering, VariationConfig,
+};
+use wdm_arbiter::montecarlo::scheduler::run_sweep;
+use wdm_arbiter::montecarlo::{config_fingerprint, PopulationCache, RustIdeal, TrialEngine};
+use wdm_arbiter::rng::{derive_seed, Rng};
+
+/// Every user-settable `SystemConfig` field, one mutation each. Adding a
+/// field to any nested config struct without extending this list is fine —
+/// the fingerprint derives from `Debug` and covers it automatically — but
+/// the list pins that no existing field ever silently drops out.
+fn field_mutations() -> Vec<(&'static str, SystemConfig)> {
+    let base = SystemConfig::default;
+    let mut out: Vec<(&'static str, SystemConfig)> = Vec::new();
+    let mut push = |name: &'static str, f: &dyn Fn(&mut SystemConfig)| {
+        let mut cfg = base();
+        f(&mut cfg);
+        out.push((name, cfg));
+    };
+    push("grid.n_ch", &|c| c.grid.n_ch = 16);
+    push("grid.spacing_nm", &|c| c.grid.spacing_nm = 2.24);
+    push("variation.grid_offset_nm", &|c| c.variation.grid_offset_nm = 7.0);
+    push("variation.laser_local_frac", &|c| c.variation.laser_local_frac = 0.4);
+    push("variation.ring_local_nm", &|c| c.variation.ring_local_nm = 1.0);
+    push("variation.fsr_frac", &|c| c.variation.fsr_frac = 0.02);
+    push("variation.tr_frac", &|c| c.variation.tr_frac = 0.2);
+    push("ring_bias_nm", &|c| c.ring_bias_nm = 3.0);
+    push("fsr_mean_nm", &|c| c.fsr_mean_nm = 9.5);
+    push("pre_fab_order", &|c| c.pre_fab_order = SpectralOrdering::permuted(8));
+    push("target_order", &|c| c.target_order = SpectralOrdering::permuted(8));
+    push("scenario.distribution (kind: trimmed-gaussian)", &|c| {
+        c.scenario.distribution = Distribution::by_name("trimmed-gaussian").unwrap()
+    });
+    push("scenario.distribution.sigma_frac", &|c| {
+        c.scenario.distribution = Distribution::TrimmedGaussian { sigma_frac: 0.4, clip: 3.0 }
+    });
+    push("scenario.distribution.clip", &|c| {
+        c.scenario.distribution = Distribution::TrimmedGaussian {
+            sigma_frac: wdm_arbiter::model::scenario::UNIFORM_EQUIV_SIGMA_FRAC,
+            clip: 2.0,
+        }
+    });
+    push("scenario.distribution (kind: bimodal)", &|c| {
+        c.scenario.distribution = Distribution::by_name("bimodal").unwrap()
+    });
+    push("scenario.distribution.separation_frac", &|c| {
+        c.scenario.distribution = Distribution::Bimodal { separation_frac: 0.9, jitter_frac: 0.3 }
+    });
+    push("scenario.distribution.jitter_frac", &|c| {
+        c.scenario.distribution = Distribution::Bimodal { separation_frac: 0.7, jitter_frac: 0.1 }
+    });
+    push("scenario.correlation.gradient_nm", &|c| {
+        c.scenario.correlation.gradient_nm = 1.5
+    });
+    push("scenario.correlation.corr_len", &|c| c.scenario.correlation.corr_len = 3.0);
+    push("scenario.faults.dead_tone_p", &|c| c.scenario.faults.dead_tone_p = 0.01);
+    push("scenario.faults.dark_ring_p", &|c| c.scenario.faults.dark_ring_p = 0.01);
+    push("scenario.faults.weak_ring_p", &|c| c.scenario.faults.weak_ring_p = 0.01);
+    push("scenario.faults.weak_tr_factor", &|c| c.scenario.faults.weak_tr_factor = 0.25);
+    out
+}
+
+/// Satellite: every field mutation must change the population-cache
+/// fingerprint — a missed field silently serves stale populations.
+#[test]
+fn every_config_field_changes_the_cache_fingerprint() {
+    let base_fp = config_fingerprint(&SystemConfig::default());
+    let mutations = field_mutations();
+    for (name, cfg) in &mutations {
+        assert_ne!(
+            config_fingerprint(cfg),
+            base_fp,
+            "mutating {name} must change the population-cache key"
+        );
+    }
+    // And the mutations are pairwise distinct: no two fields alias onto
+    // the same fingerprint (e.g. a sigma_frac change must not look like a
+    // clip change).
+    for i in 0..mutations.len() {
+        for j in (i + 1)..mutations.len() {
+            assert_ne!(
+                config_fingerprint(&mutations[i].1),
+                config_fingerprint(&mutations[j].1),
+                "{} and {} alias in the fingerprint",
+                mutations[i].0,
+                mutations[j].0
+            );
+        }
+    }
+}
+
+/// The fingerprint drives real cache behavior: a scenario-field change is
+/// a miss, an identical scenario is a hit.
+#[test]
+fn cache_misses_on_scenario_change_and_hits_on_equality() {
+    let ideal = RustIdeal::default();
+    let cache = PopulationCache::new();
+    let engine = TrialEngine::new(&ideal, 1).with_cache(&cache);
+    let cfg = SystemConfig::default();
+    engine.population(&cfg, 3, 3, 7, &[Policy::LtC]);
+    engine.population(&cfg, 3, 3, 7, &[Policy::LtC]);
+    assert_eq!(cache.stats().hits, 1);
+    assert_eq!(cache.stats().misses, 1);
+
+    let mut faulty = cfg.clone();
+    faulty.scenario.faults.dead_tone_p = 0.5;
+    engine.population(&faulty, 3, 3, 7, &[Policy::LtC]);
+    assert_eq!(cache.stats().misses, 2, "scenario change must resample");
+    assert_eq!(cache.stats().entries, 2);
+}
+
+/// Tentpole lock: the default scenario draws the exact RNG stream of the
+/// paper's uniform model — the reference below is the pre-scenario
+/// sampling code, inlined. Any extra or reordered draw in the default
+/// path breaks this (and with it, every golden digest).
+#[test]
+fn default_scenario_is_bit_identical_to_paper_sampling() {
+    let cfg = SystemConfig::default();
+    let seed = 0xC0FFEE_u64;
+
+    // Lasers: offset then per-tone local, all uniform half-range.
+    for i in 0..5u64 {
+        let stream = derive_seed(seed, &[0xA5, i]);
+        let mut rng = Rng::seed_from(stream);
+        let offset = rng.half_range(cfg.variation.grid_offset_nm);
+        let local_half = cfg.variation.laser_local_frac * cfg.grid.spacing_nm;
+        let want: Vec<f64> = (0..cfg.grid.n_ch)
+            .map(|t| cfg.grid.slot_nm(t) + offset + rng.half_range(local_half))
+            .collect();
+
+        let mut rng = Rng::seed_from(stream);
+        let got = MwlSample::sample(&cfg.grid, &cfg.variation, &cfg.scenario, &mut rng);
+        assert_eq!(got.grid_offset_nm.to_bits(), offset.to_bits(), "laser {i} offset");
+        for (a, b) in got.tones_nm.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "laser {i} tone");
+        }
+        assert!(got.dead.is_empty(), "no fault draws in the default scenario");
+    }
+
+    // Ring rows: interleaved local / FSR / TR draws per ring.
+    for j in 0..5u64 {
+        let stream = derive_seed(seed, &[0x5A, j]);
+        let mut rng = Rng::seed_from(stream);
+        let mut want_res = Vec::new();
+        let mut want_fsr = Vec::new();
+        let mut want_tr = Vec::new();
+        for r in 0..cfg.grid.n_ch {
+            let slot = cfg.grid.slot_nm(cfg.pre_fab_order.slot_of(r));
+            want_res.push(slot - cfg.ring_bias_nm + rng.half_range(cfg.variation.ring_local_nm));
+            want_fsr.push(cfg.fsr_mean_nm * (1.0 + rng.half_range(cfg.variation.fsr_frac)));
+            want_tr.push(1.0 + rng.half_range(cfg.variation.tr_frac));
+        }
+
+        let mut rng = Rng::seed_from(stream);
+        let got = RingRowSample::sample(
+            &cfg.grid,
+            &cfg.pre_fab_order,
+            cfg.ring_bias_nm,
+            cfg.fsr_mean_nm,
+            &cfg.variation,
+            &cfg.scenario,
+            &mut rng,
+        );
+        for r in 0..cfg.grid.n_ch {
+            assert_eq!(got.resonance_nm[r].to_bits(), want_res[r].to_bits(), "row {j} ring {r}");
+            assert_eq!(got.fsr_nm[r].to_bits(), want_fsr[r].to_bits(), "row {j} fsr {r}");
+            assert_eq!(got.tr_scale[r].to_bits(), want_tr[r].to_bits(), "row {j} tr {r}");
+        }
+        assert!(got.dark.is_empty());
+    }
+
+    // And the population sampler wires exactly these streams.
+    let sampler = SystemSampler::new(&cfg, 3, 3, seed);
+    let mut rng = Rng::seed_from(derive_seed(seed, &[0xA5, 1]));
+    let again = MwlSample::sample(&cfg.grid, &cfg.variation, &cfg.scenario, &mut rng);
+    assert_eq!(sampler.lasers[1], again);
+}
+
+fn fault_spec(values: Vec<f64>) -> SweepSpec {
+    SweepSpec::new("scenario-e2e", SystemConfig::default(), ConfigAxis::DeadToneP, values)
+        .thresholds(vec![4.48, 6.72])
+        .measures([
+            Measure::Afp(Policy::LtC),
+            Measure::Cafp(wdm_arbiter::oblivious::Scheme::VtRsSsm),
+        ])
+}
+
+/// Scenario axes run through the column-parallel scheduler with panels
+/// bit-identical at every thread count — faults, correlation and
+/// non-uniform distributions included.
+#[test]
+fn scenario_sweeps_are_thread_count_invariant() {
+    let spec_fault = fault_spec(vec![0.0, 0.1, 0.5]);
+    let mut corr_base = SystemConfig::default();
+    corr_base.scenario.distribution = Distribution::by_name("trimmed-gaussian").unwrap();
+    corr_base.scenario.correlation = CorrelationConfig { gradient_nm: 2.0, corr_len: 3.0 };
+    let spec_corr = SweepSpec::new("scenario-corr", corr_base, ConfigAxis::RingLocalNm, vec![
+        1.12, 2.24,
+    ])
+    .thresholds(vec![4.48, 6.72])
+    .measures([Measure::Afp(Policy::LtC)]);
+
+    for spec in [&spec_fault, &spec_corr] {
+        let run_at = |threads: usize| {
+            let opts =
+                RunOptions { n_lasers: 6, n_rows: 6, threads, ..RunOptions::fast() };
+            run_sweep(spec, &opts, &Backend::Rust, None, &mut |_| {})
+                .expect("sweep")
+                .outputs
+        };
+        let one = run_at(1);
+        let four = run_at(4);
+        assert_eq!(one, four, "{}: panels must not depend on thread count", spec.tag);
+    }
+}
+
+/// AFP under dead-tone injection is monotone in the fault probability and
+/// saturates at 1 when every tone is dead; CAFP stays gated (no panic,
+/// no conditional failures when the ideal model already failed).
+#[test]
+fn fault_probability_degrades_afp_monotonically() {
+    let spec = fault_spec(vec![0.0, 1.0]);
+    let opts = RunOptions { n_lasers: 5, n_rows: 5, threads: 2, ..RunOptions::fast() };
+    let outs = run_sweep(&spec, &opts, &Backend::Rust, None, &mut |_| {})
+        .expect("sweep")
+        .outputs;
+    let afp = outs[0].clone().into_shmoo();
+    for iy in 0..2 {
+        assert!(afp.at(0, iy) < 1.0, "fault-free default is not uniformly infeasible");
+        assert_eq!(afp.at(1, iy), 1.0, "all tones dead: infeasible everywhere");
+        assert!(afp.at(0, iy) <= afp.at(1, iy), "faults only degrade AFP");
+    }
+    let (cafp, tallies) = outs[1].clone().into_cafp();
+    for iy in 0..2 {
+        assert_eq!(cafp.at(1, iy), 0.0, "CAFP conditions on ideal success");
+    }
+    // Every faulted trial is a policy failure, none a conditional one.
+    let nx = 2;
+    for iy in 0..2 {
+        let t = &tallies[iy * nx + 1];
+        assert_eq!(t.policy_failures, t.trials);
+        assert_eq!(t.conditional_failures, 0);
+    }
+}
+
+/// The example scenario job file stays parseable and its axes resolve —
+/// CI executes it end-to-end via `wdm-arbiter batch`.
+#[test]
+fn example_scenario_batch_file_parses() {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/jobs/scenario_sweep.toml"
+    );
+    let text = std::fs::read_to_string(path).expect("example job file");
+    let JobRequest::Batch { jobs } = JobRequest::from_toml(&text).expect("parse") else {
+        panic!("expected a batch")
+    };
+    assert_eq!(jobs.len(), 2);
+    let JobRequest::Sweep { axis, .. } = &jobs[0] else { panic!("sweep") };
+    assert_eq!(*axis, ConfigAxis::DeadToneP);
+    // The referenced scenario config file parses and validates too.
+    let cfg_path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/configs/scenario_correlated.toml"
+    );
+    let cfg = wdm_arbiter::config::presets::system_config_from_toml(
+        &std::fs::read_to_string(cfg_path).expect("example config"),
+    )
+    .expect("valid scenario config");
+    assert!(cfg.scenario.is_generalized());
+    assert_eq!(cfg.scenario.distribution.name(), "trimmed-gaussian");
+}
+
+/// A scenario sweep through the whole service stack (the `batch`/`serve`
+/// path), asserting cache reuse across jobs that share scenario columns.
+#[test]
+fn service_scenario_sweep_shares_population_cache() {
+    let dir = std::env::temp_dir().join(format!("wdm-scenario-{}", std::process::id()));
+    let service = ArbiterService::new(Backend::Rust, 2);
+    let job = |measures: &str| {
+        JobRequest::from_json_str(&format!(
+            r#"{{"type":"sweep","axis":"corr-len","values":[0.5,3.0],"tr":[4.48],
+                "measures":"{measures}",
+                "options":{{"fast":true,"lasers":4,"rows":4,"out":"{}"}}}}"#,
+            dir.display()
+        ))
+        .unwrap()
+    };
+    let first = service.submit(&job("afp:ltc"));
+    assert!(first.ok, "{:?}", first.error);
+    assert_eq!(first.cache.misses, 2, "one population per corr-len column");
+    let second = service.submit(&job("cafp:vt-rs-ssm"));
+    assert!(second.ok, "{:?}", second.error);
+    assert_eq!(second.cache.hits, 2, "same scenario columns: served from cache");
+    assert_eq!(second.cache.misses, 0);
+    let Panel::Grid { cells, .. } = &second.panels[0] else { panic!("grid") };
+    assert!(cells.iter().all(|c| c.is_finite()));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Weak-ring faults shrink tuning ranges: the min-TR-for-complete-success
+/// curve can only move up when every ring's tuner is halved.
+#[test]
+fn weak_rings_raise_min_tr() {
+    let mut weak = SystemConfig::default();
+    weak.scenario.faults = FaultsConfig {
+        weak_ring_p: 1.0,
+        weak_tr_factor: 0.5,
+        ..FaultsConfig::default()
+    };
+    let healthy = SystemConfig::default();
+    // Same seed, identical draws up to the (appended) weak-ring stream:
+    // the weak population is the healthy one with every TR halved.
+    let a = SystemSampler::new(&healthy, 4, 4, 11);
+    let b = SystemSampler::new(&weak, 4, 4, 11);
+    assert_eq!(a.lasers, b.lasers, "laser stream untouched by ring faults");
+    for (ra, rb) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(ra.resonance_nm, rb.resonance_nm);
+        for (sa, sb) in ra.tr_scale.iter().zip(&rb.tr_scale) {
+            assert!((sb - 0.5 * sa).abs() < 1e-15);
+        }
+    }
+}
+
+/// Distribution families actually change the sampled populations (no
+/// silent fallback to uniform), while grids/seeds stay shared.
+#[test]
+fn distribution_families_produce_distinct_populations() {
+    let mk = |name: &str| {
+        let mut cfg = SystemConfig::default();
+        cfg.scenario.distribution = Distribution::by_name(name).unwrap();
+        SystemSampler::new(&cfg, 3, 3, 99)
+    };
+    let uniform = mk("uniform");
+    let gauss = mk("trimmed-gaussian");
+    let bimodal = mk("bimodal");
+    assert_ne!(uniform.lasers, gauss.lasers);
+    assert_ne!(uniform.lasers, bimodal.lasers);
+    assert_ne!(gauss.lasers, bimodal.lasers);
+    // Bimodal local offsets avoid the origin: |Δ| >= (sep − jitter)·σ.
+    let var = VariationConfig::default();
+    let grid = DwdmGrid::wdm8_g200();
+    for row in &bimodal.rows {
+        for (i, &res) in row.resonance_nm.iter().enumerate() {
+            let delta = res - (grid.slot_nm(i) - 4.48);
+            assert!(delta.abs() >= (0.7 - 0.3) * var.ring_local_nm - 1e-9);
+        }
+    }
+}
