@@ -1,0 +1,155 @@
+//! TCP client for the envelope wire protocol (`wdm-arbiter serve --listen`):
+//! submits two overlapping sweep jobs, cancels the long one mid-sweep, and
+//! verifies the interleaved, id-tagged envelope stream.
+//!
+//! ```bash
+//! wdm-arbiter serve --listen 127.0.0.1:0 &   # prints "listening on ADDR"
+//! cargo run --release --example serve_client -- ADDR [--shutdown]
+//! ```
+//!
+//! Prints (and checks) three markers the CI smoke greps for:
+//! `interleaved envelopes: yes`, `job a: canceled`, `job b: ok`.
+//! With `--shutdown` it also sends the shutdown control so the server
+//! drains and exits cleanly.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::process::ExitCode;
+
+use wdm_arbiter::util::json::Json;
+
+/// Job "a": long enough (16 columns x 400 trials, CAFP) that the cancel —
+/// sent as soon as its first event arrives — always lands mid-sweep.
+fn job_a(out_dir: &str) -> String {
+    format!(
+        r#"{{"id": "a", "request": {{"type": "sweep", "axis": "ring-local",
+            "values": "0.56:8.96:0.56", "tr": [2, 4, 6, 9],
+            "measures": "cafp:vt-rs-ssm",
+            "options": {{"fast": true, "lasers": 20, "rows": 20, "out": "{out_dir}/a"}}}}}}"#
+    )
+    .replace('\n', " ")
+}
+
+/// Job "b": a short sweep that completes normally while "a" is running.
+fn job_b(out_dir: &str) -> String {
+    format!(
+        r#"{{"id": "b", "request": {{"type": "sweep", "axis": "ring-local",
+            "values": [1.12, 2.24], "tr": [2, 6], "measures": "afp:ltc",
+            "options": {{"fast": true, "lasers": 6, "rows": 6, "out": "{out_dir}/b"}}}}}}"#
+    )
+    .replace('\n', " ")
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("serve_client: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run() -> Result<(), String> {
+    let mut args = std::env::args().skip(1);
+    let addr = args.next().ok_or("usage: serve_client HOST:PORT [--shutdown]")?;
+    let shutdown = args.any(|a| a == "--shutdown");
+    let out_dir = std::env::temp_dir().join(format!("serve-client-{}", std::process::id()));
+    let out_dir = out_dir.display().to_string();
+
+    let stream = TcpStream::connect(&addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let mut writer = stream.try_clone().map_err(|e| e.to_string())?;
+    let mut reader = BufReader::new(stream);
+
+    writeln!(writer, "{}", job_a(&out_dir)).map_err(|e| e.to_string())?;
+    writeln!(writer, "{}", job_b(&out_dir)).map_err(|e| e.to_string())?;
+
+    let (mut resp_a, mut resp_b) = (None::<Json>, None::<Json>);
+    let mut events_a = 0usize;
+    let mut events_b = 0usize;
+    // Events of BOTH jobs seen before EITHER response: true overlap.
+    let mut overlapped = false;
+    let mut cancel_sent = false;
+    let mut line = String::new();
+    while resp_a.is_none() || resp_b.is_none() {
+        line.clear();
+        let n = reader.read_line(&mut line).map_err(|e| e.to_string())?;
+        if n == 0 {
+            return Err("server closed the connection early".to_string());
+        }
+        let envelope = Json::parse(line.trim())?;
+        let id = envelope.get("id").ok_or_else(|| format!("untagged line: {line}"))?;
+        let id = id.as_str().unwrap_or("").to_string();
+        if envelope.get("event").is_some() {
+            match id.as_str() {
+                "a" => events_a += 1,
+                "b" => events_b += 1,
+                other => return Err(format!("event for unknown job '{other}'")),
+            }
+            if events_a > 0 && events_b > 0 && resp_a.is_none() && resp_b.is_none() {
+                overlapped = true;
+            }
+            // First sign of life from job "a": cancel it. The server acks
+            // immediately; the job stops at its next column boundary.
+            if !cancel_sent && id == "a" {
+                cancel_sent = true;
+                writeln!(writer, r#"{{"id": "c", "control": "cancel", "job": "a"}}"#)
+                    .map_err(|e| e.to_string())?;
+            }
+        } else if let Some(resp) = envelope.get("response") {
+            match id.as_str() {
+                "a" => resp_a = Some(resp.clone()),
+                "b" => resp_b = Some(resp.clone()),
+                "c" => {
+                    if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+                        return Err(format!("cancel control rejected: {}", resp.to_string()));
+                    }
+                }
+                other => return Err(format!("response for unknown id '{other}'")),
+            }
+        } else {
+            return Err(format!("envelope without event/response: {line}"));
+        }
+    }
+
+    let a = resp_a.unwrap();
+    let b = resp_b.unwrap();
+    let a_canceled = a.get("canceled").and_then(Json::as_bool) == Some(true);
+    let b_ok = b.get("ok").and_then(Json::as_bool) == Some(true);
+    println!("events: a={events_a} b={events_b}");
+    println!("interleaved envelopes: {}", if overlapped { "yes" } else { "no" });
+    println!("job a: {}", if a_canceled { "canceled" } else { "NOT canceled" });
+    println!("job b: {}", if b_ok { "ok" } else { "FAILED" });
+
+    if shutdown {
+        writeln!(writer, r#"{{"id": "sd", "control": "shutdown"}}"#)
+            .map_err(|e| e.to_string())?;
+        // The server acks, drains, and closes; read to EOF.
+        let mut rest = String::new();
+        let got_ack = loop {
+            rest.clear();
+            match reader.read_line(&mut rest) {
+                Ok(0) | Err(_) => break false,
+                Ok(_) => {
+                    let env = Json::parse(rest.trim())?;
+                    if env.get("id").and_then(Json::as_str) == Some("sd") {
+                        break true;
+                    }
+                }
+            }
+        };
+        println!("shutdown: {}", if got_ack { "acknowledged" } else { "NO ACK" });
+        if !got_ack {
+            return Err("no shutdown acknowledgement".to_string());
+        }
+    }
+
+    std::fs::remove_dir_all(&out_dir).ok();
+    if overlapped && a_canceled && b_ok {
+        Ok(())
+    } else {
+        Err(format!(
+            "contract violated (interleaved={overlapped} a_canceled={a_canceled} b_ok={b_ok})"
+        ))
+    }
+}

@@ -24,7 +24,9 @@ use wdm_arbiter::oblivious::ssm::match_phase;
 use wdm_arbiter::oblivious::{run_scheme, run_scheme_with, Scheme, Workspace};
 use wdm_arbiter::rng::Rng;
 use wdm_arbiter::runtime::accel::XlaIdeal;
-use wdm_arbiter::testkit::benchkit::{bench, black_box, header, BenchResult};
+use wdm_arbiter::testkit::benchkit::{
+    bench, black_box, header, write_json_report, BenchResult,
+};
 
 const TARGET: Duration = Duration::from_millis(300);
 
@@ -148,6 +150,16 @@ fn main() {
         println!("{}", r.row());
     }
 
+    // Machine-readable trajectory: BENCH_hotpath.json (per-case median ns,
+    // trials, threads, git describe) so future PRs can diff performance.
+    // `WDM_BENCH_OUT` overrides the output path (CI artifacts).
+    let bench_path = std::env::var("WDM_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    match write_json_report(std::path::Path::new(&bench_path), "hotpath", &results) {
+        Ok(()) => println!("wrote {bench_path}"),
+        Err(e) => eprintln!("warning: could not write {bench_path}: {e}"),
+    }
+
     // --- Fig 14 grid: TrialEngine column reuse vs the seed structure ------
     // Acceptance check for the TrialEngine refactor: the same CAFP grid
     // (fast-preset Fig 14 axes, all three schemes) evaluated (a) the seed
@@ -224,8 +236,15 @@ fn fig14_grid_comparison() {
     // we time the wall-clock win (PR-3 acceptance: "measurably faster").
     let sched_opts = RunOptions { threads: 8, ..opts.clone() };
     let scheduler_structure = || -> f64 {
-        let run = scheduler::run_sweep(&spec, &sched_opts, &Backend::Rust, None, &mut |_| {})
-            .expect("bench sweep");
+        let run = scheduler::run_sweep(
+            &spec,
+            &sched_opts,
+            &Backend::Rust,
+            None,
+            &wdm_arbiter::montecarlo::CancelToken::new(),
+            &mut |_| {},
+        )
+        .expect("bench sweep");
         run.outputs
             .into_iter()
             .map(|o| o.into_shmoo().cells.iter().sum::<f64>())

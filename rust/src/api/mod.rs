@@ -20,11 +20,22 @@
 //!   evaluation instead of resampling (keyed by config fingerprint ×
 //!   population shape × seed lane).
 //!
+//! * [`session`] — the concurrent front-end: [`ArbiterService::submit_async`]
+//!   assigns a [`JobId`], enqueues onto the service's shared job executor,
+//!   and returns a [`JobHandle`] (`status()` / `wait()` / cooperative
+//!   `cancel()`). [`EventSink`] is the `Sync` event channel jobs stream
+//!   through (shared across job threads — the old `FnMut` callback is gone).
+//! * [`wire`] — the envelope-framed wire protocol (`{"id", "request"}` in;
+//!   interleaved `{"id", "event"}` / `{"id", "response"}` out) behind
+//!   `wdm-arbiter serve`, both pipelined stdin/stdout and the multi-client
+//!   `serve --listen ADDR` TCP mode, plus `cancel`/`status`/`shutdown`
+//!   control requests.
+//!
 //! The CLI (`src/main.rs`) is a thin client: every subcommand maps argv to
 //! a `JobRequest` ([`cli::job_from_args`]) and renders the response;
-//! `wdm-arbiter serve` processes JSON-lines requests on stdin and
-//! `wdm-arbiter batch jobs.{json,toml}` runs a job file — all three drive
-//! the same service.
+//! `wdm-arbiter serve` speaks the envelope protocol (stdin/stdout or TCP)
+//! and `wdm-arbiter batch jobs.{json,toml}` runs a job file — all of them
+//! drive the same service.
 //!
 //! ## Example
 //!
@@ -48,7 +59,11 @@ pub mod cli;
 pub mod request;
 pub mod response;
 pub mod service;
+pub mod session;
+pub mod wire;
 
 pub use request::{ConfigSpec, JobOptions, JobRequest};
 pub use response::{JobEvent, JobResponse, Panel};
 pub use service::ArbiterService;
+pub use session::{ChannelSink, EventSink, FnSink, JobHandle, JobId, JobStatus, NullSink};
+pub use wire::{serve_connection, serve_listen, ConnOutcome};

@@ -117,6 +117,10 @@ pub struct JobResponse {
     /// Short label (experiment id / axis / scheme).
     pub label: String,
     pub ok: bool,
+    /// The job stopped at a cancel point (between sweep columns / batch
+    /// children) because its [`crate::montecarlo::CancelToken`] fired.
+    /// Always `ok == false`, never a partial result.
+    pub canceled: bool,
     pub error: Option<String>,
     /// `name()` of the evaluator that **actually ran** — never the
     /// requested backend (XLA falls back to rust-f64 when artifacts are
@@ -131,8 +135,12 @@ pub struct JobResponse {
     pub panels: Vec<Panel>,
     /// Job-specific structured payload.
     pub data: Json,
-    /// Population-cache activity attributable to this job (delta, not
-    /// cumulative; `entries` is the absolute cache size afterwards).
+    /// Population-cache activity during this job's execution window
+    /// (delta of the service-global counters, not cumulative; `entries` is
+    /// the absolute cache size afterwards). With concurrent `submit_async`
+    /// jobs the windows overlap, so activity from simultaneously running
+    /// jobs is counted too — exact per-job attribution needs the jobs to
+    /// be sequenced.
     pub cache: CacheStats,
     /// Child responses (batch jobs only), in submission order.
     pub jobs: Vec<JobResponse>,
@@ -145,6 +153,7 @@ impl JobResponse {
             kind,
             label: label.into(),
             ok: true,
+            canceled: false,
             error: None,
             backend: "none".to_string(),
             elapsed_s: 0.0,
@@ -171,6 +180,15 @@ impl JobResponse {
         r
     }
 
+    /// Canceled-job response: the job's cancel token fired and it stopped
+    /// at a cancel point instead of producing a result.
+    pub fn canceled(kind: &'static str, label: impl Into<String>) -> JobResponse {
+        let mut r = JobResponse::failure(kind, label, "canceled");
+        r.canceled = true;
+        r.summary = "canceled\n".to_string();
+        r
+    }
+
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("type", Json::str("response")),
@@ -178,6 +196,9 @@ impl JobResponse {
             ("label", Json::str(self.label.clone())),
             ("ok", Json::Bool(self.ok)),
         ];
+        if self.canceled {
+            pairs.push(("canceled", Json::Bool(true)));
+        }
         if let Some(e) = &self.error {
             pairs.push(("error", Json::str(e.clone())));
         }
@@ -240,9 +261,22 @@ mod tests {
     fn failure_response_carries_error() {
         let r = JobResponse::failure("run", "fig99", "unknown experiment 'fig99'");
         assert!(!r.ok);
+        assert!(!r.canceled);
         let j = Json::parse(&r.to_json_string()).unwrap();
         assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert!(j.get("canceled").is_none(), "no canceled key on plain failures");
         assert!(j.get("error").unwrap().as_str().unwrap().contains("fig99"));
+    }
+
+    #[test]
+    fn canceled_response_is_tagged_and_not_ok() {
+        let r = JobResponse::canceled("sweep", "ring-local");
+        assert!(!r.ok);
+        assert!(r.canceled);
+        let j = Json::parse(&r.to_json_string()).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("canceled").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("error").unwrap().as_str(), Some("canceled"));
     }
 
     #[test]

@@ -9,11 +9,15 @@
 //! so a column recurs when config, shape, base seed, axis value **and
 //! position** all match: the same sweep re-submitted, a different measure
 //! over the same value list, or lists sharing a leading prefix — not
-//! arbitrary value overlaps. [`JobResponse::cache`] reports the per-job
-//! hit/miss delta.
+//! arbitrary value overlaps. [`JobResponse::cache`] reports the hit/miss
+//! delta over the job's execution window (global counters: concurrent
+//! async jobs' windows overlap).
+
+use std::sync::{Arc, OnceLock};
 
 use crate::api::request::{ConfigSpec, JobOptions, JobRequest};
 use crate::api::response::{JobEvent, JobResponse, Panel};
+use crate::api::session::{EventSink, JobHandle, JobIds, JobShared, NullSink};
 use crate::arbiter::{distance, ideal, Policy};
 use crate::config::presets::table2_cases;
 use crate::config::SystemConfig;
@@ -22,7 +26,7 @@ use crate::coordinator::sweep::{ConfigAxis, Measure, SweepOutput, SweepSpec};
 use crate::coordinator::{run_experiment_quiet, Backend};
 use crate::experiments::{by_id, tr_sweep};
 use crate::model::SystemUnderTest;
-use crate::montecarlo::{self, PopulationCache};
+use crate::montecarlo::{self, CancelToken, PopulationCache, SWEEP_CANCELED, TaskPool};
 use crate::oblivious::{run_scheme, Scheme};
 use crate::rng::Rng;
 use crate::util::json::Json;
@@ -34,54 +38,166 @@ use crate::util::json::Json;
 /// parallel scheduler ([`crate::montecarlo::scheduler`]); each column
 /// worker builds its own evaluator from the backend tag, and all workers
 /// share (and coalesce on) the service's population cache.
+///
+/// Two submission front-ends share the same execution core:
+///
+/// * [`Self::submit`] / [`Self::submit_with`] — blocking, on the caller's
+///   thread.
+/// * [`Self::submit_async`] / [`Self::submit_async_with`] — enqueue onto
+///   the service's shared job executor (a [`TaskPool`] of `job_workers`
+///   threads, spawned lazily on first use) and return a [`JobHandle`]
+///   immediately; handles support `status()`, `wait()`, and cooperative
+///   `cancel()`. Concurrent jobs share the population cache (coalescing),
+///   and every job is seeded per column, so N jobs submitted concurrently
+///   produce byte-identical panels to the same jobs run sequentially.
 pub struct ArbiterService {
+    core: Arc<ServiceCore>,
+    /// Concurrent-job budget for the async front-end.
+    job_workers: usize,
+    /// Lazily spawned so blocking-only users never start threads.
+    pool: OnceLock<TaskPool>,
+    ids: JobIds,
+}
+
+/// The execution core, shared between the owning service and the job
+/// workers running async submissions.
+struct ServiceCore {
     backend: Backend,
     threads: usize,
     cache: PopulationCache,
 }
 
+/// Default concurrent-job budget of the async front-end.
+pub const DEFAULT_JOB_WORKERS: usize = 4;
+
 impl ArbiterService {
     /// `threads` is the default worker budget for jobs that don't set
     /// their own (0 = all cores).
     pub fn new(backend: Backend, threads: usize) -> Self {
-        Self { backend, threads, cache: PopulationCache::new() }
+        Self {
+            core: Arc::new(ServiceCore { backend, threads, cache: PopulationCache::new() }),
+            job_workers: DEFAULT_JOB_WORKERS,
+            pool: OnceLock::new(),
+            ids: JobIds::default(),
+        }
+    }
+
+    /// Override the async front-end's concurrent-job budget (must be set
+    /// before the first [`Self::submit_async`]; later calls keep the pool
+    /// already spawned).
+    pub fn with_job_workers(mut self, n: usize) -> Self {
+        self.job_workers = n.max(1);
+        self
     }
 
     pub fn backend(&self) -> Backend {
-        self.backend
+        self.core.backend
     }
 
     /// Default worker budget for submitted jobs.
     pub fn threads(&self) -> usize {
-        self.threads
+        self.core.threads
     }
 
     /// The shared population cache (cumulative stats).
     pub fn cache(&self) -> &PopulationCache {
-        &self.cache
+        &self.core.cache
     }
 
-    /// Execute one job, discarding progress events.
+    /// Execute one job on the caller's thread, discarding progress events.
     pub fn submit(&self, req: &JobRequest) -> JobResponse {
-        self.submit_with(req, &mut |_| {})
+        self.core.submit_job(req, &NullSink, &CancelToken::new())
     }
 
-    /// Execute one job, forwarding [`JobEvent`]s to `sink` as they occur.
-    pub fn submit_with(&self, req: &JobRequest, sink: &mut dyn FnMut(JobEvent)) -> JobResponse {
+    /// Execute one job on the caller's thread, forwarding [`JobEvent`]s to
+    /// `sink` as they occur.
+    pub fn submit_with(&self, req: &JobRequest, sink: &dyn EventSink) -> JobResponse {
+        self.core.submit_job(req, sink, &CancelToken::new())
+    }
+
+    /// Enqueue a job on the shared job executor and return immediately.
+    /// Progress events are discarded; observe the job via the handle.
+    pub fn submit_async(&self, req: JobRequest) -> JobHandle {
+        self.submit_async_with(req, Arc::new(NullSink))
+    }
+
+    /// Enqueue a job on the shared job executor and return a [`JobHandle`]
+    /// immediately. The job streams [`JobEvent`]s through `sink` from its
+    /// worker thread; when it finishes, [`EventSink::done`] receives the
+    /// final response (before [`JobHandle::wait`] unblocks).
+    ///
+    /// A handle canceled while still queued resolves to `canceled` without
+    /// running at all; once running, the job stops at its next cancel
+    /// point (between sweep columns / batch children).
+    pub fn submit_async_with(&self, req: JobRequest, sink: Arc<dyn EventSink>) -> JobHandle {
+        let id = self.ids.next();
+        let shared = Arc::new(JobShared::new());
+        let handle = JobHandle::new(id, Arc::clone(&shared));
+        let core = Arc::clone(&self.core);
+        let workers = self.job_workers;
+        self.pool.get_or_init(|| TaskPool::new(workers)).spawn(Box::new(move || {
+            let resp = if shared.cancel_token().is_canceled() {
+                JobResponse::canceled(req.kind(), req.label())
+            } else {
+                shared.set_running();
+                // A panicking job must not wedge its waiters (or kill the
+                // worker): surface the panic as a failed response.
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    core.submit_job(&req, sink.as_ref(), shared.cancel_token())
+                }))
+                .unwrap_or_else(|_| {
+                    JobResponse::failure(req.kind(), req.label(), "job panicked")
+                })
+            };
+            // `done` runs before `finish` so wire drains (which gate on
+            // `wait`) never close a connection before the response envelope
+            // is written — but a panicking sink must not skip `finish`
+            // (wedging every waiter) or kill the worker.
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                sink.done(&resp);
+            }));
+            shared.finish(resp);
+        }));
+        handle
+    }
+}
+
+impl ServiceCore {
+    /// Execute one job: the shared core behind both submission front-ends.
+    fn submit_job(
+        &self,
+        req: &JobRequest,
+        sink: &dyn EventSink,
+        cancel: &CancelToken,
+    ) -> JobResponse {
         let cache_before = self.cache.stats();
         let started = std::time::Instant::now();
         let result = match req {
-            JobRequest::RunExperiment { id, options } => self.run_job(id, options, sink),
+            JobRequest::RunExperiment { id, options } => self.run_job(id, options, sink, cancel),
             JobRequest::Sweep { axis, values, thresholds, measures, config, options } => self
-                .sweep_job(*axis, values, thresholds.as_deref(), measures, config, options, sink),
+                .sweep_job(
+                    *axis,
+                    values,
+                    thresholds.as_deref(),
+                    measures,
+                    config,
+                    options,
+                    sink,
+                    cancel,
+                ),
             JobRequest::Arbitrate { scheme, tr_nm, seed, config } => {
                 self.arbitrate_job(*scheme, *tr_nm, *seed, config)
             }
             JobRequest::ShowConfig { cases, config } => self.show_config_job(*cases, config),
-            JobRequest::Batch { jobs } => Ok(self.batch_job(jobs, sink)),
+            JobRequest::Batch { jobs } => Ok(self.batch_job(jobs, sink, cancel)),
         };
-        let mut resp =
-            result.unwrap_or_else(|e| JobResponse::failure(req.kind(), req.label(), e));
+        let mut resp = result.unwrap_or_else(|e| {
+            if e == SWEEP_CANCELED && cancel.is_canceled() {
+                JobResponse::canceled(req.kind(), req.label())
+            } else {
+                JobResponse::failure(req.kind(), req.label(), e)
+            }
+        });
         resp.elapsed_s = started.elapsed().as_secs_f64();
         resp.cache = self.cache.stats().since(&cache_before);
         resp
@@ -91,8 +207,14 @@ impl ArbiterService {
         &self,
         id: &str,
         options: &JobOptions,
-        sink: &mut dyn FnMut(JobEvent),
+        sink: &dyn EventSink,
+        cancel: &CancelToken,
     ) -> Result<JobResponse, String> {
+        // Experiments have no internal cancel points (they always evaluate
+        // full populations); honor a token that fired before the start.
+        if cancel.is_canceled() {
+            return Err(SWEEP_CANCELED.to_string());
+        }
         // Adaptive allocation is a sweep knob; experiments always evaluate
         // full populations, so accepting it here would mislead.
         if options.ci.is_some() || options.min_trials.is_some() || options.max_trials.is_some() {
@@ -104,12 +226,12 @@ impl ArbiterService {
         }
         let opts = options.to_run_options();
         let exp = by_id(id).ok_or_else(|| format!("unknown experiment '{id}' (see `list`)"))?;
-        sink(JobEvent::ExperimentStarted { id: id.to_string() });
+        sink.emit(JobEvent::ExperimentStarted { id: id.to_string() });
         let (rep, elapsed) =
             run_experiment_quiet(exp.as_ref(), &opts).map_err(|e| format!("{e:#}"))?;
         let summary =
             format!("== {} — {} ({elapsed:.1}s)\n{}", exp.id(), exp.title(), rep.summary);
-        sink(JobEvent::ExperimentFinished {
+        sink.emit(JobEvent::ExperimentFinished {
             id: id.to_string(),
             ok: true,
             elapsed_s: elapsed,
@@ -137,7 +259,8 @@ impl ArbiterService {
         measures: &[Measure],
         config: &ConfigSpec,
         options: &JobOptions,
-        sink: &mut dyn FnMut(JobEvent),
+        sink: &dyn EventSink,
+        cancel: &CancelToken,
     ) -> Result<JobResponse, String> {
         let mut opts = options.to_run_options();
         opts.ci = options.adaptive()?;
@@ -174,7 +297,7 @@ impl ArbiterService {
         if needs_tr && tr_values.is_empty() {
             return Err("sweep: AFP/CAFP measures need at least one 'tr' row".to_string());
         }
-        sink(JobEvent::Progress {
+        sink.emit(JobEvent::Progress {
             message: format!(
                 "sweep over {} ({} columns x {} thresholds, {} measures)",
                 axis.name(),
@@ -194,14 +317,23 @@ impl ArbiterService {
         let adaptive = opts.ci.is_some();
         let cache = if adaptive { None } else { Some(&self.cache) };
         let mut on_column = |p: montecarlo::ColumnProgress| {
-            sink(JobEvent::ColumnDone {
+            sink.emit(JobEvent::ColumnDone {
                 ix: p.ix,
                 n_cols: p.n_cols,
                 value: p.value,
                 n_trials: p.n_trials,
             });
         };
-        let run = montecarlo::scheduler::run_sweep(&spec, &opts, &backend_tag, cache, &mut on_column)?;
+        // `cancel` reaches every column worker: a fired token stops the
+        // grid within one column and surfaces as SWEEP_CANCELED.
+        let run = montecarlo::scheduler::run_sweep(
+            &spec,
+            &opts,
+            &backend_tag,
+            cache,
+            cancel,
+            &mut on_column,
+        )?;
         let outs = run.outputs;
         let cell_stats = run.stats;
 
@@ -240,7 +372,7 @@ impl ArbiterService {
                     });
                 }
             }
-            sink(JobEvent::PanelReady { measure: slug });
+            sink.emit(JobEvent::PanelReady { measure: slug });
         }
 
         // Record the evaluator that actually ran: alias-aware-only sweeps
@@ -420,11 +552,23 @@ impl ArbiterService {
         Ok(r)
     }
 
-    fn batch_job(&self, jobs: &[JobRequest], sink: &mut dyn FnMut(JobEvent)) -> JobResponse {
+    fn batch_job(
+        &self,
+        jobs: &[JobRequest],
+        sink: &dyn EventSink,
+        cancel: &CancelToken,
+    ) -> JobResponse {
         let mut children = Vec::new();
         let mut failed = 0usize;
+        let mut canceled = false;
         for (i, job) in jobs.iter().enumerate() {
-            sink(JobEvent::Progress {
+            // Cancel point between children: already-completed children
+            // keep their results; the rest never start.
+            if cancel.is_canceled() {
+                canceled = true;
+                break;
+            }
+            sink.emit(JobEvent::Progress {
                 message: format!(
                     "batch job {}/{}: {} {}",
                     i + 1,
@@ -434,7 +578,8 @@ impl ArbiterService {
                 ),
             });
             // Keep going past failures; the batch reports them at the end.
-            let child = self.submit_with(job, sink);
+            let child = self.submit_job(job, sink, cancel);
+            canceled |= child.canceled;
             if !child.ok {
                 failed += 1;
             }
@@ -453,7 +598,14 @@ impl ArbiterService {
             ));
         }
         r.summary = summary;
-        if failed > 0 {
+        if canceled {
+            r.ok = false;
+            r.canceled = true;
+            // A child the cancel interrupted mid-run is not "completed":
+            // clients resuming from this count must re-run it.
+            let completed = children.iter().filter(|c| !c.canceled).count();
+            r.error = Some(format!("canceled after {completed} of {} jobs", jobs.len()));
+        } else if failed > 0 {
             r.ok = false;
             r.error = Some(format!("{failed} of {} jobs failed", jobs.len()));
         }
@@ -612,8 +764,9 @@ mod tests {
             dir.display()
         ))
         .unwrap();
-        let mut events = Vec::new();
-        let resp = service.submit_with(&job, &mut |e| events.push(e));
+        let (sink, rx) = crate::api::session::ChannelSink::pair();
+        let resp = service.submit_with(&job, &sink);
+        let events: Vec<JobEvent> = rx.try_iter().collect();
         assert!(resp.ok, "{:?}", resp.error);
         // Adaptive sweeps bypass the population cache by design.
         assert_eq!(resp.cache.hits + resp.cache.misses, 0);
@@ -793,6 +946,56 @@ mod tests {
     }
 
     #[test]
+    fn submit_async_returns_handles_that_resolve() {
+        use crate::api::session::JobStatus;
+        let service = ArbiterService::new(Backend::Rust, 1).with_job_workers(2);
+        let ok = service.submit_async(
+            JobRequest::from_json_str(r#"{"type":"show-config"}"#).unwrap(),
+        );
+        let bad = service.submit_async(
+            JobRequest::from_json_str(r#"{"type":"run","id":"fig99"}"#).unwrap(),
+        );
+        assert!(ok.id() < bad.id(), "ids are monotonic");
+        let ok_resp = ok.wait();
+        let bad_resp = bad.wait();
+        assert!(ok_resp.ok, "{:?}", ok_resp.error);
+        assert_eq!(ok.status(), JobStatus::Done);
+        assert!(!bad_resp.ok);
+        assert!(bad_resp.error.unwrap().contains("unknown experiment"));
+        assert_eq!(bad.status(), JobStatus::Done, "failed != canceled");
+    }
+
+    #[test]
+    fn cancel_before_start_resolves_without_running() {
+        use crate::api::session::{FnSink, JobStatus};
+        // One job worker, parked deterministically: the first job's sink
+        // blocks on a gate at its first Progress event, so the second job
+        // is *guaranteed* still queued when its cancel lands.
+        let dir = test_dir("svc-cancel-queued");
+        let service = ArbiterService::new(Backend::Rust, 1).with_job_workers(1);
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+        let gate_rx = std::sync::Mutex::new(gate_rx);
+        let blocking = Arc::new(FnSink(move |_e: JobEvent| {
+            // Blocks until gate_tx drops (recv then errors immediately on
+            // every later event).
+            let _ = gate_rx.lock().unwrap().recv();
+        }));
+        let first = service.submit_async_with(tiny_sweep("afp:ltc", &dir), blocking);
+        let second = service.submit_async(tiny_sweep("cafp:vt-rs-ssm", &dir));
+        second.cancel();
+        assert_eq!(second.status(), JobStatus::Queued, "single worker is parked");
+        drop(gate_tx); // release the first job
+        let resp = second.wait();
+        assert!(resp.canceled, "{resp:?}");
+        assert_eq!(second.status(), JobStatus::Canceled);
+        assert!(first.wait().ok);
+        // The service stays healthy: the same job re-submitted succeeds.
+        let retry = service.submit_async(tiny_sweep("cafp:vt-rs-ssm", &dir)).wait();
+        assert!(retry.ok, "{:?}", retry.error);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
     fn run_job_reports_backend_that_ran() {
         let dir = std::env::temp_dir().join(format!("wdm-api-run-{}", std::process::id()));
         let service = ArbiterService::new(Backend::Rust, 0);
@@ -801,8 +1004,9 @@ mod tests {
             dir.display()
         ))
         .unwrap();
-        let mut events = Vec::new();
-        let resp = service.submit_with(&req, &mut |e| events.push(e));
+        let (sink, rx) = crate::api::session::ChannelSink::pair();
+        let resp = service.submit_with(&req, &sink);
+        let events: Vec<JobEvent> = rx.try_iter().collect();
         assert!(resp.ok, "{:?}", resp.error);
         assert_eq!(resp.backend, "none"); // table render: no MC evaluation
         assert!(resp.summary.contains("Table I"));

@@ -1,0 +1,306 @@
+//! Concurrent sessions: [`JobId`]-addressed asynchronous submission,
+//! status polling, blocking waits, and cooperative cancellation on top of
+//! [`crate::api::ArbiterService`].
+//!
+//! The blocking `submit` path evaluates a job on the caller's thread;
+//! this module adds the decoupled front-end the serve protocol (and any
+//! embedding program) builds on:
+//!
+//! * [`crate::api::ArbiterService::submit_async`] assigns a [`JobId`],
+//!   enqueues the job on the service's shared
+//!   [`crate::montecarlo::TaskPool`], and returns a [`JobHandle`]
+//!   immediately — admission never waits on evaluation.
+//! * [`JobHandle::status`] / [`JobHandle::wait`] observe the job;
+//!   [`JobHandle::cancel`] fires the job's
+//!   [`crate::montecarlo::CancelToken`], which the sweep scheduler polls
+//!   between columns and batches poll between children — a canceled grid
+//!   stops within one column and resolves to a `canceled` response.
+//! * [`EventSink`] is the `Sync` event channel jobs stream
+//!   [`JobEvent`]s through. It replaces the old `&mut dyn FnMut(JobEvent)`
+//!   callback (which could not be shared across job threads); the sink is
+//!   shared freely between the submitting thread, the job worker, and —
+//!   through [`EventSink::done`] — the wire layer that writes the final
+//!   response envelope.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+use crate::api::response::{JobEvent, JobResponse};
+use crate::montecarlo::CancelToken;
+
+/// Service-assigned identifier of one asynchronous submission (unique per
+/// [`crate::api::ArbiterService`] instance, monotonically increasing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job-{}", self.0)
+    }
+}
+
+/// Observable lifecycle of an asynchronous job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Admitted, waiting for a job worker.
+    Queued,
+    /// A worker is evaluating it (a fired cancel token resolves at the
+    /// next cancel point).
+    Running,
+    /// Finished with a real (ok or failed) response.
+    Done,
+    /// Finished by cancellation: the response is `canceled`, not a result.
+    Canceled,
+}
+
+impl JobStatus {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Done => "done",
+            JobStatus::Canceled => "canceled",
+        }
+    }
+}
+
+/// Where a job's [`JobEvent`]s go. Implementations must be shareable
+/// across threads (`Send + Sync`): one sink instance is observed by the
+/// submitting thread, the job's worker thread, and every column worker
+/// that reports through it.
+pub trait EventSink: Send + Sync {
+    fn emit(&self, event: JobEvent);
+
+    /// Called exactly once per job, after the final [`JobResponse`] is
+    /// known (async submissions only — the blocking path returns the
+    /// response directly). The wire layer writes the response envelope
+    /// here so completion ordering matches event ordering per job.
+    fn done(&self, _resp: &JobResponse) {}
+}
+
+/// Discards every event (the default sink).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullSink;
+
+impl EventSink for NullSink {
+    fn emit(&self, _event: JobEvent) {}
+}
+
+/// Adapts any `Fn(JobEvent) + Send + Sync` closure into a sink.
+pub struct FnSink<F: Fn(JobEvent) + Send + Sync>(pub F);
+
+impl<F: Fn(JobEvent) + Send + Sync> EventSink for FnSink<F> {
+    fn emit(&self, event: JobEvent) {
+        (self.0)(event)
+    }
+}
+
+/// Buffers events onto an [`mpsc`] channel: the test- and tool-friendly
+/// sink (`let (sink, rx) = ChannelSink::pair();` … `rx.try_iter()`).
+#[derive(Debug)]
+pub struct ChannelSink(Mutex<mpsc::Sender<JobEvent>>);
+
+impl ChannelSink {
+    pub fn pair() -> (ChannelSink, mpsc::Receiver<JobEvent>) {
+        let (tx, rx) = mpsc::channel();
+        (ChannelSink(Mutex::new(tx)), rx)
+    }
+}
+
+impl EventSink for ChannelSink {
+    fn emit(&self, event: JobEvent) {
+        if let Ok(tx) = self.0.lock() {
+            // A dropped receiver just discards events; jobs never fail
+            // because nobody is listening.
+            let _ = tx.send(event);
+        }
+    }
+}
+
+/// Internal job phase; `Done` owns the response.
+#[derive(Debug)]
+enum Phase {
+    Queued,
+    Running,
+    Done(JobResponse),
+}
+
+/// State shared between a [`JobHandle`] and the worker executing the job.
+#[derive(Debug)]
+pub(crate) struct JobShared {
+    cancel: CancelToken,
+    phase: Mutex<Phase>,
+    cv: Condvar,
+}
+
+impl JobShared {
+    pub(crate) fn new() -> Self {
+        Self { cancel: CancelToken::new(), phase: Mutex::new(Phase::Queued), cv: Condvar::new() }
+    }
+
+    pub(crate) fn cancel_token(&self) -> &CancelToken {
+        &self.cancel
+    }
+
+    pub(crate) fn set_running(&self) {
+        let mut phase = self.phase.lock().expect("job state poisoned");
+        if matches!(*phase, Phase::Queued) {
+            *phase = Phase::Running;
+        }
+    }
+
+    pub(crate) fn finish(&self, resp: JobResponse) {
+        let mut phase = self.phase.lock().expect("job state poisoned");
+        *phase = Phase::Done(resp);
+        self.cv.notify_all();
+    }
+}
+
+/// Handle to one asynchronous submission. Cheap to clone-by-share (it owns
+/// an `Arc`); dropping it never cancels the job.
+#[derive(Debug)]
+pub struct JobHandle {
+    id: JobId,
+    shared: Arc<JobShared>,
+}
+
+impl JobHandle {
+    pub(crate) fn new(id: JobId, shared: Arc<JobShared>) -> Self {
+        Self { id, shared }
+    }
+
+    pub fn id(&self) -> JobId {
+        self.id
+    }
+
+    /// Request cooperative cancellation (idempotent). The job observes the
+    /// token at its next cancel point — between sweep columns or batch
+    /// children — and resolves to a `canceled` response; a job that
+    /// already completed keeps its result.
+    pub fn cancel(&self) {
+        self.shared.cancel.cancel();
+    }
+
+    /// Current lifecycle phase (non-blocking).
+    pub fn status(&self) -> JobStatus {
+        let phase = self.shared.phase.lock().expect("job state poisoned");
+        match &*phase {
+            Phase::Queued => JobStatus::Queued,
+            Phase::Running => JobStatus::Running,
+            Phase::Done(resp) if resp.canceled => JobStatus::Canceled,
+            Phase::Done(_) => JobStatus::Done,
+        }
+    }
+
+    /// The response, if the job already finished (non-blocking).
+    pub fn try_response(&self) -> Option<JobResponse> {
+        let phase = self.shared.phase.lock().expect("job state poisoned");
+        match &*phase {
+            Phase::Done(resp) => Some(resp.clone()),
+            _ => None,
+        }
+    }
+
+    /// Block until the job finishes and return its response (a `canceled`
+    /// response when [`Self::cancel`] won the race).
+    pub fn wait(&self) -> JobResponse {
+        let mut phase = self.shared.phase.lock().expect("job state poisoned");
+        loop {
+            if let Phase::Done(resp) = &*phase {
+                return resp.clone();
+            }
+            phase = self.shared.cv.wait(phase).expect("job state poisoned");
+        }
+    }
+}
+
+/// Monotonic [`JobId`] allocator (one per service).
+#[derive(Debug, Default)]
+pub(crate) struct JobIds(AtomicU64);
+
+impl JobIds {
+    pub(crate) fn next(&self) -> JobId {
+        JobId(self.0.fetch_add(1, Ordering::Relaxed) + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handle_tracks_phase_and_wait_returns_response() {
+        let shared = Arc::new(JobShared::new());
+        let handle = JobHandle::new(JobId(7), shared.clone());
+        assert_eq!(handle.id().to_string(), "job-7");
+        assert_eq!(handle.status(), JobStatus::Queued);
+        assert!(handle.try_response().is_none());
+
+        shared.set_running();
+        assert_eq!(handle.status(), JobStatus::Running);
+
+        let worker = std::thread::spawn(move || {
+            shared.finish(JobResponse::new("run", "fig4"));
+        });
+        let resp = handle.wait();
+        worker.join().unwrap();
+        assert!(resp.ok);
+        assert_eq!(handle.status(), JobStatus::Done);
+        assert_eq!(handle.try_response().unwrap().kind, "run");
+    }
+
+    #[test]
+    fn canceled_responses_surface_as_canceled_status() {
+        let shared = Arc::new(JobShared::new());
+        let handle = JobHandle::new(JobId(1), shared.clone());
+        handle.cancel();
+        assert!(shared.cancel_token().is_canceled());
+        shared.finish(JobResponse::canceled("sweep", "ring-local"));
+        assert_eq!(handle.status(), JobStatus::Canceled);
+        assert!(handle.wait().canceled);
+    }
+
+    #[test]
+    fn set_running_after_finish_is_a_no_op() {
+        let shared = Arc::new(JobShared::new());
+        let handle = JobHandle::new(JobId(2), shared.clone());
+        shared.finish(JobResponse::new("show-config", "config"));
+        shared.set_running(); // late worker transition must not regress Done
+        assert_eq!(handle.status(), JobStatus::Done);
+    }
+
+    #[test]
+    fn channel_sink_buffers_events_across_threads() {
+        let (sink, rx) = ChannelSink::pair();
+        let sink = Arc::new(sink);
+        let threads: Vec<_> = (0..4)
+            .map(|i| {
+                let sink = Arc::clone(&sink);
+                std::thread::spawn(move || {
+                    sink.emit(JobEvent::Progress { message: format!("t{i}") });
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let mut seen: Vec<String> = rx
+            .try_iter()
+            .map(|e| match e {
+                JobEvent::Progress { message } => message,
+                other => panic!("unexpected event {other:?}"),
+            })
+            .collect();
+        seen.sort();
+        assert_eq!(seen, vec!["t0", "t1", "t2", "t3"]);
+    }
+
+    #[test]
+    fn job_ids_are_unique_and_monotonic() {
+        let ids = JobIds::default();
+        let a = ids.next();
+        let b = ids.next();
+        assert!(a < b);
+        assert_eq!(a, JobId(1));
+    }
+}

@@ -1,0 +1,559 @@
+//! Envelope-framed wire protocol: the multi-job, multi-client front-end of
+//! the job API (`wdm-arbiter serve`).
+//!
+//! One JSON envelope per line, in both directions:
+//!
+//! ```text
+//! → {"id": 1, "request": {"type": "sweep", ...}}      submit (async)
+//! → {"id": 2, "control": "status",  "job": 1}         poll a job
+//! → {"id": 3, "control": "cancel",  "job": 1}         cooperative cancel
+//! → {"id": 4, "control": "shutdown"}                  drain + close
+//! ← {"id": 1, "event":    {...}}                      progress (interleaved)
+//! ← {"id": 1, "response": {...}}                      exactly one per id
+//! ```
+//!
+//! * **Ids** are client-chosen scalars (string or number), unique per
+//!   connection; every output line carries the id it belongs to, so any
+//!   number of jobs can be in flight and their events interleave freely.
+//! * **Interleaving rules**: per id, events arrive in order and the
+//!   response is the last line; *across* ids there is no ordering promise.
+//!   Control requests are answered immediately (a `cancel` ack does not
+//!   wait for the canceled job's own `canceled` response).
+//! * **Malformed lines** never kill the connection: the error response
+//!   (`id: null`) names the input line number and echoes a truncated copy
+//!   of the payload so pipelined clients can tell which line it was.
+//! * The same loop serves pipelined stdin/stdout and — via
+//!   [`serve_listen`] — any number of concurrent TCP clients, all sharing
+//!   one [`ArbiterService`] (scheduler, job executor and
+//!   [`crate::montecarlo::PopulationCache`]).
+
+use std::collections::HashMap;
+use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::api::request::JobRequest;
+use crate::api::response::{JobEvent, JobResponse};
+use crate::api::service::ArbiterService;
+use crate::api::session::{EventSink, JobHandle};
+use crate::util::json::Json;
+
+/// Longest payload echo attached to a malformed-line error.
+const MAX_ECHO_CHARS: usize = 120;
+
+/// One parsed input envelope.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireIn {
+    /// `{"id": X, "request": {...}}` — submit a job.
+    Submit { id: Json, job: JobRequest },
+    /// `{"id": X, "control": "cancel", "job": Y}`.
+    Cancel { id: Json, job: Json },
+    /// `{"id": X, "control": "status", "job": Y}`.
+    Status { id: Json, job: Json },
+    /// `{"id": X, "control": "shutdown"}`.
+    Shutdown { id: Json },
+}
+
+/// Truncated single-line echo of a malformed payload (char-safe).
+fn echo(line: &str) -> String {
+    let mut out: String = line.chars().take(MAX_ECHO_CHARS).collect();
+    if line.chars().nth(MAX_ECHO_CHARS).is_some() {
+        out.push('…');
+    }
+    out
+}
+
+/// Prefix `err` with the connection line number and the payload echo.
+fn line_error(line: &str, line_no: usize, err: &str) -> String {
+    format!("line {line_no}: {err} — payload: {}", echo(line))
+}
+
+/// Parse one input line into an envelope. Errors carry the line number and
+/// a truncated payload echo; callers respond and keep the connection open.
+pub fn parse_envelope(line: &str, line_no: usize) -> Result<WireIn, String> {
+    let j = Json::parse(line).map_err(|e| line_error(line, line_no, &e))?;
+    let fail = |err: &str| Err(line_error(line, line_no, err));
+    let Json::Obj(pairs) = &j else {
+        return fail("expected an envelope object {\"id\": ..., \"request\"|\"control\": ...}");
+    };
+    for (k, _) in pairs {
+        if !matches!(k.as_str(), "id" | "request" | "control" | "job") {
+            return fail(&format!("unknown envelope key '{k}'"));
+        }
+    }
+    let id = match j.get("id") {
+        Some(id @ (Json::Str(_) | Json::Num(_))) => id.clone(),
+        Some(_) => return fail("envelope 'id' must be a string or a number"),
+        None => {
+            return fail(
+                "missing envelope 'id' (requests are {\"id\": ..., \"request\": {...}})",
+            )
+        }
+    };
+    match (j.get("request"), j.get("control")) {
+        (Some(_), Some(_)) => fail("'request' and 'control' are mutually exclusive"),
+        (Some(req), None) => {
+            if j.get("job").is_some() {
+                return fail("'job' only applies to cancel/status controls");
+            }
+            let job =
+                JobRequest::from_json(req).map_err(|e| line_error(line, line_no, &e))?;
+            Ok(WireIn::Submit { id, job })
+        }
+        (None, Some(ctl)) => {
+            let name = match ctl.as_str() {
+                Some(s) => s,
+                None => return fail("'control' must be \"cancel\", \"status\" or \"shutdown\""),
+            };
+            let job_ref = || match j.get("job") {
+                Some(job @ (Json::Str(_) | Json::Num(_))) => Ok(job.clone()),
+                _ => Err(line_error(
+                    line,
+                    line_no,
+                    &format!("control '{name}' needs a scalar 'job' id"),
+                )),
+            };
+            match name {
+                "cancel" => Ok(WireIn::Cancel { id, job: job_ref()? }),
+                "status" => Ok(WireIn::Status { id, job: job_ref()? }),
+                "shutdown" => {
+                    if j.get("job").is_some() {
+                        return fail("shutdown takes no 'job'");
+                    }
+                    Ok(WireIn::Shutdown { id })
+                }
+                other => fail(&format!(
+                    "unknown control '{other}' (cancel | status | shutdown)"
+                )),
+            }
+        }
+        (None, None) => fail("envelope needs 'request' or 'control'"),
+    }
+}
+
+/// `{"id": X, "event"|"response": {...}}` as a compact line.
+fn envelope(id: &Json, key: &str, body: Json) -> String {
+    Json::obj(vec![("id", id.clone()), (key, body)]).to_string()
+}
+
+/// The per-connection output stream, shared between the reader loop and
+/// every job worker writing events/responses for this connection.
+type SharedWriter = Arc<Mutex<Box<dyn Write + Send>>>;
+
+fn write_line(out: &SharedWriter, text: &str) {
+    // A vanished client only loses its own output; jobs run to completion.
+    if let Ok(mut w) = out.lock() {
+        let _ = writeln!(w, "{text}");
+        let _ = w.flush();
+    }
+}
+
+/// [`EventSink`] that frames one job's events and final response as
+/// id-tagged envelopes on the connection's shared writer.
+struct WireSink {
+    id: Json,
+    out: SharedWriter,
+}
+
+impl EventSink for WireSink {
+    fn emit(&self, event: JobEvent) {
+        write_line(&self.out, &envelope(&self.id, "event", event.to_json()));
+    }
+
+    fn done(&self, resp: &JobResponse) {
+        write_line(&self.out, &envelope(&self.id, "response", resp.to_json()));
+    }
+}
+
+/// How a connection ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConnOutcome {
+    /// The client closed its input; in-flight jobs drained first.
+    Eof,
+    /// The client sent `{"control": "shutdown"}`: the whole server should
+    /// stop accepting (TCP mode) once this connection drains.
+    Shutdown,
+}
+
+/// Small ack/error response for control envelopes.
+fn control_response(kind: &'static str, job: &Json, status: &str) -> JobResponse {
+    let mut r = JobResponse::new(kind, job.to_string());
+    r.summary = format!("{kind} {}: {status}\n", job.to_string());
+    r.data = Json::obj(vec![("job", job.clone()), ("status", Json::str(status))]);
+    r
+}
+
+/// One entry in the per-connection job table. Finished jobs collapse to
+/// their terminal status so the connection doesn't retain every
+/// [`JobResponse`] (panel arrays included) for its whole lifetime — only
+/// the id string and a status tag stay, preserving duplicate-id detection
+/// and `status`/`cancel` answers for completed jobs.
+enum ConnJob {
+    Live(JobHandle),
+    Finished(&'static str),
+}
+
+impl ConnJob {
+    fn status_name(&self) -> &'static str {
+        match self {
+            ConnJob::Live(h) => h.status().name(),
+            ConnJob::Finished(s) => s,
+        }
+    }
+}
+
+/// Collapse finished handles to their terminal status (freeing the
+/// retained responses). Called before each admission so a long-lived,
+/// submit-heavy connection stays O(ids), not O(total panel bytes).
+/// `live` holds only ids that may still be `Live` — bounded by the jobs
+/// actually in flight — so each admission is O(in-flight), not O(all ids
+/// ever submitted).
+fn compact(jobs: &mut HashMap<String, ConnJob>, live: &mut Vec<String>) {
+    live.retain(|key| {
+        let Some(entry) = jobs.get_mut(key) else { return false };
+        match entry {
+            ConnJob::Live(h) if h.try_response().is_some() => {
+                let status = h.status().name();
+                *entry = ConnJob::Finished(status);
+                false
+            }
+            ConnJob::Live(_) => true,
+            ConnJob::Finished(_) => false,
+        }
+    });
+}
+
+/// Serve one envelope-framed connection (pipelined stdin/stdout, or one
+/// TCP client). Any number of jobs per connection may be in flight; their
+/// events and responses interleave on the shared writer, each line tagged
+/// with the submitting envelope's id. On EOF or `shutdown`, in-flight jobs
+/// drain (each writing its own response) before the function returns.
+pub fn serve_connection(
+    service: &ArbiterService,
+    reader: impl BufRead,
+    writer: Box<dyn Write + Send>,
+) -> ConnOutcome {
+    let out: SharedWriter = Arc::new(Mutex::new(writer));
+    let mut jobs: HashMap<String, ConnJob> = HashMap::new();
+    // Ids whose entries may still be Live (see `compact`).
+    let mut live: Vec<String> = Vec::new();
+    let mut shutdown = false;
+    let mut line_no = 0usize;
+    for line in reader.lines() {
+        line_no += 1;
+        let Ok(line) = line else { break };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match parse_envelope(line, line_no) {
+            Err(e) => {
+                // Malformed input is answered (id: null) and the
+                // connection stays up: pipelined clients keep going.
+                let resp = JobResponse::failure("request", "parse", e);
+                write_line(&out, &envelope(&Json::Null, "response", resp.to_json()));
+            }
+            Ok(WireIn::Submit { id, job }) => {
+                compact(&mut jobs, &mut live);
+                let key = id.to_string();
+                if jobs.contains_key(&key) {
+                    // Answered under id:null (like malformed lines): the
+                    // original submission still owns this id's single
+                    // response envelope.
+                    let resp = JobResponse::failure(
+                        "request",
+                        "submit",
+                        format!("duplicate envelope id {key} on this connection"),
+                    );
+                    write_line(&out, &envelope(&Json::Null, "response", resp.to_json()));
+                    continue;
+                }
+                let sink =
+                    Arc::new(WireSink { id: id.clone(), out: Arc::clone(&out) });
+                // The sink's `done` writes the response envelope when the
+                // job finishes; admission returns immediately.
+                let handle = service.submit_async_with(job, sink);
+                live.push(key.clone());
+                jobs.insert(key, ConnJob::Live(handle));
+            }
+            Ok(WireIn::Cancel { id, job }) => {
+                let resp = match jobs.get(&job.to_string()) {
+                    Some(entry) => {
+                        // Canceling a finished job is a no-op; the ack
+                        // reports whatever phase the job is in.
+                        if let ConnJob::Live(h) = entry {
+                            h.cancel();
+                        }
+                        control_response("cancel", &job, entry.status_name())
+                    }
+                    None => JobResponse::failure(
+                        "cancel",
+                        job.to_string(),
+                        format!("cancel: unknown job id {}", job.to_string()),
+                    ),
+                };
+                write_line(&out, &envelope(&id, "response", resp.to_json()));
+            }
+            Ok(WireIn::Status { id, job }) => {
+                let resp = match jobs.get(&job.to_string()) {
+                    Some(entry) => control_response("status", &job, entry.status_name()),
+                    None => JobResponse::failure(
+                        "status",
+                        job.to_string(),
+                        format!("status: unknown job id {}", job.to_string()),
+                    ),
+                };
+                write_line(&out, &envelope(&id, "response", resp.to_json()));
+            }
+            Ok(WireIn::Shutdown { id }) => {
+                let mut resp = JobResponse::new("shutdown", "server");
+                resp.summary = "draining in-flight jobs, then shutting down\n".to_string();
+                write_line(&out, &envelope(&id, "response", resp.to_json()));
+                shutdown = true;
+                break;
+            }
+        }
+    }
+    // Drain: every accepted job still writes its own response envelope
+    // (through its sink) before the connection closes.
+    for entry in jobs.values() {
+        if let ConnJob::Live(h) = entry {
+            let _ = h.wait();
+        }
+    }
+    if let Ok(mut w) = out.lock() {
+        let _ = w.flush();
+    }
+    if shutdown {
+        ConnOutcome::Shutdown
+    } else {
+        ConnOutcome::Eof
+    }
+}
+
+/// Multi-client TCP front-end: bind `addr`, print `listening on HOST:PORT`
+/// (so `--listen 127.0.0.1:0` callers can discover the port), and serve
+/// each client on its own thread. All connections share `service` — one
+/// scheduler, one job executor, one population cache. A `shutdown` control
+/// from any client stops the accept loop and unblocks every other open
+/// connection's reader (via `TcpStream::shutdown(Read)`), so each drains
+/// its in-flight jobs and closes; the function returns once all have.
+pub fn serve_listen(service: &ArbiterService, addr: &str) -> Result<(), String> {
+    let listener = std::net::TcpListener::bind(addr)
+        .map_err(|e| format!("serve --listen {addr}: {e}"))?;
+    let local = listener
+        .local_addr()
+        .map_err(|e| format!("serve --listen {addr}: {e}"))?;
+    println!("listening on {local}");
+    let _ = std::io::stdout().flush();
+    let shutdown = AtomicBool::new(false);
+    let shutdown = &shutdown;
+    // Read-halves of the open connections: a shutdown must reach clients
+    // that are idle-blocked in their readers, not just the one that sent
+    // it — otherwise the scope below never joins. Registration happens on
+    // the accept thread (before spawn); the registry mutex orders it
+    // against the shutdown broadcast, so no connection can miss both the
+    // broadcast and the flag check in its own thread.
+    let conns: Mutex<HashMap<u64, std::net::TcpStream>> = Mutex::new(HashMap::new());
+    let conns = &conns;
+    let mut next_conn = 0u64;
+    std::thread::scope(|s| {
+        for conn in listener.incoming() {
+            let Ok(stream) = conn else { continue };
+            // Covers both real clients racing the shutdown and the
+            // self-connection that wakes the accept loop below.
+            if shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            let conn_id = next_conn;
+            next_conn += 1;
+            if let Ok(clone) = stream.try_clone() {
+                if let Ok(mut m) = conns.lock() {
+                    m.insert(conn_id, clone);
+                }
+            }
+            s.spawn(move || {
+                if shutdown.load(Ordering::Acquire) {
+                    // Shutdown landed between accept and here: serve the
+                    // drain path immediately (reader sees EOF).
+                    let _ = stream.shutdown(std::net::Shutdown::Read);
+                }
+                let Ok(read_half) = stream.try_clone() else { return };
+                let reader = std::io::BufReader::new(read_half);
+                let outcome = serve_connection(service, reader, Box::new(stream));
+                if let Ok(mut m) = conns.lock() {
+                    m.remove(&conn_id);
+                }
+                if outcome == ConnOutcome::Shutdown {
+                    shutdown.store(true, Ordering::Release);
+                    // Unblock every other connection's reader; each drains
+                    // its in-flight jobs and closes.
+                    if let Ok(m) = conns.lock() {
+                        for c in m.values() {
+                            let _ = c.shutdown(std::net::Shutdown::Read);
+                        }
+                    }
+                    // Unblock accept() so the loop observes the flag.
+                    let _ = std::net::TcpStream::connect(local);
+                }
+            });
+        }
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Backend;
+
+    #[test]
+    fn parse_accepts_submissions_and_controls() {
+        let sub = parse_envelope(r#"{"id": 1, "request": {"type": "show-config"}}"#, 1).unwrap();
+        let WireIn::Submit { id, job } = sub else { panic!("submit") };
+        assert_eq!(id, Json::Num(1.0));
+        assert_eq!(job.kind(), "show-config");
+
+        let c = parse_envelope(r#"{"id": "c1", "control": "cancel", "job": 1}"#, 2).unwrap();
+        assert_eq!(c, WireIn::Cancel { id: Json::str("c1"), job: Json::Num(1.0) });
+        let st = parse_envelope(r#"{"id": 2, "control": "status", "job": "a"}"#, 3).unwrap();
+        assert_eq!(st, WireIn::Status { id: Json::Num(2.0), job: Json::str("a") });
+        let sd = parse_envelope(r#"{"id": 3, "control": "shutdown"}"#, 4).unwrap();
+        assert_eq!(sd, WireIn::Shutdown { id: Json::Num(3.0) });
+    }
+
+    #[test]
+    fn parse_errors_name_line_and_echo_payload() {
+        let err = parse_envelope("this is not json", 7).unwrap_err();
+        assert!(err.starts_with("line 7: "), "{err}");
+        assert!(err.contains("payload: this is not json"), "{err}");
+
+        // Old bare (un-enveloped) requests get a pointed hint.
+        let err = parse_envelope(r#"{"type": "show-config"}"#, 1).unwrap_err();
+        assert!(err.contains("unknown envelope key 'type'"), "{err}");
+
+        // Long payloads echo truncated (~120 chars + ellipsis).
+        let long = format!(r#"{{"id": 1, "request": {}}}"#, "x".repeat(400));
+        let err = parse_envelope(&long, 9).unwrap_err();
+        let echo_part = err.split("payload: ").nth(1).unwrap();
+        assert!(echo_part.chars().count() <= MAX_ECHO_CHARS + 1, "{err}");
+        assert!(echo_part.ends_with('…'), "{err}");
+
+        for bad in [
+            r#"{"id": null, "request": {"type": "show-config"}}"#,
+            r#"{"request": {"type": "show-config"}}"#,
+            r#"{"id": 1}"#,
+            r#"{"id": 1, "request": {"type": "show-config"}, "control": "cancel"}"#,
+            r#"{"id": 1, "control": "reboot"}"#,
+            r#"{"id": 1, "control": "cancel"}"#,
+            r#"{"id": 1, "control": "shutdown", "job": 2}"#,
+            r#"{"id": 1, "request": {"type": "show-config"}, "job": 2}"#,
+            r#"[1, 2]"#,
+        ] {
+            assert!(parse_envelope(bad, 1).is_err(), "{bad}");
+        }
+    }
+
+    /// Drive a whole connection in memory: two pipelined jobs, a status
+    /// poll, a malformed line, and EOF-drain — every output line id-tagged.
+    #[test]
+    fn connection_pipelines_jobs_and_survives_garbage() {
+        let service = ArbiterService::new(Backend::Rust, 1);
+        let input = concat!(
+            r#"{"id": "a", "request": {"type": "show-config"}}"#,
+            "\n",
+            "garbage line\n",
+            r#"{"id": "b", "request": {"type": "arbitrate", "tr": 6, "seed": 7}}"#,
+            "\n",
+            r#"{"id": "s", "control": "status", "job": "a"}"#,
+            "\n",
+        );
+        let buf: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+        // A Vec<u8> writer behind the shared handle so we can read it back.
+        struct Sink(Arc<Mutex<Vec<u8>>>);
+        impl Write for Sink {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let outcome = serve_connection(
+            &service,
+            std::io::BufReader::new(input.as_bytes()),
+            Box::new(Sink(Arc::clone(&buf))),
+        );
+        assert_eq!(outcome, ConnOutcome::Eof);
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        let response_of = |id: &Json| {
+            lines
+                .iter()
+                .find(|l| l.get("id") == Some(id) && l.get("response").is_some())
+                .unwrap_or_else(|| panic!("no response for {}", id.to_string()))
+                .get("response")
+                .unwrap()
+                .clone()
+        };
+        assert_eq!(response_of(&Json::str("a")).get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(response_of(&Json::str("b")).get("ok").unwrap().as_bool(), Some(true));
+        // The garbage line errored under id null, naming line 2.
+        let parse_err = response_of(&Json::Null);
+        assert_eq!(parse_err.get("ok").unwrap().as_bool(), Some(false));
+        let msg = parse_err.get("error").unwrap().as_str().unwrap();
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("payload: garbage line"), "{msg}");
+        // The status poll answered with a lifecycle phase.
+        let status = response_of(&Json::str("s"));
+        let phase = status.get("data").unwrap().get("status").unwrap().as_str().unwrap();
+        assert!(
+            ["queued", "running", "done"].contains(&phase),
+            "unexpected phase {phase}"
+        );
+    }
+
+    #[test]
+    fn duplicate_ids_are_rejected_without_resubmitting() {
+        let service = ArbiterService::new(Backend::Rust, 1);
+        let input = concat!(
+            r#"{"id": 1, "request": {"type": "show-config"}}"#,
+            "\n",
+            r#"{"id": 1, "request": {"type": "show-config"}}"#,
+            "\n",
+        );
+        let buf: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+        struct Sink(Arc<Mutex<Vec<u8>>>);
+        impl Write for Sink {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        serve_connection(
+            &service,
+            std::io::BufReader::new(input.as_bytes()),
+            Box::new(Sink(Arc::clone(&buf))),
+        );
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let dup: Vec<&str> = text.lines().filter(|l| l.contains("duplicate")).collect();
+        assert_eq!(dup.len(), 1, "{text}");
+        // The rejection rides under id:null — id 1's single response
+        // envelope still belongs to the original submission.
+        assert!(dup[0].starts_with("{\"id\":null,"), "{}", dup[0]);
+        let ok: Vec<&str> = text
+            .lines()
+            .filter(|l| l.contains("\"response\"") && l.contains("\"ok\":true"))
+            .collect();
+        assert_eq!(ok.len(), 1, "first submission still ran:\n{text}");
+        let for_id_1: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("{\"id\":1,") && l.contains("\"response\""))
+            .collect();
+        assert_eq!(for_id_1.len(), 1, "exactly one response per id:\n{text}");
+    }
+}

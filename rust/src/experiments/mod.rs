@@ -59,7 +59,7 @@ pub fn point_seed(opts: &RunOptions, exp_id: &str, point: usize) -> u64 {
 pub fn run_spec(spec: &SweepSpec, opts: &RunOptions, eval: &dyn IdealEvaluator) -> Vec<SweepOutput> {
     if opts.backend == Backend::Rust {
         let exact = RunOptions { ci: None, ..opts.clone() };
-        if let Ok(run) = scheduler::run_sweep(spec, &exact, &Backend::Rust, None, &mut |_| {}) {
+        if let Ok(run) = scheduler::run_sweep(spec, &exact, &Backend::Rust, None, &crate::montecarlo::CancelToken::new(), &mut |_| {}) {
             return run.outputs;
         }
     }

@@ -15,16 +15,17 @@
 //! wdm-arbiter arbitrate [--scheme seq|rs|vt-rs] [--tr NM] [--seed S]
 //!                       [--config FILE.toml] [--permuted]
 //! wdm-arbiter show-config [--cases] [--config FILE.toml]
-//! wdm-arbiter serve [--backend rust|xla] [--threads T]
+//! wdm-arbiter serve [--listen ADDR] [--backend rust|xla] [--threads T]
+//!                   [--jobs N]
 //! wdm-arbiter batch <jobs.json|jobs.toml> [--backend rust|xla] [--threads T]
 //! ```
 
-use std::io::{BufRead, Write};
+use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use wdm_arbiter::api::cli::{job_from_args, options_from_args};
-use wdm_arbiter::api::{ArbiterService, JobEvent, JobRequest, JobResponse};
+use wdm_arbiter::api::{wire, ArbiterService, FnSink, JobEvent, JobRequest, JobResponse};
 use wdm_arbiter::coordinator::Backend;
 use wdm_arbiter::experiments::all_experiments;
 use wdm_arbiter::util::cli::Args;
@@ -72,10 +73,17 @@ USAGE:
   wdm-arbiter show-config [--cases] [--config FILE.toml] [--permuted]
       Print the resolved system configuration (Table I) / test cases
       (Table II, rendered against the loaded config).
-  wdm-arbiter serve [--backend rust|xla] [--threads T]
-      Long-lived job server: one JobRequest JSON per stdin line, progress
-      events + one JobResponse JSON per line on stdout. Populations are
-      memoized across requests (responses report cache hits/misses).
+  wdm-arbiter serve [--listen ADDR] [--backend rust|xla] [--threads T]
+                  [--jobs N]
+      Long-lived job server speaking the envelope protocol: one
+      {\"id\": ..., \"request\": {...}} JSON envelope per line in; interleaved
+      {\"id\", \"event\"} / {\"id\", \"response\"} lines out. Any number of jobs
+      per client run concurrently (--jobs caps the shared executor);
+      cancel/status/shutdown control envelopes address jobs by id. Without
+      --listen the protocol runs pipelined on stdin/stdout; with
+      --listen HOST:PORT any number of TCP clients share one service,
+      scheduler and population cache (responses report cache hits/misses).
+      See README \"Wire protocol & sessions\".
   wdm-arbiter batch <jobs.json|jobs.toml> [--backend rust|xla] [--threads T]
       Run a job file (single job, JSON array, {\"jobs\": [...]}, or TOML
       [jobs.N] sections) against one shared service, keep going past
@@ -156,13 +164,13 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     // `run all`: stream each experiment's report as it finishes, write the
     // aggregate manifest, and report the failures at the end (the batch
     // keeps going past them).
-    let mut sink = |ev: JobEvent| {
+    let sink = FnSink(|ev: JobEvent| {
         if let JobEvent::ExperimentFinished { summary, ok: true, .. } = ev {
             print!("{summary}");
             let _ = std::io::stdout().flush();
         }
-    };
-    let resp = service.submit_with(&req, &mut sink);
+    });
+    let resp = service.submit_with(&req, &sink);
     for child in resp.jobs.iter().filter(|c| !c.ok) {
         eprintln!(
             "error: {} failed: {}",
@@ -227,33 +235,20 @@ fn write_manifest(out_dir: &Path, batch: &JobResponse) -> anyhow::Result<PathBuf
     Ok(path)
 }
 
-/// JSON-lines server: one `JobRequest` per stdin line; progress events and
-/// exactly one `JobResponse` per job on stdout, flushed per line. The
-/// service (and its population cache) lives for the whole session.
+/// Envelope-framed job server ([`wire`]): pipelined stdin/stdout by
+/// default, multi-client TCP with `--listen HOST:PORT`. One service — and
+/// its population cache, scheduler and job executor — lives for the whole
+/// session, shared by every in-flight job (and every TCP client).
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    let service = service_from(args)?;
+    let jobs = args.get_usize("jobs", wdm_arbiter::api::service::DEFAULT_JOB_WORKERS)
+        .map_err(anyhow::Error::msg)?;
+    let service = service_from(args)?.with_job_workers(jobs);
+    if let Some(addr) = args.get("listen") {
+        return wire::serve_listen(&service, addr).map_err(|e| anyhow::anyhow!(e));
+    }
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
-    for line in stdin.lock().lines() {
-        let line = line?;
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        let mut out = stdout.lock();
-        let resp = match JobRequest::from_json_str(line) {
-            Ok(req) => {
-                let mut sink = |ev: JobEvent| {
-                    let _ = writeln!(out, "{}", ev.to_json().to_string());
-                    let _ = out.flush();
-                };
-                service.submit_with(&req, &mut sink)
-            }
-            Err(e) => JobResponse::failure("request", "parse", e),
-        };
-        writeln!(out, "{}", resp.to_json_string())?;
-        out.flush()?;
-    }
+    wire::serve_connection(&service, stdin.lock(), Box::new(stdout));
     Ok(())
 }
 

@@ -12,7 +12,102 @@
 //! workers idle behind one slow chunk. Results stay deterministic because
 //! callers scatter by index, not by completion order.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Cooperative cancellation: a shared flag set once by [`Self::cancel`] and
+/// polled at coarse boundaries (between sweep columns, between batch
+/// children). Clones share the flag, so a token handed to a job can be
+/// fired from any thread while the job runs.
+///
+/// Cancellation is *cooperative*: work in flight at a checkpoint (one
+/// column's population + evaluation) always completes, so shared state like
+/// the [`crate::montecarlo::PopulationCache`] only ever observes whole,
+/// consistent builds.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation (idempotent; visible to all clones).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    #[inline]
+    pub fn is_canceled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// A small long-lived worker pool for *job-granularity* tasks: the dynamic
+/// counterpart of [`WorkQueue`] (which hands out a fixed index range).
+/// Workers pull boxed closures from a shared channel, so tasks can be
+/// submitted at any time from any thread; dropping the pool closes the
+/// channel and joins the workers (queued tasks still run).
+///
+/// This backs [`crate::api::ArbiterService::submit_async`]: each task is a
+/// whole job, which parallelizes internally via [`WorkQueue`] column
+/// workers — two coarse levels, same substrate.
+#[derive(Debug)]
+pub struct TaskPool {
+    tx: Mutex<Option<mpsc::Sender<Task>>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl TaskPool {
+    pub fn new(workers: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || loop {
+                    // Take the lock only to receive; release it while the
+                    // task runs so other workers keep pulling.
+                    let task = match rx.lock() {
+                        Ok(guard) => guard.recv(),
+                        Err(_) => break,
+                    };
+                    match task {
+                        Ok(t) => t(),
+                        Err(_) => break, // channel closed: pool dropped
+                    }
+                })
+            })
+            .collect();
+        Self { tx: Mutex::new(Some(tx)), workers: Mutex::new(handles) }
+    }
+
+    /// Enqueue a task; some worker runs it as soon as one is free.
+    pub fn spawn(&self, task: Task) {
+        let guard = self.tx.lock().expect("task pool poisoned");
+        guard
+            .as_ref()
+            .expect("task pool already shut down")
+            .send(task)
+            .expect("task pool workers exited");
+    }
+}
+
+impl Drop for TaskPool {
+    fn drop(&mut self) {
+        // Close the channel so workers drain the backlog and exit.
+        if let Ok(mut tx) = self.tx.lock() {
+            tx.take();
+        }
+        if let Ok(mut workers) = self.workers.lock() {
+            for h in workers.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
 
 /// A lock-free dynamic work queue over `0..n`: each call to [`Self::pop`]
 /// hands out the next unclaimed index. Workers pull as they finish, so a
@@ -194,5 +289,59 @@ mod tests {
         let q = WorkQueue::new(0);
         assert!(q.is_empty());
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn cancel_token_is_shared_across_clones() {
+        let t = CancelToken::new();
+        let clone = t.clone();
+        assert!(!t.is_canceled());
+        std::thread::spawn(move || clone.cancel()).join().unwrap();
+        assert!(t.is_canceled());
+        t.cancel(); // idempotent
+        assert!(t.is_canceled());
+    }
+
+    #[test]
+    fn task_pool_runs_every_task_and_drains_on_drop() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = TaskPool::new(3);
+            for _ in 0..50 {
+                let c = Arc::clone(&counter);
+                pool.spawn(Box::new(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }));
+            }
+        } // drop closes the channel and joins: the backlog still runs
+        assert_eq!(counter.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn task_pool_runs_tasks_concurrently() {
+        let pool = TaskPool::new(2);
+        let (tx, rx) = mpsc::channel::<usize>();
+        let gate = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        // Two tasks that can only finish once BOTH have started: proof of
+        // two live workers (a 1-worker pool would deadlock; timeout guards).
+        for i in 0..2 {
+            let tx = tx.clone();
+            let gate = Arc::clone(&gate);
+            pool.spawn(Box::new(move || {
+                let (lock, cv) = &*gate;
+                let mut started = lock.lock().unwrap();
+                *started += 1;
+                cv.notify_all();
+                let _g = cv
+                    .wait_timeout_while(started, std::time::Duration::from_secs(10), |s| *s < 2)
+                    .unwrap();
+                tx.send(i).unwrap();
+            }));
+        }
+        let mut done: Vec<usize> = (0..2)
+            .map(|_| rx.recv_timeout(std::time::Duration::from_secs(10)).expect("concurrent"))
+            .collect();
+        done.sort_unstable();
+        assert_eq!(done, vec![0, 1]);
     }
 }

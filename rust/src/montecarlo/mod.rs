@@ -30,7 +30,8 @@ pub use engine::{
     config_fingerprint, CacheStats, Population, PopulationCache, RustOblivious, SchemeEvaluator,
     TrialEngine,
 };
-pub use scheduler::{ColumnProgress, EvalFactory, GridStats, SweepRun};
+pub use executor::{CancelToken, TaskPool};
+pub use scheduler::{ColumnProgress, EvalFactory, GridStats, SWEEP_CANCELED, SweepRun};
 
 use crate::arbiter::{ideal, Policy};
 use crate::config::SystemConfig;

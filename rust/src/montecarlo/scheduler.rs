@@ -38,6 +38,7 @@ use crate::coordinator::sweep::{column_seed, ColumnEval, Measure, MeasureColumn,
 use crate::coordinator::{AdaptiveCfg, RunOptions};
 use crate::metrics::TrialTally;
 use crate::model::system::SystemSampler;
+use crate::montecarlo::executor::CancelToken;
 use crate::montecarlo::{executor, IdealEvaluator, PopulationCache, TrialEngine};
 use crate::oblivious::{run_scheme_with, Workspace};
 use crate::util::stats::wilson_interval;
@@ -105,15 +106,26 @@ pub struct SweepRun {
 /// One finished column in a worker's backlog: index, cells, adaptive stats.
 type ColumnResult = (usize, ColumnEval, Option<Vec<Option<ColumnStats>>>);
 
+/// The sentinel error [`run_sweep`] returns when its [`CancelToken`] fired:
+/// callers match on it to report `canceled` instead of a failure.
+pub const SWEEP_CANCELED: &str = "canceled";
+
 /// Run a sweep with columns in parallel. See [`run_sweep_ordered`].
+///
+/// `cancel` is polled between columns on every worker: a fired token stops
+/// the sweep within one column's granularity and returns
+/// `Err(`[`SWEEP_CANCELED`]`)`. Columns finished before the cancel landed
+/// still populate the shared cache (whole builds only — cache consistency
+/// is unconditional).
 pub fn run_sweep(
     spec: &SweepSpec,
     opts: &RunOptions,
     factory: &dyn EvalFactory,
     cache: Option<&PopulationCache>,
+    cancel: &CancelToken,
     progress: &mut dyn FnMut(ColumnProgress),
 ) -> Result<SweepRun, String> {
-    run_sweep_ordered(spec, opts, factory, cache, ColumnOrder::Forward, progress)
+    run_sweep_ordered(spec, opts, factory, cache, cancel, ColumnOrder::Forward, progress)
 }
 
 /// Run a sweep with columns in parallel, pulling queue slots in `order`.
@@ -126,11 +138,13 @@ pub fn run_sweep(
 /// With `opts.ci` set, columns run the adaptive allocator instead of full
 /// populations; the population cache is bypassed (a truncated population
 /// must not masquerade as a full one).
+#[allow(clippy::too_many_arguments)]
 pub fn run_sweep_ordered(
     spec: &SweepSpec,
     opts: &RunOptions,
     factory: &dyn EvalFactory,
     cache: Option<&PopulationCache>,
+    cancel: &CancelToken,
     order: ColumnOrder,
     progress: &mut dyn FnMut(ColumnProgress),
 ) -> Result<SweepRun, String> {
@@ -182,6 +196,11 @@ pub fn run_sweep_ordered(
                 }
                 let mut done: Vec<ColumnResult> = Vec::new();
                 while let Some(slot) = queue.pop() {
+                    // Cancel point: between columns only, so the column in
+                    // flight (and its cache entry) always lands whole.
+                    if cancel.is_canceled() {
+                        break;
+                    }
                     let ix = match order {
                         ColumnOrder::Forward => slot,
                         ColumnOrder::Reverse => n_cols - 1 - slot,
@@ -240,6 +259,9 @@ pub fn run_sweep_ordered(
         }
     });
 
+    if cancel.is_canceled() {
+        return Err(SWEEP_CANCELED.to_string());
+    }
     Ok(SweepRun { outputs: outs, backend, stats })
 }
 
@@ -456,7 +478,7 @@ mod tests {
         };
         for threads in [1, 3, 8] {
             let mut seen = Vec::new();
-            let run = run_sweep(&spec, &opts(threads), &Backend::Rust, None, &mut |p| {
+            let run = run_sweep(&spec, &opts(threads), &Backend::Rust, None, &CancelToken::new(), &mut |p| {
                 seen.push(p.ix)
             })
             .unwrap();
@@ -471,24 +493,42 @@ mod tests {
     #[test]
     fn queue_order_never_changes_results() {
         let spec = small_spec();
-        let fwd =
-            run_sweep_ordered(&spec, &opts(2), &Backend::Rust, None, ColumnOrder::Forward, &mut |_| {})
-                .unwrap();
-        let rev =
-            run_sweep_ordered(&spec, &opts(2), &Backend::Rust, None, ColumnOrder::Reverse, &mut |_| {})
-                .unwrap();
+        let token = CancelToken::new();
+        let fwd = run_sweep_ordered(
+            &spec,
+            &opts(2),
+            &Backend::Rust,
+            None,
+            &token,
+            ColumnOrder::Forward,
+            &mut |_| {},
+        )
+        .unwrap();
+        let rev = run_sweep_ordered(
+            &spec,
+            &opts(2),
+            &Backend::Rust,
+            None,
+            &token,
+            ColumnOrder::Reverse,
+            &mut |_| {},
+        )
+        .unwrap();
         assert_eq!(fwd.outputs, rev.outputs);
     }
 
     #[test]
     fn max_inflight_bounds_do_not_change_results() {
         let spec = small_spec();
-        let unbounded = run_sweep(&spec, &opts(4), &Backend::Rust, None, &mut |_| {}).unwrap();
+        let unbounded =
+            run_sweep(&spec, &opts(4), &Backend::Rust, None, &CancelToken::new(), &mut |_| {})
+                .unwrap();
         let bounded = run_sweep(
             &spec,
             &RunOptions { max_inflight: 1, ..opts(4) },
             &Backend::Rust,
             None,
+            &CancelToken::new(),
             &mut |_| {},
         )
         .unwrap();
@@ -499,9 +539,12 @@ mod tests {
     fn scheduled_sweep_coalesces_through_shared_cache() {
         let spec = small_spec();
         let cache = PopulationCache::new();
-        let first = run_sweep(&spec, &opts(4), &Backend::Rust, Some(&cache), &mut |_| {}).unwrap();
+        let token = CancelToken::new();
+        let first =
+            run_sweep(&spec, &opts(4), &Backend::Rust, Some(&cache), &token, &mut |_| {}).unwrap();
         assert_eq!(cache.stats().misses, 4, "one build per column");
-        let second = run_sweep(&spec, &opts(4), &Backend::Rust, Some(&cache), &mut |_| {}).unwrap();
+        let second =
+            run_sweep(&spec, &opts(4), &Backend::Rust, Some(&cache), &token, &mut |_| {}).unwrap();
         assert_eq!(cache.stats().misses, 4, "second run fully cached");
         assert_eq!(cache.stats().hits, 4);
         assert_eq!(first.outputs, second.outputs);
@@ -520,7 +563,7 @@ mod tests {
             ci: Some(AdaptiveCfg { width: 0.1, min_trials: 25, max_trials: 100 }),
             ..opts(1)
         };
-        assert!(run_sweep(&spec, &bad, &Backend::Rust, None, &mut |_| {}).is_err());
+        assert!(run_sweep(&spec, &bad, &Backend::Rust, None, &CancelToken::new(), &mut |_| {}).is_err());
         let spec = small_spec();
         for ad in [
             AdaptiveCfg { width: 0.0, min_trials: 1, max_trials: 10 },
@@ -528,7 +571,8 @@ mod tests {
             AdaptiveCfg { width: 0.1, min_trials: 20, max_trials: 10 },
         ] {
             let o = RunOptions { ci: Some(ad), ..opts(1) };
-            assert!(run_sweep(&spec, &o, &Backend::Rust, None, &mut |_| {}).is_err(), "{ad:?}");
+            let r = run_sweep(&spec, &o, &Backend::Rust, None, &CancelToken::new(), &mut |_| {});
+            assert!(r.is_err(), "{ad:?}");
         }
     }
 
@@ -542,7 +586,7 @@ mod tests {
             ci: Some(AdaptiveCfg { width: 0.9, min_trials: 24, max_trials: 144 }),
             ..base.clone()
         };
-        let run = run_sweep(&spec, &loose, &Backend::Rust, None, &mut |_| {}).unwrap();
+        let run = run_sweep(&spec, &loose, &Backend::Rust, None, &CancelToken::new(), &mut |_| {}).unwrap();
         let stats = run.stats.expect("adaptive runs carry stats");
         for grid in stats.iter().flatten() {
             for (&n, (&lo, &hi)) in
@@ -558,7 +602,7 @@ mod tests {
             ci: Some(AdaptiveCfg { width: 1e-6, min_trials: 24, max_trials: usize::MAX }),
             ..base.clone()
         };
-        let run = run_sweep(&spec, &tight, &Backend::Rust, None, &mut |_| {}).unwrap();
+        let run = run_sweep(&spec, &tight, &Backend::Rust, None, &CancelToken::new(), &mut |_| {}).unwrap();
         for grid in run.stats.expect("stats").iter().flatten() {
             for &n in &grid.n_trials {
                 assert_eq!(n, 144, "unreachable target runs the population out");
@@ -572,13 +616,82 @@ mod tests {
             ci: Some(AdaptiveCfg { width: 1e-6, min_trials: 12, max_trials: 30 }),
             ..base
         };
-        let run = run_sweep(&spec, &capped, &Backend::Rust, None, &mut |_| {}).unwrap();
+        let run = run_sweep(&spec, &capped, &Backend::Rust, None, &CancelToken::new(), &mut |_| {}).unwrap();
         for grid in run.stats.expect("stats").iter().flatten() {
             for &n in &grid.n_trials {
                 assert!(n <= 30, "n_trials {n} must respect max_trials=30");
                 assert_eq!(n, 24, "whole-laser rounding goes down");
             }
         }
+    }
+
+    /// A token fired before the sweep starts stops it at the first cancel
+    /// point (no columns run); one fired mid-run (from the progress
+    /// callback) reports canceled while completed columns stay whole in the
+    /// shared cache, so a re-run serves them as hits.
+    #[test]
+    fn cancel_stops_between_columns_and_keeps_cache_whole() {
+        let spec = small_spec();
+        let pre_fired = CancelToken::new();
+        pre_fired.cancel();
+        let mut seen = 0usize;
+        let err = run_sweep(&spec, &opts(2), &Backend::Rust, None, &pre_fired, &mut |_| seen += 1)
+            .unwrap_err();
+        assert_eq!(err, SWEEP_CANCELED);
+        assert_eq!(seen, 0, "pre-fired token runs no columns");
+
+        // Mid-run cancel: the evaluator fires the token while the FIRST
+        // column is being built. The single worker finishes that column
+        // whole, then stops at the next between-columns check — exactly one
+        // cache entry, one-column granularity.
+        struct CancelingEval {
+            inner: RustIdeal,
+            token: CancelToken,
+        }
+        impl IdealEvaluator for CancelingEval {
+            fn min_trs(
+                &self,
+                cfg: &SystemConfig,
+                sampler: &SystemSampler,
+                policy: Policy,
+            ) -> Vec<f64> {
+                self.token.cancel();
+                self.inner.min_trs(cfg, sampler, policy)
+            }
+            fn name(&self) -> &'static str {
+                "rust-f64"
+            }
+        }
+        struct CancelingFactory(CancelToken);
+        impl EvalFactory for CancelingFactory {
+            fn make(&self, threads: usize) -> Box<dyn IdealEvaluator> {
+                Box::new(CancelingEval { inner: RustIdeal { threads }, token: self.0.clone() })
+            }
+        }
+        let cache = PopulationCache::new();
+        let token = CancelToken::new();
+        let o = RunOptions { max_inflight: 1, ..opts(1) };
+        let err = run_sweep(
+            &spec,
+            &o,
+            &CancelingFactory(token.clone()),
+            Some(&cache),
+            &token,
+            &mut |_| {},
+        )
+        .unwrap_err();
+        assert_eq!(err, SWEEP_CANCELED);
+        let partial = cache.stats();
+        assert_eq!(partial.misses, 1, "cancel stopped after exactly one column");
+
+        // The interrupted sweep left only consistent entries: a full re-run
+        // through the same cache reuses them and matches a cache-free run.
+        let full = run_sweep(&spec, &o, &Backend::Rust, Some(&cache), &CancelToken::new(), &mut |_| {})
+            .unwrap();
+        assert_eq!(cache.stats().hits, partial.misses, "prior columns served as hits");
+        let fresh = run_sweep(&spec, &o, &Backend::Rust, None, &CancelToken::new(), &mut |_| {})
+            .unwrap();
+        assert_eq!(full.outputs, fresh.outputs);
     }
 
     /// Adaptive estimates are consistent truncations of the full run: every
@@ -592,9 +705,16 @@ mod tests {
             ci: Some(AdaptiveCfg { width: 0.25, min_trials: 16, max_trials: 64 }),
             ..base.clone()
         };
-        let a = run_sweep(&spec, &ad, &Backend::Rust, None, &mut |_| {}).unwrap();
-        let b = run_sweep(&spec, &RunOptions { threads: 7, ..ad.clone() }, &Backend::Rust, None, &mut |_| {})
-            .unwrap();
+        let a = run_sweep(&spec, &ad, &Backend::Rust, None, &CancelToken::new(), &mut |_| {}).unwrap();
+        let b = run_sweep(
+            &spec,
+            &RunOptions { threads: 7, ..ad.clone() },
+            &Backend::Rust,
+            None,
+            &CancelToken::new(),
+            &mut |_| {},
+        )
+        .unwrap();
         assert_eq!(a.outputs, b.outputs);
         assert_eq!(a.stats.as_ref().unwrap(), b.stats.as_ref().unwrap());
 

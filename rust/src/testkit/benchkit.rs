@@ -4,9 +4,17 @@
 //! Calibrates the iteration count to a target wall time, reports the mean,
 //! median and p10/p90 of per-iteration latency across measurement batches,
 //! and guards against dead-code elimination with a `black_box` shim.
+//!
+//! [`write_json_report`] additionally emits the machine-readable
+//! `BENCH_<name>.json` form (per-case median ns, trials, worker threads,
+//! `git describe`) so successive PRs can diff performance numbers instead
+//! of eyeballing console tables.
 
 use std::hint::black_box as std_black_box;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// Re-export of `std::hint::black_box` (benches call through this name so
 /// call-sites survive future refactors).
@@ -109,6 +117,62 @@ pub fn bench<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchResult 
     }
 }
 
+/// `git describe --always --dirty` of the working tree, if a git binary
+/// and repository are reachable (benches still report without one).
+pub fn git_describe() -> Option<String> {
+    let out = std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty", "--tags"])
+        .output()
+        .ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let s = String::from_utf8_lossy(&out.stdout).trim().to_string();
+    if s.is_empty() {
+        None
+    } else {
+        Some(s)
+    }
+}
+
+/// One bench result as a JSON case (`trials` = total timed iterations).
+fn case_json(r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(r.name.clone())),
+        ("median_ns", Json::num(r.median_ns)),
+        ("mean_ns", Json::num(r.mean_ns)),
+        ("p10_ns", Json::num(r.p10_ns)),
+        ("p90_ns", Json::num(r.p90_ns)),
+        ("trials", Json::num(r.iters as f64)),
+    ])
+}
+
+/// Write the machine-readable `BENCH_<bench>.json` report: per-case median
+/// ns (plus mean/p10/p90), trials, the machine's worker-thread count, and
+/// `git describe` when available. The schema is versioned by `kind` so
+/// future PRs can extend it without breaking diff tooling.
+pub fn write_json_report(
+    path: &Path,
+    bench: &str,
+    results: &[BenchResult],
+) -> std::io::Result<()> {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let report = Json::obj(vec![
+        ("kind", Json::str("bench-report")),
+        ("bench", Json::str(bench)),
+        ("threads", Json::num(threads as f64)),
+        (
+            "git",
+            match git_describe() {
+                Some(g) => Json::str(g),
+                None => Json::Null,
+            },
+        ),
+        ("cases", Json::Arr(results.iter().map(case_json).collect())),
+    ]);
+    std::fs::write(path, report.to_pretty())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,5 +193,30 @@ mod tests {
         assert!(fmt_ns(500.0).ends_with("ns"));
         assert!(fmt_ns(5_000.0).ends_with("µs"));
         assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+    }
+
+    #[test]
+    fn json_report_is_parseable_and_complete() {
+        let results = vec![BenchResult {
+            name: "distance_matrix_n8".to_string(),
+            iters: 4096,
+            mean_ns: 120.5,
+            median_ns: 118.0,
+            p10_ns: 100.0,
+            p90_ns: 150.0,
+        }];
+        let path = std::env::temp_dir()
+            .join(format!("BENCH_test-{}.json", std::process::id()));
+        write_json_report(&path, "hotpath", &results).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("bench-report"));
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("hotpath"));
+        assert!(j.get("threads").unwrap().as_usize().unwrap() >= 1);
+        assert!(j.get("git").is_some(), "git key present even when null");
+        let case = &j.get("cases").unwrap().as_arr().unwrap()[0];
+        assert_eq!(case.get("name").unwrap().as_str(), Some("distance_matrix_n8"));
+        assert_eq!(case.get("median_ns").unwrap().as_f64(), Some(118.0));
+        assert_eq!(case.get("trials").unwrap().as_usize(), Some(4096));
+        std::fs::remove_file(path).ok();
     }
 }

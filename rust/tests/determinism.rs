@@ -16,7 +16,7 @@ use wdm_arbiter::config::SystemConfig;
 use wdm_arbiter::coordinator::sweep::{ConfigAxis, Measure, SweepSpec};
 use wdm_arbiter::coordinator::{AdaptiveCfg, Backend, RunOptions};
 use wdm_arbiter::montecarlo::scheduler::{run_sweep, run_sweep_ordered, ColumnOrder};
-use wdm_arbiter::montecarlo::{RustIdeal, TrialEngine};
+use wdm_arbiter::montecarlo::{CancelToken, RustIdeal, TrialEngine};
 use wdm_arbiter::oblivious::Scheme;
 
 /// Thread counts to exercise: the ISSUE's {1, 2, 8} plus the CI matrix
@@ -63,7 +63,9 @@ fn sweep_panels_identical_across_thread_counts() {
         spec.run(&engine, &opts(1))
     };
     for threads in thread_counts() {
-        let run = run_sweep(&spec, &opts(threads), &Backend::Rust, None, &mut |_| {}).unwrap();
+        let run =
+            run_sweep(&spec, &opts(threads), &Backend::Rust, None, &CancelToken::new(), &mut |_| {})
+                .unwrap();
         assert_eq!(
             run.outputs, reference,
             "threads={threads} must be bit-identical to the sequential run"
@@ -82,6 +84,7 @@ fn sweep_panels_identical_across_column_orderings() {
             &opts(threads),
             &Backend::Rust,
             None,
+            &CancelToken::new(),
             ColumnOrder::Forward,
             &mut |_| {},
         )
@@ -91,6 +94,7 @@ fn sweep_panels_identical_across_column_orderings() {
             &opts(threads),
             &Backend::Rust,
             None,
+            &CancelToken::new(),
             ColumnOrder::Reverse,
             &mut |_| {},
         )
@@ -103,13 +107,16 @@ fn sweep_panels_identical_across_column_orderings() {
 #[test]
 fn sweep_panels_identical_under_inflight_bounds() {
     let spec = spec();
-    let unbounded = run_sweep(&spec, &opts(8), &Backend::Rust, None, &mut |_| {}).unwrap();
+    let unbounded =
+        run_sweep(&spec, &opts(8), &Backend::Rust, None, &CancelToken::new(), &mut |_| {})
+            .unwrap();
     for inflight in [1, 2, 3] {
         let bounded = run_sweep(
             &spec,
             &RunOptions { max_inflight: inflight, ..opts(8) },
             &Backend::Rust,
             None,
+            &CancelToken::new(),
             &mut |_| {},
         )
         .unwrap();
@@ -131,13 +138,14 @@ fn adaptive_sweep_identical_across_thread_counts() {
     .measures([Measure::Afp(Policy::LtC), Measure::Cafp(Scheme::RsSsm)]);
     let ci = Some(AdaptiveCfg { width: 0.3, min_trials: 12, max_trials: 36 });
     let base = RunOptions { n_lasers: 6, n_rows: 6, ci, ..RunOptions::fast() };
-    let reference = run_sweep(&spec, &base, &Backend::Rust, None, &mut |_| {}).unwrap();
+    let reference = run_sweep(&spec, &base, &Backend::Rust, None, &CancelToken::new(), &mut |_| {}).unwrap();
     for threads in thread_counts() {
         let run = run_sweep(
             &spec,
             &RunOptions { threads, ..base.clone() },
             &Backend::Rust,
             None,
+            &CancelToken::new(),
             &mut |_| {},
         )
         .unwrap();

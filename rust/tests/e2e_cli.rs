@@ -230,8 +230,36 @@ fn unknown_experiment_fails_cleanly() {
     assert!(err.contains("unknown experiment"));
 }
 
-/// Acceptance: a serve session where the second, overlapping sweep is
-/// served from the population cache (no resampling) and says so.
+/// Read envelope lines until the response for `id` arrives; returns it
+/// (panicking on EOF). Event lines for any id are collected into `events`.
+fn read_response_for(
+    reader: &mut impl std::io::BufRead,
+    id: &str,
+    events: &mut Vec<String>,
+) -> String {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("read serve output");
+        assert!(n > 0, "serve closed before responding to id {id}");
+        let l = line.trim();
+        if l.is_empty() {
+            continue;
+        }
+        if l.contains("\"event\"") {
+            events.push(l.to_string());
+            continue;
+        }
+        if l.starts_with(&format!("{{\"id\":{id},")) || l.starts_with(&format!("{{\"id\":\"{id}\",")) {
+            return l.to_string();
+        }
+    }
+}
+
+/// Acceptance: a pipelined envelope session where the second, overlapping
+/// sweep is served from the population cache (no resampling) and says so.
+/// Request/response turns are sequenced by the client so the cache-delta
+/// assertions stay deterministic.
 #[test]
 fn serve_session_reports_cache_hits_on_overlapping_sweeps() {
     use std::io::Write as _;
@@ -245,37 +273,41 @@ fn serve_session_reports_cache_hits_on_overlapping_sweeps() {
         .spawn()
         .expect("spawn serve");
     let mut stdin = child.stdin.take().unwrap();
+    let mut reader = std::io::BufReader::new(child.stdout.take().unwrap());
     let out = dir.display();
+    let mut events = Vec::new();
     // Same axis/values/population shape/seed; different measures. The
     // second job must reuse both column populations.
     writeln!(
         stdin,
-        r#"{{"type":"sweep","axis":"ring-local","values":[1.12,2.24],"tr":[2,6],"measures":["afp:ltc"],"options":{{"fast":true,"lasers":3,"rows":3,"out":"{out}"}}}}"#
+        r#"{{"id":1,"request":{{"type":"sweep","axis":"ring-local","values":[1.12,2.24],"tr":[2,6],"measures":["afp:ltc"],"options":{{"fast":true,"lasers":3,"rows":3,"out":"{out}"}}}}}}"#
     )
     .unwrap();
+    let first = read_response_for(&mut reader, "1", &mut events);
     writeln!(
         stdin,
-        r#"{{"type":"sweep","axis":"ring-local","values":[1.12,2.24],"tr":[2,6],"measures":["cafp:vt-rs-ssm"],"options":{{"fast":true,"lasers":3,"rows":3,"out":"{out}"}}}}"#
+        r#"{{"id":2,"request":{{"type":"sweep","axis":"ring-local","values":[1.12,2.24],"tr":[2,6],"measures":["cafp:vt-rs-ssm"],"options":{{"fast":true,"lasers":3,"rows":3,"out":"{out}"}}}}}}"#
     )
     .unwrap();
+    let second = read_response_for(&mut reader, "2", &mut events);
     drop(stdin); // EOF ends the session
     let output = child.wait_with_output().expect("serve exits");
     assert!(output.status.success(), "{}", String::from_utf8_lossy(&output.stderr));
-    let text = String::from_utf8_lossy(&output.stdout);
-    let responses: Vec<&str> =
-        text.lines().filter(|l| l.contains("\"type\":\"response\"")).collect();
-    assert_eq!(responses.len(), 2, "one response line per job:\n{text}");
-    assert!(responses[0].contains("\"ok\":true"), "{}", responses[0]);
-    assert!(responses[0].contains("\"hits\":0"), "{}", responses[0]);
-    assert!(responses[0].contains("\"misses\":2"), "{}", responses[0]);
-    assert!(responses[1].contains("\"ok\":true"), "{}", responses[1]);
-    assert!(responses[1].contains("\"hits\":2"), "{}", responses[1]);
-    assert!(responses[1].contains("\"misses\":0"), "{}", responses[1]);
-    // Progress events are JSON lines too.
-    assert!(text.lines().any(|l| l.contains("\"type\":\"event\"")), "{text}");
+    assert!(first.contains("\"ok\":true"), "{first}");
+    assert!(first.contains("\"hits\":0"), "{first}");
+    assert!(first.contains("\"misses\":2"), "{first}");
+    assert!(second.contains("\"ok\":true"), "{second}");
+    assert!(second.contains("\"hits\":2"), "{second}");
+    assert!(second.contains("\"misses\":0"), "{second}");
+    // Progress events arrived as id-tagged envelope lines.
+    assert!(!events.is_empty());
+    assert!(events.iter().all(|e| e.starts_with("{\"id\":")), "{events:?}");
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Malformed lines answer with the line number + a truncated payload echo
+/// and never kill the connection; old bare (un-enveloped) requests are
+/// named as such.
 #[test]
 fn serve_rejects_bad_request_lines_without_dying() {
     use std::io::Write as _;
@@ -289,16 +321,121 @@ fn serve_rejects_bad_request_lines_without_dying() {
         .expect("spawn serve");
     let mut stdin = child.stdin.take().unwrap();
     writeln!(stdin, "this is not json").unwrap();
-    writeln!(stdin, r#"{{"type":"show-config"}}"#).unwrap();
+    writeln!(stdin, r#"{{"type":"show-config"}}"#).unwrap(); // bare, un-enveloped
+    writeln!(stdin, r#"{{"id":7,"request":{{"type":"show-config"}}}}"#).unwrap();
     drop(stdin);
     let output = child.wait_with_output().expect("serve exits");
     assert!(output.status.success());
     let text = String::from_utf8_lossy(&output.stdout);
-    let responses: Vec<&str> =
-        text.lines().filter(|l| l.contains("\"type\":\"response\"")).collect();
-    assert_eq!(responses.len(), 2, "{text}");
-    assert!(responses[0].contains("\"ok\":false"), "{}", responses[0]);
-    assert!(responses[1].contains("\"ok\":true"), "{}", responses[1]);
+    let responses: Vec<&str> = text.lines().filter(|l| l.contains("\"response\"")).collect();
+    assert_eq!(responses.len(), 3, "{text}");
+    let parse_errors: Vec<&str> =
+        responses.iter().copied().filter(|l| l.starts_with("{\"id\":null,")).collect();
+    assert_eq!(parse_errors.len(), 2, "{text}");
+    assert!(parse_errors[0].contains("line 1"), "{}", parse_errors[0]);
+    assert!(parse_errors[0].contains("payload: this is not json"), "{}", parse_errors[0]);
+    assert!(parse_errors[1].contains("line 2"), "{}", parse_errors[1]);
+    assert!(parse_errors[1].contains("unknown envelope key"), "{}", parse_errors[1]);
+    let ok: Vec<&str> = responses
+        .iter()
+        .copied()
+        .filter(|l| l.starts_with("{\"id\":7,") && l.contains("\"ok\":true"))
+        .collect();
+    assert_eq!(ok.len(), 1, "the valid envelope still ran:\n{text}");
+}
+
+/// Acceptance: two clients on one `serve --listen` instance run
+/// overlapping sweeps; each connection's envelopes are id-tagged and
+/// complete, cancel works across the wire, and a `shutdown` control
+/// drains the server to a clean exit.
+#[test]
+fn serve_listen_serves_two_tcp_clients_and_shuts_down() {
+    use std::io::{BufRead as _, BufReader, Write as _};
+    use std::net::TcpStream;
+    use std::process::Stdio;
+    use std::time::Duration;
+
+    let dir = std::env::temp_dir().join(format!("wdm-e2e-tcp-{}", std::process::id()));
+    let mut child = bin()
+        .args(["serve", "--listen", "127.0.0.1:0", "--threads", "2"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn serve --listen");
+    let mut server_out = BufReader::new(child.stdout.take().unwrap());
+    let mut banner = String::new();
+    server_out.read_line(&mut banner).expect("read listen banner");
+    let addr = banner.trim().strip_prefix("listening on ").expect("banner").to_string();
+
+    let connect = || {
+        let s = TcpStream::connect(&addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        s
+    };
+    let submit = |w: &mut TcpStream, id: &str, measure: &str, sub: &str| {
+        writeln!(
+            w,
+            r#"{{"id":"{id}","request":{{"type":"sweep","axis":"ring-local","values":[1.12,2.24],"tr":[2,6],"measures":["{measure}"],"options":{{"fast":true,"lasers":4,"rows":4,"out":"{}/{sub}"}}}}}}"#,
+            dir.display()
+        )
+        .unwrap();
+    };
+
+    // Client X pipelines two jobs; client Y runs one concurrently.
+    let mut x = connect();
+    let mut y = connect();
+    submit(&mut x, "x1", "afp:ltc", "x1");
+    submit(&mut x, "x2", "cafp:vt-rs-ssm", "x2");
+    submit(&mut y, "y1", "afp:ltc", "y1");
+
+    let drain = |stream: &TcpStream, want: &[&str]| {
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut responses: Vec<String> = Vec::new();
+        let mut line = String::new();
+        while responses.len() < want.len() {
+            line.clear();
+            let n = reader.read_line(&mut line).expect("read envelope");
+            assert!(n > 0, "connection closed early");
+            let l = line.trim();
+            // Every line this client sees belongs to one of ITS ids.
+            assert!(
+                want.iter().any(|id| l.starts_with(&format!("{{\"id\":\"{id}\","))),
+                "foreign or untagged envelope: {l}"
+            );
+            if l.contains("\"response\"") {
+                assert!(l.contains("\"ok\":true"), "{l}");
+                responses.push(l.to_string());
+            }
+        }
+        responses
+    };
+    let x_responses = drain(&x, &["x1", "x2"]);
+    let y_responses = drain(&y, &["y1"]);
+    assert_eq!(x_responses.len(), 2);
+    assert_eq!(y_responses.len(), 1);
+
+    // Client Y shuts the server down WHILE client X is still connected
+    // and idle: the broadcast must unblock X's reader (X never hangs up).
+    writeln!(y, r#"{{"id":"sd","control":"shutdown"}}"#).unwrap();
+    let mut reader = BufReader::new(y.try_clone().unwrap());
+    let mut ack = String::new();
+    reader.read_line(&mut ack).expect("shutdown ack");
+    assert!(ack.starts_with("{\"id\":\"sd\","), "{ack}");
+    drop(y);
+    let mut x_reader = BufReader::new(x.try_clone().unwrap());
+    let mut tail = String::new();
+    loop {
+        tail.clear();
+        match x_reader.read_line(&mut tail) {
+            Ok(0) => break, // drained and closed by the shutdown broadcast
+            Ok(_) => continue,
+            Err(e) => panic!("client X was not unblocked by shutdown: {e}"),
+        }
+    }
+    drop(x);
+    let status = child.wait().expect("server exits");
+    assert!(status.success(), "clean shutdown");
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

@@ -21,7 +21,7 @@ use wdm_arbiter::config::SystemConfig;
 use wdm_arbiter::coordinator::sweep::{ConfigAxis, Measure, SweepOutput, SweepSpec};
 use wdm_arbiter::coordinator::{Backend, RunOptions};
 use wdm_arbiter::montecarlo::scheduler::run_sweep;
-use wdm_arbiter::montecarlo::{RustIdeal, TrialEngine};
+use wdm_arbiter::montecarlo::{CancelToken, RustIdeal, TrialEngine};
 use wdm_arbiter::oblivious::Scheme;
 use wdm_arbiter::util::json::Json;
 
@@ -189,7 +189,8 @@ fn golden_panel_digests() {
     }
     for t in threads {
         let scheduled = compute_digests(|spec| {
-            run_sweep(spec, &opts(t), &Backend::Rust, None, &mut |_| {})
+            let token = CancelToken::new();
+            run_sweep(spec, &opts(t), &Backend::Rust, None, &token, &mut |_| {})
                 .expect("scheduled sweep")
                 .outputs
         });

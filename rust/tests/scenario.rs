@@ -19,7 +19,9 @@ use wdm_arbiter::model::{
     SpectralOrdering, VariationConfig,
 };
 use wdm_arbiter::montecarlo::scheduler::run_sweep;
-use wdm_arbiter::montecarlo::{config_fingerprint, PopulationCache, RustIdeal, TrialEngine};
+use wdm_arbiter::montecarlo::{
+    config_fingerprint, CancelToken, PopulationCache, RustIdeal, TrialEngine,
+};
 use wdm_arbiter::rng::{derive_seed, Rng};
 
 /// Every user-settable `SystemConfig` field, one mutation each. Adding a
@@ -221,7 +223,7 @@ fn scenario_sweeps_are_thread_count_invariant() {
         let run_at = |threads: usize| {
             let opts =
                 RunOptions { n_lasers: 6, n_rows: 6, threads, ..RunOptions::fast() };
-            run_sweep(spec, &opts, &Backend::Rust, None, &mut |_| {})
+            run_sweep(spec, &opts, &Backend::Rust, None, &CancelToken::new(), &mut |_| {})
                 .expect("sweep")
                 .outputs
         };
@@ -238,7 +240,7 @@ fn scenario_sweeps_are_thread_count_invariant() {
 fn fault_probability_degrades_afp_monotonically() {
     let spec = fault_spec(vec![0.0, 1.0]);
     let opts = RunOptions { n_lasers: 5, n_rows: 5, threads: 2, ..RunOptions::fast() };
-    let outs = run_sweep(&spec, &opts, &Backend::Rust, None, &mut |_| {})
+    let outs = run_sweep(&spec, &opts, &Backend::Rust, None, &CancelToken::new(), &mut |_| {})
         .expect("sweep")
         .outputs;
     let afp = outs[0].clone().into_shmoo();

@@ -1,0 +1,181 @@
+//! Concurrency suite for the session API (`submit_async` / `JobHandle`):
+//!
+//! * determinism — N jobs submitted concurrently produce byte-identical
+//!   panels to the same jobs run sequentially (per-column seeding makes
+//!   interleaving invisible);
+//! * cancellation — a cancel mid-sweep returns a `canceled` response
+//!   within one column's granularity, leaves the shared
+//!   `PopulationCache` consistent, and subsequent jobs still succeed.
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use wdm_arbiter::api::{ArbiterService, FnSink, JobEvent, JobRequest, JobStatus, Panel};
+use wdm_arbiter::coordinator::Backend;
+
+fn test_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("wdm-session-{tag}-{}", std::process::id()))
+}
+
+fn sweep(json: &str) -> JobRequest {
+    JobRequest::from_json_str(json).unwrap_or_else(|e| panic!("{e} in {json}"))
+}
+
+/// Four distinct sweep jobs (grid + curve measures, two axes).
+fn job_mix(dir: &std::path::Path) -> Vec<JobRequest> {
+    let d = dir.display();
+    vec![
+        sweep(&format!(
+            r#"{{"type":"sweep","axis":"ring-local","values":[1.12,2.24],"tr":[2,6],
+                "measures":"afp:ltc","options":{{"fast":true,"lasers":4,"rows":4,
+                "threads":2,"out":"{d}/j0"}}}}"#
+        )),
+        sweep(&format!(
+            r#"{{"type":"sweep","axis":"grid-offset","values":[0,1],"tr":[2,6],
+                "measures":"afp:lta,afp:ltd","options":{{"fast":true,"lasers":4,"rows":4,
+                "threads":2,"out":"{d}/j1"}}}}"#
+        )),
+        sweep(&format!(
+            r#"{{"type":"sweep","axis":"ring-local","values":[1.12,2.24],"tr":[2,6],
+                "measures":"cafp:vt-rs-ssm","options":{{"fast":true,"lasers":4,"rows":4,
+                "threads":2,"out":"{d}/j2"}}}}"#
+        )),
+        sweep(&format!(
+            r#"{{"type":"sweep","axis":"fsr-frac","values":[0.005,0.01],
+                "measures":"min-tr:ltc","options":{{"fast":true,"lasers":4,"rows":4,
+                "threads":2,"out":"{d}/j3"}}}}"#
+        )),
+    ]
+}
+
+/// (a) Concurrent submissions are invisible in the results: panels from N
+/// jobs in flight together are byte-identical to sequential runs.
+#[test]
+fn concurrent_submissions_match_sequential_panels() {
+    let dir = test_dir("determinism");
+    let jobs = job_mix(&dir);
+
+    // Reference: one fresh service, strictly sequential.
+    let sequential = ArbiterService::new(Backend::Rust, 2);
+    let expected: Vec<Vec<Panel>> = jobs
+        .iter()
+        .map(|j| {
+            let resp = sequential.submit(j);
+            assert!(resp.ok, "{:?}", resp.error);
+            resp.panels
+        })
+        .collect();
+
+    // Same jobs, all in flight at once on a fresh service.
+    let concurrent = ArbiterService::new(Backend::Rust, 2).with_job_workers(4);
+    let handles: Vec<_> = jobs.iter().map(|j| concurrent.submit_async(j.clone())).collect();
+    for (i, (h, want)) in handles.iter().zip(&expected).enumerate() {
+        let resp = h.wait();
+        assert!(resp.ok, "job {i}: {:?}", resp.error);
+        assert_eq!(&resp.panels, want, "job {i}: concurrent != sequential");
+    }
+
+    // Identical jobs submitted concurrently coalesce on the population
+    // cache — and still return byte-identical panels.
+    let coalesced = ArbiterService::new(Backend::Rust, 2).with_job_workers(4);
+    let copies: Vec<_> = (0..4).map(|_| coalesced.submit_async(jobs[0].clone())).collect();
+    for h in &copies {
+        let resp = h.wait();
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.panels, expected[0]);
+        assert_eq!(resp.panels[0].measure(), "afp_ltc");
+    }
+    let stats = coalesced.cache().stats();
+    assert_eq!(
+        stats.hits + stats.misses,
+        8,
+        "4 copies x 2 columns, each either built once or coalesced/hit"
+    );
+    assert_eq!(stats.misses, 2, "each column sampled exactly once across all copies");
+
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// (b) Cancel mid-sweep: `canceled` response within one column's
+/// granularity, consistent cache, healthy service afterwards.
+#[test]
+fn cancel_mid_sweep_reports_canceled_and_cache_stays_consistent() {
+    let dir = test_dir("cancel");
+    let d = dir.display();
+    // 16 serial columns (threads 1) of 400 trials: the cancel — issued on
+    // the FIRST ColumnDone event — lands with ~15 columns of margin.
+    let big = sweep(&format!(
+        r#"{{"type":"sweep","axis":"ring-local","values":"0.56:8.96:0.56","tr":[2,6,9],
+            "measures":"cafp:vt-rs-ssm","options":{{"fast":true,"lasers":20,"rows":20,
+            "threads":1,"out":"{d}/big"}}}}"#
+    ));
+    let service = ArbiterService::new(Backend::Rust, 1).with_job_workers(2);
+
+    let (first_col_tx, first_col_rx) = mpsc::channel::<()>();
+    let tx = Mutex::new(Some(first_col_tx));
+    let sink = Arc::new(FnSink(move |ev: JobEvent| {
+        if matches!(ev, JobEvent::ColumnDone { .. }) {
+            if let Some(tx) = tx.lock().unwrap().take() {
+                let _ = tx.send(());
+            }
+        }
+    }));
+    let handle = service.submit_async_with(big.clone(), sink);
+    first_col_rx
+        .recv_timeout(Duration::from_secs(120))
+        .expect("first column finished");
+    handle.cancel();
+    let resp = handle.wait();
+    assert!(resp.canceled, "expected canceled, got {resp:?}");
+    assert!(!resp.ok);
+    assert_eq!(resp.error.as_deref(), Some("canceled"));
+    assert_eq!(handle.status(), JobStatus::Canceled);
+    assert!(resp.panels.is_empty(), "a canceled grid carries no partial panels");
+    let after_cancel = service.cache().stats();
+    assert!(after_cancel.misses >= 1, "completed columns were cached");
+    assert!(after_cancel.misses < 16, "the sweep did not run to completion");
+
+    // Cache consistency: the interrupted columns are whole — re-running
+    // the same sweep reuses them and matches a fresh, never-canceled run.
+    let rerun = service.submit(&big);
+    assert!(rerun.ok, "{:?}", rerun.error);
+    assert_eq!(rerun.cache.hits, after_cancel.misses, "canceled columns reused");
+    assert_eq!(rerun.cache.hits + rerun.cache.misses, 16);
+    let fresh_dir = test_dir("cancel-fresh");
+    let fresh_job = sweep(&format!(
+        r#"{{"type":"sweep","axis":"ring-local","values":"0.56:8.96:0.56","tr":[2,6,9],
+            "measures":"cafp:vt-rs-ssm","options":{{"fast":true,"lasers":20,"rows":20,
+            "threads":1,"out":"{}/big"}}}}"#,
+        fresh_dir.display()
+    ));
+    let fresh = ArbiterService::new(Backend::Rust, 1).submit(&fresh_job);
+    assert!(fresh.ok, "{:?}", fresh.error);
+    assert_eq!(rerun.panels, fresh.panels, "post-cancel results are unpolluted");
+
+    // And unrelated follow-up jobs still succeed on the same service.
+    let follow = service.submit(&JobRequest::from_json_str(r#"{"type":"show-config"}"#).unwrap());
+    assert!(follow.ok);
+
+    std::fs::remove_dir_all(dir).ok();
+    std::fs::remove_dir_all(fresh_dir).ok();
+}
+
+/// Canceling an already-finished job is a no-op: the result stands.
+#[test]
+fn cancel_after_completion_keeps_the_result() {
+    let dir = test_dir("late-cancel");
+    let job = sweep(&format!(
+        r#"{{"type":"sweep","axis":"ring-local","values":[1.12],"tr":[6],
+            "measures":"afp:ltc","options":{{"fast":true,"lasers":3,"rows":3,
+            "out":"{}"}}}}"#,
+        dir.display()
+    ));
+    let service = ArbiterService::new(Backend::Rust, 1);
+    let handle = service.submit_async(job);
+    let resp = handle.wait();
+    assert!(resp.ok);
+    handle.cancel();
+    assert_eq!(handle.status(), JobStatus::Done, "late cancel cannot rewrite history");
+    assert!(handle.try_response().unwrap().ok);
+    std::fs::remove_dir_all(dir).ok();
+}
