@@ -8,7 +8,7 @@
 
 use std::time::Duration;
 
-use wdm_arbiter::arbiter::{distance, ideal, matching, Policy};
+use wdm_arbiter::arbiter::{batch, distance, ideal, matching, Policy};
 use wdm_arbiter::config::SystemConfig;
 use wdm_arbiter::coordinator::sweep::{ConfigAxis, Measure, SweepSpec};
 use wdm_arbiter::coordinator::{Backend, RunOptions};
@@ -25,17 +25,33 @@ use wdm_arbiter::oblivious::{run_scheme, run_scheme_with, Scheme, Workspace};
 use wdm_arbiter::rng::Rng;
 use wdm_arbiter::runtime::accel::XlaIdeal;
 use wdm_arbiter::testkit::benchkit::{
-    bench, black_box, header, write_json_report, BenchResult,
+    bench, black_box, check_regressions, header, load_report_medians, write_json_report,
+    BenchResult,
 };
 
-const TARGET: Duration = Duration::from_millis(300);
+const TARGET_DEFAULT_MS: u64 = 300;
+
+/// Default report location: the repo root, next to the committed baseline
+/// (cargo runs benches with cwd = package root `rust/`).
+const DEFAULT_OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
 
 fn main() {
-    let filter = std::env::args().nth(1).unwrap_or_default();
+    // First CLI arg that isn't the `--bench` flag cargo forwards to
+    // `harness = false` binaries is a substring name filter.
+    let filter = std::env::args().skip(1).find(|a| a != "--bench").unwrap_or_default();
+    // `WDM_BENCH_TARGET_MS` shrinks per-case wall time (CI perf gate).
+    let target = Duration::from_millis(
+        std::env::var("WDM_BENCH_TARGET_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(TARGET_DEFAULT_MS),
+    );
     let mut results: Vec<BenchResult> = Vec::new();
-    let mut run = |name: &str, f: &mut dyn FnMut()| {
-        if name.contains(&filter) || filter.is_empty() || filter == "--bench" {
-            results.push(bench(name, TARGET, f));
+    // `units` = work items per timed iteration (trials for population cases)
+    // so the report can show ns/trial and trials/s.
+    let mut run = |name: &str, units: f64, f: &mut dyn FnMut()| {
+        if filter.is_empty() || name.contains(&filter) {
+            results.push(bench(name, target, f).with_units(units));
         }
     };
 
@@ -50,10 +66,10 @@ fn main() {
     let order16: Vec<usize> = (0..16).collect();
 
     // --- L3 per-trial primitives ---------------------------------------
-    run("distance_matrix_n8", &mut || {
+    run("distance_matrix_n8", 1.0, &mut || {
         black_box(distance::scaled_distance_matrix(black_box(&sut8)));
     });
-    run("distance_matrix_n16", &mut || {
+    run("distance_matrix_n16", 1.0, &mut || {
         black_box(distance::scaled_distance_matrix(black_box(&sut16)));
     });
     {
@@ -63,31 +79,31 @@ fn main() {
         sut_faulted.laser.dead[2] = true;
         sut_faulted.rings.dark = vec![false; 8];
         sut_faulted.rings.dark[5] = true;
-        run("distance_matrix_n8_faulted", &mut || {
+        run("distance_matrix_n8_faulted", 1.0, &mut || {
             black_box(distance::scaled_distance_matrix(black_box(&sut_faulted)));
         });
     }
-    run("ideal_ltc_n8", &mut || {
+    run("ideal_ltc_n8", 1.0, &mut || {
         black_box(ideal::min_tuning_range(Policy::LtC, black_box(&dist8), &order8));
     });
-    run("ideal_ltd_n8", &mut || {
+    run("ideal_ltd_n8", 1.0, &mut || {
         black_box(ideal::min_tuning_range(Policy::LtD, black_box(&dist8), &order8));
     });
-    run("ideal_lta_bottleneck_n8", &mut || {
+    run("ideal_lta_bottleneck_n8", 1.0, &mut || {
         black_box(matching::bottleneck_assignment(black_box(&dist8.d), 8));
     });
-    run("ideal_lta_bottleneck_n16", &mut || {
+    run("ideal_lta_bottleneck_n16", 1.0, &mut || {
         black_box(matching::bottleneck_assignment(black_box(&dist16.d), 16));
     });
-    run("ideal_ltc_n16", &mut || {
+    run("ideal_ltc_n16", 1.0, &mut || {
         black_box(ideal::min_tuning_range(Policy::LtC, black_box(&dist16), &order16));
     });
 
     // --- oblivious substrate --------------------------------------------
-    run("wavelength_search_tables_n8", &mut || {
+    run("wavelength_search_tables_n8", 1.0, &mut || {
         black_box(initial_tables(&sut8.laser, &sut8.rings, 6.0));
     });
-    run("record_phase_rs_n8", &mut || {
+    run("record_phase_rs_n8", 1.0, &mut || {
         black_box(full_record_phase(
             &sut8.laser,
             &sut8.rings,
@@ -98,19 +114,19 @@ fn main() {
     });
     {
         let rec = full_record_phase(&sut8.laser, &sut8.rings, &cfg8.target_order, 6.0, ProbeSet::FirstLast);
-        run("ssm_match_phase_n8", &mut || {
+        run("ssm_match_phase_n8", 1.0, &mut || {
             black_box(match_phase(black_box(&rec)));
         });
     }
     for scheme in Scheme::all() {
-        run(&format!("full_trial_{}_n8", scheme.name()), &mut || {
+        run(&format!("full_trial_{}_n8", scheme.name()), 1.0, &mut || {
             black_box(run_scheme(scheme, &sut8.laser, &sut8.rings, &cfg8.target_order, 6.0));
         });
     }
     {
         let mut ws = Workspace::new();
         for scheme in Scheme::all() {
-            run(&format!("full_trial_{}_reused_ws_n8", scheme.name()), &mut || {
+            run(&format!("full_trial_{}_reused_ws_n8", scheme.name()), 1.0, &mut || {
                 black_box(run_scheme_with(
                     scheme,
                     &sut8.laser,
@@ -123,22 +139,97 @@ fn main() {
         }
     }
 
-    // --- population evaluation: rust vs PJRT artifact --------------------
+    // --- population evaluation: scalar vs batched SoA vs PJRT ------------
     let sampler = SystemSampler::new(&cfg8, 16, 32, 1234); // 512 = one batch
+    let n_tr = sampler.n_trials() as f64;
+    let all3 = [Policy::LtA, Policy::LtC, Policy::LtD];
     let rust = RustIdeal { threads: 1 };
-    run("population512_rust_ltc_n8", &mut || {
+    // `RustIdeal` now routes through the batched kernel; the `_scalar`
+    // twins pin the trial-at-a-time oracle cost for the speedup claim.
+    run("population512_rust_ltc_n8", n_tr, &mut || {
         black_box(rust.min_trs(&cfg8, &sampler, Policy::LtC));
     });
-    run("population512_rust_multi3_n8", &mut || {
-        black_box(rust.min_trs_multi(&cfg8, &sampler, &[Policy::LtA, Policy::LtC, Policy::LtD]));
+    run("population512_rust_multi3_n8", n_tr, &mut || {
+        black_box(rust.min_trs_multi(&cfg8, &sampler, &all3));
     });
+    run("population512_scalar_ltc_n8", n_tr, &mut || {
+        black_box(rust.min_trs_multi_scalar(&cfg8, &sampler, &[Policy::LtC]));
+    });
+    run("population512_scalar_multi3_n8", n_tr, &mut || {
+        black_box(rust.min_trs_multi_scalar(&cfg8, &sampler, &all3));
+    });
+
+    // --- batched SoA kernel stages (arbiter::batch) -----------------------
+    {
+        let order = cfg8.target_order.as_slice();
+        let chunk = sampler.n_trials(); // one 512-trial chunk, no refills
+        let mut ws = batch::BatchWorkspace::with_chunk(chunk);
+        run("batched_ideal_fill_512t_n8", n_tr, &mut || {
+            ws.fill(black_box(&sampler), 0, chunk);
+            black_box(ws.n_filled());
+        });
+        ws.fill(&sampler, 0, chunk);
+        let mut outs = vec![Vec::new()];
+        let mut scan = |name: &str, policy: Policy, ws: &mut batch::BatchWorkspace| {
+            run(name, n_tr, &mut || {
+                outs[0].clear();
+                ws.eval_into(order, &[policy], &mut outs);
+                black_box(outs[0].len());
+            });
+        };
+        scan("batched_ideal_ltd_512t_n8", Policy::LtD, &mut ws);
+        scan("batched_ideal_ltc_512t_n8", Policy::LtC, &mut ws);
+        ws.reset_prefilter_stats();
+        scan("batched_ideal_lta_512t_n8", Policy::LtA, &mut ws);
+        let (hits, total) = ws.prefilter_stats();
+        if total > 0 {
+            println!(
+                "lta_prefilter: {hits}/{total} trials resolved at the feasibility lower \
+                 bound ({:.1}% skip the full bottleneck search)",
+                100.0 * hits as f64 / total as f64
+            );
+        }
+    }
+
+    // --- fig14-grid ideal workload: scalar vs batched ---------------------
+    // The acceptance workload: every σ_rLV column of the fast-preset Fig 14
+    // grid evaluated LtC over its own 10x10 population (same samplers, same
+    // seeds for both paths — only the kernel structure differs).
+    {
+        let rlv = rlv_sweep(cfg8.grid.spacing_nm, 1.0);
+        let samplers: Vec<(SystemConfig, SystemSampler)> = rlv
+            .iter()
+            .enumerate()
+            .map(|(ix, &r)| {
+                let mut c = cfg8.clone();
+                c.variation.ring_local_nm = r;
+                let s = SystemSampler::new(&c, 10, 10, 4000 + ix as u64);
+                (c, s)
+            })
+            .collect();
+        let grid_trials = samplers.iter().map(|(_, s)| s.n_trials()).sum::<usize>() as f64;
+        run("fig14grid_ideal_ltc_scalar", grid_trials, &mut || {
+            let mut acc = 0.0;
+            for (c, s) in &samplers {
+                acc += rust.min_trs_multi_scalar(c, s, &[Policy::LtC])[0].iter().sum::<f64>();
+            }
+            black_box(acc);
+        });
+        run("fig14grid_ideal_ltc_batched", grid_trials, &mut || {
+            let mut acc = 0.0;
+            for (c, s) in &samplers {
+                acc += rust.min_trs(c, s, Policy::LtC).iter().sum::<f64>();
+            }
+            black_box(acc);
+        });
+    }
     if let Ok(xla) = XlaIdeal::discover() {
         // Warm the compile cache outside the timed region.
         let _ = xla.min_trs(&cfg8, &sampler, Policy::LtC);
-        run("population512_xla_ltc_n8", &mut || {
+        run("population512_xla_ltc_n8", 1.0, &mut || {
             black_box(xla.min_trs(&cfg8, &sampler, Policy::LtC));
         });
-        run("population512_xla_multi3_n8", &mut || {
+        run("population512_xla_multi3_n8", 1.0, &mut || {
             black_box(xla.min_trs_multi(&cfg8, &sampler, &[Policy::LtA, Policy::LtC, Policy::LtD]));
         });
     } else {
@@ -149,12 +240,36 @@ fn main() {
     for r in &results {
         println!("{}", r.row());
     }
+    // Supplementary view for population cases: per-trial cost + throughput.
+    if results.iter().any(|r| r.units_per_iter > 1.0) {
+        println!("\n{:<38} {:>12} {:>14}", "population case", "ns/trial", "trials/s");
+        for r in results.iter().filter(|r| r.units_per_iter > 1.0) {
+            println!(
+                "{:<38} {:>12.1} {:>14.0}",
+                r.name,
+                r.median_ns_per_unit(),
+                r.units_per_s()
+            );
+        }
+    }
+    let median_of = |name: &str| -> Option<f64> {
+        results.iter().find(|r| r.name == name).map(|r| r.median_ns)
+    };
+    for (scalar, batched) in [
+        ("population512_scalar_ltc_n8", "population512_rust_ltc_n8"),
+        ("population512_scalar_multi3_n8", "population512_rust_multi3_n8"),
+        ("fig14grid_ideal_ltc_scalar", "fig14grid_ideal_ltc_batched"),
+    ] {
+        if let (Some(s), Some(b)) = (median_of(scalar), median_of(batched)) {
+            println!("batched speedup {batched} vs {scalar}: {:.2}x", s / b);
+        }
+    }
 
     // Machine-readable trajectory: BENCH_hotpath.json (per-case median ns,
-    // trials, threads, git describe) so future PRs can diff performance.
-    // `WDM_BENCH_OUT` overrides the output path (CI artifacts).
-    let bench_path = std::env::var("WDM_BENCH_OUT")
-        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    // units, threads, git describe) so future PRs can diff performance.
+    // `WDM_BENCH_OUT` overrides the output path (CI writes a fresh copy
+    // next to the build artifacts instead of clobbering the baseline).
+    let bench_path = std::env::var("WDM_BENCH_OUT").unwrap_or_else(|_| DEFAULT_OUT.to_string());
     match write_json_report(std::path::Path::new(&bench_path), "hotpath", &results) {
         Ok(()) => println!("wrote {bench_path}"),
         Err(e) => eprintln!("warning: could not write {bench_path}: {e}"),
@@ -167,8 +282,54 @@ fn main() {
     // (σ_rLV, λ̄_TR, scheme) cell — and (b) through the SweepSpec/TrialEngine
     // path — one population + one ideal evaluation per σ_rLV column, shared
     // by all thresholds and schemes, with per-worker workspace reuse.
-    if filter.is_empty() || filter == "--bench" || "fig14_grid".contains(&filter) {
+    if filter.is_empty() || "fig14_grid".contains(&filter) {
         fig14_grid_comparison();
+    }
+
+    // --- perf gate -------------------------------------------------------
+    // `WDM_BENCH_BASELINE=<path>` compares this run against a committed
+    // baseline report and exits nonzero on any regression beyond
+    // `WDM_BENCH_TOL` (default 0.25) relative to the run-wide machine
+    // scale — see `benchkit::check_regressions` for the normalization.
+    if let Ok(baseline_path) = std::env::var("WDM_BENCH_BASELINE") {
+        let tol = std::env::var("WDM_BENCH_TOL")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0.25);
+        let baseline = match load_report_medians(std::path::Path::new(&baseline_path)) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("perf gate: cannot read baseline {baseline_path}: {e}");
+                std::process::exit(1);
+            }
+        };
+        if baseline.is_empty() {
+            println!(
+                "perf gate: baseline {baseline_path} has no cases (not yet blessed on \
+                 this toolchain) — commit the fresh report to bless it; skipping gate"
+            );
+            return;
+        }
+        let fresh: Vec<(String, f64)> =
+            results.iter().map(|r| (r.name.clone(), r.median_ns)).collect();
+        let check = check_regressions(&baseline, &fresh, tol);
+        println!(
+            "\nperf gate vs {baseline_path} ({} cases, machine scale {:.2}x, tol {:.0}%):",
+            check.compared,
+            check.scale,
+            tol * 100.0
+        );
+        for line in &check.lines {
+            println!("  {line}");
+        }
+        if !check.failures.is_empty() {
+            eprintln!("perf gate FAILED:");
+            for f in &check.failures {
+                eprintln!("  {f}");
+            }
+            std::process::exit(1);
+        }
+        println!("perf gate passed");
     }
 }
 

@@ -1,0 +1,409 @@
+//! Batched structure-of-arrays (SoA) evaluation of the ideal model — the
+//! per-column hot path behind every AFP/CAFP figure.
+//!
+//! The scalar path ([`crate::arbiter::ideal`]) evaluates one
+//! [`DistanceMatrix`](crate::arbiter::distance::DistanceMatrix) per trial
+//! and pays several small allocations per (trial, policy): the `smax` shift
+//! vector, the witness assignment, the bottleneck matcher's edge order and
+//! adjacency state. At the paper's 100×100 trials per sweep point that
+//! overhead dominates. The batched path instead fills one flat
+//! `trials × n × n` buffer per chunk ([`BatchWorkspace::fill`]) and runs
+//! the policy reductions as chunk-wide scans over contiguous `f64` slices
+//! ([`BatchWorkspace::eval_into`]):
+//!
+//! * **LtD** — gather `D'[i][s_i]` through a precomputed index map,
+//!   branch-free max fold.
+//! * **LtC** — all cyclic shifts through the same gather map (the
+//!   `(s_i + c) mod n` indices are identical for every trial of a chunk,
+//!   so the modulo leaves the inner loop), max fold per shift, min across
+//!   shifts.
+//! * **LtA** — an exact *prefilter* (see [`BatchWorkspace::fill`] docs and
+//!   the `lta_into` comment): a lower bound that is attained whenever a
+//!   perfect matching is feasible at it, checked allocation-free with
+//!   [`feasible_at_masked`]; only undecided trials fall back to the scalar
+//!   [`bottleneck_assignment`].
+//!
+//! Every reduction preserves the scalar path's f64 operation order per
+//! trial, so the results are **bit-identical** to
+//! [`crate::arbiter::ideal::min_tuning_range`] — pinned by
+//! `tests/batched_equivalence.rs` and the golden-digest suite.
+
+use std::sync::OnceLock;
+
+use crate::arbiter::distance::append_scaled_distances;
+use crate::arbiter::matching::{bottleneck_assignment, feasible_at_masked, MatchScratch};
+use crate::arbiter::Policy;
+use crate::model::system::SystemSampler;
+
+/// Default trials per chunk: at the paper's n = 8 this is 128 · 64 · 8 B =
+/// 64 KiB of distances — resident in L2 while three policy scans revisit it.
+pub const DEFAULT_CHUNK: usize = 128;
+
+fn parse_chunk(v: Option<&str>) -> usize {
+    v.and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&c| c > 0)
+        .unwrap_or(DEFAULT_CHUNK)
+}
+
+/// Trials per batched chunk: [`DEFAULT_CHUNK`] unless overridden by the
+/// `WDM_BATCH_CHUNK` environment variable (read once per process). The
+/// chunk size is a pure performance knob — results are bit-identical for
+/// every value (each trial's reduction touches only its own window).
+pub fn default_chunk() -> usize {
+    static CHUNK: OnceLock<usize> = OnceLock::new();
+    *CHUNK.get_or_init(|| parse_chunk(std::env::var("WDM_BATCH_CHUNK").ok().as_deref()))
+}
+
+/// Per-worker batched evaluation state: the flat distance buffer for one
+/// chunk of trials plus all per-policy scratch, allocated once and reused
+/// across chunks (PR-1's workspace-reuse discipline, lifted from per-trial
+/// to per-chunk granularity).
+#[derive(Debug, Clone)]
+pub struct BatchWorkspace {
+    /// Devices per side of the distance matrix (set by [`Self::fill`]).
+    n: usize,
+    /// Trials currently resident in `dist`.
+    filled: usize,
+    /// Capacity hint: trials per chunk this workspace was sized for.
+    chunk: usize,
+    /// Flat `filled × n × n` row-major distances; trial `t` owns the window
+    /// `[t·n², (t+1)·n²)`.
+    dist: Vec<f64>,
+    /// Gather map for the shift scans: `shift_idx[c·n + i] =
+    /// i·n + (s_i + c) mod n`, shared by every trial of the chunk.
+    shift_idx: Vec<u32>,
+    /// Target ordering the gather map was built for (rebuild detector).
+    gather_order: Vec<usize>,
+    /// Kuhn matching scratch for the LtA prefilter.
+    scratch: MatchScratch,
+    prefilter_hits: u64,
+    prefilter_total: u64,
+}
+
+impl Default for BatchWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BatchWorkspace {
+    /// Workspace sized for [`default_chunk`] trials.
+    pub fn new() -> Self {
+        Self::with_chunk(default_chunk())
+    }
+
+    /// Workspace sized for `chunk` trials per fill.
+    pub fn with_chunk(chunk: usize) -> Self {
+        BatchWorkspace {
+            n: 0,
+            filled: 0,
+            chunk: chunk.max(1),
+            dist: Vec::new(),
+            shift_idx: Vec::new(),
+            gather_order: Vec::new(),
+            scratch: MatchScratch::new(),
+            prefilter_hits: 0,
+            prefilter_total: 0,
+        }
+    }
+
+    /// Trials per chunk this workspace was sized for.
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Trials currently resident in the distance buffer.
+    pub fn n_filled(&self) -> usize {
+        self.filled
+    }
+
+    /// The flat `filled × n × n` distance buffer (tests/benches).
+    pub fn distances(&self) -> &[f64] {
+        &self.dist
+    }
+
+    /// `(decided, total)` LtA prefilter counters since the last reset:
+    /// `decided` trials skipped the scalar bottleneck fallback entirely.
+    pub fn prefilter_stats(&self) -> (u64, u64) {
+        (self.prefilter_hits, self.prefilter_total)
+    }
+
+    pub fn reset_prefilter_stats(&mut self) {
+        self.prefilter_hits = 0;
+        self.prefilter_total = 0;
+    }
+
+    /// Fill the buffer with trials `[lo, hi)` of `sampler`: one contiguous
+    /// allocation-free batched distance fill (fault masks applied in place
+    /// per trial window), replacing `hi − lo` scalar `DistanceMatrix`
+    /// round-trips.
+    pub fn fill(&mut self, sampler: &SystemSampler, lo: usize, hi: usize) {
+        debug_assert!(lo <= hi && hi <= sampler.n_trials());
+        let len = hi - lo;
+        self.filled = len;
+        self.dist.clear();
+        if len == 0 {
+            return;
+        }
+        let n = sampler.trial(lo).0.n_ch();
+        if n != self.n {
+            self.n = n;
+            // Geometry changed: the gather map is stale.
+            self.gather_order.clear();
+        }
+        self.dist.reserve(self.chunk.max(len) * n * n);
+        for t in lo..hi {
+            let (laser, rings) = sampler.trial(t);
+            append_scaled_distances(laser, rings, &mut self.dist);
+        }
+    }
+
+    /// Evaluate every requested policy over the filled chunk, appending one
+    /// value per trial to the matching `outs` vector. The distance fill is
+    /// shared across policies — this is what makes
+    /// [`crate::montecarlo::RustIdeal`]'s `min_trs_multi` genuinely
+    /// multi-policy.
+    pub fn eval_into(&mut self, target_order: &[usize], policies: &[Policy], outs: &mut [Vec<f64>]) {
+        debug_assert_eq!(policies.len(), outs.len());
+        if self.filled == 0 {
+            return;
+        }
+        debug_assert_eq!(target_order.len(), self.n);
+        self.build_gather(target_order);
+        for (&policy, out) in policies.iter().zip(outs.iter_mut()) {
+            out.reserve(self.filled);
+            match policy {
+                Policy::LtD => self.ltd_into(out),
+                Policy::LtC => self.ltc_into(out),
+                Policy::LtA => self.lta_into(out),
+            }
+        }
+    }
+
+    /// (Re)build the shift gather map when the target ordering changed.
+    fn build_gather(&mut self, target_order: &[usize]) {
+        if self.gather_order == target_order {
+            return;
+        }
+        let n = self.n;
+        self.shift_idx.clear();
+        self.shift_idx.reserve(n * n);
+        for c in 0..n {
+            for (i, &s) in target_order.iter().enumerate() {
+                self.shift_idx.push((i * n + (s + c) % n) as u32);
+            }
+        }
+        self.gather_order.clear();
+        self.gather_order.extend_from_slice(target_order);
+    }
+
+    /// LtD: `max_i D'[i][s_i]` per trial — the `c = 0` row of the gather
+    /// map (one shift scan serves both LtD and LtC).
+    fn ltd_into(&self, out: &mut Vec<f64>) {
+        let nn = self.n * self.n;
+        let idx = &self.shift_idx[..self.n];
+        for m in self.dist.chunks_exact(nn) {
+            out.push(fold_max_gather(m, idx));
+        }
+    }
+
+    /// LtC: `min_c max_i D'[i][(s_i + c) mod n]` per trial. `<` keeps the
+    /// first minimal shift, matching the scalar `min_by` tie-breaking.
+    fn ltc_into(&self, out: &mut Vec<f64>) {
+        let n = self.n;
+        let nn = n * n;
+        for m in self.dist.chunks_exact(nn) {
+            let mut best = f64::INFINITY;
+            for idx in self.shift_idx.chunks_exact(n) {
+                let mx = fold_max_gather(m, idx);
+                if mx < best {
+                    best = mx;
+                }
+            }
+            out.push(best);
+        }
+    }
+
+    /// LtA: bottleneck assignment per trial, prefiltered.
+    ///
+    /// Exactness: every perfect matching assigns ring `i` *some* laser and
+    /// so pays at least `min_j D'[i][j]`; symmetrically every laser `j`
+    /// costs at least `min_i D'[i][j]`. Hence the bottleneck `B ≥ LB =
+    /// max(max_i min_j D', max_j min_i D')`. When a perfect matching is
+    /// feasible using only edges `≤ LB`, also `B ≤ LB`, so `B = LB` — and
+    /// `LB` is a verbatim matrix element (max/min folds select elements),
+    /// bit-identical to the scalar algorithm's completing-edge weight.
+    /// Undecided trials (matching infeasible at `LB`) fall back to the
+    /// scalar [`bottleneck_assignment`] on the trial's window. All-infinite
+    /// rows stay exact: `LB = ∞` is feasible (`∞ ≤ ∞`) and the scalar path
+    /// returns `∞` too.
+    fn lta_into(&mut self, out: &mut Vec<f64>) {
+        let n = self.n;
+        let nn = n * n;
+        for m in self.dist.chunks_exact(nn) {
+            let mut lb = f64::NEG_INFINITY;
+            // Row minima.
+            for row in m.chunks_exact(n) {
+                let mn = fold_min(row);
+                if mn > lb {
+                    lb = mn;
+                }
+            }
+            // Column minima (stride-n walk over the same window).
+            for j in 0..n {
+                let mut mn = f64::INFINITY;
+                let mut k = j;
+                while k < nn {
+                    let d = m[k];
+                    if d < mn {
+                        mn = d;
+                    }
+                    k += n;
+                }
+                if mn > lb {
+                    lb = mn;
+                }
+            }
+            self.prefilter_total += 1;
+            if feasible_at_masked(m, n, lb, &mut self.scratch) {
+                self.prefilter_hits += 1;
+                out.push(lb);
+            } else {
+                out.push(bottleneck_assignment(m, n).0);
+            }
+        }
+    }
+}
+
+/// Branch-predictable max fold over gathered elements (`d > mx` matches the
+/// scalar scans exactly; distances are never NaN — fault masks use `∞`).
+#[inline]
+fn fold_max_gather(m: &[f64], idx: &[u32]) -> f64 {
+    let mut mx = f64::NEG_INFINITY;
+    for &ix in idx {
+        let d = m[ix as usize];
+        if d > mx {
+            mx = d;
+        }
+    }
+    mx
+}
+
+/// Branch-predictable min fold over a contiguous slice.
+#[inline]
+fn fold_min(row: &[f64]) -> f64 {
+    let mut mn = f64::INFINITY;
+    for &d in row {
+        if d < mn {
+            mn = d;
+        }
+    }
+    mn
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arbiter::distance::scaled_distance_parts;
+    use crate::arbiter::ideal;
+    use crate::config::SystemConfig;
+    use crate::model::SpectralOrdering;
+
+    fn eval_all(
+        ws: &mut BatchWorkspace,
+        sampler: &SystemSampler,
+        order: &[usize],
+        lo: usize,
+        hi: usize,
+    ) -> Vec<Vec<f64>> {
+        let policies = [Policy::LtD, Policy::LtC, Policy::LtA];
+        let mut outs = vec![Vec::new(); policies.len()];
+        ws.fill(sampler, lo, hi);
+        ws.eval_into(order, &policies, &mut outs);
+        outs
+    }
+
+    fn assert_matches_scalar(
+        outs: &[Vec<f64>],
+        sampler: &SystemSampler,
+        order: &[usize],
+        lo: usize,
+    ) {
+        let policies = [Policy::LtD, Policy::LtC, Policy::LtA];
+        for (k, p) in policies.iter().enumerate() {
+            for (t, got) in outs[k].iter().enumerate() {
+                let (laser, rings) = sampler.trial(lo + t);
+                let dist = scaled_distance_parts(laser, rings);
+                let want = ideal::min_tuning_range(*p, &dist, order);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "{p:?} trial {t}: batched {got} vs scalar {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_chunk_is_bitwise_identical_to_scalar() {
+        let cfg = SystemConfig::default();
+        let sampler = SystemSampler::new(&cfg, 6, 7, 31);
+        let order = cfg.target_order.as_slice();
+        let mut ws = BatchWorkspace::with_chunk(16);
+        let outs = eval_all(&mut ws, &sampler, order, 0, sampler.n_trials());
+        assert_matches_scalar(&outs, &sampler, order, 0);
+        // Sub-range fills are windows of the same trials.
+        let outs = eval_all(&mut ws, &sampler, order, 10, 25);
+        assert_matches_scalar(&outs, &sampler, order, 10);
+    }
+
+    #[test]
+    fn gather_map_tracks_order_changes() {
+        let cfg = SystemConfig::default();
+        let sampler = SystemSampler::new(&cfg, 4, 4, 7);
+        let mut ws = BatchWorkspace::new();
+        let natural: Vec<usize> = (0..8).collect();
+        let permuted = SpectralOrdering::permuted(8).as_slice().to_vec();
+        for order in [&natural, &permuted, &natural] {
+            let outs = eval_all(&mut ws, &sampler, order, 0, sampler.n_trials());
+            assert_matches_scalar(&outs, &sampler, order, 0);
+        }
+    }
+
+    #[test]
+    fn prefilter_counters_and_exact_fallback() {
+        let cfg = SystemConfig::default();
+        let sampler = SystemSampler::new(&cfg, 8, 8, 99);
+        let order = cfg.target_order.as_slice();
+        let mut ws = BatchWorkspace::new();
+        let outs = eval_all(&mut ws, &sampler, order, 0, sampler.n_trials());
+        assert_matches_scalar(&outs, &sampler, order, 0);
+        let (hits, total) = ws.prefilter_stats();
+        assert_eq!(total, sampler.n_trials() as u64);
+        assert!(hits <= total);
+        assert!(hits > 0, "prefilter should decide at least some trials");
+        ws.reset_prefilter_stats();
+        assert_eq!(ws.prefilter_stats(), (0, 0));
+    }
+
+    #[test]
+    fn empty_fill_is_a_noop() {
+        let cfg = SystemConfig::default();
+        let sampler = SystemSampler::new(&cfg, 2, 2, 1);
+        let mut ws = BatchWorkspace::new();
+        ws.fill(&sampler, 2, 2);
+        assert_eq!(ws.n_filled(), 0);
+        let mut outs = vec![Vec::new()];
+        ws.eval_into(cfg.target_order.as_slice(), &[Policy::LtC], &mut outs);
+        assert!(outs[0].is_empty());
+    }
+
+    #[test]
+    fn chunk_env_parsing() {
+        assert_eq!(parse_chunk(None), DEFAULT_CHUNK);
+        assert_eq!(parse_chunk(Some("64")), 64);
+        assert_eq!(parse_chunk(Some(" 7 ")), 7);
+        assert_eq!(parse_chunk(Some("0")), DEFAULT_CHUNK, "zero chunk rejected");
+        assert_eq!(parse_chunk(Some("nope")), DEFAULT_CHUNK);
+    }
+}

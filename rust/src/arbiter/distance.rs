@@ -56,21 +56,48 @@ pub fn scaled_distance_parts(laser: &MwlSample, rings: &RingRowSample) -> Distan
 /// on affected trials — no panic, no special-casing downstream). No-op
 /// (and branch-free per trial) for fault-free samples.
 fn apply_fault_masks(laser: &MwlSample, rings: &RingRowSample, m: &mut DistanceMatrix) {
+    apply_fault_masks_slice(laser, rings, m.n, &mut m.d);
+}
+
+/// Slice form of the fault masks: `d` is one trial's row-major `n × n`
+/// block (possibly a window of a larger batched buffer).
+fn apply_fault_masks_slice(laser: &MwlSample, rings: &RingRowSample, n: usize, d: &mut [f64]) {
     if laser.dead.is_empty() && rings.dark.is_empty() {
         return;
     }
-    let n = m.n;
     for i in 0..n {
         if rings.ring_dark(i) {
-            m.d[i * n..(i + 1) * n].fill(f64::INFINITY);
+            d[i * n..(i + 1) * n].fill(f64::INFINITY);
             continue;
         }
         for j in 0..n {
             if laser.tone_dead(j) {
-                m.d[i * n + j] = f64::INFINITY;
+                d[i * n + j] = f64::INFINITY;
             }
         }
     }
+}
+
+/// Append one trial's `n × n` scaled distances (fault masks applied) to a
+/// flat buffer: the building block of the batched SoA fill
+/// ([`crate::arbiter::batch::BatchWorkspace::fill`]). Same f64 operation
+/// order per trial as [`scaled_distance_into`], so the batched path stays
+/// bit-identical to the scalar one.
+#[inline]
+pub fn append_scaled_distances(laser: &MwlSample, rings: &RingRowSample, buf: &mut Vec<f64>) {
+    let n = laser.n_ch();
+    debug_assert_eq!(rings.n_rings(), n);
+    buf.reserve(n * n);
+    for i in 0..n {
+        let res = rings.resonance_nm[i];
+        let fsr = rings.fsr_nm[i];
+        let inv_scale = 1.0 / rings.tr_scale[i];
+        for j in 0..n {
+            buf.push(red_shift_distance(laser.tones_nm[j] - res, fsr) * inv_scale);
+        }
+    }
+    let base = buf.len() - n * n;
+    apply_fault_masks_slice(laser, rings, n, &mut buf[base..]);
 }
 
 /// Sentinel distance for assignments invalidated by resonance aliasing:
@@ -123,19 +150,9 @@ pub fn alias_aware_distance_parts(
 
 /// In-place variant: reuses `out.d`'s allocation (hot-loop friendly).
 pub fn scaled_distance_into(laser: &MwlSample, rings: &RingRowSample, out: &mut DistanceMatrix) {
-    let n = laser.n_ch();
-    out.n = n;
+    out.n = laser.n_ch();
     out.d.clear();
-    out.d.reserve(n * n);
-    for i in 0..n {
-        let res = rings.resonance_nm[i];
-        let fsr = rings.fsr_nm[i];
-        let inv_scale = 1.0 / rings.tr_scale[i];
-        for j in 0..n {
-            out.d.push(red_shift_distance(laser.tones_nm[j] - res, fsr) * inv_scale);
-        }
-    }
-    apply_fault_masks(laser, rings, out);
+    append_scaled_distances(laser, rings, &mut out.d);
 }
 
 #[cfg(test)]
@@ -228,6 +245,28 @@ mod tests {
         let mut b = DistanceMatrix { n: 0, d: Vec::new() };
         scaled_distance_into(&sut.laser, &sut.rings, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn append_form_is_bitwise_identical_per_trial() {
+        // The batched SoA fill is a sequence of per-trial appends; each
+        // window must reproduce the scalar matrix bit-for-bit.
+        let cfg = SystemConfig::default();
+        let mut rng = Rng::seed_from(12);
+        let mut buf = Vec::new();
+        let mut suts = Vec::new();
+        for _ in 0..5 {
+            let sut = crate::model::SystemUnderTest::sample(&cfg, &mut rng);
+            append_scaled_distances(&sut.laser, &sut.rings, &mut buf);
+            suts.push(sut);
+        }
+        for (t, sut) in suts.iter().enumerate() {
+            let m = scaled_distance_parts(&sut.laser, &sut.rings);
+            let nn = m.n * m.n;
+            for (a, b) in buf[t * nn..(t + 1) * nn].iter().zip(&m.d) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -11,6 +11,11 @@
 //! mean tuning range `λ̄_TR` succeeds iff `min_tr ≤ λ̄_TR`. This is the same
 //! computation the AOT JAX/Pallas artifact performs in batch (LtD/LtC), with
 //! LtA's matching finished on the Rust side.
+//!
+//! This module is the *scalar* (one trial at a time) form — the oracle the
+//! population hot path is pinned against. Population evaluation goes
+//! through the chunk-wide SoA twin, [`crate::arbiter::batch`], which is
+//! bit-identical per trial.
 
 use crate::arbiter::distance::DistanceMatrix;
 use crate::arbiter::matching::bottleneck_assignment;

@@ -94,6 +94,89 @@ pub fn feasible_at(dist: &[f64], n: usize, threshold: f64) -> bool {
     hopcroft_karp(n, &adj).0 == n
 }
 
+/// Kuhn augmenting-path step over bitmask adjacency: try to match left
+/// vertex `u`, rerouting already-matched vertices recursively. Shared by
+/// [`bottleneck_assignment`] and [`feasible_at_masked`].
+fn augment(
+    u: usize,
+    adj: &[u64],
+    match_l: &mut [usize],
+    match_r: &mut [usize],
+    visited: &mut [bool],
+) -> bool {
+    const NIL: usize = usize::MAX;
+    let mut cand = adj[u];
+    while cand != 0 {
+        let v = cand.trailing_zeros() as usize;
+        cand &= cand - 1;
+        if visited[v] {
+            continue;
+        }
+        visited[v] = true;
+        let w = match_r[v];
+        if w == NIL || augment(w, adj, match_l, match_r, visited) {
+            match_l[u] = v;
+            match_r[v] = u;
+            return true;
+        }
+    }
+    false
+}
+
+/// Reusable matching scratch for [`feasible_at_masked`]: adjacency bitmasks
+/// and Kuhn state, resized on use so one instance serves a whole trial
+/// chunk without allocating (`n ≤ 64`).
+#[derive(Debug, Clone, Default)]
+pub struct MatchScratch {
+    adj: Vec<u64>,
+    match_l: Vec<usize>,
+    match_r: Vec<usize>,
+    visited: Vec<bool>,
+}
+
+impl MatchScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Allocation-free perfect-matching feasibility of the graph
+/// `{(i, j) : dist[i*n + j] ≤ threshold}` via bitmask Kuhn matching.
+///
+/// Equivalent to [`feasible_at`], but reusing caller scratch — this is the
+/// inner loop of the batched LtA prefilter
+/// ([`crate::arbiter::batch::BatchWorkspace`]), which calls it once per
+/// trial. Kuhn's invariant makes the early exit sound: once no augmenting
+/// path exists from `u`, later augmentations never create one.
+pub fn feasible_at_masked(dist: &[f64], n: usize, threshold: f64, s: &mut MatchScratch) -> bool {
+    assert!(n <= 64, "feasible_at_masked supports n <= 64");
+    const NIL: usize = usize::MAX;
+    s.adj.clear();
+    s.adj.resize(n, 0);
+    for i in 0..n {
+        let mut bits = 0u64;
+        for j in 0..n {
+            if dist[i * n + j] <= threshold {
+                bits |= 1u64 << j;
+            }
+        }
+        s.adj[i] = bits;
+    }
+    s.match_l.clear();
+    s.match_l.resize(n, NIL);
+    s.match_r.clear();
+    s.match_r.resize(n, NIL);
+    s.visited.clear();
+    s.visited.resize(n, false);
+    for u in 0..n {
+        s.visited.iter_mut().for_each(|v| *v = false);
+        if !augment(u, &s.adj, &mut s.match_l, &mut s.match_r, &mut s.visited) {
+            return false;
+        }
+    }
+    true
+}
+
 /// Bottleneck assignment value: the minimum over perfect matchings of the
 /// maximum selected distance. Returns the threshold and one witnessing
 /// assignment (`laser index per ring`).
@@ -121,32 +204,6 @@ pub fn bottleneck_assignment(dist: &[f64], n: usize) -> (f64, Vec<usize>) {
     let mut match_r = vec![NIL; n];
     let mut matched = 0usize;
     let mut visited = vec![false; n];
-
-    fn augment(
-        u: usize,
-        adj: &[u64],
-        match_l: &mut [usize],
-        match_r: &mut [usize],
-        visited: &mut [bool],
-    ) -> bool {
-        const NIL: usize = usize::MAX;
-        let mut cand = adj[u];
-        while cand != 0 {
-            let v = cand.trailing_zeros() as usize;
-            cand &= cand - 1;
-            if visited[v] {
-                continue;
-            }
-            visited[v] = true;
-            let w = match_r[v];
-            if w == NIL || augment(w, adj, match_l, match_r, visited) {
-                match_l[u] = v;
-                match_r[v] = u;
-                return true;
-            }
-        }
-        false
-    }
 
     for &e in &order {
         let (i, j) = ((e as usize) / n, (e as usize) % n);
@@ -220,6 +277,31 @@ mod tests {
         let (t, ml) = bottleneck_assignment(&dist, 2);
         assert_eq!(t, 1.0);
         assert_eq!(ml, vec![1, 0]);
+    }
+
+    #[test]
+    fn masked_feasibility_agrees_with_hopcroft_karp() {
+        let mut rng = Rng::seed_from(55);
+        let mut scratch = MatchScratch::new();
+        for _ in 0..200 {
+            let n = 6;
+            let dist: Vec<f64> = (0..n * n).map(|_| rng.uniform(0.0, 10.0)).collect();
+            // Thresholds straddling infeasible → feasible, plus exact edge
+            // values (the prefilter probes matrix elements verbatim).
+            let mut probes = vec![0.5, 3.0, 5.0, 9.9, f64::INFINITY];
+            probes.extend(dist.iter().take(4).copied());
+            for t in probes {
+                assert_eq!(
+                    feasible_at_masked(&dist, n, t, &mut scratch),
+                    feasible_at(&dist, n, t),
+                    "threshold {t}"
+                );
+            }
+        }
+        // Infinite rows: feasible only at an infinite threshold.
+        let dist = vec![f64::INFINITY, f64::INFINITY, 1.0, 2.0];
+        assert!(!feasible_at_masked(&dist, 2, 1e12, &mut scratch));
+        assert!(feasible_at_masked(&dist, 2, f64::INFINITY, &mut scratch));
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Arbitration policies and the ideal wavelength-aware arbitration model
 //! (paper §II-B, §III-A, §IV).
 
+pub mod batch;
 pub mod distance;
 pub mod ideal;
 pub mod matching;

@@ -7,8 +7,11 @@
 //!
 //! * [`TrialEngine::population`] samples one [`SystemSampler`] per column
 //!   and runs the backing [`IdealEvaluator`] **once** over the requested
-//!   policies (sharing the per-trial distance computation), yielding a
-//!   [`Population`] with per-trial minimum-tuning-range vectors.
+//!   policies, yielding a [`Population`] with per-trial
+//!   minimum-tuning-range vectors. On the Rust backend the multi-policy
+//!   sharing is real work saved, not just API shape: `RustIdeal` fills one
+//!   batched SoA distance chunk per trial block and scans it once per
+//!   policy ([`crate::arbiter::batch`]).
 //! * AFP at any λ̄_TR is a threshold test on those vectors
 //!   ([`crate::montecarlo::afp_at`]) — no re-evaluation per cell.
 //! * CAFP of a wavelength-oblivious scheme ([`SchemeEvaluator`]) gates on

@@ -190,6 +190,16 @@ where
     F: Fn(&mut A, usize) + Send + Sync,
 {
     let workers = effective_threads(threads).min(n.max(1));
+    if workers == 1 {
+        // Single worker: fold on the calling thread. Identical results
+        // (one chunk either way), no spawn/join round-trip — this is the
+        // column-worker configuration, which calls in a tight loop.
+        let mut acc = init();
+        for t in 0..n {
+            fold(&mut acc, t);
+        }
+        return vec![acc];
+    }
     let chunk = n.div_ceil(workers);
     let mut accs: Vec<A> = Vec::new();
     std::thread::scope(|scope| {
@@ -207,6 +217,66 @@ where
                 for t in lo..hi {
                     fold(&mut acc, t);
                 }
+                acc
+            }));
+        }
+        for h in handles {
+            accs.push(h.join().expect("worker panicked"));
+        }
+    });
+    accs
+}
+
+/// Like [`parallel_map_chunked`], but the worker fold receives whole
+/// contiguous index *blocks* (`Range<usize>`, at most `block` long) rather
+/// than single indices — the entry point for batched SoA kernels
+/// ([`crate::arbiter::batch::BatchWorkspace`]) that amortize per-call cost
+/// over many trials. Each worker walks its contiguous chunk in order, block
+/// by block, with one long-lived accumulator; accumulators come back in
+/// chunk order. Per-index results are therefore independent of both
+/// `threads` and `block` whenever the per-index work is independent.
+pub fn parallel_map_blocked<A, I, F>(
+    n: usize,
+    threads: usize,
+    block: usize,
+    init: I,
+    fold_block: F,
+) -> Vec<A>
+where
+    A: Send,
+    I: Fn() -> A + Send + Sync,
+    F: Fn(&mut A, std::ops::Range<usize>) + Send + Sync,
+{
+    let block = block.max(1);
+    let workers = effective_threads(threads).min(n.max(1));
+    let run_range = |acc: &mut A, lo: usize, hi: usize| {
+        let mut s = lo;
+        while s < hi {
+            let e = (s + block).min(hi);
+            fold_block(acc, s..e);
+            s = e;
+        }
+    };
+    if workers == 1 {
+        let mut acc = init();
+        run_range(&mut acc, 0, n);
+        return vec![acc];
+    }
+    let chunk = n.div_ceil(workers);
+    let mut accs: Vec<A> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let lo = w * chunk;
+            let hi = ((w + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let init = &init;
+            let run_range = &run_range;
+            handles.push(scope.spawn(move || {
+                let mut acc = init();
+                run_range(&mut acc, lo, hi);
                 acc
             }));
         }
@@ -250,6 +320,30 @@ mod tests {
         assert!(out.is_empty());
         let accs = parallel_map_chunked(0, 4, || 0usize, |a, _| *a += 1);
         assert!(accs.len() <= 1);
+        let accs = parallel_map_blocked(0, 4, 16, || 0usize, |a, r| *a += r.len());
+        assert!(accs.iter().sum::<usize>() == 0);
+    }
+
+    #[test]
+    fn blocked_fold_partitions_in_order_for_any_block_size() {
+        for threads in [1, 3, 8] {
+            for block in [1, 7, 64, 5000] {
+                let accs = parallel_map_blocked(
+                    1003,
+                    threads,
+                    block,
+                    Vec::new,
+                    |v: &mut Vec<usize>, r: std::ops::Range<usize>| {
+                        assert!(r.len() <= block.max(1));
+                        v.extend(r);
+                    },
+                );
+                // Each worker's indices are contiguous and ascending; the
+                // concatenation in chunk order is exactly 0..n.
+                let all: Vec<usize> = accs.into_iter().flatten().collect();
+                assert_eq!(all, (0..1003).collect::<Vec<_>>(), "threads={threads} block={block}");
+            }
+        }
     }
 
     #[test]

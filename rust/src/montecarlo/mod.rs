@@ -33,7 +33,7 @@ pub use engine::{
 pub use executor::{CancelToken, TaskPool};
 pub use scheduler::{ColumnProgress, EvalFactory, GridStats, SWEEP_CANCELED, SweepRun};
 
-use crate::arbiter::{ideal, Policy};
+use crate::arbiter::{batch, ideal, Policy};
 use crate::config::SystemConfig;
 use crate::metrics::TrialTally;
 use crate::model::system::SystemSampler;
@@ -53,7 +53,11 @@ pub trait IdealEvaluator {
     fn min_trs(&self, cfg: &SystemConfig, sampler: &SystemSampler, policy: Policy) -> Vec<f64>;
 
     /// Evaluate several policies over the *same* population, sharing the
-    /// per-trial distance computation where the backend allows.
+    /// per-trial distance computation where the backend allows. The default
+    /// falls back to one [`Self::min_trs`] pass per policy; real backends
+    /// override it — [`RustIdeal`] runs the batched SoA kernel with one
+    /// distance fill per trial chunk shared by every requested policy
+    /// ([`crate::arbiter::batch`]).
     fn min_trs_multi(
         &self,
         cfg: &SystemConfig,
@@ -71,38 +75,32 @@ pub trait IdealEvaluator {
 }
 
 /// Pure-Rust f64 reference implementation of the ideal model.
+///
+/// Population evaluation runs the batched SoA kernel
+/// ([`crate::arbiter::batch::BatchWorkspace`]): each worker fills a flat
+/// chunk of `trials × n × n` distances once and scans it for every
+/// requested policy — allocation-free in the trial loop and bit-identical
+/// to the scalar path ([`Self::min_trs_multi_scalar`]). The chunk size is
+/// [`batch::default_chunk`] (env `WDM_BATCH_CHUNK`).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RustIdeal {
     /// Worker threads for the population loop (0 = all cores).
     pub threads: usize,
 }
 
-impl IdealEvaluator for RustIdeal {
-    fn min_trs(&self, cfg: &SystemConfig, sampler: &SystemSampler, policy: Policy) -> Vec<f64> {
-        let order = cfg.target_order.as_slice();
-        // Per-worker scratch distance matrix: no allocation in the trial
-        // loop (§Perf).
-        let chunks = executor::parallel_map_chunked(
-            sampler.n_trials(),
-            self.threads,
-            || (crate::arbiter::distance::DistanceMatrix { n: 0, d: Vec::new() }, Vec::new()),
-            |(scratch, out): &mut (crate::arbiter::distance::DistanceMatrix, Vec<f64>), t| {
-                let (laser, rings) = sampler.trial(t);
-                crate::arbiter::distance::scaled_distance_into(laser, rings, scratch);
-                out.push(ideal::min_tuning_range(policy, scratch, order));
-            },
-        );
-        chunks.into_iter().flat_map(|(_, out)| out).collect()
-    }
-
-    fn min_trs_multi(
+impl RustIdeal {
+    /// Scalar trial-at-a-time reference path: one reused `DistanceMatrix`
+    /// per worker, [`ideal::min_tuning_range`] per (trial, policy). Kept as
+    /// the oracle the batched kernels are pinned against
+    /// (`tests/batched_equivalence.rs`, `tests/golden.rs`) and as the
+    /// baseline side of `benches/hotpath.rs`.
+    pub fn min_trs_multi_scalar(
         &self,
         cfg: &SystemConfig,
         sampler: &SystemSampler,
         policies: &[Policy],
     ) -> Vec<Vec<f64>> {
         let order = cfg.target_order.as_slice();
-        // One distance matrix per trial, all policy reductions on top.
         let chunks = executor::parallel_map_chunked(
             sampler.n_trials(),
             self.threads,
@@ -121,10 +119,62 @@ impl IdealEvaluator for RustIdeal {
         let rows: Vec<Vec<f64>> = chunks.into_iter().flat_map(|(_, rows)| rows).collect();
         transpose(rows, policies.len())
     }
+}
+
+impl IdealEvaluator for RustIdeal {
+    fn min_trs(&self, cfg: &SystemConfig, sampler: &SystemSampler, policy: Policy) -> Vec<f64> {
+        self.min_trs_multi(cfg, sampler, std::slice::from_ref(&policy))
+            .pop()
+            .expect("one policy requested")
+    }
+
+    fn min_trs_multi(
+        &self,
+        cfg: &SystemConfig,
+        sampler: &SystemSampler,
+        policies: &[Policy],
+    ) -> Vec<Vec<f64>> {
+        batched_min_trs_multi(cfg, sampler, policies, self.threads, batch::default_chunk())
+    }
 
     fn name(&self) -> &'static str {
         "rust-f64"
     }
+}
+
+/// Batched SoA population evaluation with an explicit chunk size: each
+/// worker owns one [`batch::BatchWorkspace`] and walks its contiguous trial
+/// range chunk by chunk — one distance fill per chunk, shared across all
+/// `policies`. Public with the `chunk` parameter so the equivalence suite
+/// can pin that chunking never changes results; [`RustIdeal`] calls it with
+/// [`batch::default_chunk`].
+pub fn batched_min_trs_multi(
+    cfg: &SystemConfig,
+    sampler: &SystemSampler,
+    policies: &[Policy],
+    threads: usize,
+    chunk: usize,
+) -> Vec<Vec<f64>> {
+    let order = cfg.target_order.as_slice();
+    let n_trials = sampler.n_trials();
+    let accs = executor::parallel_map_blocked(
+        n_trials,
+        threads,
+        chunk,
+        || (batch::BatchWorkspace::with_chunk(chunk), vec![Vec::new(); policies.len()]),
+        |(ws, outs): &mut (batch::BatchWorkspace, Vec<Vec<f64>>), r: std::ops::Range<usize>| {
+            ws.fill(sampler, r.start, r.end);
+            ws.eval_into(order, policies, outs);
+        },
+    );
+    let mut out: Vec<Vec<f64>> =
+        policies.iter().map(|_| Vec::with_capacity(n_trials)).collect();
+    for (_, rows) in accs {
+        for (k, mut v) in rows.into_iter().enumerate() {
+            out[k].append(&mut v);
+        }
+    }
+    out
 }
 
 fn transpose(rows: Vec<Vec<f64>>, width: usize) -> Vec<Vec<f64>> {

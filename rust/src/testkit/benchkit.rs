@@ -31,9 +31,32 @@ pub struct BenchResult {
     pub median_ns: f64,
     pub p10_ns: f64,
     pub p90_ns: f64,
+    /// Work units (e.g. trials) per timed iteration: batched cases set this
+    /// so reports can show ns/unit and units/s next to raw iteration time.
+    pub units_per_iter: f64,
 }
 
 impl BenchResult {
+    /// Tag this result as covering `units` work units per iteration.
+    pub fn with_units(mut self, units: f64) -> Self {
+        self.units_per_iter = units.max(1.0);
+        self
+    }
+
+    /// Median time per work unit (== `median_ns` for unbatched cases).
+    pub fn median_ns_per_unit(&self) -> f64 {
+        self.median_ns / self.units_per_iter
+    }
+
+    /// Work units per second at the median (trials/sec for batched cases).
+    pub fn units_per_s(&self) -> f64 {
+        if self.median_ns > 0.0 {
+            self.units_per_iter * 1e9 / self.median_ns
+        } else {
+            f64::INFINITY
+        }
+    }
+
     pub fn throughput_per_s(&self) -> f64 {
         if self.mean_ns > 0.0 {
             1e9 / self.mean_ns
@@ -114,6 +137,7 @@ pub fn bench<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchResult 
         median_ns: pct(0.5),
         p10_ns: pct(0.1),
         p90_ns: pct(0.9),
+        units_per_iter: 1.0,
     }
 }
 
@@ -144,6 +168,8 @@ fn case_json(r: &BenchResult) -> Json {
         ("p10_ns", Json::num(r.p10_ns)),
         ("p90_ns", Json::num(r.p90_ns)),
         ("trials", Json::num(r.iters as f64)),
+        ("units_per_iter", Json::num(r.units_per_iter)),
+        ("median_ns_per_unit", Json::num(r.median_ns_per_unit())),
     ])
 }
 
@@ -173,6 +199,93 @@ pub fn write_json_report(
     std::fs::write(path, report.to_pretty())
 }
 
+/// `(name, median_ns)` pairs from a bench-report JSON written by
+/// [`write_json_report`]. Cases with non-finite or non-positive medians are
+/// skipped (they cannot anchor a ratio). An empty `cases` array loads as an
+/// empty vector — callers treat that as "baseline not yet blessed".
+pub fn load_report_medians(path: &Path) -> std::io::Result<Vec<(String, f64)>> {
+    let text = std::fs::read_to_string(path)?;
+    let json = Json::parse(&text).map_err(|e| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, format!("{}: {e}", path.display()))
+    })?;
+    let mut out = Vec::new();
+    if let Some(cases) = json.get("cases").and_then(Json::as_arr) {
+        for case in cases {
+            let (Some(name), Some(median)) = (
+                case.get("name").and_then(Json::as_str),
+                case.get("median_ns").and_then(Json::as_f64),
+            ) else {
+                continue;
+            };
+            if median.is_finite() && median > 0.0 {
+                out.push((name.to_string(), median));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Outcome of a baseline comparison: the machine-speed scale, one report
+/// line per compared case, and the cases that regressed.
+#[derive(Debug, Clone)]
+pub struct BenchCheck {
+    /// Geometric mean of fresh/baseline median ratios over common cases.
+    pub scale: f64,
+    /// Cases present in both reports.
+    pub compared: usize,
+    /// One human-readable line per compared case.
+    pub lines: Vec<String>,
+    /// `name: why` for every case exceeding the tolerance.
+    pub failures: Vec<String>,
+}
+
+/// Compare fresh medians against a committed baseline.
+///
+/// Absolute nanoseconds are machine-dependent (the committed baseline comes
+/// from a developer machine, the fresh run from a CI runner), so the gate
+/// is *normalized*: compute the geometric mean of per-case fresh/baseline
+/// ratios — the machine-speed scale — then flag any case whose ratio
+/// exceeds `(1 + tol) × scale`. A uniform slowdown (slower runner) moves
+/// every case equally and passes; one kernel regressing more than `tol`
+/// relative to its peers fails. Zero common cases is itself a failure so a
+/// renamed suite cannot silently pass.
+pub fn check_regressions(
+    baseline: &[(String, f64)],
+    fresh: &[(String, f64)],
+    tol: f64,
+) -> BenchCheck {
+    let mut lines = Vec::new();
+    let mut failures = Vec::new();
+    let mut ratios: Vec<(usize, f64)> = Vec::new(); // (fresh index, ratio)
+    for (fi, (name, f_med)) in fresh.iter().enumerate() {
+        if let Some((_, b_med)) = baseline.iter().find(|(b, _)| b == name) {
+            ratios.push((fi, f_med / b_med));
+        }
+    }
+    if ratios.is_empty() {
+        failures.push(
+            "no cases in common with the baseline (renamed suite or empty baseline?)".to_string(),
+        );
+        return BenchCheck { scale: f64::NAN, compared: 0, lines, failures };
+    }
+    let scale = (ratios.iter().map(|(_, r)| r.ln()).sum::<f64>() / ratios.len() as f64).exp();
+    for (fi, ratio) in &ratios {
+        let (name, f_med) = &fresh[*fi];
+        let rel = ratio / scale;
+        let verdict = if rel > 1.0 + tol { "REGRESSED" } else { "ok" };
+        lines.push(format!(
+            "{name:<40} fresh {f_med:>12.1}ns  ratio {ratio:>6.2}x  vs-suite {rel:>5.2}x  {verdict}"
+        ));
+        if rel > 1.0 + tol {
+            failures.push(format!(
+                "{name}: {rel:.2}x vs the suite scale ({:.0}% tolerance)",
+                tol * 100.0
+            ));
+        }
+    }
+    BenchCheck { scale, compared: ratios.len(), lines, failures }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,16 +308,21 @@ mod tests {
         assert!(fmt_ns(5_000_000.0).ends_with("ms"));
     }
 
+    fn result(name: &str, median_ns: f64) -> BenchResult {
+        BenchResult {
+            name: name.to_string(),
+            iters: 4096,
+            mean_ns: median_ns,
+            median_ns,
+            p10_ns: median_ns * 0.9,
+            p90_ns: median_ns * 1.1,
+            units_per_iter: 1.0,
+        }
+    }
+
     #[test]
     fn json_report_is_parseable_and_complete() {
-        let results = vec![BenchResult {
-            name: "distance_matrix_n8".to_string(),
-            iters: 4096,
-            mean_ns: 120.5,
-            median_ns: 118.0,
-            p10_ns: 100.0,
-            p90_ns: 150.0,
-        }];
+        let results = vec![result("distance_matrix_n8", 118.0).with_units(512.0)];
         let path = std::env::temp_dir()
             .join(format!("BENCH_test-{}.json", std::process::id()));
         write_json_report(&path, "hotpath", &results).unwrap();
@@ -217,6 +335,64 @@ mod tests {
         assert_eq!(case.get("name").unwrap().as_str(), Some("distance_matrix_n8"));
         assert_eq!(case.get("median_ns").unwrap().as_f64(), Some(118.0));
         assert_eq!(case.get("trials").unwrap().as_usize(), Some(4096));
+        assert_eq!(case.get("units_per_iter").unwrap().as_f64(), Some(512.0));
+        assert_eq!(case.get("median_ns_per_unit").unwrap().as_f64(), Some(118.0 / 512.0));
+        // Round-trip through the baseline loader.
+        let medians = load_report_medians(&path).unwrap();
+        assert_eq!(medians, vec![("distance_matrix_n8".to_string(), 118.0)]);
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn unit_accounting() {
+        let r = result("batched", 1024.0).with_units(512.0);
+        assert_eq!(r.median_ns_per_unit(), 2.0);
+        assert_eq!(r.units_per_s(), 512.0 * 1e9 / 1024.0);
+        // Unbatched results stay per-iteration.
+        assert_eq!(result("scalar", 10.0).median_ns_per_unit(), 10.0);
+    }
+
+    fn pairs(xs: &[(&str, f64)]) -> Vec<(String, f64)> {
+        xs.iter().map(|(n, m)| (n.to_string(), *m)).collect()
+    }
+
+    #[test]
+    fn regression_check_passes_identical_and_uniformly_scaled_runs() {
+        let base = pairs(&[("a", 100.0), ("b", 2000.0), ("c", 50.0)]);
+        let same = check_regressions(&base, &base, 0.25);
+        assert!(same.failures.is_empty(), "{:?}", same.failures);
+        assert!((same.scale - 1.0).abs() < 1e-12);
+        assert_eq!(same.compared, 3);
+        // A uniformly 3x slower machine is not a regression.
+        let slower = pairs(&[("a", 300.0), ("b", 6000.0), ("c", 150.0)]);
+        let scaled = check_regressions(&base, &slower, 0.25);
+        assert!(scaled.failures.is_empty(), "{:?}", scaled.failures);
+        assert!((scaled.scale - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn regression_check_flags_a_single_regressed_case() {
+        let base = pairs(&[("a", 100.0), ("b", 100.0), ("c", 100.0), ("d", 100.0)]);
+        // One case 2x slower while its peers hold: scale ≈ 2^(1/4) ≈ 1.19,
+        // rel for 'c' ≈ 1.68 > 1.25.
+        let fresh = pairs(&[("a", 100.0), ("b", 100.0), ("c", 200.0), ("d", 100.0)]);
+        let check = check_regressions(&base, &fresh, 0.25);
+        assert_eq!(check.failures.len(), 1, "{:?}", check.failures);
+        assert!(check.failures[0].starts_with("c:"), "{:?}", check.failures);
+        assert_eq!(check.lines.len(), 4);
+    }
+
+    #[test]
+    fn regression_check_fails_with_no_common_cases() {
+        let base = pairs(&[("old_name", 100.0)]);
+        let fresh = pairs(&[("new_name", 100.0)]);
+        let check = check_regressions(&base, &fresh, 0.25);
+        assert_eq!(check.compared, 0);
+        assert_eq!(check.failures.len(), 1);
+        // Fresh-only / baseline-only cases are ignored when others overlap.
+        let fresh2 = pairs(&[("old_name", 110.0), ("new_name", 5.0)]);
+        let check2 = check_regressions(&base, &fresh2, 0.25);
+        assert_eq!(check2.compared, 1);
+        assert!(check2.failures.is_empty(), "{:?}", check2.failures);
     }
 }

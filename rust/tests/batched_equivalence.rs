@@ -1,0 +1,123 @@
+//! Batched-vs-scalar bit-identity: the SoA population kernel
+//! (`arbiter::batch` via `RustIdeal::min_trs_multi`) must reproduce the
+//! trial-at-a-time oracle (`RustIdeal::min_trs_multi_scalar`) **bit for
+//! bit** — per policy, under every scenario family, and for any
+//! chunk-size / thread-count combination. This is the contract that lets
+//! the hot path change shape without moving a single golden digest.
+
+use wdm_arbiter::arbiter::Policy;
+use wdm_arbiter::config::SystemConfig;
+use wdm_arbiter::model::system::SystemSampler;
+use wdm_arbiter::model::{CorrelationConfig, Distribution, FaultsConfig};
+use wdm_arbiter::montecarlo::{batched_min_trs_multi, IdealEvaluator, RustIdeal};
+
+const ALL: [Policy; 3] = [Policy::LtA, Policy::LtC, Policy::LtD];
+
+/// One representative config per scenario family (mirrors the model-layer
+/// determinism suite): distances behave differently under heavy faults
+/// (infinite rows), correlation (shared structure) and non-uniform draws.
+fn scenario_configs() -> Vec<(&'static str, SystemConfig)> {
+    let mut out = vec![("default", SystemConfig::default())];
+    let mut gauss = SystemConfig::default();
+    gauss.scenario.distribution = Distribution::by_name("trimmed-gaussian").unwrap();
+    out.push(("trimmed-gaussian", gauss));
+    let mut bimodal = SystemConfig::default();
+    bimodal.scenario.distribution = Distribution::by_name("bimodal").unwrap();
+    out.push(("bimodal", bimodal));
+    let mut corr = SystemConfig::default();
+    corr.scenario.correlation = CorrelationConfig { gradient_nm: 2.0, corr_len: 3.0 };
+    out.push(("correlated", corr));
+    let mut faulty = SystemConfig::default();
+    faulty.scenario.faults = FaultsConfig {
+        dead_tone_p: 0.2,
+        dark_ring_p: 0.2,
+        weak_ring_p: 0.2,
+        weak_tr_factor: 0.5,
+    };
+    out.push(("faulty", faulty));
+    out
+}
+
+fn assert_bits_eq(got: &[Vec<f64>], want: &[Vec<f64>], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: policy count");
+    for (k, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(g.len(), w.len(), "{ctx}: policy {k} trial count");
+        for (t, (a, b)) in g.iter().zip(w.iter()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{ctx}: policy {k} trial {t}: batched {a} vs scalar {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_matches_scalar_bitwise_across_scenarios() {
+    for (name, cfg) in scenario_configs() {
+        let sampler = SystemSampler::new(&cfg, 9, 11, 2024);
+        let eval = RustIdeal { threads: 1 };
+        let scalar = eval.min_trs_multi_scalar(&cfg, &sampler, &ALL);
+        let batched = eval.min_trs_multi(&cfg, &sampler, &ALL);
+        assert_bits_eq(&batched, &scalar, name);
+        // Single-policy slices agree with the multi rows.
+        for (k, &p) in ALL.iter().enumerate() {
+            let one = eval.min_trs(&cfg, &sampler, p);
+            assert_bits_eq(
+                std::slice::from_ref(&one),
+                std::slice::from_ref(&scalar[k]),
+                &format!("{name}/{p:?} single"),
+            );
+        }
+    }
+}
+
+#[test]
+fn chunking_and_threading_never_change_results() {
+    // Chunk size and worker count are pure performance knobs: every
+    // combination must produce the exact sequential bits (the golden and
+    // determinism suites depend on this through `RustIdeal`).
+    let cfg = SystemConfig::default();
+    let sampler = SystemSampler::new(&cfg, 10, 13, 4242); // 130 trials
+    let reference = RustIdeal { threads: 1 }.min_trs_multi_scalar(&cfg, &sampler, &ALL);
+    for chunk in [1usize, 7, 64, 4096] {
+        for threads in [1usize, 2, 5] {
+            let got = batched_min_trs_multi(&cfg, &sampler, &ALL, threads, chunk);
+            assert_bits_eq(&got, &reference, &format!("chunk={chunk} threads={threads}"));
+        }
+    }
+}
+
+#[test]
+fn scalar_path_is_thread_invariant_too() {
+    // The oracle itself must not depend on its worker count, otherwise the
+    // equivalence above would be comparing against a moving target.
+    let cfg = SystemConfig::default();
+    let sampler = SystemSampler::new(&cfg, 8, 8, 7);
+    let one = RustIdeal { threads: 1 }.min_trs_multi_scalar(&cfg, &sampler, &ALL);
+    let four = RustIdeal { threads: 4 }.min_trs_multi_scalar(&cfg, &sampler, &ALL);
+    assert_bits_eq(&four, &one, "scalar threads=4 vs 1");
+}
+
+#[test]
+fn heavy_fault_populations_stay_exact() {
+    // Near-certain dead tones / dark rings produce infinite rows and
+    // columns — the LtA prefilter's trickiest regime (`LB = ∞` must be
+    // declared feasible, matching the scalar bottleneck's `∞`).
+    let mut cfg = SystemConfig::default();
+    cfg.scenario.faults = FaultsConfig {
+        dead_tone_p: 0.6,
+        dark_ring_p: 0.6,
+        weak_ring_p: 0.3,
+        weak_tr_factor: 0.5,
+    };
+    let sampler = SystemSampler::new(&cfg, 12, 12, 555);
+    let eval = RustIdeal { threads: 2 };
+    let scalar = eval.min_trs_multi_scalar(&cfg, &sampler, &ALL);
+    let batched = eval.min_trs_multi(&cfg, &sampler, &ALL);
+    assert_bits_eq(&batched, &scalar, "heavy-faults");
+    assert!(
+        scalar[0].iter().any(|v| v.is_infinite()),
+        "regime check: some trials should be unarbitrable at any range"
+    );
+}

@@ -20,8 +20,9 @@ use wdm_arbiter::arbiter::Policy;
 use wdm_arbiter::config::SystemConfig;
 use wdm_arbiter::coordinator::sweep::{ConfigAxis, Measure, SweepOutput, SweepSpec};
 use wdm_arbiter::coordinator::{Backend, RunOptions};
+use wdm_arbiter::model::system::SystemSampler;
 use wdm_arbiter::montecarlo::scheduler::run_sweep;
-use wdm_arbiter::montecarlo::{CancelToken, RustIdeal, TrialEngine};
+use wdm_arbiter::montecarlo::{CancelToken, IdealEvaluator, RustIdeal, TrialEngine};
 use wdm_arbiter::oblivious::Scheme;
 use wdm_arbiter::util::json::Json;
 
@@ -127,6 +128,33 @@ fn golden_specs() -> Vec<SweepSpec> {
     ]
 }
 
+/// The scalar trial-at-a-time oracle as an engine backend. `RustIdeal`
+/// itself now routes through the batched SoA kernel
+/// (`arbiter::batch`), so pinning *both* paths to the same digests is what
+/// proves the hot-path restructuring moved zero bits.
+struct ScalarIdeal;
+
+impl IdealEvaluator for ScalarIdeal {
+    fn min_trs(&self, cfg: &SystemConfig, sampler: &SystemSampler, policy: Policy) -> Vec<f64> {
+        self.min_trs_multi(cfg, sampler, std::slice::from_ref(&policy))
+            .pop()
+            .expect("one policy requested")
+    }
+
+    fn min_trs_multi(
+        &self,
+        cfg: &SystemConfig,
+        sampler: &SystemSampler,
+        policies: &[Policy],
+    ) -> Vec<Vec<f64>> {
+        RustIdeal { threads: 1 }.min_trs_multi_scalar(cfg, sampler, policies)
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-f64-scalar"
+    }
+}
+
 fn opts(threads: usize) -> RunOptions {
     // 8×8 = 64 trials per column, the ISSUE's small-trial-count pin shape.
     RunOptions { n_lasers: 8, n_rows: 8, threads, ..RunOptions::fast() }
@@ -177,6 +205,18 @@ fn golden_panel_digests() {
         let engine = TrialEngine::new(&ideal, 1);
         spec.run(&engine, &opts(1))
     });
+
+    // Batched-vs-scalar agreement: the sequential digests above ran the
+    // batched `RustIdeal`; recompute every panel through the scalar oracle
+    // and require identity before consulting the pin file at all.
+    let scalar = compute_digests(|spec| {
+        let engine = TrialEngine::new(&ScalarIdeal, 1);
+        spec.run(&engine, &opts(1))
+    });
+    assert_eq!(
+        scalar, sequential,
+        "batched RustIdeal drifted from the scalar trial-at-a-time oracle"
+    );
 
     // Scheduler agreement at every thread count (incl. the CI matrix's).
     let mut threads = vec![1, 2, 8];
