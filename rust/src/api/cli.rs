@@ -15,12 +15,15 @@ use crate::util::cli::Args;
 use crate::util::values::parse_values;
 
 /// Map parsed argv to a job. `args.positionals[0]` must be one of
-/// `run | sweep | arbitrate | show-config` (`list`, `serve` and `batch`
-/// are handled by the binary itself — they are not jobs).
+/// `run | sweep | fleet | arbitrate | show-config` (`list`, `serve` and
+/// `batch` are handled by the binary itself — they are not jobs). A
+/// `fleet` invocation is an ordinary sweep job; the worker topology
+/// (`--workers`, `--local-fallback`) configures the *service*, not the
+/// request, so the same job runs unchanged on any fleet size.
 pub fn job_from_args(args: &Args) -> Result<JobRequest, String> {
     match args.positionals.first().map(String::as_str) {
         Some("run") => run_from_args(args),
-        Some("sweep") => sweep_from_args(args),
+        Some("sweep") | Some("fleet") => sweep_from_args(args),
         Some("arbitrate") => arbitrate_from_args(args),
         Some("show-config") => Ok(JobRequest::ShowConfig {
             cases: args.flag("cases"),
@@ -183,6 +186,13 @@ mod tests {
         assert_eq!(thresholds, None);
         assert_eq!(measures, vec![Measure::Afp(Policy::LtC)]);
         assert!(config.permuted);
+    }
+
+    #[test]
+    fn fleet_maps_to_the_same_sweep_job() {
+        let sweep = job_from_args(&argv(&["sweep", "--axis", "ring-local", "--values", "1,2"]));
+        let fleet = job_from_args(&argv(&["fleet", "--axis", "ring-local", "--values", "1,2"]));
+        assert_eq!(sweep.unwrap(), fleet.unwrap());
     }
 
     #[test]

@@ -66,4 +66,7 @@ pub use request::{ConfigSpec, JobOptions, JobRequest};
 pub use response::{JobEvent, JobResponse, Panel};
 pub use service::ArbiterService;
 pub use session::{ChannelSink, EventSink, FnSink, JobHandle, JobId, JobStatus, NullSink};
-pub use wire::{serve_connection, serve_listen, ConnOutcome};
+pub use wire::{
+    serve_connection, serve_listen, serve_listen_with, ConnOutcome, ListenCtl, WireListener,
+    PROTOCOL_VERSION,
+};

@@ -429,6 +429,36 @@ pub enum JobRequest {
         config: ConfigSpec,
         options: JobOptions,
     },
+    /// One sweep column evaluated on behalf of a fleet coordinator
+    /// ([`crate::fleet`]): the full sweep geometry plus the column index,
+    /// so the worker re-derives the exact per-column seed
+    /// ([`crate::coordinator::sweep::column_seed`]) and returns cells that
+    /// are bit-identical to a local run. `fingerprint` is the coordinator's
+    /// config fingerprint digest — workers verify it before evaluating so a
+    /// config drift between nodes fails loudly instead of merging silently
+    /// wrong columns.
+    Column {
+        /// Seed tag of the parent sweep.
+        tag: String,
+        /// Seed lane of the parent sweep.
+        lane: usize,
+        axis: ConfigAxis,
+        /// The parent sweep's *complete* column value list (seeds and
+        /// outputs are indexed against it); this job evaluates `values[ix]`.
+        values: Vec<f64>,
+        ix: usize,
+        /// λ̄_TR threshold rows (empty for curve-only sweeps).
+        thresholds: Vec<f64>,
+        measures: Vec<Measure>,
+        config: ConfigSpec,
+        /// Base RNG seed of the parent sweep (not the derived column seed).
+        seed: u64,
+        lasers: usize,
+        rows: usize,
+        /// FNV-1a digest of the resolved column config's fingerprint
+        /// string; empty = skip the check.
+        fingerprint: String,
+    },
     /// One arbitration trial end-to-end (`wdm-arbiter arbitrate`).
     Arbitrate { scheme: Scheme, tr_nm: f64, seed: u64, config: ConfigSpec },
     /// Resolved configuration / Table-II cases (`wdm-arbiter show-config`).
@@ -445,6 +475,7 @@ impl JobRequest {
         match self {
             JobRequest::RunExperiment { .. } => "run",
             JobRequest::Sweep { .. } => "sweep",
+            JobRequest::Column { .. } => "column",
             JobRequest::Arbitrate { .. } => "arbitrate",
             JobRequest::ShowConfig { .. } => "show-config",
             JobRequest::Batch { .. } => "batch",
@@ -456,6 +487,7 @@ impl JobRequest {
         match self {
             JobRequest::RunExperiment { id, .. } => id.clone(),
             JobRequest::Sweep { axis, .. } => axis.name().to_string(),
+            JobRequest::Column { tag, ix, .. } => format!("{tag}[{ix}]"),
             JobRequest::Arbitrate { scheme, .. } => scheme.name().to_string(),
             JobRequest::ShowConfig { .. } => "config".to_string(),
             JobRequest::Batch { jobs } => format!("{} jobs", jobs.len()),
@@ -487,6 +519,37 @@ impl JobRequest {
                 pairs.push(("options", options.to_json()));
                 Json::obj(pairs)
             }
+            JobRequest::Column {
+                tag,
+                lane,
+                axis,
+                values,
+                ix,
+                thresholds,
+                measures,
+                config,
+                seed,
+                lasers,
+                rows,
+                fingerprint,
+            } => Json::obj(vec![
+                ("type", Json::str("column")),
+                ("tag", Json::str(tag.clone())),
+                ("lane", Json::num(*lane as f64)),
+                ("axis", Json::str(axis.name())),
+                ("values", Json::arr_f64(values)),
+                ("ix", Json::num(*ix as f64)),
+                ("tr", Json::arr_f64(thresholds)),
+                (
+                    "measures",
+                    Json::Arr(measures.iter().map(|m| Json::str(m.spec())).collect()),
+                ),
+                ("config", config.to_json()),
+                ("seed", Json::num(*seed as f64)),
+                ("lasers", Json::num(*lasers as f64)),
+                ("rows", Json::num(*rows as f64)),
+                ("fingerprint", Json::str(fingerprint.clone())),
+            ]),
             JobRequest::Arbitrate { scheme, tr_nm, seed, config } => Json::obj(vec![
                 ("type", Json::str("arbitrate")),
                 ("scheme", Json::str(scheme.name())),
@@ -514,7 +577,8 @@ impl JobRequest {
     /// Parse the canonical JSON form.
     pub fn from_json(j: &Json) -> Result<JobRequest, String> {
         let ty = j.get("type").and_then(Json::as_str).ok_or_else(|| {
-            "job: missing 'type' (run | sweep | arbitrate | show-config | batch)".to_string()
+            "job: missing 'type' (run | sweep | column | arbitrate | show-config | batch)"
+                .to_string()
         })?;
         match ty {
             "run" => {
@@ -553,6 +617,79 @@ impl JobRequest {
                     measures,
                     config: config_field(j)?,
                     options: options_field(j)?,
+                })
+            }
+            "column" => {
+                check_keys(
+                    j,
+                    &[
+                        "type", "tag", "lane", "axis", "values", "ix", "tr", "measures",
+                        "config", "seed", "lasers", "rows", "fingerprint",
+                    ],
+                )?;
+                let need_usize = |key: &str| -> Result<usize, String> {
+                    j.get(key)
+                        .ok_or_else(|| format!("column: missing '{key}'"))?
+                        .as_usize()
+                        .ok_or_else(|| format!("column.{key}: expected an integer"))
+                };
+                let axis_name = j
+                    .get("axis")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| "column: missing 'axis'".to_string())?;
+                let axis = ConfigAxis::by_name(axis_name)
+                    .ok_or_else(|| format!("column: unknown axis '{axis_name}'"))?;
+                let values = values_field(
+                    j.get("values").ok_or_else(|| "column: missing 'values'".to_string())?,
+                    "values",
+                )?;
+                let ix = need_usize("ix")?;
+                if ix >= values.len() {
+                    return Err(format!(
+                        "column: ix {ix} out of range for {} values",
+                        values.len()
+                    ));
+                }
+                let thresholds = match j.get("tr") {
+                    Some(v) => values_field(v, "tr")?,
+                    None => Vec::new(),
+                };
+                let measures = j
+                    .get("measures")
+                    .map(measures_field)
+                    .transpose()?
+                    .ok_or_else(|| "column: missing 'measures'".to_string())?;
+                let seed = j
+                    .get("seed")
+                    .ok_or_else(|| "column: missing 'seed'".to_string())?
+                    .as_u64()
+                    .ok_or_else(|| "column.seed: expected an integer".to_string())?;
+                Ok(JobRequest::Column {
+                    tag: j
+                        .get("tag")
+                        .and_then(Json::as_str)
+                        .unwrap_or("sweep")
+                        .to_string(),
+                    lane: match j.get("lane") {
+                        Some(v) => v
+                            .as_usize()
+                            .ok_or_else(|| "column.lane: expected an integer".to_string())?,
+                        None => 0,
+                    },
+                    axis,
+                    values,
+                    ix,
+                    thresholds,
+                    measures,
+                    config: config_field(j)?,
+                    seed,
+                    lasers: need_usize("lasers")?,
+                    rows: need_usize("rows")?,
+                    fingerprint: j
+                        .get("fingerprint")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
                 })
             }
             "arbitrate" => {
@@ -603,7 +740,7 @@ impl JobRequest {
                 Ok(JobRequest::Batch { jobs })
             }
             other => Err(format!(
-                "job: unknown type '{other}' (run | sweep | arbitrate | show-config | batch)"
+                "job: unknown type '{other}' (run | sweep | column | arbitrate | show-config | batch)"
             )),
         }
     }
@@ -860,6 +997,20 @@ mod tests {
                 config: ConfigSpec::default(),
                 options: JobOptions::default(),
             },
+            JobRequest::Column {
+                tag: "sweep".to_string(),
+                lane: 2,
+                axis: ConfigAxis::RingLocalNm,
+                values: vec![1.12, 2.24, 4.48],
+                ix: 1,
+                thresholds: vec![2.0, 6.0],
+                measures: vec![Measure::Afp(Policy::LtC), Measure::Cafp(Scheme::VtRsSsm)],
+                config: ConfigSpec { path: None, inline_toml: None, permuted: true },
+                seed: 0xC0FFEE,
+                lasers: 8,
+                rows: 8,
+                fingerprint: "00deadbeef001234".to_string(),
+            },
             JobRequest::Arbitrate {
                 scheme: Scheme::Sequential,
                 tr_nm: 5.5,
@@ -936,6 +1087,22 @@ mod tests {
             .is_err());
         assert!(JobRequest::from_json_str(
             r#"{"type":"sweep","axis":"ring-local","values":[1],"options":{"bogus":1}}"#
+        )
+        .is_err());
+        // Column jobs: ix must address a real column; geometry is required.
+        assert!(JobRequest::from_json_str(
+            r#"{"type":"column","axis":"ring-local","values":[1,2],"ix":2,
+                "measures":"afp:ltc","seed":0,"lasers":4,"rows":4}"#
+        )
+        .is_err());
+        assert!(JobRequest::from_json_str(
+            r#"{"type":"column","axis":"ring-local","values":[1,2],"ix":0,
+                "seed":0,"lasers":4,"rows":4}"#
+        )
+        .is_err());
+        assert!(JobRequest::from_json_str(
+            r#"{"type":"column","axis":"ring-local","values":[1],"ix":0,
+                "measures":"afp:ltc","seed":0,"lasers":4,"rows":4,"oops":1}"#
         )
         .is_err());
     }

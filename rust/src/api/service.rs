@@ -22,11 +22,14 @@ use crate::arbiter::{distance, ideal, Policy};
 use crate::config::presets::table2_cases;
 use crate::config::SystemConfig;
 use crate::coordinator::report::{ascii_heatmap, curve_table, write_csv_series, write_csv_shmoo};
-use crate::coordinator::sweep::{ConfigAxis, Measure, SweepOutput, SweepSpec};
+use crate::coordinator::sweep::{column_seed, ConfigAxis, Measure, SweepOutput, SweepSpec};
 use crate::coordinator::{run_experiment_quiet, Backend};
 use crate::experiments::{by_id, tr_sweep};
+use crate::fleet::FleetEvaluator;
 use crate::model::SystemUnderTest;
-use crate::montecarlo::{self, CancelToken, PopulationCache, SWEEP_CANCELED, TaskPool};
+use crate::montecarlo::{
+    self, fingerprint_digest, CancelToken, PopulationCache, SWEEP_CANCELED, TaskPool, TrialEngine,
+};
 use crate::oblivious::{run_scheme, Scheme};
 use crate::rng::Rng;
 use crate::util::json::Json;
@@ -65,6 +68,9 @@ struct ServiceCore {
     backend: Backend,
     threads: usize,
     cache: PopulationCache,
+    /// When present, sweep jobs shard their columns across worker nodes
+    /// (see [`crate::fleet`]); everything else still runs locally.
+    fleet: Option<FleetEvaluator>,
 }
 
 /// Default concurrent-job budget of the async front-end.
@@ -75,7 +81,12 @@ impl ArbiterService {
     /// their own (0 = all cores).
     pub fn new(backend: Backend, threads: usize) -> Self {
         Self {
-            core: Arc::new(ServiceCore { backend, threads, cache: PopulationCache::new() }),
+            core: Arc::new(ServiceCore {
+                backend,
+                threads,
+                cache: PopulationCache::new(),
+                fleet: None,
+            }),
             job_workers: DEFAULT_JOB_WORKERS,
             pool: OnceLock::new(),
             ids: JobIds::default(),
@@ -88,6 +99,23 @@ impl ArbiterService {
     pub fn with_job_workers(mut self, n: usize) -> Self {
         self.job_workers = n.max(1);
         self
+    }
+
+    /// Shard sweep jobs across a fleet of worker nodes. Must be called
+    /// before the service is shared (i.e. before the first async submit);
+    /// sweeps then dispatch via the [`FleetEvaluator`] while every other
+    /// job kind (and adaptive `--ci` sweeps, whose truncation decisions
+    /// are inherently sequential per column block) stays local.
+    pub fn with_fleet(mut self, fleet: FleetEvaluator) -> Self {
+        Arc::get_mut(&mut self.core)
+            .expect("with_fleet must be called before the service is shared")
+            .fleet = Some(fleet);
+        self
+    }
+
+    /// The fleet evaluator, when sweeps are dispatched remotely.
+    pub fn fleet(&self) -> Option<&FleetEvaluator> {
+        self.core.fleet.as_ref()
     }
 
     pub fn backend(&self) -> Backend {
@@ -185,6 +213,34 @@ impl ServiceCore {
                     sink,
                     cancel,
                 ),
+            JobRequest::Column {
+                tag,
+                lane,
+                axis,
+                values,
+                ix,
+                thresholds,
+                measures,
+                config,
+                seed,
+                lasers,
+                rows,
+                fingerprint,
+            } => self.column_job(
+                tag,
+                *lane,
+                *axis,
+                values,
+                *ix,
+                thresholds,
+                measures,
+                config,
+                *seed,
+                *lasers,
+                *rows,
+                fingerprint,
+                cancel,
+            ),
             JobRequest::Arbitrate { scheme, tr_nm, seed, config } => {
                 self.arbitrate_job(*scheme, *tr_nm, *seed, config)
             }
@@ -325,13 +381,22 @@ impl ServiceCore {
             });
         };
         // `cancel` reaches every column worker: a fired token stops the
-        // grid within one column and surfaces as SWEEP_CANCELED.
-        let run = montecarlo::scheduler::run_sweep(
+        // grid within one column and surfaces as SWEEP_CANCELED. Adaptive
+        // sweeps never dispatch to the fleet: truncation decisions depend
+        // on within-column sampling order, which the column wire form
+        // doesn't carry.
+        let remote: Option<&dyn montecarlo::RemoteColumns> = if adaptive {
+            None
+        } else {
+            self.fleet.as_ref().map(|f| f as &dyn montecarlo::RemoteColumns)
+        };
+        let run = montecarlo::scheduler::run_sweep_dispatched(
             &spec,
             &opts,
             &backend_tag,
             cache,
             cancel,
+            remote,
             &mut on_column,
         )?;
         let outs = run.outputs;
@@ -407,12 +472,102 @@ impl ServiceCore {
         summary.push_str(&format!("wrote {}\n", json_path.display()));
         files.push(json_path.display().to_string());
 
+        // Fleet bookkeeping goes in the *response* only — sweep.json stays
+        // byte-identical to a single-node run (that equality is what the
+        // fleet tests and CI smoke assert).
+        if let Some(fleet) = &self.fleet {
+            if let Some(stats) = fleet.last_run_stats() {
+                summary.push_str(&stats.summary_line());
+                meta.push(("fleet", stats.to_json()));
+            }
+        }
+
         let mut r = JobResponse::new("sweep", axis.name());
         r.backend = backend.to_string();
         r.summary = summary;
         r.files = files;
         r.panels = panels;
         r.data = Json::obj(meta);
+        Ok(r)
+    }
+
+    /// Evaluate one sweep column for a fleet coordinator. Rebuilds the
+    /// parent [`SweepSpec`] from the wire form, derives the column seed
+    /// from the *index* (exactly like the local scheduler), and returns
+    /// the cells in the lossless hex wire form — so the coordinator's
+    /// scatter is bit-identical to a single-node run. Always runs locally
+    /// (a fleet worker never re-shards), and shares the worker's own
+    /// population cache across repeated column submissions.
+    #[allow(clippy::too_many_arguments)]
+    fn column_job(
+        &self,
+        tag: &str,
+        lane: usize,
+        axis: ConfigAxis,
+        values: &[f64],
+        ix: usize,
+        thresholds: &[f64],
+        measures: &[Measure],
+        config: &ConfigSpec,
+        seed: u64,
+        lasers: usize,
+        rows: usize,
+        fingerprint: &str,
+        cancel: &CancelToken,
+    ) -> Result<JobResponse, String> {
+        // Columns are the fleet's unit of re-issue: a canceled token means
+        // the coordinator already gave up on this job.
+        if cancel.is_canceled() {
+            return Err(SWEEP_CANCELED.to_string());
+        }
+        if measures.is_empty() {
+            return Err("column: needs at least one measure".to_string());
+        }
+        if ix >= values.len() {
+            return Err(format!("column: index {ix} out of range ({} values)", values.len()));
+        }
+        let cfg = config.load()?;
+        let spec = SweepSpec::new(tag, cfg, axis, values.to_vec())
+            .lane(lane)
+            .thresholds(thresholds.to_vec())
+            .measures(measures.iter().copied());
+        let value = spec.values[ix];
+        let col_cfg = axis.apply(&spec.base, value);
+        col_cfg
+            .validate()
+            .map_err(|e| format!("column: {} = {value}: {e}", axis.name()))?;
+        // Cache-key handshake: both sides digest the resolved *column*
+        // config, so any drift (version skew, differing local config
+        // files) fails loudly before trials burn.
+        let local_fp = fingerprint_digest(&col_cfg);
+        if !fingerprint.is_empty() && local_fp != fingerprint {
+            return Err(format!(
+                "column: config fingerprint mismatch (coordinator {fingerprint}, \
+                 worker {local_fp}): nodes disagree on the resolved config"
+            ));
+        }
+        let policies = spec.column_policies();
+        let col_seed = column_seed(seed, &spec.tag, spec.lane, ix);
+        let eval = self.backend.evaluator(self.threads);
+        let engine = TrialEngine::new(eval.as_ref(), self.threads).with_cache(&self.cache);
+        let pop = engine.population(&col_cfg, lasers, rows, col_seed, &policies);
+        let col = spec.eval_column(&col_cfg, &pop, &engine);
+
+        let mut r = JobResponse::new("column", format!("{tag}[{ix}]"));
+        r.backend = eval.name().to_string();
+        r.summary = format!(
+            "column {ix}/{} ({} = {value}): {} trials\n",
+            values.len(),
+            axis.name(),
+            pop.n_trials()
+        );
+        r.data = Json::obj(vec![
+            ("ix", Json::num(ix as f64)),
+            ("value", Json::num(value)),
+            ("n_trials", Json::num(pop.n_trials() as f64)),
+            ("fingerprint", Json::str(local_fp)),
+            ("cells", col.to_json()),
+        ]);
         Ok(r)
     }
 

@@ -31,6 +31,7 @@ use std::collections::HashMap;
 use std::io::{BufRead, Write};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::api::request::JobRequest;
 use crate::api::response::{JobEvent, JobResponse};
@@ -40,6 +41,19 @@ use crate::util::json::Json;
 
 /// Longest payload echo attached to a malformed-line error.
 const MAX_ECHO_CHARS: usize = 120;
+
+/// Envelope protocol version, negotiated by the `hello` control. Bump on
+/// any incompatible change to the envelope grammar or job wire forms so
+/// fleet coordinators fail fast with a structured error instead of a parse
+/// failure mid-sweep.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Job/control kinds this server answers — reported in the `hello`
+/// response so coordinators can check for `column` support up front.
+pub const CAPABILITIES: &[&str] = &[
+    "run", "sweep", "arbitrate", "show-config", "batch", "column", "cancel", "status", "hello",
+    "shutdown",
+];
 
 /// One parsed input envelope.
 #[derive(Debug, Clone, PartialEq)]
@@ -52,6 +66,10 @@ pub enum WireIn {
     Status { id: Json, job: Json },
     /// `{"id": X, "control": "shutdown"}`.
     Shutdown { id: Json },
+    /// `{"id": X, "control": "hello", "version": N}` — protocol handshake.
+    /// `version` is optional; when present it must match
+    /// [`PROTOCOL_VERSION`] or the server answers with a structured error.
+    Hello { id: Json, version: Option<u64> },
 }
 
 /// Truncated single-line echo of a malformed payload (char-safe).
@@ -77,7 +95,7 @@ pub fn parse_envelope(line: &str, line_no: usize) -> Result<WireIn, String> {
         return fail("expected an envelope object {\"id\": ..., \"request\"|\"control\": ...}");
     };
     for (k, _) in pairs {
-        if !matches!(k.as_str(), "id" | "request" | "control" | "job") {
+        if !matches!(k.as_str(), "id" | "request" | "control" | "job" | "version") {
             return fail(&format!("unknown envelope key '{k}'"));
         }
     }
@@ -96,6 +114,9 @@ pub fn parse_envelope(line: &str, line_no: usize) -> Result<WireIn, String> {
             if j.get("job").is_some() {
                 return fail("'job' only applies to cancel/status controls");
             }
+            if j.get("version").is_some() {
+                return fail("'version' only applies to the hello control");
+            }
             let job =
                 JobRequest::from_json(req).map_err(|e| line_error(line, line_no, &e))?;
             Ok(WireIn::Submit { id, job })
@@ -103,8 +124,13 @@ pub fn parse_envelope(line: &str, line_no: usize) -> Result<WireIn, String> {
         (None, Some(ctl)) => {
             let name = match ctl.as_str() {
                 Some(s) => s,
-                None => return fail("'control' must be \"cancel\", \"status\" or \"shutdown\""),
+                None => {
+                    return fail("'control' must be \"hello\", \"cancel\", \"status\" or \"shutdown\"")
+                }
             };
+            if name != "hello" && j.get("version").is_some() {
+                return fail("'version' only applies to the hello control");
+            }
             let job_ref = || match j.get("job") {
                 Some(job @ (Json::Str(_) | Json::Num(_))) => Ok(job.clone()),
                 _ => Err(line_error(
@@ -122,12 +148,57 @@ pub fn parse_envelope(line: &str, line_no: usize) -> Result<WireIn, String> {
                     }
                     Ok(WireIn::Shutdown { id })
                 }
+                "hello" => {
+                    if j.get("job").is_some() {
+                        return fail("hello takes no 'job'");
+                    }
+                    let version = match j.get("version") {
+                        None => None,
+                        Some(v) => match v.as_u64() {
+                            Some(n) => Some(n),
+                            None => return fail("hello 'version' must be a non-negative integer"),
+                        },
+                    };
+                    Ok(WireIn::Hello { id, version })
+                }
                 other => fail(&format!(
-                    "unknown control '{other}' (cancel | status | shutdown)"
+                    "unknown control '{other}' (hello | cancel | status | shutdown)"
                 )),
             }
         }
         (None, None) => fail("envelope needs 'request' or 'control'"),
+    }
+}
+
+/// Answer one `hello` control: protocol + release versions and the
+/// capability list, or a structured error when the client pins a different
+/// protocol version. Either way the connection stays usable — mismatched
+/// coordinators get a diagnosable response instead of a parse failure
+/// three envelopes later.
+fn hello_response(version: Option<u64>) -> JobResponse {
+    match version {
+        Some(v) if v != PROTOCOL_VERSION => {
+            let mut r = JobResponse::failure(
+                "hello",
+                "server",
+                format!("protocol version mismatch: client speaks {v}, server speaks {PROTOCOL_VERSION}"),
+            );
+            r.data = Json::obj(vec![("protocol", Json::num(PROTOCOL_VERSION as f64))]);
+            r
+        }
+        _ => {
+            let mut r = JobResponse::new("hello", "server");
+            r.summary = format!("protocol {PROTOCOL_VERSION}, release {}\n", crate::VERSION);
+            r.data = Json::obj(vec![
+                ("protocol", Json::num(PROTOCOL_VERSION as f64)),
+                ("release", Json::str(crate::VERSION)),
+                (
+                    "capabilities",
+                    Json::Arr(CAPABILITIES.iter().map(|c| Json::str(*c)).collect()),
+                ),
+            ]);
+            r
+        }
     }
 }
 
@@ -305,6 +376,9 @@ pub fn serve_connection(
                 };
                 write_line(&out, &envelope(&id, "response", resp.to_json()));
             }
+            Ok(WireIn::Hello { id, version }) => {
+                write_line(&out, &envelope(&id, "response", hello_response(version).to_json()));
+            }
             Ok(WireIn::Shutdown { id }) => {
                 let mut resp = JobResponse::new("shutdown", "server");
                 resp.summary = "draining in-flight jobs, then shutting down\n".to_string();
@@ -331,74 +405,159 @@ pub fn serve_connection(
     }
 }
 
-/// Multi-client TCP front-end: bind `addr`, print `listening on HOST:PORT`
-/// (so `--listen 127.0.0.1:0` callers can discover the port), and serve
-/// each client on its own thread. All connections share `service` — one
-/// scheduler, one job executor, one population cache. A `shutdown` control
-/// from any client stops the accept loop and unblocks every other open
-/// connection's reader (via `TcpStream::shutdown(Read)`), so each drains
-/// its in-flight jobs and closes; the function returns once all have.
-pub fn serve_listen(service: &ArbiterService, addr: &str) -> Result<(), String> {
-    let listener = std::net::TcpListener::bind(addr)
-        .map_err(|e| format!("serve --listen {addr}: {e}"))?;
-    let local = listener
-        .local_addr()
-        .map_err(|e| format!("serve --listen {addr}: {e}"))?;
-    println!("listening on {local}");
-    let _ = std::io::stdout().flush();
-    let shutdown = AtomicBool::new(false);
-    let shutdown = &shutdown;
-    // Read-halves of the open connections: a shutdown must reach clients
-    // that are idle-blocked in their readers, not just the one that sent
-    // it — otherwise the scope below never joins. Registration happens on
-    // the accept thread (before spawn); the registry mutex orders it
-    // against the shutdown broadcast, so no connection can miss both the
-    // broadcast and the flag check in its own thread.
-    let conns: Mutex<HashMap<u64, std::net::TcpStream>> = Mutex::new(HashMap::new());
-    let conns = &conns;
-    let mut next_conn = 0u64;
-    std::thread::scope(|s| {
-        for conn in listener.incoming() {
-            let Ok(stream) = conn else { continue };
-            // Covers both real clients racing the shutdown and the
-            // self-connection that wakes the accept loop below.
-            if shutdown.load(Ordering::Acquire) {
-                break;
+/// Shared stop-state of one listening server: the accept-loop flag plus
+/// the read-halves of every open connection (a shutdown must reach clients
+/// idle-blocked in their readers, not just the one that sent it).
+struct ListenShared {
+    shutdown: AtomicBool,
+    conns: Mutex<HashMap<u64, std::net::TcpStream>>,
+}
+
+/// Cloneable handle onto a running [`WireListener::serve`] loop, used to
+/// stop it from another thread (the fleet test harness, signal handlers).
+///
+/// `stop(false)` is the graceful path a client `shutdown` control takes:
+/// readers unblock, every connection drains its in-flight jobs and writes
+/// their responses before closing. `stop(true)` severs both stream halves
+/// — in-flight responses are lost mid-write, which is exactly how a
+/// crashed worker node looks to a fleet coordinator.
+#[derive(Clone)]
+pub struct ListenCtl {
+    local: std::net::SocketAddr,
+    shared: Arc<ListenShared>,
+}
+
+impl ListenCtl {
+    pub fn stop(&self, hard: bool) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        if let Ok(m) = self.shared.conns.lock() {
+            let how = if hard { std::net::Shutdown::Both } else { std::net::Shutdown::Read };
+            for c in m.values() {
+                let _ = c.shutdown(how);
             }
-            let conn_id = next_conn;
-            next_conn += 1;
-            if let Ok(clone) = stream.try_clone() {
-                if let Ok(mut m) = conns.lock() {
-                    m.insert(conn_id, clone);
-                }
-            }
-            s.spawn(move || {
-                if shutdown.load(Ordering::Acquire) {
-                    // Shutdown landed between accept and here: serve the
-                    // drain path immediately (reader sees EOF).
-                    let _ = stream.shutdown(std::net::Shutdown::Read);
-                }
-                let Ok(read_half) = stream.try_clone() else { return };
-                let reader = std::io::BufReader::new(read_half);
-                let outcome = serve_connection(service, reader, Box::new(stream));
-                if let Ok(mut m) = conns.lock() {
-                    m.remove(&conn_id);
-                }
-                if outcome == ConnOutcome::Shutdown {
-                    shutdown.store(true, Ordering::Release);
-                    // Unblock every other connection's reader; each drains
-                    // its in-flight jobs and closes.
-                    if let Ok(m) = conns.lock() {
-                        for c in m.values() {
-                            let _ = c.shutdown(std::net::Shutdown::Read);
-                        }
-                    }
-                    // Unblock accept() so the loop observes the flag.
-                    let _ = std::net::TcpStream::connect(local);
-                }
-            });
         }
-    });
+        // Unblock accept() so the loop observes the flag.
+        let _ = std::net::TcpStream::connect(self.local);
+    }
+}
+
+/// A bound multi-client TCP front-end, not yet serving. Splitting bind
+/// from serve lets callers learn the OS-assigned port (`addr:0`) and take
+/// a [`ListenCtl`] before the accept loop blocks the thread.
+pub struct WireListener {
+    listener: std::net::TcpListener,
+    local: std::net::SocketAddr,
+    /// Per-connection read timeout: a half-open or wedged client trips it
+    /// and its connection drains cleanly instead of pinning a thread
+    /// forever. `None` = block indefinitely (fleet workers keep long-lived
+    /// coordinator connections open between sweeps).
+    idle: Option<Duration>,
+    shared: Arc<ListenShared>,
+}
+
+impl WireListener {
+    pub fn bind(addr: &str, idle: Option<Duration>) -> Result<WireListener, String> {
+        let listener = std::net::TcpListener::bind(addr)
+            .map_err(|e| format!("serve --listen {addr}: {e}"))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| format!("serve --listen {addr}: {e}"))?;
+        Ok(WireListener {
+            listener,
+            local,
+            idle,
+            shared: Arc::new(ListenShared {
+                shutdown: AtomicBool::new(false),
+                conns: Mutex::new(HashMap::new()),
+            }),
+        })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.local
+    }
+
+    pub fn control(&self) -> ListenCtl {
+        ListenCtl { local: self.local, shared: Arc::clone(&self.shared) }
+    }
+
+    /// Serve each client on its own thread until a `shutdown` control or a
+    /// [`ListenCtl::stop`]. All connections share `service` — one
+    /// scheduler, one job executor, one population cache. Returns once the
+    /// accept loop has stopped and every connection has drained.
+    pub fn serve(&self, service: &ArbiterService) {
+        let shared = &self.shared;
+        let local = self.local;
+        let mut next_conn = 0u64;
+        std::thread::scope(|s| {
+            for conn in self.listener.incoming() {
+                let Ok(stream) = conn else { continue };
+                // Covers both real clients racing the shutdown and the
+                // self-connection that wakes the accept loop.
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break;
+                }
+                let _ = stream.set_read_timeout(self.idle);
+                let conn_id = next_conn;
+                next_conn += 1;
+                // Registration happens on the accept thread (before
+                // spawn); the registry mutex orders it against the
+                // shutdown broadcast, so no connection can miss both the
+                // broadcast and the flag check in its own thread.
+                if let Ok(clone) = stream.try_clone() {
+                    if let Ok(mut m) = shared.conns.lock() {
+                        m.insert(conn_id, clone);
+                    }
+                }
+                s.spawn(move || {
+                    if shared.shutdown.load(Ordering::Acquire) {
+                        // Shutdown landed between accept and here: serve
+                        // the drain path immediately (reader sees EOF).
+                        let _ = stream.shutdown(std::net::Shutdown::Read);
+                    }
+                    let Ok(read_half) = stream.try_clone() else { return };
+                    let reader = std::io::BufReader::new(read_half);
+                    // A tripped idle timeout surfaces as a read error,
+                    // which ends the reader loop and takes the normal
+                    // EOF-drain path.
+                    let outcome = serve_connection(service, reader, Box::new(stream));
+                    if let Ok(mut m) = shared.conns.lock() {
+                        m.remove(&conn_id);
+                    }
+                    if outcome == ConnOutcome::Shutdown {
+                        shared.shutdown.store(true, Ordering::Release);
+                        // Unblock every other connection's reader; each
+                        // drains its in-flight jobs and closes.
+                        if let Ok(m) = shared.conns.lock() {
+                            for c in m.values() {
+                                let _ = c.shutdown(std::net::Shutdown::Read);
+                            }
+                        }
+                        let _ = std::net::TcpStream::connect(local);
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// Bind + serve with the default (unbounded) connection idle timeout.
+/// Prints `listening on HOST:PORT` so `--listen 127.0.0.1:0` callers can
+/// discover the port.
+pub fn serve_listen(service: &ArbiterService, addr: &str) -> Result<(), String> {
+    serve_listen_with(service, addr, None)
+}
+
+/// [`serve_listen`] with a per-connection idle read timeout.
+pub fn serve_listen_with(
+    service: &ArbiterService,
+    addr: &str,
+    idle: Option<Duration>,
+) -> Result<(), String> {
+    let listener = WireListener::bind(addr, idle)?;
+    println!("listening on {}", listener.local_addr());
+    let _ = std::io::stdout().flush();
+    listener.serve(service);
     Ok(())
 }
 
@@ -420,6 +579,11 @@ mod tests {
         assert_eq!(st, WireIn::Status { id: Json::Num(2.0), job: Json::str("a") });
         let sd = parse_envelope(r#"{"id": 3, "control": "shutdown"}"#, 4).unwrap();
         assert_eq!(sd, WireIn::Shutdown { id: Json::Num(3.0) });
+
+        let h = parse_envelope(r#"{"id": 4, "control": "hello", "version": 1}"#, 5).unwrap();
+        assert_eq!(h, WireIn::Hello { id: Json::Num(4.0), version: Some(1) });
+        let h = parse_envelope(r#"{"id": 5, "control": "hello"}"#, 6).unwrap();
+        assert_eq!(h, WireIn::Hello { id: Json::Num(5.0), version: None });
     }
 
     #[test]
@@ -448,10 +612,66 @@ mod tests {
             r#"{"id": 1, "control": "cancel"}"#,
             r#"{"id": 1, "control": "shutdown", "job": 2}"#,
             r#"{"id": 1, "request": {"type": "show-config"}, "job": 2}"#,
+            r#"{"id": 1, "request": {"type": "show-config"}, "version": 1}"#,
+            r#"{"id": 1, "control": "cancel", "job": 2, "version": 1}"#,
+            r#"{"id": 1, "control": "hello", "job": 2}"#,
+            r#"{"id": 1, "control": "hello", "version": -3}"#,
+            r#"{"id": 1, "control": "hello", "version": "one"}"#,
             r#"[1, 2]"#,
         ] {
             assert!(parse_envelope(bad, 1).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn hello_negotiates_protocol_version() {
+        assert_eq!(PROTOCOL_VERSION, 1);
+        let ok = hello_response(Some(PROTOCOL_VERSION));
+        assert!(ok.ok);
+        let data = ok.data;
+        assert_eq!(data.get("protocol").unwrap().as_u64(), Some(PROTOCOL_VERSION));
+        assert_eq!(data.get("release").unwrap().as_str(), Some(crate::VERSION));
+        let caps = data.get("capabilities").unwrap().as_arr().unwrap();
+        assert!(caps.iter().any(|c| c.as_str() == Some("column")));
+
+        // No pinned version: answered permissively (inspect-only clients).
+        assert!(hello_response(None).ok);
+
+        // Mismatch: structured error naming both versions, not a parse
+        // failure; the response still carries the server's protocol.
+        let bad = hello_response(Some(99));
+        assert!(!bad.ok);
+        let err = bad.error.unwrap();
+        assert!(err.contains("client speaks 99"), "{err}");
+        assert!(err.contains(&format!("server speaks {PROTOCOL_VERSION}")), "{err}");
+        assert_eq!(bad.data.get("protocol").unwrap().as_u64(), Some(PROTOCOL_VERSION));
+    }
+
+    #[test]
+    fn idle_timeout_drains_wedged_connections() {
+        use std::io::{BufRead, BufReader};
+        let service = ArbiterService::new(Backend::Rust, 1);
+        let listener =
+            WireListener::bind("127.0.0.1:0", Some(Duration::from_millis(80))).unwrap();
+        let addr = listener.local_addr();
+        let ctl = listener.control();
+        std::thread::scope(|s| {
+            s.spawn(|| listener.serve(&service));
+            let stream = std::net::TcpStream::connect(addr).unwrap();
+            stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            let mut w = stream.try_clone().unwrap();
+            writeln!(w, r#"{{"id": 1, "control": "hello", "version": 1}}"#).unwrap();
+            let mut reader = BufReader::new(stream);
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("\"ok\":true"), "{line}");
+            // Now go silent: the server-side idle timeout must close the
+            // connection (EOF here) instead of pinning its thread forever.
+            line.clear();
+            let n = reader.read_line(&mut line).unwrap();
+            assert_eq!(n, 0, "expected server-side close, got: {line}");
+            ctl.stop(false);
+        });
     }
 
     /// Drive a whole connection in memory: two pipelined jobs, a status

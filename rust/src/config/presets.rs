@@ -106,6 +106,58 @@ pub fn system_config_from_toml(text: &str) -> Result<SystemConfig, String> {
     Ok(cfg)
 }
 
+/// Render a resolved [`SystemConfig`] as TOML text that
+/// [`system_config_from_toml`] parses back to the *same* config, bit for
+/// bit (f64s print in Rust's shortest-round-trip form, orderings as
+/// explicit permutations). Fleet coordinators ship this inline with every
+/// column job so worker nodes never depend on the coordinator's local
+/// config files.
+pub fn system_config_to_toml(cfg: &SystemConfig) -> String {
+    fn num(x: f64) -> String {
+        format!("{x:?}")
+    }
+    fn order(o: &SpectralOrdering) -> String {
+        let items: Vec<String> = o.as_slice().iter().map(|i| i.to_string()).collect();
+        format!("[{}]", items.join(", "))
+    }
+    let mut t = String::new();
+    t.push_str("[grid]\n");
+    t.push_str(&format!("n_ch = {}\n", cfg.grid.n_ch));
+    t.push_str(&format!("spacing_nm = {}\n", num(cfg.grid.spacing_nm)));
+    t.push_str("[variation]\n");
+    t.push_str(&format!("grid_offset_nm = {}\n", num(cfg.variation.grid_offset_nm)));
+    t.push_str(&format!("laser_local_frac = {}\n", num(cfg.variation.laser_local_frac)));
+    t.push_str(&format!("ring_local_nm = {}\n", num(cfg.variation.ring_local_nm)));
+    t.push_str(&format!("fsr_frac = {}\n", num(cfg.variation.fsr_frac)));
+    t.push_str(&format!("tr_frac = {}\n", num(cfg.variation.tr_frac)));
+    t.push_str("[design]\n");
+    t.push_str(&format!("ring_bias_nm = {}\n", num(cfg.ring_bias_nm)));
+    t.push_str(&format!("fsr_mean_nm = {}\n", num(cfg.fsr_mean_nm)));
+    t.push_str("[orders]\n");
+    t.push_str(&format!("pre_fab = {}\n", order(&cfg.pre_fab_order)));
+    t.push_str(&format!("target = {}\n", order(&cfg.target_order)));
+    t.push_str("[scenario]\n");
+    t.push_str(&format!("distribution = \"{}\"\n", cfg.scenario.distribution.name()));
+    match cfg.scenario.distribution {
+        Distribution::Uniform => {}
+        Distribution::TrimmedGaussian { sigma_frac, clip } => {
+            t.push_str(&format!("sigma_frac = {}\n", num(sigma_frac)));
+            t.push_str(&format!("clip = {}\n", num(clip)));
+        }
+        Distribution::Bimodal { separation_frac, jitter_frac } => {
+            t.push_str(&format!("separation_frac = {}\n", num(separation_frac)));
+            t.push_str(&format!("jitter_frac = {}\n", num(jitter_frac)));
+        }
+    }
+    t.push_str(&format!("gradient_nm = {}\n", num(cfg.scenario.correlation.gradient_nm)));
+    t.push_str(&format!("corr_len = {}\n", num(cfg.scenario.correlation.corr_len)));
+    t.push_str(&format!("dead_tone_p = {}\n", num(cfg.scenario.faults.dead_tone_p)));
+    t.push_str(&format!("dark_ring_p = {}\n", num(cfg.scenario.faults.dark_ring_p)));
+    t.push_str(&format!("weak_ring_p = {}\n", num(cfg.scenario.faults.weak_ring_p)));
+    t.push_str(&format!("weak_tr_factor = {}\n", num(cfg.scenario.faults.weak_tr_factor)));
+    t
+}
+
 /// Parse the `[scenario]` section; every key falls back to the paper's
 /// scenario. Parameter keys only apply to the family that owns them.
 fn parse_scenario(doc: &TomlDoc) -> Result<ScenarioConfig, String> {
@@ -195,6 +247,26 @@ target = [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15]
         assert_eq!(cfg.variation.ring_local_nm, 1.0);
         assert_eq!(cfg.pre_fab_order, SpectralOrdering::permuted(16));
         assert_eq!(cfg.target_order, SpectralOrdering::natural(16));
+    }
+
+    #[test]
+    fn config_toml_emitter_round_trips_exactly() {
+        // Defaults, a permuted 16-channel grid, and a fully generalized
+        // scenario with awkward f64s: emit → parse must be `==` (f64 bit
+        // equality via shortest-round-trip formatting).
+        let mut nasty = system_config_from_toml(
+            "[grid]\nn_ch = 16\nspacing_nm = 2.24\n[orders]\npre_fab = \"permuted\"\n\
+             [scenario]\ndistribution = \"bimodal\"\nseparation_frac = 0.7\n\
+             jitter_frac = 0.3\ngradient_nm = 1.5\ncorr_len = 4.0\nweak_ring_p = 0.05\n",
+        )
+        .unwrap();
+        nasty.variation.ring_local_nm = 0.1 + 0.2; // 0.30000000000000004
+        nasty.variation.fsr_frac = 1.0 / 3.0;
+        for cfg in [SystemConfig::default(), nasty] {
+            let text = system_config_to_toml(&cfg);
+            let back = system_config_from_toml(&text).unwrap();
+            assert_eq!(back, cfg, "round-trip drift:\n{text}");
+        }
     }
 
     #[test]

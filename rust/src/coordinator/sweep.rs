@@ -28,6 +28,7 @@ use crate::montecarlo::sweep::{Series, Shmoo};
 use crate::montecarlo::{afp_at, alias_aware_min_trs, min_tr_complete, Population, TrialEngine};
 use crate::oblivious::Scheme;
 use crate::rng::derive_seed;
+use crate::util::json::Json;
 
 /// Which system parameter a sweep's columns vary. Every column resamples
 /// its population; the λ̄_TR threshold axis never does.
@@ -517,6 +518,110 @@ pub struct ColumnEval {
     pub cells: Vec<MeasureColumn>,
 }
 
+/// Hex-encoded f64 bit pattern. The JSON writer normalizes floats
+/// (`-0.0` → `0`, non-finite → `null`), so cell values travel as their
+/// exact 64-bit patterns — the whole point of a fleet run is that merged
+/// panels are *bit*-identical to local ones, and curve cells really do
+/// produce `-inf` on empty populations.
+fn f64_to_hex(x: f64) -> Json {
+    Json::Str(format!("{:016x}", x.to_bits()))
+}
+
+fn f64_from_hex(j: &Json) -> Result<f64, String> {
+    let s = j
+        .as_str()
+        .ok_or_else(|| "column cell: expected a hex-encoded f64 string".to_string())?;
+    let bits = u64::from_str_radix(s, 16)
+        .map_err(|_| format!("column cell: bad f64 bit pattern '{s}'"))?;
+    Ok(f64::from_bits(bits))
+}
+
+fn tally_to_json(t: &TrialTally) -> Json {
+    Json::obj(vec![
+        ("trials", Json::num(t.trials as f64)),
+        ("policy_failures", Json::num(t.policy_failures as f64)),
+        ("conditional_failures", Json::num(t.conditional_failures as f64)),
+        ("lock_errors", Json::num(t.lock_errors as f64)),
+        ("lane_order_errors", Json::num(t.lane_order_errors as f64)),
+    ])
+}
+
+fn tally_from_json(j: &Json) -> Result<TrialTally, String> {
+    let field = |key: &str| {
+        j.get(key)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| format!("column tally: missing counter '{key}'"))
+    };
+    Ok(TrialTally {
+        trials: field("trials")?,
+        policy_failures: field("policy_failures")?,
+        conditional_failures: field("conditional_failures")?,
+        lock_errors: field("lock_errors")?,
+        lane_order_errors: field("lane_order_errors")?,
+    })
+}
+
+impl MeasureColumn {
+    /// Lossless JSON wire form ([`Self::from_json`] inverse): f64 cells as
+    /// hex bit patterns, tallies as integer counter objects.
+    pub fn to_json(&self) -> Json {
+        match self {
+            MeasureColumn::Curve(x) => Json::obj(vec![("curve", f64_to_hex(*x))]),
+            MeasureColumn::Grid(row) => Json::obj(vec![(
+                "grid",
+                Json::Arr(row.iter().map(|&x| f64_to_hex(x)).collect()),
+            )]),
+            MeasureColumn::CafpGrid(row) => Json::obj(vec![(
+                "cafp",
+                Json::Arr(row.iter().map(tally_to_json).collect()),
+            )]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<MeasureColumn, String> {
+        if let Some(v) = j.get("curve") {
+            return Ok(MeasureColumn::Curve(f64_from_hex(v)?));
+        }
+        if let Some(v) = j.get("grid") {
+            let items = v
+                .as_arr()
+                .ok_or_else(|| "column cell: 'grid' must be an array".to_string())?;
+            return Ok(MeasureColumn::Grid(
+                items.iter().map(f64_from_hex).collect::<Result<_, _>>()?,
+            ));
+        }
+        if let Some(v) = j.get("cafp") {
+            let items = v
+                .as_arr()
+                .ok_or_else(|| "column cell: 'cafp' must be an array".to_string())?;
+            return Ok(MeasureColumn::CafpGrid(
+                items.iter().map(tally_from_json).collect::<Result<_, _>>()?,
+            ));
+        }
+        Err("column cell: expected 'curve', 'grid' or 'cafp'".to_string())
+    }
+}
+
+impl ColumnEval {
+    /// Lossless JSON wire form: an array of cells, parallel to the parent
+    /// sweep's measures.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.cells.iter().map(MeasureColumn::to_json).collect())
+    }
+
+    pub fn from_json(j: &Json) -> Result<ColumnEval, String> {
+        let items = j
+            .as_arr()
+            .ok_or_else(|| "column cells: expected an array".to_string())?;
+        Ok(ColumnEval {
+            cells: items
+                .iter()
+                .map(MeasureColumn::from_json)
+                .collect::<Result<_, _>>()?,
+        })
+    }
+}
+
 /// One measure's cells for a single column.
 #[derive(Debug, Clone, PartialEq)]
 pub enum MeasureColumn {
@@ -662,6 +767,50 @@ mod tests {
         assert_eq!(same_n.target_order, custom);
         let new_n = ConfigAxis::Channels.apply(&base, 16.0);
         assert_eq!(new_n.target_order, SpectralOrdering::natural(16));
+    }
+
+    #[test]
+    fn column_eval_wire_form_is_bit_exact() {
+        // The values a JSON float would mangle: -0.0, ±inf, NaN,
+        // subnormals, and full-precision mantissas.
+        let nasty = vec![
+            -0.0,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MIN_POSITIVE / 2.0,
+            0.1 + 0.2,
+            1e300,
+        ];
+        let col = ColumnEval {
+            cells: vec![
+                MeasureColumn::Curve(f64::NEG_INFINITY),
+                MeasureColumn::Grid(nasty.clone()),
+                MeasureColumn::CafpGrid(vec![TrialTally {
+                    trials: 100,
+                    policy_failures: 3,
+                    conditional_failures: 2,
+                    lock_errors: 1,
+                    lane_order_errors: 1,
+                }]),
+            ],
+        };
+        // Through the *string* form — what actually crosses the socket.
+        let text = col.to_json().to_string();
+        let back = ColumnEval::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, col);
+        let MeasureColumn::Grid(row) = &back.cells[1] else { panic!("grid") };
+        for (a, b) in row.iter().zip(&nasty) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // NaN round-trips by bit pattern (PartialEq would hide it above).
+        let nan = MeasureColumn::Curve(f64::NAN);
+        let back = MeasureColumn::from_json(&Json::parse(&nan.to_json().to_string()).unwrap())
+            .unwrap();
+        let MeasureColumn::Curve(x) = back else { panic!("curve") };
+        assert_eq!(x.to_bits(), f64::NAN.to_bits());
+
+        assert!(ColumnEval::from_json(&Json::parse(r#"[{"bogus": 1}]"#).unwrap()).is_err());
+        assert!(ColumnEval::from_json(&Json::parse(r#"[{"curve": "xyz"}]"#).unwrap()).is_err());
     }
 
     #[test]

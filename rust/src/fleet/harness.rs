@@ -1,0 +1,62 @@
+//! In-process fleet workers for tests and demos.
+//!
+//! [`WorkerHarness::spawn`] binds a real TCP listener on an OS-assigned
+//! port and serves the full envelope protocol from a background thread —
+//! the coordinator talks to it exactly as it would to a remote
+//! `wdm-arbiter serve --listen` process, so protocol, failover and merge
+//! behavior are all exercised inside `cargo test`. [`WorkerHarness::kill`]
+//! hard-stops the listener (connections torn down mid-write, in-flight
+//! responses lost) to simulate a crashed node.
+
+use std::thread::JoinHandle;
+
+use crate::api::{ArbiterService, ListenCtl, WireListener};
+use crate::coordinator::Backend;
+
+/// One spawned in-process worker node.
+pub struct WorkerHarness {
+    addr: String,
+    ctl: ListenCtl,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl WorkerHarness {
+    /// Bind `127.0.0.1:0` and serve a fresh [`ArbiterService`] from a
+    /// background thread until stopped.
+    pub fn spawn(backend: Backend, threads: usize) -> Result<WorkerHarness, String> {
+        let listener = WireListener::bind("127.0.0.1:0", None)?;
+        let addr = listener.local_addr().to_string();
+        let ctl = listener.control();
+        let thread = std::thread::Builder::new()
+            .name(format!("fleet-worker-{addr}"))
+            .spawn(move || {
+                let service = ArbiterService::new(backend, threads);
+                listener.serve(&service);
+            })
+            .map_err(|e| e.to_string())?;
+        Ok(WorkerHarness { addr, ctl, thread: Some(thread) })
+    }
+
+    /// The worker's `host:port`, for [`crate::fleet::FleetSpec`].
+    pub fn addr(&self) -> String {
+        self.addr.clone()
+    }
+
+    /// Simulate a crash: tear down the listener and every open connection
+    /// without draining, then reap the server thread.
+    pub fn kill(&mut self) {
+        self.ctl.stop(true);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for WorkerHarness {
+    fn drop(&mut self) {
+        self.ctl.stop(false);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}

@@ -1,0 +1,869 @@
+//! Fleet coordinator: shard sweep columns across worker nodes with
+//! fault-tolerant, bit-identical merging.
+//!
+//! A *fleet* is any number of `wdm-arbiter serve --listen` processes; the
+//! [`FleetEvaluator`] plugs in behind [`crate::api::ArbiterService`] (via
+//! [`crate::montecarlo::scheduler::run_sweep_dispatched`]) and turns every
+//! sweep job into per-column [`crate::api::JobRequest::Column`] wire jobs:
+//!
+//! * **Self-contained columns** — each job carries the coordinator's
+//!   *resolved* config as inline TOML
+//!   ([`crate::config::presets::system_config_to_toml`]), the full column
+//!   value list, the base seed, and an FNV-1a fingerprint digest of the
+//!   applied column config ([`crate::montecarlo::fingerprint_digest`]).
+//!   Workers re-derive the column seed from the *index* and verify the
+//!   digest, so a version-skewed or misconfigured node fails loudly
+//!   instead of merging wrong bits.
+//! * **Bit-identical merging** — cells travel as hex-encoded f64 bit
+//!   patterns ([`crate::coordinator::sweep::MeasureColumn::to_json`]) and
+//!   scatter back by column index through the same
+//!   [`SweepSpec::scatter`] the local scheduler uses, so the merged panel
+//!   is byte-identical to a single-node run for any fleet size,
+//!   assignment order, or completion order.
+//! * **Fault tolerance, training-launcher style** — each worker gets a
+//!   dedicated coordinator thread pulling from a shared column queue.
+//!   Connections open with a versioned `hello` handshake
+//!   ([`crate::api::wire::PROTOCOL_VERSION`]); reads carry an idle timeout
+//!   and unresponsive workers are probed with `status` controls before
+//!   being declared dead. A dead or straggling worker's in-flight column
+//!   is pushed back onto the queue and re-issued to survivors (idempotent:
+//!   seeds derive from the column index); reconnects use exponential
+//!   backoff, and a worker that comes back is re-admitted. When every
+//!   worker is gone, the coordinator finishes the leftovers locally
+//!   (`--local-fallback`) or fails with a structured error.
+//! * **Cancellation** — a fired [`CancelToken`] propagates as `cancel`
+//!   controls to every worker with an in-flight column; the sweep returns
+//!   `Err(`[`SWEEP_CANCELED`]`)` with no partial panels.
+//!
+//! [`harness::WorkerHarness`] spawns real TCP workers in-process (port 0)
+//! so the whole stack — protocol, failover, merging — runs in `cargo test`
+//! without external processes.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::Duration;
+
+use crate::api::request::{ConfigSpec, JobRequest};
+use crate::api::wire::PROTOCOL_VERSION;
+use crate::config::presets::system_config_to_toml;
+use crate::coordinator::sweep::{column_seed, ColumnEval, SweepSpec};
+use crate::coordinator::RunOptions;
+use crate::montecarlo::{
+    fingerprint_digest, CancelToken, ColumnProgress, EvalFactory, PopulationCache, RemoteColumns,
+    SWEEP_CANCELED, SweepRun, TrialEngine,
+};
+use crate::util::json::Json;
+
+pub mod harness;
+
+/// Fleet topology and failure-detection knobs. The duration fields exist
+/// so tests can run failure paths in milliseconds; the defaults suit real
+/// deployments.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    /// Worker addresses (`host:port`), one coordinator thread each.
+    pub workers: Vec<String>,
+    /// Finish leftover columns locally when the whole fleet is gone (and
+    /// run fully locally when `workers` is empty).
+    pub local_fallback: bool,
+    /// Per-attempt TCP connect timeout.
+    pub connect_timeout: Duration,
+    /// Read timeout while waiting on a worker; each expiry triggers a
+    /// liveness probe (a `status` control) rather than immediate death, so
+    /// long columns don't look like hung workers.
+    pub io_timeout: Duration,
+    /// Consecutive unanswered probes before a worker is declared dead.
+    pub max_probes: usize,
+    /// Reconnect attempts (exponential backoff) before a worker's
+    /// coordinator thread gives up; the budget refills on every served
+    /// column, so a flaky-but-working node is kept, a gone node is not.
+    pub max_reconnects: usize,
+    /// First reconnect delay; doubles per attempt, capped at 1 s.
+    pub backoff_base: Duration,
+}
+
+impl FleetSpec {
+    pub fn new(workers: Vec<String>) -> FleetSpec {
+        FleetSpec {
+            workers,
+            local_fallback: false,
+            connect_timeout: Duration::from_secs(2),
+            io_timeout: Duration::from_secs(1),
+            max_probes: 120,
+            max_reconnects: 3,
+            backoff_base: Duration::from_millis(50),
+        }
+    }
+
+    /// Parse a CLI worker list: comma-separated `host:port` entries.
+    pub fn parse(list: &str) -> Result<FleetSpec, String> {
+        let workers: Vec<String> = list
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(String::from)
+            .collect();
+        for w in &workers {
+            if !w.contains(':') {
+                return Err(format!("fleet: worker '{w}' is not host:port"));
+            }
+        }
+        Ok(FleetSpec::new(workers))
+    }
+
+    pub fn local_fallback(mut self, on: bool) -> FleetSpec {
+        self.local_fallback = on;
+        self
+    }
+}
+
+/// Per-worker accounting for one fleet sweep.
+#[derive(Debug, Clone)]
+pub struct WorkerStats {
+    pub addr: String,
+    /// Columns this worker served to completion.
+    pub columns: usize,
+    /// Columns this worker started but returned to the queue (connection
+    /// lost or worker unresponsive mid-column).
+    pub reissued: usize,
+    /// Connection (re)attempts beyond the first successful one.
+    pub reconnects: usize,
+    /// Population-cache activity reported by the worker, summed over its
+    /// column responses (the cache-key exchange: the coordinator sends the
+    /// config fingerprint, the worker reports hits/misses back).
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+    /// Worker-reported release version from the `hello` handshake.
+    pub release: String,
+    /// Still usable when the sweep finished.
+    pub alive: bool,
+    /// Why the worker was abandoned (when `alive` is false) or its last
+    /// transient failure.
+    pub error: Option<String>,
+}
+
+impl WorkerStats {
+    fn new(addr: &str) -> WorkerStats {
+        WorkerStats {
+            addr: addr.to_string(),
+            columns: 0,
+            reissued: 0,
+            reconnects: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            release: String::new(),
+            alive: true,
+            error: None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("addr", Json::str(self.addr.clone())),
+            ("columns", Json::num(self.columns as f64)),
+            ("reissued", Json::num(self.reissued as f64)),
+            ("reconnects", Json::num(self.reconnects as f64)),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("hits", Json::num(self.cache_hits as f64)),
+                    ("misses", Json::num(self.cache_misses as f64)),
+                ]),
+            ),
+            ("release", Json::str(self.release.clone())),
+            ("alive", Json::Bool(self.alive)),
+        ];
+        if let Some(e) = &self.error {
+            pairs.push(("error", Json::str(e.clone())));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// One fleet sweep's bookkeeping, attached to the sweep's [`JobResponse`]
+/// data (never to `sweep.json`, which stays byte-identical to a local run).
+#[derive(Debug, Clone)]
+pub struct FleetRunStats {
+    pub workers: Vec<WorkerStats>,
+    /// Columns the coordinator finished locally after losing the fleet.
+    pub local_columns: usize,
+    pub n_cols: usize,
+}
+
+impl FleetRunStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_cols", Json::num(self.n_cols as f64)),
+            ("local_columns", Json::num(self.local_columns as f64)),
+            (
+                "workers",
+                Json::Arr(self.workers.iter().map(WorkerStats::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// One human-readable line for the sweep summary.
+    pub fn summary_line(&self) -> String {
+        let served: usize = self.workers.iter().map(|w| w.columns).sum();
+        let alive = self.workers.iter().filter(|w| w.alive).count();
+        let reissued: usize = self.workers.iter().map(|w| w.reissued).sum();
+        let hits: usize = self.workers.iter().map(|w| w.cache_hits).sum();
+        let misses: usize = self.workers.iter().map(|w| w.cache_misses).sum();
+        format!(
+            "fleet: {served}/{} columns over {alive}/{} workers \
+             ({reissued} reissued, {} local), worker caches {hits} hits / {misses} misses\n",
+            self.n_cols,
+            self.workers.len(),
+            self.local_columns,
+        )
+    }
+}
+
+/// The coordinator: implements [`RemoteColumns`] by sharding a sweep's
+/// columns across the fleet and merging the returned cells by index.
+/// Stateless between runs except for [`Self::last_run_stats`].
+pub struct FleetEvaluator {
+    spec: FleetSpec,
+    last: Mutex<Option<FleetRunStats>>,
+}
+
+impl FleetEvaluator {
+    pub fn new(spec: FleetSpec) -> FleetEvaluator {
+        FleetEvaluator { spec, last: Mutex::new(None) }
+    }
+
+    pub fn spec(&self) -> &FleetSpec {
+        &self.spec
+    }
+
+    /// Bookkeeping of the most recent completed fleet sweep (`None` before
+    /// the first, after an empty-fleet fallback, or after a failed run).
+    pub fn last_run_stats(&self) -> Option<FleetRunStats> {
+        self.last.lock().ok().and_then(|g| g.clone())
+    }
+}
+
+/// Cross-thread state of one fleet sweep.
+struct RunShared {
+    /// Columns nobody owns right now; failed workers push theirs back.
+    pending: Mutex<VecDeque<usize>>,
+    /// Columns not yet served; worker threads exit when it hits zero.
+    remaining: AtomicUsize,
+    /// Stop everything (cancel, fatal error, or completion).
+    abort: AtomicBool,
+    /// First fatal (non-transient) error: version mismatch, fingerprint
+    /// mismatch, a structured job failure. Fails the whole sweep.
+    fatal: Mutex<Option<String>>,
+}
+
+impl RunShared {
+    fn aborted(&self) -> bool {
+        self.abort.load(Ordering::Acquire)
+    }
+
+    fn push_back(&self, ix: usize) {
+        if let Ok(mut q) = self.pending.lock() {
+            q.push_front(ix);
+        }
+    }
+
+    fn set_fatal(&self, msg: String) {
+        if let Ok(mut f) = self.fatal.lock() {
+            f.get_or_insert(msg);
+        }
+        self.abort.store(true, Ordering::Release);
+    }
+}
+
+/// Everything a worker thread needs, borrowed for the scope of one run.
+struct RunCtx<'a> {
+    fs: &'a FleetSpec,
+    /// Prebuilt `{"id":"c<ix>","request":{column job}}` envelope lines.
+    jobs: &'a [String],
+    shared: &'a RunShared,
+    stats: &'a Mutex<Vec<WorkerStats>>,
+    backends: &'a Mutex<Vec<String>>,
+    cancel: &'a CancelToken,
+}
+
+impl RunCtx<'_> {
+    fn stopped(&self) -> bool {
+        self.cancel.is_canceled() || self.shared.aborted()
+    }
+
+    fn with_stats(&self, slot: usize, f: impl FnOnce(&mut WorkerStats)) {
+        if let Ok(mut st) = self.stats.lock() {
+            f(&mut st[slot]);
+        }
+    }
+}
+
+/// A worker failed in a way that retrying (elsewhere or later) can fix —
+/// versus a structural error that would fail identically anywhere.
+enum ColErr {
+    Conn(String),
+    Fatal(String),
+    Canceled,
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Read one `\n`-terminated line, preserving partial reads across timeout
+/// errors. `BufRead::read_line` must not be used here: on a mid-line read
+/// timeout it discards the bytes it already consumed (its UTF-8 guard
+/// truncates on error), silently corrupting the stream. `read_until` keeps
+/// them in `buf`, so the next call resumes the same line.
+fn read_wire_line(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+) -> std::io::Result<Option<String>> {
+    reader.read_until(b'\n', buf)?;
+    if buf.last() == Some(&b'\n') {
+        let line = String::from_utf8_lossy(buf).trim().to_string();
+        buf.clear();
+        return Ok(Some(line));
+    }
+    // No delimiter and no error: EOF, possibly mid-line (the worker died
+    // while writing). The partial line is unusable either way.
+    Ok(None)
+}
+
+/// One live worker connection, `hello`-handshaken.
+struct Conn {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+    buf: Vec<u8>,
+    release: String,
+    /// Monotonic probe counter: probe envelope ids must stay unique for
+    /// the connection's lifetime (the server rejects duplicate ids).
+    probe_seq: usize,
+}
+
+enum ConnError {
+    /// Worth retrying with backoff (refused, timed out, mid-handshake EOF).
+    Retry(String),
+    /// Permanent: protocol version mismatch, no `column` capability.
+    Fatal(String),
+}
+
+impl Conn {
+    fn establish(addr: &str, fs: &FleetSpec) -> Result<Conn, ConnError> {
+        let sock = addr
+            .to_socket_addrs()
+            .ok()
+            .and_then(|mut it| it.next())
+            .ok_or_else(|| ConnError::Retry(format!("cannot resolve '{addr}'")))?;
+        let stream = TcpStream::connect_timeout(&sock, fs.connect_timeout)
+            .map_err(|e| ConnError::Retry(e.to_string()))?;
+        let _ = stream.set_nodelay(true);
+        stream
+            .set_read_timeout(Some(fs.io_timeout))
+            .map_err(|e| ConnError::Retry(e.to_string()))?;
+        let clone = stream.try_clone().map_err(|e| ConnError::Retry(e.to_string()))?;
+        let mut conn = Conn {
+            stream,
+            reader: BufReader::new(clone),
+            buf: Vec::new(),
+            release: String::new(),
+            probe_seq: 0,
+        };
+        conn.handshake(fs)?;
+        Ok(conn)
+    }
+
+    /// Pin the protocol version and check the worker answers `column`
+    /// jobs. A mismatch is fatal for the run — a worker speaking another
+    /// protocol would fail (or worse, drift) on every column.
+    fn handshake(&mut self, fs: &FleetSpec) -> Result<(), ConnError> {
+        let hello = Json::obj(vec![
+            ("id", Json::str("hello")),
+            ("control", Json::str("hello")),
+            ("version", Json::num(PROTOCOL_VERSION as f64)),
+        ]);
+        writeln!(self.stream, "{}", hello.to_string())
+            .map_err(|e| ConnError::Retry(e.to_string()))?;
+        let mut probes = 0usize;
+        loop {
+            match read_wire_line(&mut self.reader, &mut self.buf) {
+                Ok(None) => return Err(ConnError::Retry("closed during handshake".to_string())),
+                Ok(Some(text)) => {
+                    let Ok(j) = Json::parse(&text) else {
+                        return Err(ConnError::Retry(format!("handshake garbage: {text}")));
+                    };
+                    if j.get("id").and_then(Json::as_str) != Some("hello") {
+                        continue;
+                    }
+                    let Some(resp) = j.get("response") else { continue };
+                    if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+                        let err = resp
+                            .get("error")
+                            .and_then(Json::as_str)
+                            .unwrap_or("hello failed")
+                            .to_string();
+                        return Err(ConnError::Fatal(err));
+                    }
+                    let data = resp.get("data");
+                    let has_column = data
+                        .and_then(|d| d.get("capabilities"))
+                        .and_then(Json::as_arr)
+                        .is_some_and(|caps| caps.iter().any(|c| c.as_str() == Some("column")));
+                    if !has_column {
+                        return Err(ConnError::Fatal(
+                            "worker does not answer column jobs (older release?)".to_string(),
+                        ));
+                    }
+                    self.release = data
+                        .and_then(|d| d.get("release"))
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string();
+                    return Ok(());
+                }
+                Err(e) if is_timeout(&e) => {
+                    probes += 1;
+                    if probes >= fs.max_probes.max(1) {
+                        return Err(ConnError::Retry("handshake timed out".to_string()));
+                    }
+                }
+                Err(e) => return Err(ConnError::Retry(e.to_string())),
+            }
+        }
+    }
+
+    /// Submit one column and wait for its response, probing liveness with
+    /// `status` controls on read timeouts. Skips interleaved event lines;
+    /// any response under a different id (probe and cancel acks) proves
+    /// the worker is alive and resets the probe budget.
+    fn run_column(
+        &mut self,
+        ix: usize,
+        line: &str,
+        ctx: &RunCtx<'_>,
+    ) -> Result<(usize, ColumnEval, usize, usize, String), ColErr> {
+        writeln!(self.stream, "{line}").map_err(|e| ColErr::Conn(e.to_string()))?;
+        let want = format!("c{ix}");
+        let mut probes = 0usize;
+        loop {
+            match read_wire_line(&mut self.reader, &mut self.buf) {
+                Ok(None) => return Err(ColErr::Conn("connection closed".to_string())),
+                Ok(Some(text)) => {
+                    let Ok(j) = Json::parse(&text) else {
+                        return Err(ColErr::Conn(format!("unparseable line: {text}")));
+                    };
+                    let Some(resp) = j.get("response") else { continue };
+                    if j.get("id").and_then(Json::as_str) != Some(want.as_str()) {
+                        probes = 0; // any answered envelope proves liveness
+                        continue;
+                    }
+                    if resp.get("canceled").and_then(Json::as_bool) == Some(true) {
+                        return Err(ColErr::Canceled);
+                    }
+                    if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+                        let err = resp
+                            .get("error")
+                            .and_then(Json::as_str)
+                            .unwrap_or("column job failed")
+                            .to_string();
+                        return Err(ColErr::Fatal(err));
+                    }
+                    return parse_column_response(resp).map_err(ColErr::Fatal);
+                }
+                Err(e) if is_timeout(&e) => {
+                    if ctx.stopped() {
+                        // Propagate the cancel to the worker (best effort)
+                        // so its job stops at the next cancel point instead
+                        // of burning trials for a response nobody reads.
+                        let cancel = Json::obj(vec![
+                            ("id", Json::str(format!("x{ix}"))),
+                            ("control", Json::str("cancel")),
+                            ("job", Json::str(want.clone())),
+                        ]);
+                        let _ = writeln!(self.stream, "{}", cancel.to_string());
+                        let _ = self.stream.flush();
+                        return Err(ColErr::Canceled);
+                    }
+                    if probes >= ctx.fs.max_probes {
+                        return Err(ColErr::Conn(format!(
+                            "unresponsive: {probes} probes unanswered"
+                        )));
+                    }
+                    self.probe_seq += 1;
+                    probes += 1;
+                    let probe = Json::obj(vec![
+                        ("id", Json::str(format!("p{}", self.probe_seq))),
+                        ("control", Json::str("status")),
+                        ("job", Json::str(want.clone())),
+                    ]);
+                    writeln!(self.stream, "{}", probe.to_string())
+                        .map_err(|e| ColErr::Conn(e.to_string()))?;
+                }
+                Err(e) => return Err(ColErr::Conn(e.to_string())),
+            }
+        }
+    }
+}
+
+/// Extract `(n_trials, cells, cache_hits, cache_misses, backend)` from a
+/// successful column response.
+fn parse_column_response(
+    resp: &Json,
+) -> Result<(usize, ColumnEval, usize, usize, String), String> {
+    let data = resp.get("data").ok_or("column response has no data")?;
+    let n_trials = data
+        .get("n_trials")
+        .and_then(Json::as_usize)
+        .ok_or("column response has no n_trials")?;
+    let cells =
+        ColumnEval::from_json(data.get("cells").ok_or("column response has no cells")?)?;
+    let counter = |key: &str| {
+        resp.get("cache")
+            .and_then(|c| c.get(key))
+            .and_then(Json::as_usize)
+            .unwrap_or(0)
+    };
+    let backend = resp
+        .get("backend")
+        .and_then(Json::as_str)
+        .unwrap_or("")
+        .to_string();
+    Ok((n_trials, cells, counter("hits"), counter("misses"), backend))
+}
+
+/// The per-worker coordinator thread: pull a column, ensure a live
+/// connection (reconnect with backoff), run it, report the cells. On any
+/// connection-class failure the column goes back to the shared queue for
+/// a survivor; on a fatal error the whole run aborts.
+fn worker_loop(
+    ctx: &RunCtx<'_>,
+    slot: usize,
+    addr: &str,
+    tx: &mpsc::Sender<(usize, usize, ColumnEval)>,
+) {
+    let mut conn: Option<Conn> = None;
+    let mut budget = ctx.fs.max_reconnects;
+    let mut backoff = ctx.fs.backoff_base;
+    loop {
+        if ctx.stopped() || ctx.shared.remaining.load(Ordering::Acquire) == 0 {
+            return;
+        }
+        let next = ctx.shared.pending.lock().ok().and_then(|mut q| q.pop_front());
+        let Some(ix) = next else {
+            // Another worker's in-flight column may yet come back; stay up.
+            std::thread::sleep(Duration::from_millis(2));
+            continue;
+        };
+        while conn.is_none() {
+            if ctx.stopped() {
+                ctx.shared.push_back(ix);
+                return;
+            }
+            match Conn::establish(addr, ctx.fs) {
+                Ok(c) => {
+                    let release = c.release.clone();
+                    ctx.with_stats(slot, |st| st.release = release);
+                    conn = Some(c);
+                    backoff = ctx.fs.backoff_base;
+                }
+                Err(ConnError::Fatal(e)) => {
+                    ctx.shared.push_back(ix);
+                    ctx.with_stats(slot, |st| {
+                        st.alive = false;
+                        st.error = Some(e.clone());
+                    });
+                    ctx.shared.set_fatal(format!("fleet worker {addr}: {e}"));
+                    return;
+                }
+                Err(ConnError::Retry(e)) => {
+                    if budget == 0 {
+                        ctx.shared.push_back(ix);
+                        ctx.with_stats(slot, |st| {
+                            st.alive = false;
+                            st.error = Some(e);
+                        });
+                        return;
+                    }
+                    budget -= 1;
+                    ctx.with_stats(slot, |st| st.reconnects += 1);
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_secs(1));
+                }
+            }
+        }
+        match conn.as_mut().expect("just connected").run_column(ix, &ctx.jobs[ix], ctx) {
+            Ok((n_trials, cells, hits, misses, backend)) => {
+                ctx.with_stats(slot, |st| {
+                    st.columns += 1;
+                    st.cache_hits += hits;
+                    st.cache_misses += misses;
+                });
+                if let Ok(mut b) = ctx.backends.lock() {
+                    b.push(backend);
+                }
+                let _ = tx.send((ix, n_trials, cells));
+                ctx.shared.remaining.fetch_sub(1, Ordering::AcqRel);
+                budget = ctx.fs.max_reconnects;
+            }
+            Err(ColErr::Canceled) => return,
+            Err(ColErr::Fatal(e)) => {
+                ctx.with_stats(slot, |st| {
+                    st.alive = false;
+                    st.error = Some(e.clone());
+                });
+                ctx.shared.set_fatal(format!("fleet worker {addr}: {e}"));
+                return;
+            }
+            Err(ColErr::Conn(e)) => {
+                ctx.shared.push_back(ix);
+                conn = None;
+                // Charge the reconnect budget here too: a node that keeps
+                // accepting connections but never finishes a column must
+                // not hold the coordinator hostage forever.
+                if budget == 0 {
+                    ctx.with_stats(slot, |st| {
+                        st.alive = false;
+                        st.error = Some(e);
+                    });
+                    return;
+                }
+                budget -= 1;
+                ctx.with_stats(slot, |st| {
+                    st.reissued += 1;
+                    st.error = Some(e);
+                });
+            }
+        }
+    }
+}
+
+/// Evaluator names the fleet can report as a single `'static` backend tag;
+/// mixed or unknown fleets report `"fleet"`.
+fn fleet_backend(names: &[String]) -> &'static str {
+    let mut uniq: Vec<&str> = names.iter().map(String::as_str).collect();
+    uniq.sort_unstable();
+    uniq.dedup();
+    match uniq.as_slice() {
+        ["rust-f64"] => "rust-f64",
+        ["xla-pjrt"] => "xla-pjrt",
+        ["rust-oblivious"] => "rust-oblivious",
+        ["none"] => "none",
+        _ => "fleet",
+    }
+}
+
+impl RemoteColumns for FleetEvaluator {
+    fn run(
+        &self,
+        spec: &SweepSpec,
+        opts: &RunOptions,
+        factory: &dyn EvalFactory,
+        cache: Option<&PopulationCache>,
+        cancel: &CancelToken,
+        progress: &mut dyn FnMut(ColumnProgress),
+    ) -> Result<Option<SweepRun>, String> {
+        if let Ok(mut g) = self.last.lock() {
+            *g = None;
+        }
+        if self.spec.workers.is_empty() {
+            return if self.spec.local_fallback {
+                Ok(None) // degrade to the plain local scheduler
+            } else {
+                Err("fleet: no workers configured \
+                     (pass --local-fallback to run without a fleet)"
+                    .to_string())
+            };
+        }
+        let n_cols = spec.values.len();
+        // Prebuild every column job envelope: the resolved base config as
+        // inline TOML plus the fingerprint digest of the *applied* column
+        // config, so both sides prove they resolve identical configs.
+        let cfg_toml = system_config_to_toml(&spec.base);
+        let jobs: Vec<String> = (0..n_cols)
+            .map(|ix| {
+                let req = JobRequest::Column {
+                    tag: spec.tag.clone(),
+                    lane: spec.lane,
+                    axis: spec.axis,
+                    values: spec.values.clone(),
+                    ix,
+                    thresholds: spec.tr_values.clone(),
+                    measures: spec.measures.clone(),
+                    config: ConfigSpec {
+                        path: None,
+                        inline_toml: Some(cfg_toml.clone()),
+                        permuted: false,
+                    },
+                    seed: opts.seed,
+                    lasers: opts.n_lasers,
+                    rows: opts.n_rows,
+                    fingerprint: fingerprint_digest(&spec.axis.apply(&spec.base, spec.values[ix])),
+                };
+                Json::obj(vec![
+                    ("id", Json::str(format!("c{ix}"))),
+                    ("request", req.to_json()),
+                ])
+                .to_string()
+            })
+            .collect();
+
+        let shared = RunShared {
+            pending: Mutex::new((0..n_cols).collect()),
+            remaining: AtomicUsize::new(n_cols),
+            abort: AtomicBool::new(false),
+            fatal: Mutex::new(None),
+        };
+        let stats: Mutex<Vec<WorkerStats>> =
+            Mutex::new(self.spec.workers.iter().map(|a| WorkerStats::new(a)).collect());
+        let backends: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        let ctx = RunCtx {
+            fs: &self.spec,
+            jobs: &jobs,
+            shared: &shared,
+            stats: &stats,
+            backends: &backends,
+            cancel,
+        };
+
+        let mut outs = spec.empty_outputs();
+        let mut done = vec![false; n_cols];
+        let mut n_done = 0usize;
+        let (tx, rx) = mpsc::channel::<(usize, usize, ColumnEval)>();
+        std::thread::scope(|s| {
+            for (slot, addr) in self.spec.workers.iter().enumerate() {
+                let tx = tx.clone();
+                let ctx = &ctx;
+                s.spawn(move || worker_loop(ctx, slot, addr, &tx));
+            }
+            drop(tx);
+            // The merge: scatter by index as results arrive (any order).
+            // The loop ends when every worker thread has exited — normal
+            // completion, cancel, all-dead, or fatal.
+            while let Ok((ix, n_trials, cells)) = rx.recv() {
+                if cancel.is_canceled() {
+                    shared.abort.store(true, Ordering::Release);
+                }
+                if !done[ix] {
+                    done[ix] = true;
+                    n_done += 1;
+                    spec.scatter(&mut outs, ix, cells);
+                    progress(ColumnProgress { ix, n_cols, value: spec.values[ix], n_trials });
+                }
+            }
+        });
+
+        if cancel.is_canceled() {
+            return Err(SWEEP_CANCELED.to_string());
+        }
+        if let Some(e) = shared.fatal.lock().ok().and_then(|mut f| f.take()) {
+            if n_done < n_cols {
+                return Err(e);
+            }
+            // The sweep completed despite the late fatal (e.g. a stale
+            // worker joined after the work was done); keep the result, the
+            // per-worker stats carry the error.
+        }
+        // Every worker is gone and columns remain: finish locally (the
+        // degraded single-node mode) or fail structurally.
+        let mut local_columns = 0usize;
+        if n_done < n_cols {
+            let leftover: Vec<usize> = (0..n_cols).filter(|&i| !done[i]).collect();
+            if !self.spec.local_fallback {
+                return Err(format!(
+                    "fleet: all {} workers failed with {} of {n_cols} columns unfinished \
+                     (pass --local-fallback to finish them locally)",
+                    self.spec.workers.len(),
+                    leftover.len(),
+                ));
+            }
+            let eval = factory.make(opts.threads);
+            let mut engine = TrialEngine::new(eval.as_ref(), opts.threads);
+            if let Some(c) = cache {
+                engine = engine.with_cache(c);
+            }
+            let policies = spec.column_policies();
+            if let Ok(mut b) = backends.lock() {
+                b.push(eval.name().to_string());
+            }
+            for ix in leftover {
+                if cancel.is_canceled() {
+                    return Err(SWEEP_CANCELED.to_string());
+                }
+                let cfg = spec.axis.apply(&spec.base, spec.values[ix]);
+                let seed = column_seed(opts.seed, &spec.tag, spec.lane, ix);
+                let pop = engine.population(&cfg, opts.n_lasers, opts.n_rows, seed, &policies);
+                let cells = spec.eval_column(&cfg, &pop, &engine);
+                spec.scatter(&mut outs, ix, cells);
+                progress(ColumnProgress {
+                    ix,
+                    n_cols,
+                    value: spec.values[ix],
+                    n_trials: pop.n_trials(),
+                });
+                local_columns += 1;
+            }
+        }
+
+        let backend = fleet_backend(&backends.into_inner().unwrap_or_default());
+        if let Ok(mut g) = self.last.lock() {
+            *g = Some(FleetRunStats {
+                workers: stats.into_inner().unwrap_or_default(),
+                local_columns,
+                n_cols,
+            });
+        }
+        Ok(Some(SweepRun { outputs: outs, backend, stats: None }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_spec_parses_worker_lists() {
+        let fs = FleetSpec::parse("a:1, b:2 ,,c:3").unwrap();
+        assert_eq!(fs.workers, vec!["a:1", "b:2", "c:3"]);
+        assert!(!fs.local_fallback);
+        assert!(FleetSpec::parse("localhost").is_err());
+        assert_eq!(FleetSpec::parse("").unwrap().workers.len(), 0);
+    }
+
+    #[test]
+    fn backend_interning_prefers_uniform_names() {
+        let names = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        assert_eq!(fleet_backend(&names(&["rust-f64", "rust-f64"])), "rust-f64");
+        assert_eq!(fleet_backend(&names(&["rust-f64", "xla-pjrt"])), "fleet");
+        assert_eq!(fleet_backend(&names(&["weird"])), "fleet");
+        assert_eq!(fleet_backend(&[]), "fleet");
+    }
+
+    #[test]
+    fn empty_fleet_degrades_only_with_local_fallback() {
+        use crate::arbiter::Policy;
+        use crate::coordinator::sweep::{ConfigAxis, Measure};
+        use crate::coordinator::Backend;
+        let spec = SweepSpec::new(
+            "sweep",
+            crate::config::SystemConfig::default(),
+            ConfigAxis::RingLocalNm,
+            vec![1.12],
+        )
+        .measure(Measure::MinTrComplete(Policy::LtC));
+        let opts = RunOptions { n_lasers: 2, n_rows: 2, ..RunOptions::fast() };
+        let cancel = CancelToken::new();
+        let mut on_col = |_p: ColumnProgress| {};
+
+        let fallback = FleetEvaluator::new(FleetSpec::new(vec![]).local_fallback(true));
+        let r = fallback.run(&spec, &opts, &Backend::Rust, None, &cancel, &mut on_col);
+        assert!(matches!(r, Ok(None)), "empty fleet + fallback defers to local");
+        assert!(fallback.last_run_stats().is_none());
+
+        let strict = FleetEvaluator::new(FleetSpec::new(vec![]));
+        let r = strict.run(&spec, &opts, &Backend::Rust, None, &cancel, &mut on_col);
+        assert!(r.unwrap_err().contains("no workers configured"));
+    }
+}

@@ -51,6 +51,12 @@
 //!   ([`montecarlo::PopulationCache`]). The CLI, `wdm-arbiter serve`
 //!   (JSON-lines on stdin/stdout) and `wdm-arbiter batch jobs.json` are
 //!   all thin clients of this service.
+//! * [`fleet`] — horizontal scale-out: a coordinator that shards sweep
+//!   columns across `serve --listen` worker nodes over the envelope
+//!   protocol ([`fleet::FleetEvaluator`]), with per-worker
+//!   heartbeat/backoff, re-issue of columns from dead workers, and
+//!   scatter-by-index merging — fleet panels are bit-identical to
+//!   single-node runs for any fleet size or completion order.
 //!
 //! ## Quickstart
 //!
@@ -73,6 +79,7 @@ pub mod arbiter;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod fleet;
 pub mod metrics;
 pub mod model;
 pub mod montecarlo;

@@ -15,8 +15,10 @@
 //! wdm-arbiter arbitrate [--scheme seq|rs|vt-rs] [--tr NM] [--seed S]
 //!                       [--config FILE.toml] [--permuted]
 //! wdm-arbiter show-config [--cases] [--config FILE.toml]
-//! wdm-arbiter serve [--listen ADDR] [--backend rust|xla] [--threads T]
-//!                   [--jobs N]
+//! wdm-arbiter fleet --workers HOST:PORT,... [--local-fallback]
+//!                   <all sweep flags>
+//! wdm-arbiter serve [--listen ADDR] [--idle-timeout SECS]
+//!                   [--backend rust|xla] [--threads T] [--jobs N]
 //! wdm-arbiter batch <jobs.json|jobs.toml> [--backend rust|xla] [--threads T]
 //! ```
 
@@ -28,6 +30,7 @@ use wdm_arbiter::api::cli::{job_from_args, options_from_args};
 use wdm_arbiter::api::{wire, ArbiterService, FnSink, JobEvent, JobRequest, JobResponse};
 use wdm_arbiter::coordinator::Backend;
 use wdm_arbiter::experiments::all_experiments;
+use wdm_arbiter::fleet::{FleetEvaluator, FleetSpec};
 use wdm_arbiter::util::cli::Args;
 use wdm_arbiter::util::json::Json;
 
@@ -73,8 +76,21 @@ USAGE:
   wdm-arbiter show-config [--cases] [--config FILE.toml] [--permuted]
       Print the resolved system configuration (Table I) / test cases
       (Table II, rendered against the loaded config).
-  wdm-arbiter serve [--listen ADDR] [--backend rust|xla] [--threads T]
-                  [--jobs N]
+  wdm-arbiter fleet --workers HOST:PORT,HOST:PORT,... [--local-fallback]
+                  <all sweep flags>
+      Run a sweep sharded across `serve --listen` worker nodes: each column
+      ships as a self-contained job (resolved config inline, per-column
+      seed derived from the column index) and the returned cells merge by
+      index, so the panels — and out/sweep.json — are byte-identical to a
+      single-node `sweep` for any fleet size, assignment, or completion
+      order. Dead or unresponsive workers have their in-flight columns
+      re-issued to survivors; when every worker is gone the run fails
+      structurally unless --local-fallback lets the coordinator finish the
+      leftover columns itself. The response reports per-worker columns
+      served, re-issues, reconnects, and population-cache hits/misses.
+      See README \"Fleet mode\".
+  wdm-arbiter serve [--listen ADDR] [--idle-timeout SECS]
+                  [--backend rust|xla] [--threads T] [--jobs N]
       Long-lived job server speaking the envelope protocol: one
       {\"id\": ..., \"request\": {...}} JSON envelope per line in; interleaved
       {\"id\", \"event\"} / {\"id\", \"response\"} lines out. Any number of jobs
@@ -83,6 +99,8 @@ USAGE:
       --listen the protocol runs pipelined on stdin/stdout; with
       --listen HOST:PORT any number of TCP clients share one service,
       scheduler and population cache (responses report cache hits/misses).
+      --idle-timeout SECS drops TCP connections with no traffic for SECS
+      seconds (in-flight jobs drain cleanly first); 0 or absent = never.
       See README \"Wire protocol & sessions\".
   wdm-arbiter batch <jobs.json|jobs.toml> [--backend rust|xla] [--threads T]
       Run a job file (single job, JSON array, {\"jobs\": [...]}, or TOML
@@ -102,7 +120,7 @@ fn main() -> ExitCode {
 }
 
 fn dispatch(argv: &[String]) -> anyhow::Result<()> {
-    let args = Args::parse(argv, &["fast", "cases", "permuted", "help"])
+    let args = Args::parse(argv, &["fast", "cases", "permuted", "local-fallback", "help"])
         .map_err(|e| anyhow::anyhow!(e))?;
     if args.flag("help") || args.positionals.is_empty() {
         println!("{USAGE}");
@@ -112,6 +130,7 @@ fn dispatch(argv: &[String]) -> anyhow::Result<()> {
         "list" => cmd_list(),
         "run" => cmd_run(&args),
         "sweep" | "arbitrate" | "show-config" => cmd_job(&args),
+        "fleet" => cmd_fleet(&args),
         "serve" => cmd_serve(&args),
         "batch" => cmd_batch(&args),
         other => {
@@ -152,6 +171,22 @@ fn render(resp: JobResponse) -> anyhow::Result<()> {
 fn cmd_job(args: &Args) -> anyhow::Result<()> {
     let req = job_from_args(args).map_err(anyhow::Error::msg)?;
     let service = service_from(args)?;
+    render(service.submit(&req))
+}
+
+/// A sweep sharded across worker nodes ([`wdm_arbiter::fleet`]): the job
+/// is the same `JobRequest::Sweep` the local path runs — only the service
+/// is configured with a [`FleetEvaluator`], so panels (and sweep.json)
+/// stay byte-identical to a single-node run.
+fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
+    let workers = args
+        .get("workers")
+        .ok_or_else(|| anyhow::anyhow!("fleet: --workers HOST:PORT,... is required"))?;
+    let spec = FleetSpec::parse(workers)
+        .map_err(anyhow::Error::msg)?
+        .local_fallback(args.flag("local-fallback"));
+    let req = job_from_args(args).map_err(anyhow::Error::msg)?;
+    let service = service_from(args)?.with_fleet(FleetEvaluator::new(spec));
     render(service.submit(&req))
 }
 
@@ -244,7 +279,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         .map_err(anyhow::Error::msg)?;
     let service = service_from(args)?.with_job_workers(jobs);
     if let Some(addr) = args.get("listen") {
-        return wire::serve_listen(&service, addr).map_err(|e| anyhow::anyhow!(e));
+        // Idle connections (fleet coordinators that died without closing,
+        // wedged clients) are dropped after --idle-timeout seconds of
+        // silence; their in-flight jobs still drain before teardown.
+        let idle = args.get_u64("idle-timeout", 0).map_err(anyhow::Error::msg)?;
+        let idle = (idle > 0).then(|| std::time::Duration::from_secs(idle));
+        return wire::serve_listen_with(&service, addr, idle).map_err(|e| anyhow::anyhow!(e));
     }
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();

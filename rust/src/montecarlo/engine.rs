@@ -172,6 +172,18 @@ pub fn config_fingerprint(cfg: &SystemConfig) -> String {
     format!("{cfg:?}")
 }
 
+/// Compact 16-hex-digit digest (FNV-1a 64) of [`config_fingerprint`].
+/// Exchanged on the wire by fleet coordinators so a worker can prove it
+/// resolved the *same* config before burning trials on a column.
+pub fn fingerprint_digest(cfg: &SystemConfig) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in config_fingerprint(cfg).as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
 /// Cache key: [`config_fingerprint`] × population shape × seed lane.
 type PopKey = (String, usize, usize, u64);
 

@@ -27,11 +27,13 @@ pub mod scheduler;
 pub mod sweep;
 
 pub use engine::{
-    config_fingerprint, CacheStats, Population, PopulationCache, RustOblivious, SchemeEvaluator,
-    TrialEngine,
+    config_fingerprint, fingerprint_digest, CacheStats, Population, PopulationCache, RustOblivious,
+    SchemeEvaluator, TrialEngine,
 };
 pub use executor::{CancelToken, TaskPool};
-pub use scheduler::{ColumnProgress, EvalFactory, GridStats, SWEEP_CANCELED, SweepRun};
+pub use scheduler::{
+    ColumnProgress, EvalFactory, GridStats, RemoteColumns, SWEEP_CANCELED, SweepRun,
+};
 
 use crate::arbiter::{batch, ideal, Policy};
 use crate::config::SystemConfig;

@@ -110,6 +110,51 @@ type ColumnResult = (usize, ColumnEval, Option<Vec<Option<ColumnStats>>>);
 /// callers match on it to report `canceled` instead of a failure.
 pub const SWEEP_CANCELED: &str = "canceled";
 
+/// Remote column execution plugged in behind [`run_sweep_dispatched`]
+/// (implemented by [`crate::fleet::FleetEvaluator`]). Implementations own
+/// their distribution strategy but must honor the scheduler's contract:
+/// outputs scattered by column index, per-column seeds derived from the
+/// spec, `Err(SWEEP_CANCELED)` on a fired token — so a remote run is
+/// bit-identical to a local one.
+///
+/// `Ok(None)` means "nothing to dispatch to" (e.g. an empty fleet with
+/// local fallback enabled): the caller degrades to the plain local
+/// scheduler. `factory`/`cache` let implementations evaluate re-issued or
+/// left-over columns locally when part of the fleet dies mid-sweep.
+pub trait RemoteColumns: Sync {
+    fn run(
+        &self,
+        spec: &SweepSpec,
+        opts: &RunOptions,
+        factory: &dyn EvalFactory,
+        cache: Option<&PopulationCache>,
+        cancel: &CancelToken,
+        progress: &mut dyn FnMut(ColumnProgress),
+    ) -> Result<Option<SweepRun>, String>;
+}
+
+/// [`run_sweep`] with an optional remote execution layer in front: when
+/// `remote` is present and accepts the sweep, its result is returned
+/// as-is; otherwise the local column-parallel scheduler runs. Both paths
+/// produce bit-identical outputs, so callers need not care which one ran.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sweep_dispatched(
+    spec: &SweepSpec,
+    opts: &RunOptions,
+    factory: &dyn EvalFactory,
+    cache: Option<&PopulationCache>,
+    cancel: &CancelToken,
+    remote: Option<&dyn RemoteColumns>,
+    progress: &mut dyn FnMut(ColumnProgress),
+) -> Result<SweepRun, String> {
+    if let Some(r) = remote {
+        if let Some(run) = r.run(spec, opts, factory, cache, cancel, progress)? {
+            return Ok(run);
+        }
+    }
+    run_sweep(spec, opts, factory, cache, cancel, progress)
+}
+
 /// Run a sweep with columns in parallel. See [`run_sweep_ordered`].
 ///
 /// `cancel` is polled between columns on every worker: a fired token stops

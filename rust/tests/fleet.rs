@@ -1,0 +1,434 @@
+//! Fleet end-to-end tests: a real coordinator talking TCP to in-process
+//! [`WorkerHarness`] nodes, asserting the ISSUE's core acceptance
+//! criterion — fleet-merged panels are **bit-identical** to a single-node
+//! run for fleet sizes {1, 2, 4}, including with a worker killed
+//! mid-sweep and its columns re-issued to survivors — plus cancellation
+//! (no partial panels), the fingerprint guard, and the cache-key exchange.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use wdm_arbiter::api::{
+    ArbiterService, ChannelSink, ConfigSpec, JobEvent, JobOptions, JobRequest,
+};
+use wdm_arbiter::arbiter::Policy;
+use wdm_arbiter::config::SystemConfig;
+use wdm_arbiter::coordinator::sweep::{ConfigAxis, Measure, SweepOutput, SweepSpec};
+use wdm_arbiter::coordinator::{Backend, RunOptions};
+use wdm_arbiter::fleet::harness::WorkerHarness;
+use wdm_arbiter::fleet::{FleetEvaluator, FleetSpec};
+use wdm_arbiter::montecarlo::scheduler::run_sweep;
+use wdm_arbiter::montecarlo::{CancelToken, ColumnProgress, RemoteColumns, SWEEP_CANCELED};
+use wdm_arbiter::oblivious::Scheme;
+use wdm_arbiter::util::json::Json;
+
+const GOLDEN_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden_digests.json");
+
+/// FNV-1a 64-bit over a byte stream (duplicated from `tests/golden.rs`;
+/// integration test binaries cannot share code).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn push(&mut self, byte: u8) {
+        self.0 ^= byte as u64;
+        self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    fn f64s(&mut self, xs: &[f64]) {
+        for x in xs {
+            for b in x.to_bits().to_le_bytes() {
+                self.push(b);
+            }
+        }
+    }
+
+    fn u64(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.push(b);
+        }
+    }
+
+    fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
+/// Stable digest of one sweep output — the same scheme `tests/golden.rs`
+/// pins, so a fleet digest is directly comparable to the golden file.
+fn output_digest(out: &SweepOutput) -> String {
+    let mut h = Fnv::new();
+    match out {
+        SweepOutput::Curve(series) => {
+            h.u64(1);
+            h.f64s(&series.x);
+            h.f64s(&series.y);
+        }
+        SweepOutput::Grid(shmoo) => {
+            h.u64(2);
+            h.f64s(&shmoo.x);
+            h.f64s(&shmoo.y);
+            h.f64s(&shmoo.cells);
+        }
+        SweepOutput::CafpGrid { cafp, tallies } => {
+            h.u64(3);
+            h.f64s(&cafp.x);
+            h.f64s(&cafp.y);
+            h.f64s(&cafp.cells);
+            for t in tallies {
+                h.u64(t.trials as u64);
+                h.u64(t.policy_failures as u64);
+                h.u64(t.conditional_failures as u64);
+                h.u64(t.lock_errors as u64);
+                h.u64(t.lane_order_errors as u64);
+            }
+        }
+    }
+    h.hex()
+}
+
+fn digests(spec: &SweepSpec, outputs: &[SweepOutput]) -> Vec<(String, String)> {
+    spec.measures
+        .iter()
+        .zip(outputs)
+        .map(|(m, o)| (format!("{}/{}", spec.tag, m.slug()), output_digest(o)))
+        .collect()
+}
+
+/// Eight columns across all three output kinds (curve, grid, CAFP grid
+/// with tallies), so the merge path is exercised for every wire shape.
+fn wide_spec() -> SweepSpec {
+    SweepSpec::new(
+        "fleet-wide",
+        SystemConfig::default(),
+        ConfigAxis::RingLocalNm,
+        (0..8).map(|i| 0.56 * (i + 1) as f64).collect(),
+    )
+    .thresholds(vec![2.0, 6.0, 9.0])
+    .measures([
+        Measure::Afp(Policy::LtC),
+        Measure::MinTrComplete(Policy::LtA),
+        Measure::Cafp(Scheme::VtRsSsm),
+    ])
+}
+
+/// The golden suite's fig4 panel, so fleet digests can be checked against
+/// `tests/golden_digests.json` pins when those are blessed.
+fn fig4_spec() -> SweepSpec {
+    SweepSpec::new(
+        "fig4",
+        SystemConfig::default(),
+        ConfigAxis::RingLocalNm,
+        vec![1.12, 2.24, 4.48],
+    )
+    .thresholds(vec![2.0, 4.0, 6.0, 9.0])
+    .measures([Measure::Afp(Policy::LtA), Measure::Afp(Policy::LtC), Measure::Afp(Policy::LtD)])
+}
+
+fn opts8() -> RunOptions {
+    RunOptions { n_lasers: 8, n_rows: 8, threads: 1, ..RunOptions::fast() }
+}
+
+/// Failure-path knobs in milliseconds so dead-worker tests don't stall.
+fn test_fleet(workers: Vec<String>) -> FleetSpec {
+    let mut fs = FleetSpec::new(workers);
+    fs.connect_timeout = Duration::from_millis(500);
+    fs.io_timeout = Duration::from_millis(200);
+    fs.max_probes = 50;
+    fs.max_reconnects = 2;
+    fs.backoff_base = Duration::from_millis(10);
+    fs
+}
+
+fn spawn_workers(n: usize) -> Vec<WorkerHarness> {
+    (0..n)
+        .map(|_| WorkerHarness::spawn(Backend::Rust, 1).expect("spawn in-process worker"))
+        .collect()
+}
+
+fn local_reference(spec: &SweepSpec, opts: &RunOptions) -> Vec<(String, String)> {
+    let token = CancelToken::new();
+    let run = run_sweep(spec, opts, &Backend::Rust, None, &token, &mut |_| {})
+        .expect("single-node reference sweep");
+    digests(spec, &run.outputs)
+}
+
+fn golden_pins() -> Vec<(String, String)> {
+    let Ok(text) = std::fs::read_to_string(GOLDEN_PATH) else { return Vec::new() };
+    let Ok(Json::Obj(pairs)) = Json::parse(&text) else { return Vec::new() };
+    pairs
+        .into_iter()
+        .filter_map(|(k, v)| v.as_str().map(|s| (k, s.to_string())))
+        .collect()
+}
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("wdm-fleet-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create temp out dir");
+    dir
+}
+
+/// The acceptance criterion: for fleet sizes {1, 2, 4}, the fleet-merged
+/// panel digests equal a single-node `run_sweep`'s, bit for bit, and
+/// fig4 additionally matches any blessed golden pins.
+#[test]
+fn fleet_panels_bit_identical_across_fleet_sizes() {
+    let opts = opts8();
+    let pins = golden_pins();
+    for spec in [wide_spec(), fig4_spec()] {
+        let reference = local_reference(&spec, &opts);
+        for fleet_size in [1usize, 2, 4] {
+            let workers = spawn_workers(fleet_size);
+            let addrs = workers.iter().map(|w| w.addr()).collect();
+            let fleet = FleetEvaluator::new(test_fleet(addrs));
+            let cancel = CancelToken::new();
+            let run = fleet
+                .run(&spec, &opts, &Backend::Rust, None, &cancel, &mut |_| {})
+                .expect("fleet sweep")
+                .expect("fleet must not defer to local when workers exist");
+            assert_eq!(
+                digests(&spec, &run.outputs),
+                reference,
+                "{}: fleet of {fleet_size} drifted from the single-node panel",
+                spec.tag
+            );
+            assert_eq!(run.backend, "rust-f64", "uniform rust workers report their backend");
+
+            let stats = fleet.last_run_stats().expect("completed run records stats");
+            assert_eq!(stats.n_cols, spec.values.len());
+            assert_eq!(stats.local_columns, 0, "healthy fleet never runs columns locally");
+            let served: usize = stats.workers.iter().map(|w| w.columns).sum();
+            assert_eq!(served, spec.values.len());
+            assert!(stats.workers.iter().all(|w| w.alive));
+            // A worker only connects when it pops a column, so only those
+            // that served anything have handshaken (fleets larger than the
+            // column count leave idle workers unconnected).
+            assert!(
+                stats.workers.iter().filter(|w| w.columns > 0).all(|w| !w.release.is_empty()),
+                "handshake records each serving worker's release"
+            );
+        }
+        // Same digest scheme as tests/golden.rs: when fig4 pins are
+        // blessed, the fleet panels must match them too.
+        for (name, digest) in &reference {
+            if let Some((_, pinned)) = pins.iter().find(|(k, _)| k == name) {
+                assert_eq!(digest, pinned, "panel '{name}' drifted from its golden pin");
+            }
+        }
+    }
+}
+
+/// Kill one of two workers from the first progress callback — its
+/// in-flight column must be re-issued to the survivor and the merged
+/// panel must still be byte-identical to the single-node reference.
+#[test]
+fn killed_worker_mid_sweep_reissues_columns_and_stays_bit_identical() {
+    let spec = wide_spec();
+    let opts = opts8();
+    let reference = local_reference(&spec, &opts);
+
+    let mut workers = spawn_workers(2);
+    let addrs = workers.iter().map(|w| w.addr()).collect();
+    let mut victim = Some(workers.remove(0));
+    let fleet = FleetEvaluator::new(test_fleet(addrs));
+    let cancel = CancelToken::new();
+    let mut on_col = |_p: ColumnProgress| {
+        // First merged column: hard-stop worker 0 (connections severed
+        // mid-write, listener gone — a crashed node, not a drained one).
+        if let Some(mut w) = victim.take() {
+            w.kill();
+        }
+    };
+    let run = fleet
+        .run(&spec, &opts, &Backend::Rust, None, &cancel, &mut on_col)
+        .expect("sweep must survive losing one of two workers")
+        .expect("fleet ran remotely");
+
+    assert_eq!(
+        digests(&spec, &run.outputs),
+        reference,
+        "panel after mid-sweep worker loss must be bit-identical to single-node"
+    );
+    let stats = fleet.last_run_stats().expect("stats recorded");
+    assert_eq!(stats.n_cols, spec.values.len());
+    let served: usize = stats.workers.iter().map(|w| w.columns).sum();
+    assert_eq!(
+        served + stats.local_columns,
+        spec.values.len(),
+        "every column accounted to a worker (no local fallback was configured)"
+    );
+    assert_eq!(stats.local_columns, 0);
+    assert!(stats.workers[1].alive, "the survivor stays usable");
+}
+
+/// Cancellation: the run reports `SWEEP_CANCELED` with no partial panels —
+/// both at the evaluator layer and through the service (no `sweep.json`).
+#[test]
+fn cancel_mid_fleet_leaves_no_partial_panels() {
+    // Evaluator layer: fire the token from the first progress callback.
+    let spec = wide_spec();
+    let opts = opts8();
+    let workers = spawn_workers(1);
+    let fleet = FleetEvaluator::new(test_fleet(vec![workers[0].addr()]));
+    let cancel = CancelToken::new();
+    let mut on_col = |_p: ColumnProgress| cancel.cancel();
+    let err = fleet
+        .run(&spec, &opts, &Backend::Rust, None, &cancel, &mut on_col)
+        .expect_err("canceled sweep must not return a panel");
+    assert_eq!(err, SWEEP_CANCELED);
+    assert!(fleet.last_run_stats().is_none(), "canceled runs record no stats");
+
+    // Service layer: cancel the job handle after the first ColumnDone
+    // event; the response is canceled and no sweep.json was written.
+    let out = tmp_dir("cancel");
+    let workers = spawn_workers(1);
+    let service = ArbiterService::new(Backend::Rust, 1)
+        .with_fleet(FleetEvaluator::new(test_fleet(vec![workers[0].addr()])));
+    let req = JobRequest::Sweep {
+        axis: ConfigAxis::RingLocalNm,
+        values: (0..16).map(|i| 0.28 * (i + 1) as f64).collect(),
+        thresholds: None,
+        measures: vec![Measure::MinTrComplete(Policy::LtC)],
+        config: ConfigSpec::default(),
+        options: JobOptions {
+            out: Some(out.display().to_string()),
+            fast: true,
+            lasers: Some(12),
+            rows: Some(12),
+            threads: Some(1),
+            seed: Some(7),
+            ..JobOptions::default()
+        },
+    };
+    let (sink, rx) = ChannelSink::pair();
+    let handle = service.submit_async_with(req, Arc::new(sink));
+    loop {
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(JobEvent::ColumnDone { .. }) => break,
+            Ok(_) => continue,
+            Err(e) => panic!("no ColumnDone before cancel: {e}"),
+        }
+    }
+    handle.cancel();
+    let resp = handle.wait();
+    assert!(resp.canceled, "response must report cancellation");
+    assert!(!resp.ok);
+    assert!(!out.join("sweep.json").exists(), "canceled sweeps write no partial panel");
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+/// The fingerprint guard: a column job whose config digest disagrees with
+/// the worker's resolved config fails structurally instead of evaluating.
+#[test]
+fn mismatched_fingerprint_fails_structurally() {
+    let service = ArbiterService::new(Backend::Rust, 1);
+    let column = |fingerprint: &str| JobRequest::Column {
+        tag: "fig4".to_string(),
+        lane: 0,
+        axis: ConfigAxis::RingLocalNm,
+        values: vec![1.12, 2.24],
+        ix: 0,
+        thresholds: vec![2.0, 6.0],
+        measures: vec![Measure::Afp(Policy::LtC)],
+        config: ConfigSpec::default(),
+        seed: 42,
+        lasers: 4,
+        rows: 4,
+        fingerprint: fingerprint.to_string(),
+    };
+    let bad = service.submit(&column("00000000deadbeef"));
+    assert!(!bad.ok);
+    assert!(
+        bad.error.as_deref().unwrap_or("").contains("fingerprint mismatch"),
+        "got error: {:?}",
+        bad.error
+    );
+    // Empty fingerprint skips the check; the job evaluates.
+    let good = service.submit(&column(""));
+    assert!(good.ok, "got error: {:?}", good.error);
+}
+
+/// The cache-key exchange: re-running the same sweep against the same
+/// worker reports population-cache hits back through the column
+/// responses into the coordinator's per-worker stats.
+#[test]
+fn worker_population_caches_hit_on_repeat_sweeps() {
+    let spec = wide_spec();
+    let opts = opts8();
+    let reference = local_reference(&spec, &opts);
+    let workers = spawn_workers(1);
+    let fleet = FleetEvaluator::new(test_fleet(vec![workers[0].addr()]));
+
+    let run_once = || {
+        let cancel = CancelToken::new();
+        let run = fleet
+            .run(&spec, &opts, &Backend::Rust, None, &cancel, &mut |_| {})
+            .expect("fleet sweep")
+            .expect("ran remotely");
+        assert_eq!(digests(&spec, &run.outputs), reference);
+        fleet.last_run_stats().expect("stats recorded")
+    };
+    let first = run_once();
+    let second = run_once();
+
+    let n_cols = spec.values.len();
+    assert!(
+        first.workers[0].cache_misses >= n_cols,
+        "first run populates: {} misses",
+        first.workers[0].cache_misses
+    );
+    assert!(
+        second.workers[0].cache_hits >= n_cols,
+        "second run hits the worker's population cache: {} hits",
+        second.workers[0].cache_hits
+    );
+    assert_eq!(second.workers[0].cache_misses, 0, "identical sweep re-misses nothing");
+}
+
+/// Through the service, a fleet-dispatched sweep writes a `sweep.json`
+/// byte-identical to a local service's, while the response carries the
+/// fleet bookkeeping (which never touches the artifact).
+#[test]
+fn fleet_sweep_json_is_byte_identical_to_local() {
+    let req = |out: &std::path::Path| JobRequest::Sweep {
+        axis: ConfigAxis::RingLocalNm,
+        values: vec![1.12, 2.24, 4.48],
+        thresholds: Some(vec![2.0, 6.0]),
+        measures: vec![Measure::Afp(Policy::LtC)],
+        config: ConfigSpec::default(),
+        options: JobOptions {
+            out: Some(out.display().to_string()),
+            fast: true,
+            lasers: Some(8),
+            rows: Some(8),
+            threads: Some(1),
+            ..JobOptions::default()
+        },
+    };
+
+    let solo_dir = tmp_dir("solo");
+    let solo = ArbiterService::new(Backend::Rust, 1).submit(&req(&solo_dir));
+    assert!(solo.ok, "local sweep failed: {:?}", solo.error);
+
+    let fleet_dir = tmp_dir("fleet");
+    let workers = spawn_workers(2);
+    let addrs = workers.iter().map(|w| w.addr()).collect();
+    let service = ArbiterService::new(Backend::Rust, 1)
+        .with_fleet(FleetEvaluator::new(test_fleet(addrs)));
+    let fleet = service.submit(&req(&fleet_dir));
+    assert!(fleet.ok, "fleet sweep failed: {:?}", fleet.error);
+
+    let solo_bytes = std::fs::read(solo_dir.join("sweep.json")).expect("solo sweep.json");
+    let fleet_bytes = std::fs::read(fleet_dir.join("sweep.json")).expect("fleet sweep.json");
+    assert_eq!(solo_bytes, fleet_bytes, "fleet sweep.json must be byte-identical to local");
+
+    assert!(fleet.data.get("fleet").is_some(), "response data carries fleet bookkeeping");
+    assert!(fleet.summary.contains("fleet:"), "summary names the fleet: {}", fleet.summary);
+    assert!(solo.data.get("fleet").is_none(), "local runs report no fleet");
+    let _ = std::fs::remove_dir_all(&solo_dir);
+    let _ = std::fs::remove_dir_all(&fleet_dir);
+}
