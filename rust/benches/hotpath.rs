@@ -17,7 +17,10 @@ use wdm_arbiter::experiments::{rlv_sweep, tr_sweep};
 use wdm_arbiter::metrics::TrialTally;
 use wdm_arbiter::model::system::SystemSampler;
 use wdm_arbiter::model::{DwdmGrid, SystemUnderTest};
-use wdm_arbiter::montecarlo::{IdealEvaluator, RustIdeal, TrialEngine};
+use wdm_arbiter::montecarlo::{
+    batched_cafp_tally, IdealEvaluator, RustIdeal, RustOblivious, TrialEngine,
+};
+use wdm_arbiter::oblivious::batch::BatchWorkspace as ObliviousBatchWorkspace;
 use wdm_arbiter::oblivious::relation::{full_record_phase, ProbeSet};
 use wdm_arbiter::oblivious::search::initial_tables;
 use wdm_arbiter::oblivious::ssm::match_phase;
@@ -223,6 +226,43 @@ fn main() {
             black_box(acc);
         });
     }
+    // --- batched SoA oblivious kernel stages (oblivious::batch) -----------
+    // Same 512-trial population as the ideal cases. Stage cases pin the
+    // flat heat-merge fill, the relation probes, and the SSM match; the
+    // `oblivious_cafp512_*` pairs time the end-to-end CAFP tally through
+    // the scalar oracle vs the batched kernel (bit-identical results, per
+    // tests/oblivious_equivalence.rs — only the storage layout differs).
+    {
+        let chunk = sampler.n_trials(); // one 512-trial chunk, no refills
+        let mut ws = ObliviousBatchWorkspace::with_chunk(chunk);
+        run("oblivious_search_fill_512t_n8", n_tr, &mut || {
+            ws.fill(black_box(&sampler), 6.0, 0..chunk);
+            black_box(ws.n_filled());
+        });
+        ws.fill(&sampler, 6.0, 0..chunk);
+        let (laser0, rings0) = sampler.trial(0);
+        run("oblivious_record_rs_n8", 1.0, &mut || {
+            ws.record_trial(laser0, rings0, &cfg8.target_order, ProbeSet::FirstLast, 0);
+            black_box(ws.n_filled());
+        });
+        ws.record_trial(laser0, rings0, &cfg8.target_order, ProbeSet::FirstLast, 0);
+        run("oblivious_ssm_match_n8", 1.0, &mut || {
+            black_box(ws.match_trial(0));
+        });
+
+        let engine = TrialEngine::new(&rust, 1);
+        let pop = engine.population(&cfg8, 16, 32, 1234, &[Policy::LtC]);
+        for scheme in Scheme::all() {
+            let scalar = RustOblivious { scheme, threads: 1 };
+            run(&format!("oblivious_cafp512_{}_scalar", scheme.name()), n_tr, &mut || {
+                black_box(scalar.tally_scalar(black_box(&pop), 6.0));
+            });
+            run(&format!("oblivious_cafp512_{}_batched", scheme.name()), n_tr, &mut || {
+                black_box(batched_cafp_tally(black_box(&pop), scheme, 6.0, 1, chunk));
+            });
+        }
+    }
+
     if let Ok(xla) = XlaIdeal::discover() {
         // Warm the compile cache outside the timed region.
         let _ = xla.min_trs(&cfg8, &sampler, Policy::LtC);
@@ -259,6 +299,9 @@ fn main() {
         ("population512_scalar_ltc_n8", "population512_rust_ltc_n8"),
         ("population512_scalar_multi3_n8", "population512_rust_multi3_n8"),
         ("fig14grid_ideal_ltc_scalar", "fig14grid_ideal_ltc_batched"),
+        ("oblivious_cafp512_seq-tuning_scalar", "oblivious_cafp512_seq-tuning_batched"),
+        ("oblivious_cafp512_rs-ssm_scalar", "oblivious_cafp512_rs-ssm_batched"),
+        ("oblivious_cafp512_vt-rs-ssm_scalar", "oblivious_cafp512_vt-rs-ssm_batched"),
     ] {
         if let (Some(s), Some(b)) = (median_of(scalar), median_of(batched)) {
             println!("batched speedup {batched} vs {scalar}: {:.2}x", s / b);
@@ -304,11 +347,25 @@ fn main() {
             }
         };
         if baseline.is_empty() {
-            println!(
-                "perf gate: baseline {baseline_path} has no cases (not yet blessed on \
-                 this toolchain) — commit the fresh report to bless it; skipping gate"
+            // An empty baseline means the gate has nothing to compare —
+            // passing here made the CI perf gate vacuous from PR 6 until
+            // the baseline was first blessed. Fail loudly instead; the
+            // local first-toolchain-run bless flow opts out explicitly.
+            if std::env::var("WDM_BENCH_ALLOW_UNBLESSED").as_deref() == Ok("1") {
+                println!(
+                    "perf gate: baseline {baseline_path} has no cases; \
+                     WDM_BENCH_ALLOW_UNBLESSED=1 — skipping gate (bless by \
+                     committing the fresh report as BENCH_hotpath.json)"
+                );
+                return;
+            }
+            eprintln!(
+                "perf gate FAILED: baseline {baseline_path} has no cases, so the \
+                 gate would pass vacuously. Bless it: run `cargo bench --bench \
+                 hotpath` and commit the refreshed BENCH_hotpath.json. For a \
+                 deliberate unblessed run, set WDM_BENCH_ALLOW_UNBLESSED=1."
             );
-            return;
+            std::process::exit(1);
         }
         let fresh: Vec<(String, f64)> =
             results.iter().map(|r| (r.name.clone(), r.median_ns)).collect();

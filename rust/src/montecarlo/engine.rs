@@ -33,7 +33,7 @@ use crate::config::SystemConfig;
 use crate::metrics::TrialTally;
 use crate::model::system::SystemSampler;
 use crate::montecarlo::{executor, IdealEvaluator};
-use crate::oblivious::{run_scheme_with, Scheme, Workspace};
+use crate::oblivious::{batch, run_scheme_with, Scheme, Workspace};
 
 /// One column's sampled population plus its ideal-model evaluation.
 ///
@@ -98,8 +98,12 @@ pub struct RustOblivious {
     pub threads: usize,
 }
 
-impl SchemeEvaluator for RustOblivious {
-    fn tally(&self, pop: &Population, tr_nm: f64) -> TrialTally {
+impl RustOblivious {
+    /// The retained scalar oracle: per-trial [`run_scheme_with`] over a
+    /// reusable [`Workspace`] per worker. The batched kernel
+    /// ([`batched_cafp_tally`]) is pinned bit-identical to this path by
+    /// `tests/oblivious_equivalence.rs` and the golden-digest suite.
+    pub fn tally_scalar(&self, pop: &Population, tr_nm: f64) -> TrialTally {
         let gate = pop.ideal_ltc();
         let order = &pop.cfg.target_order;
         let scheme = self.scheme;
@@ -127,6 +131,18 @@ impl SchemeEvaluator for RustOblivious {
         }
         total
     }
+}
+
+impl SchemeEvaluator for RustOblivious {
+    fn tally(&self, pop: &Population, tr_nm: f64) -> TrialTally {
+        batched_cafp_tally(
+            pop,
+            self.scheme,
+            tr_nm,
+            self.threads,
+            crate::arbiter::batch::default_chunk(),
+        )
+    }
 
     fn scheme(&self) -> Scheme {
         self.scheme
@@ -135,6 +151,53 @@ impl SchemeEvaluator for RustOblivious {
     fn name(&self) -> &'static str {
         "rust-oblivious"
     }
+}
+
+/// CAFP tally via the batched SoA oblivious kernel
+/// ([`crate::oblivious::batch`]): chunks of trials over
+/// [`executor::parallel_map_blocked`], one [`BatchWorkspace`] per worker,
+/// gated on the population's ideal-LtC vector exactly like the scalar path.
+/// Bit-identical to [`RustOblivious::tally_scalar`] for any `chunk` and
+/// `threads` (tally merging is order-free and per-trial results match to
+/// the bit). Populations wider than [`batch::MAX_MASK_CH`] channels fall
+/// back to the scalar oracle (the kernel's visibility masks are u64).
+///
+/// [`BatchWorkspace`]: batch::BatchWorkspace
+pub fn batched_cafp_tally(
+    pop: &Population,
+    scheme: Scheme,
+    tr_nm: f64,
+    threads: usize,
+    chunk: usize,
+) -> TrialTally {
+    if pop.cfg.grid.n_ch > batch::MAX_MASK_CH {
+        return RustOblivious { scheme, threads }.tally_scalar(pop, tr_nm);
+    }
+    let gate = pop.ideal_ltc();
+    let order = &pop.cfg.target_order;
+    let tallies = executor::parallel_map_blocked(
+        pop.n_trials(),
+        threads,
+        chunk,
+        || (batch::BatchWorkspace::with_chunk(chunk), TrialTally::default()),
+        |acc: &mut (batch::BatchWorkspace, TrialTally), r| {
+            let (ws, tally) = acc;
+            ws.run_block(
+                scheme,
+                &pop.sampler,
+                order,
+                tr_nm,
+                r,
+                Some(gate),
+                &mut |_, ideal_ok, class| tally.record(ideal_ok, class),
+            );
+        },
+    );
+    let mut total = TrialTally::default();
+    for (_, t) in &tallies {
+        total.merge(t);
+    }
+    total
 }
 
 /// Population-cache hit/miss counters (cumulative since construction).
@@ -450,17 +513,27 @@ pub struct TrialEngine<'a> {
     ideal: &'a dyn IdealEvaluator,
     threads: usize,
     cache: Option<&'a PopulationCache>,
+    scalar_oblivious: bool,
 }
 
 impl<'a> TrialEngine<'a> {
     pub fn new(ideal: &'a dyn IdealEvaluator, threads: usize) -> Self {
-        Self { ideal, threads, cache: None }
+        Self { ideal, threads, cache: None, scalar_oblivious: false }
     }
 
     /// Memoize per-column populations in `cache` (the
     /// [`crate::api::ArbiterService`] path).
     pub fn with_cache(mut self, cache: &'a PopulationCache) -> Self {
         self.cache = Some(cache);
+        self
+    }
+
+    /// Route CAFP through the scalar oblivious oracle instead of the
+    /// batched kernel — the reference path the golden suite recomputes
+    /// pinned panels through (results are bit-identical either way; this
+    /// makes the equivalence a *checked* property, not an assumption).
+    pub fn with_scalar_oblivious(mut self) -> Self {
+        self.scalar_oblivious = true;
         self
     }
 
@@ -519,9 +592,16 @@ impl<'a> TrialEngine<'a> {
         }
     }
 
-    /// CAFP tally of `scheme` at `tr_nm` over a shared population.
+    /// CAFP tally of `scheme` at `tr_nm` over a shared population — the
+    /// batched SoA kernel by default, the scalar oracle under
+    /// [`Self::with_scalar_oblivious`].
     pub fn cafp(&self, pop: &Population, scheme: Scheme, tr_nm: f64) -> TrialTally {
-        RustOblivious { scheme, threads: self.threads }.tally(pop, tr_nm)
+        let ev = RustOblivious { scheme, threads: self.threads };
+        if self.scalar_oblivious {
+            ev.tally_scalar(pop, tr_nm)
+        } else {
+            ev.tally(pop, tr_nm)
+        }
     }
 }
 

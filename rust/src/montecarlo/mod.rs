@@ -27,8 +27,8 @@ pub mod scheduler;
 pub mod sweep;
 
 pub use engine::{
-    config_fingerprint, fingerprint_digest, CacheStats, Population, PopulationCache, RustOblivious,
-    SchemeEvaluator, TrialEngine,
+    batched_cafp_tally, config_fingerprint, fingerprint_digest, CacheStats, Population,
+    PopulationCache, RustOblivious, SchemeEvaluator, TrialEngine,
 };
 pub use executor::{CancelToken, TaskPool};
 pub use scheduler::{

@@ -1,0 +1,889 @@
+//! Batched structure-of-arrays (SoA) evaluation of the wavelength-oblivious
+//! schemes — the CAFP hot path (paper §V), the oblivious twin of
+//! [`crate::arbiter::batch`].
+//!
+//! The scalar path ([`crate::oblivious::run_scheme_with`]) builds one
+//! [`SearchTable`](crate::oblivious::search::SearchTable) `Vec` per ring per
+//! trial, sorts each with `sort_by`, and answers every bus-visibility
+//! question with an O(ring) scan over `Option<usize>` locks. At the paper's
+//! 100×100 trials per sweep cell those small structures dominate the CAFP
+//! cost once the ideal model is batched. This module keeps the *algorithms*
+//! untouched and restructures the *storage*:
+//!
+//! * **Flat per-chunk search tables** — all entries of a chunk of trials
+//!   live in four parallel arrays (`heat`/`code`/`tone`/`fsr_image`) with a
+//!   `(trial, ring) → (start, end)` range table. Entries are *generated in
+//!   heat order*: each visible tone contributes an ascending stream of FSR
+//!   images (`base + k·FSR`), and an N-way merge (lowest heat first, ties to
+//!   the lowest tone) emits them directly sorted — replacing the per-trial
+//!   `sort_by` in `wavelength_search_into` while reproducing its stable-sort
+//!   tie-break exactly (entries were pushed tone-major, k-ascending).
+//! * **u64 tone bitmasks** — bus visibility during relation probes and
+//!   sequential tuning is a bit test against the mask of tones locked by
+//!   upstream rings, replacing `Bus::tone_visible_to`'s O(ring) scan.
+//! * **O(1) diagonal lookup** — Single-Step Matching's "first table entry
+//!   with LAT row ≡ want (mod N)" scan has a closed form over heat-sorted
+//!   tables (see [`first_entry_with_residue`]), turning the O(n³) residue ×
+//!   chain × entry sweep of `ssm::assign_single_table` into O(n²).
+//!
+//! Every f64 comparison and tie-break mirrors the scalar oracle, so results
+//! are **bit-identical** to `run_scheme_with` for every scheme × scenario ×
+//! chunk size × thread count — pinned by `tests/oblivious_equivalence.rs`
+//! and the golden-digest suite. The chunk size is a pure performance knob
+//! ([`crate::arbiter::batch::default_chunk`], env `WDM_BATCH_CHUNK`).
+
+use std::ops::Range;
+
+use crate::model::ring::red_shift_distance;
+use crate::model::system::SystemSampler;
+use crate::model::{MwlSample, RingRowSample, SpectralOrdering};
+use crate::oblivious::bus::aligned_tone;
+use crate::oblivious::outcome::OutcomeClass;
+use crate::oblivious::relation::{ProbeSet, RelationOutcome};
+use crate::oblivious::search::TUNER_BITS;
+use crate::oblivious::Scheme;
+
+/// Channel-count ceiling of the batched kernel: bus visibility is a u64
+/// tone bitmask. Drivers fall back to the scalar oracle above this (the
+/// paper's systems use 8–16 channels).
+pub const MAX_MASK_CH: usize = 64;
+
+/// Borrowed view of one flat search table (tests/benches): parallel slices
+/// of the per-entry arrays, ordered by heat exactly like
+/// `SearchTable::entries`.
+#[derive(Debug, Clone, Copy)]
+pub struct TableView<'a> {
+    pub heat_nm: &'a [f64],
+    pub code: &'a [u16],
+    pub tone: &'a [u16],
+    pub fsr_image: &'a [u32],
+}
+
+/// Per-worker batched oblivious-trial state: the flat search-table store
+/// for one chunk of trials plus every record/match/adjudication scratch
+/// buffer, allocated once and reused across chunks (the `arbiter::batch`
+/// workspace discipline lifted to the oblivious pipeline).
+#[derive(Debug, Clone)]
+pub struct BatchWorkspace {
+    /// Capacity hint: trials per chunk this workspace was sized for.
+    chunk: usize,
+    /// Trial ids resident in the table store (ascending).
+    sel: Vec<usize>,
+    /// Rings per trial (set by the fill).
+    n_rings: usize,
+    // --- flat per-chunk search-table storage (parallel arrays) ----------
+    heat: Vec<f64>,
+    code: Vec<u16>,
+    tone: Vec<u16>,
+    kimg: Vec<u32>,
+    /// `ranges[slot · n_rings + ring] = (start, end)` into the arrays.
+    ranges: Vec<(u32, u32)>,
+    // --- heat-merge scratch (one stream per tone) ------------------------
+    base: Vec<f64>,
+    cur: Vec<f64>,
+    next_k: Vec<u32>,
+    // --- record/match/adjudication scratch (mirrors oblivious::Workspace) -
+    chain: Vec<usize>,
+    relations: Vec<RelationOutcome>,
+    offsets: Vec<i64>,
+    picks: Vec<Option<usize>>,
+    best_picks: Vec<Option<usize>>,
+    nulls: Vec<usize>,
+    members: Vec<usize>,
+    plan: Vec<Option<usize>>,
+    heats: Vec<Option<f64>>,
+    assignment: Vec<Option<usize>>,
+    tones: Vec<usize>,
+    /// Sequential tuning: bit of the tone locked *at* each ring (0 = none);
+    /// visibility to ring r is the OR of `lock_bits[..r]`.
+    lock_bits: Vec<u64>,
+}
+
+impl Default for BatchWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BatchWorkspace {
+    /// Workspace sized for [`crate::arbiter::batch::default_chunk`] trials.
+    pub fn new() -> Self {
+        Self::with_chunk(crate::arbiter::batch::default_chunk())
+    }
+
+    /// Workspace sized for `chunk` trials per fill.
+    pub fn with_chunk(chunk: usize) -> Self {
+        BatchWorkspace {
+            chunk: chunk.max(1),
+            sel: Vec::new(),
+            n_rings: 0,
+            heat: Vec::new(),
+            code: Vec::new(),
+            tone: Vec::new(),
+            kimg: Vec::new(),
+            ranges: Vec::new(),
+            base: Vec::new(),
+            cur: Vec::new(),
+            next_k: Vec::new(),
+            chain: Vec::new(),
+            relations: Vec::new(),
+            offsets: Vec::new(),
+            picks: Vec::new(),
+            best_picks: Vec::new(),
+            nulls: Vec::new(),
+            members: Vec::new(),
+            plan: Vec::new(),
+            heats: Vec::new(),
+            assignment: Vec::new(),
+            tones: Vec::new(),
+            lock_bits: Vec::new(),
+        }
+    }
+
+    /// Trials per chunk this workspace was sized for.
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Trials currently resident in the table store.
+    pub fn n_filled(&self) -> usize {
+        self.sel.len()
+    }
+
+    /// The flat table of filled trial `slot`, ring `ring` (tests/benches).
+    pub fn table(&self, slot: usize, ring: usize) -> TableView<'_> {
+        let (s, e) = self.ranges[slot * self.n_rings + ring];
+        let (s, e) = (s as usize, e as usize);
+        TableView {
+            heat_nm: &self.heat[s..e],
+            code: &self.code[s..e],
+            tone: &self.tone[s..e],
+            fsr_image: &self.kimg[s..e],
+        }
+    }
+
+    /// Fill the flat search tables for every trial of `range` — the batched
+    /// twin of `search::initial_tables_into` over a whole chunk. Tables are
+    /// generated pre-sorted by the heat merge; no comparison sort runs.
+    pub fn fill(&mut self, sampler: &SystemSampler, mean_tr_nm: f64, range: Range<usize>) {
+        self.sel.clear();
+        self.sel.extend(range);
+        self.fill_selected(sampler, mean_tr_nm);
+    }
+
+    /// Fill tables for the trial ids already collected in `self.sel`.
+    fn fill_selected(&mut self, sampler: &SystemSampler, mean_tr_nm: f64) {
+        self.heat.clear();
+        self.code.clear();
+        self.tone.clear();
+        self.kimg.clear();
+        self.ranges.clear();
+        self.n_rings = 0;
+        // Detach the selection so iterating it does not alias `&mut self`.
+        let sel = std::mem::take(&mut self.sel);
+        for &trial in &sel {
+            let (laser, rings) = sampler.trial(trial);
+            self.n_rings = rings.n_rings();
+            for ring in 0..self.n_rings {
+                let start = self.heat.len() as u32;
+                self.fill_ring(laser, rings, ring, mean_tr_nm);
+                self.ranges.push((start, self.heat.len() as u32));
+            }
+        }
+        self.sel = sel;
+    }
+
+    /// Append ring `ring`'s search table, generated in heat order.
+    ///
+    /// The scalar path pushes entries tone-major / k-ascending and stable-
+    /// sorts by heat, so equal heats stay in (tone, k) order. Each tone's
+    /// image stream `base + k·FSR` is non-decreasing in k (f64 ops are
+    /// monotone), so an N-way merge that takes the strictly-smallest current
+    /// heat — scanning streams in ascending tone order so ties keep the
+    /// earliest tone — reproduces the stable sort bit for bit.
+    fn fill_ring(&mut self, laser: &MwlSample, rings: &RingRowSample, ring: usize, mean_tr_nm: f64) {
+        let n = laser.n_ch();
+        debug_assert!(n <= MAX_MASK_CH);
+        let tr = rings.tuning_range_nm(ring, mean_tr_nm);
+        let fsr = rings.fsr_nm[ring];
+        let res = rings.resonance_nm[ring];
+        // Dark ring / degenerate FSR: no peaks (parity with the guarded
+        // scalar `wavelength_search_into`).
+        if rings.ring_dark(ring) || !(fsr > 0.0) {
+            return;
+        }
+        let code_scale = if tr > 0.0 {
+            ((1u32 << TUNER_BITS) - 1) as f64 / tr
+        } else {
+            0.0
+        };
+        self.base.clear();
+        self.base.resize(n, 0.0);
+        self.cur.clear();
+        self.cur.resize(n, 0.0);
+        self.next_k.clear();
+        self.next_k.resize(n, 0);
+        let mut active: u64 = 0;
+        for tone in 0..n {
+            // Dead tones emit no light. The bus holds no locks during the
+            // initial sweeps, so every live tone is visible.
+            if laser.tone_dead(tone) {
+                continue;
+            }
+            let b = red_shift_distance(laser.tones_nm[tone] - res, fsr);
+            // The k = 0 heat via the scalar's exact expression (`base +
+            // k·FSR`, not bare `base`: it folds −0.0 to +0.0).
+            let h0 = b + 0.0 * fsr;
+            if h0 <= tr {
+                self.base[tone] = b;
+                self.cur[tone] = h0;
+                active |= 1 << tone;
+            }
+        }
+        while active != 0 {
+            let mut best_tone = usize::MAX;
+            let mut best_h = f64::INFINITY;
+            let mut m = active;
+            while m != 0 {
+                let t = m.trailing_zeros() as usize;
+                m &= m - 1;
+                let h = self.cur[t];
+                // Strict `<` with ascending tone scan: exact heat ties keep
+                // the lowest tone, matching the scalar stable sort.
+                if h < best_h {
+                    best_h = h;
+                    best_tone = t;
+                }
+            }
+            let t = best_tone;
+            let k = self.next_k[t];
+            self.heat.push(best_h);
+            self.code.push((best_h * code_scale).round() as u16);
+            self.tone.push(t as u16);
+            self.kimg.push(k);
+            let k1 = k + 1;
+            let h1 = self.base[t] + k1 as f64 * fsr;
+            if h1 > tr {
+                active &= !(1 << t);
+            } else {
+                self.next_k[t] = k1;
+                self.cur[t] = h1;
+            }
+        }
+    }
+
+    /// Record phase (relation probes) for filled trial `slot`: refills the
+    /// chain and the `N_ch` pair relations from the flat tables. Public as
+    /// a bench/test stage entry; [`Self::run_block`] drives it internally.
+    pub fn record_trial(
+        &mut self,
+        laser: &MwlSample,
+        rings: &RingRowSample,
+        target_order: &SpectralOrdering,
+        probes: ProbeSet,
+        slot: usize,
+    ) {
+        target_order.ring_at_slots_into(&mut self.chain);
+        let n = self.chain.len();
+        let tr_ranges = &self.ranges[slot * self.n_rings..(slot + 1) * self.n_rings];
+        self.relations.clear();
+        for k in 0..n {
+            self.relations.push(full_relation_flat(
+                laser,
+                rings,
+                &self.heat,
+                &self.tone,
+                tr_ranges,
+                self.chain[k],
+                self.chain[(k + 1) % n],
+                probes,
+            ));
+        }
+    }
+
+    /// Matching phase over the last recorded trial (`slot` must match the
+    /// preceding [`Self::record_trial`]); refills the lock plan. Returns the
+    /// number of rings planned to lock (bench/test observable).
+    pub fn match_trial(&mut self, slot: usize) -> usize {
+        let tr_ranges = &self.ranges[slot * self.n_rings..(slot + 1) * self.n_rings];
+        match_flat(
+            &self.heat,
+            tr_ranges,
+            &self.chain,
+            &self.relations,
+            &mut self.plan,
+            &mut self.offsets,
+            &mut self.picks,
+            &mut self.best_picks,
+            &mut self.nulls,
+            &mut self.members,
+        );
+        self.plan.iter().filter(|p| p.is_some()).count()
+    }
+
+    /// One RS/VT-RS trial over the filled tables: record → match → realize
+    /// heats → adjudicate.
+    fn rs_trial(
+        &mut self,
+        laser: &MwlSample,
+        rings: &RingRowSample,
+        target_order: &SpectralOrdering,
+        probes: ProbeSet,
+        slot: usize,
+    ) -> OutcomeClass {
+        self.record_trial(laser, rings, target_order, probes, slot);
+        self.match_trial(slot);
+        let tr_ranges = &self.ranges[slot * self.n_rings..(slot + 1) * self.n_rings];
+        self.heats.clear();
+        for (ring, &(s, _)) in tr_ranges.iter().enumerate() {
+            self.heats
+                .push(self.plan[ring].map(|idx| self.heat[s as usize + idx]));
+        }
+        classify_flat(
+            laser,
+            rings,
+            &self.heats,
+            target_order,
+            &mut self.assignment,
+            &mut self.tones,
+        )
+    }
+
+    /// One sequential Lock-to-Nearest trial with mask-based visibility
+    /// (no tables needed).
+    fn seq_trial(
+        &mut self,
+        laser: &MwlSample,
+        rings: &RingRowSample,
+        target_order: &SpectralOrdering,
+        mean_tr_nm: f64,
+    ) -> OutcomeClass {
+        let n = rings.n_rings();
+        self.lock_bits.clear();
+        self.lock_bits.resize(n, 0);
+        self.heats.clear();
+        self.heats.resize(n, None);
+        for slot in 0..n {
+            let ring = target_order.ring_at_slot(slot);
+            // Prefix OR over locked-tone bits: the O(ring) Option scan of
+            // `Bus::tone_visible_to` collapses to word ORs + one bit test
+            // per tone below.
+            let mask = self.lock_bits[..ring].iter().fold(0u64, |a, &b| a | b);
+            if let Some(h) = first_visible_peak_masked(laser, rings, ring, mean_tr_nm, mask) {
+                // `Bus::lock` semantics: the captured tone must align AND
+                // still be visible at this ring.
+                if let Some(t) = aligned_tone(laser, rings, ring, h) {
+                    if mask & (1u64 << t) == 0 {
+                        self.lock_bits[ring] = 1u64 << t;
+                    }
+                }
+                self.heats[ring] = Some(h);
+            }
+        }
+        classify_flat(
+            laser,
+            rings,
+            &self.heats,
+            target_order,
+            &mut self.assignment,
+            &mut self.tones,
+        )
+    }
+
+    /// Evaluate `scheme` over one chunk of trials, gated like the CAFP
+    /// tally: trial `t` is *ideal-ok* when `gate[t] <= mean_tr_nm` (no gate
+    /// = every trial runs), and only ideal-ok trials pay for the oblivious
+    /// simulation. `record(t, ideal_ok, class)` fires once per trial in
+    /// ascending order — the driver folds it into a [`TrialTally`]
+    /// (order-free), tests collect per-trial classes.
+    ///
+    /// [`TrialTally`]: crate::metrics::TrialTally
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_block(
+        &mut self,
+        scheme: Scheme,
+        sampler: &SystemSampler,
+        target_order: &SpectralOrdering,
+        mean_tr_nm: f64,
+        range: Range<usize>,
+        gate: Option<&[f64]>,
+        record: &mut dyn FnMut(usize, bool, Option<OutcomeClass>),
+    ) {
+        let pass = |t: usize| gate.map_or(true, |g| g[t] <= mean_tr_nm);
+        match scheme {
+            Scheme::Sequential => {
+                for t in range {
+                    let ok = pass(t);
+                    let class = if ok {
+                        let (laser, rings) = sampler.trial(t);
+                        Some(self.seq_trial(laser, rings, target_order, mean_tr_nm))
+                    } else {
+                        None
+                    };
+                    record(t, ok, class);
+                }
+            }
+            Scheme::RsSsm | Scheme::VtRsSsm => {
+                let probes = if scheme == Scheme::RsSsm {
+                    ProbeSet::FirstLast
+                } else {
+                    ProbeSet::FirstLastSecond
+                };
+                // One flat fill for every gate-passing trial of the chunk.
+                self.sel.clear();
+                self.sel.extend(range.clone().filter(|&t| pass(t)));
+                self.fill_selected(sampler, mean_tr_nm);
+                let mut slot = 0usize;
+                for t in range {
+                    let ok = pass(t);
+                    let class = if ok {
+                        let (laser, rings) = sampler.trial(t);
+                        let c = self.rs_trial(laser, rings, target_order, probes, slot);
+                        slot += 1;
+                        Some(c)
+                    } else {
+                        None
+                    };
+                    record(t, ok, class);
+                }
+            }
+        }
+    }
+}
+
+/// Unit relation search over flat tables (scalar:
+/// `relation::unit_relation_search_on`). The bus is empty around a unit
+/// probe, so the only lock in play is the aggressor's: the captured tone
+/// becomes a one-bit visibility mask and the victim's masked-entry scan is
+/// a bit test per entry instead of an O(ring) lock walk.
+#[allow(clippy::too_many_arguments)]
+fn unit_relation_flat(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    heat: &[f64],
+    tone: &[u16],
+    tr_ranges: &[(u32, u32)],
+    aggr: usize,
+    victim: usize,
+    aggr_idx: usize,
+) -> Option<i64> {
+    debug_assert!(aggr < victim, "aggressor must be physically upstream");
+    let (a_s, a_e) = tr_ranges[aggr];
+    let (v_s, v_e) = tr_ranges[victim];
+    if aggr_idx >= (a_e - a_s) as usize || v_s == v_e {
+        return None;
+    }
+    // `Bus::lock` on an otherwise-empty bus: the visibility filter is
+    // vacuous, so the captured tone is exactly `aligned_tone`.
+    let captured = aligned_tone(laser, rings, aggr, heat[a_s as usize + aggr_idx]);
+    let mask = captured.map_or(0u64, |t| 1u64 << t);
+    let masked_idx = tone[v_s as usize..v_e as usize]
+        .iter()
+        .position(|&t| mask & (1u64 << t) != 0);
+    Some(masked_idx? as i64 - aggr_idx as i64)
+}
+
+/// Full relation search over flat tables (scalar:
+/// `relation::full_relation_search_on`) — identical probe-index and
+/// mod-N combine logic.
+#[allow(clippy::too_many_arguments)]
+fn full_relation_flat(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    heat: &[f64],
+    tone: &[u16],
+    tr_ranges: &[(u32, u32)],
+    from: usize,
+    to: usize,
+    probes: ProbeSet,
+) -> RelationOutcome {
+    let n = laser.n_ch() as i64;
+    let (aggr, victim, forward) = if from < to { (from, to, true) } else { (to, from, false) };
+    let st_a_len = (tr_ranges[aggr].1 - tr_ranges[aggr].0) as usize;
+    let st_v_len = (tr_ranges[victim].1 - tr_ranges[victim].0) as usize;
+    if st_a_len == 0 || st_v_len == 0 {
+        return RelationOutcome::Null;
+    }
+
+    let mut probe_indices = [st_a_len - 1, 0, 0];
+    let mut n_probes = if st_a_len == 1 { 1 } else { 2 };
+    if probes == ProbeSet::FirstLastSecond && st_a_len > 1 {
+        probe_indices[2] = 1;
+        n_probes = 3;
+    }
+
+    let mut candidates = [0i64; 3];
+    let mut n_cand = 0;
+    for &idx in &probe_indices[..n_probes] {
+        if let Some(ri) =
+            unit_relation_flat(laser, rings, heat, tone, tr_ranges, aggr, victim, idx)
+        {
+            candidates[n_cand] = ri;
+            n_cand += 1;
+        }
+    }
+    let candidates = &candidates[..n_cand];
+    if candidates.is_empty() {
+        return RelationOutcome::Null;
+    }
+    let first = candidates[0];
+    if candidates.iter().any(|&c| (c - first).rem_euclid(n) != 0) {
+        return RelationOutcome::Failed;
+    }
+    let ri = candidates
+        .iter()
+        .copied()
+        .min_by_key(|&c| c.abs())
+        .expect("non-empty");
+    let delta = if forward { -ri } else { ri };
+    RelationOutcome::Found(delta)
+}
+
+/// First index `e ∈ [0, len)` with `e ≡ want (mod n)`, `want ∈ [0, n)` —
+/// the precomputed residue→first-entry lookup of the Lock Allocation Table
+/// in closed form. The candidates are `want, want + n, want + 2n, …`, so
+/// the first in-range one is `want` itself: the scalar
+/// `(0..len).find(|e| e.rem_euclid(n) == want)` scan
+/// (`ssm::assign_single_table`) is O(1) per (ring, residue), no
+/// per-table index build needed. Equivalence is pinned by a unit test.
+#[inline]
+fn first_entry_with_residue(len: usize, want: i64) -> Option<usize> {
+    let w = want as usize;
+    (w < len).then_some(w)
+}
+
+/// Matching phase over flat tables (scalar: `ssm::match_phase_into`) —
+/// identical abort/φ-cluster structure, diagonal picks via
+/// [`first_entry_with_residue`].
+#[allow(clippy::too_many_arguments)]
+fn match_flat(
+    heat: &[f64],
+    tr_ranges: &[(u32, u32)],
+    chain: &[usize],
+    relations: &[RelationOutcome],
+    plan: &mut Vec<Option<usize>>,
+    offsets: &mut Vec<i64>,
+    picks: &mut Vec<Option<usize>>,
+    best_picks: &mut Vec<Option<usize>>,
+    nulls: &mut Vec<usize>,
+    members: &mut Vec<usize>,
+) {
+    let n = chain.len();
+    plan.clear();
+    plan.resize(tr_ranges.len(), None);
+    if n == 0 {
+        return;
+    }
+    if relations.iter().any(|r| matches!(r, RelationOutcome::Failed)) {
+        return; // hard search failure: abort with no locks
+    }
+
+    nulls.clear();
+    nulls.extend(
+        relations
+            .iter()
+            .enumerate()
+            .filter_map(|(k, r)| matches!(r, RelationOutcome::Null).then_some(k)),
+    );
+
+    if nulls.is_empty() {
+        assign_single_flat(heat, tr_ranges, chain, relations, plan, offsets, picks, best_picks, members);
+    } else {
+        for c in 0..nulls.len() {
+            let start = (nulls[c] + 1) % n;
+            let end = nulls[(c + 1) % nulls.len()]; // inclusive
+            let len = (end + n - start) % n + 1;
+            members.clear();
+            members.extend((0..len).map(|t| (start + t) % n));
+            assign_cluster_flat(tr_ranges, chain, relations, members, plan, offsets);
+        }
+    }
+}
+
+/// No-φ diagonal assignment (scalar: `ssm::assign_single_table`): same
+/// residue loop, same coverage/heat tie-break (heat accumulated in the same
+/// k order over bit-identical table heats), O(1) entry lookup.
+#[allow(clippy::too_many_arguments)]
+fn assign_single_flat(
+    heat: &[f64],
+    tr_ranges: &[(u32, u32)],
+    chain: &[usize],
+    relations: &[RelationOutcome],
+    plan: &mut [Option<usize>],
+    offsets: &mut Vec<i64>,
+    picks: &mut Vec<Option<usize>>,
+    best_picks: &mut Vec<Option<usize>>,
+    members: &mut Vec<usize>,
+) {
+    let n = chain.len();
+    members.clear();
+    members.extend(0..n);
+    chain_offsets_flat(relations, members, offsets);
+    let nn = n as i64;
+
+    let mut best: Option<(usize, f64)> = None;
+    for rho in 0..nn {
+        let mut covered = 0usize;
+        let mut heat_sum = 0.0f64;
+        picks.clear();
+        picks.resize(n, None);
+        for k in 0..n {
+            let (s, e) = tr_ranges[chain[k]];
+            let len = (e - s) as usize;
+            let want = (rho + k as i64 - offsets[k]).rem_euclid(nn);
+            if let Some(entry) = first_entry_with_residue(len, want) {
+                covered += 1;
+                heat_sum += heat[s as usize + entry];
+                picks[k] = Some(entry);
+            }
+        }
+        let better = match &best {
+            None => true,
+            Some((bc, bh)) => covered > *bc || (covered == *bc && heat_sum < *bh),
+        };
+        if better {
+            best = Some((covered, heat_sum));
+            std::mem::swap(picks, best_picks);
+        }
+    }
+    if best.is_some() {
+        for k in 0..n {
+            plan[chain[k]] = best_picks[k];
+        }
+    }
+}
+
+/// φ-cluster assignment (scalar: `ssm::assign_cluster`): head → first
+/// entry, tail → last, interior → cyclic diagonal via the O(1) lookup.
+fn assign_cluster_flat(
+    tr_ranges: &[(u32, u32)],
+    chain: &[usize],
+    relations: &[RelationOutcome],
+    members: &[usize],
+    plan: &mut [Option<usize>],
+    offsets: &mut Vec<i64>,
+) {
+    let m = members.len();
+    let n = chain.len() as i64;
+    chain_offsets_flat(relations, members, offsets);
+    for (t, &k) in members.iter().enumerate() {
+        let ring = chain[k];
+        let (s, e) = tr_ranges[ring];
+        let len = (e - s) as usize;
+        if len == 0 {
+            continue; // zero-lock, observed at adjudication
+        }
+        let entry = if t == 0 {
+            Some(0)
+        } else if t == m - 1 {
+            Some(len - 1)
+        } else {
+            let want = (offsets[0] + t as i64 - offsets[t]).rem_euclid(n);
+            first_entry_with_residue(len, want)
+        };
+        plan[ring] = entry;
+    }
+}
+
+/// Cumulative LAT row offsets (scalar: `ssm::chain_offsets_into`).
+fn chain_offsets_flat(relations: &[RelationOutcome], members: &[usize], out: &mut Vec<i64>) {
+    out.clear();
+    out.push(0i64);
+    for t in 1..members.len() {
+        let pair = members[t - 1];
+        let delta = match relations[pair] {
+            RelationOutcome::Found(d) => d,
+            _ => 0,
+        };
+        let prev = out[t - 1];
+        out.push(prev + delta);
+    }
+}
+
+/// `search::first_visible_peak` with mask-based visibility: a tone is
+/// invisible iff its bit is set in `mask` (tones locked upstream).
+fn first_visible_peak_masked(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    ring: usize,
+    mean_tr_nm: f64,
+    mask: u64,
+) -> Option<f64> {
+    if rings.ring_dark(ring) {
+        return None;
+    }
+    let tr = rings.tuning_range_nm(ring, mean_tr_nm);
+    let fsr = rings.fsr_nm[ring];
+    let res = rings.resonance_nm[ring];
+    if !(fsr > 0.0) {
+        return None;
+    }
+    let mut best: Option<f64> = None;
+    for tone in 0..laser.n_ch() {
+        if laser.tone_dead(tone) || mask & (1u64 << tone) != 0 {
+            continue;
+        }
+        let base = red_shift_distance(laser.tones_nm[tone] - res, fsr);
+        // Strict `<`: lower tone index wins exact ties (scalar parity).
+        let better = match best {
+            None => true,
+            Some(b) => base < b,
+        };
+        if base <= tr && better {
+            best = Some(base);
+        }
+    }
+    best
+}
+
+/// Adjudication (scalar: `outcome::classify`) into reused buffers: same
+/// `aligned_tone` assignment, zero/dupl detection via a u64 seen-mask
+/// (n ≤ [`MAX_MASK_CH`]), same cyclic-order check.
+fn classify_flat(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    heats: &[Option<f64>],
+    target_order: &SpectralOrdering,
+    assignment: &mut Vec<Option<usize>>,
+    tones: &mut Vec<usize>,
+) -> OutcomeClass {
+    let n = rings.n_rings();
+    debug_assert_eq!(heats.len(), n);
+    assignment.clear();
+    for (i, h) in heats.iter().enumerate() {
+        assignment.push(h.and_then(|h| aligned_tone(laser, rings, i, h)));
+    }
+    if assignment.iter().any(|a| a.is_none()) {
+        return OutcomeClass::ZeroLock;
+    }
+    tones.clear();
+    tones.extend(assignment.iter().map(|a| a.expect("checked above")));
+    let mut seen: u64 = 0;
+    for &t in tones.iter() {
+        if seen & (1u64 << t) != 0 {
+            return OutcomeClass::DuplLock;
+        }
+        seen |= 1u64 << t;
+    }
+    if target_order.matches_cyclic(tones).is_some() {
+        OutcomeClass::Success
+    } else {
+        OutcomeClass::LaneOrder
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::model::system::SystemSampler;
+    use crate::oblivious::bus::Bus;
+    use crate::oblivious::search::wavelength_search;
+    use crate::oblivious::{run_scheme_with, Workspace};
+
+    /// The closed-form residue lookup equals the scalar diagonal scan for
+    /// every (len, n, want) in the operating envelope.
+    #[test]
+    fn residue_lookup_matches_linear_scan() {
+        for n in 1..=16i64 {
+            for len in 0..40usize {
+                for want in 0..n {
+                    let scan = (0..len).find(|&e| (e as i64).rem_euclid(n) == want);
+                    assert_eq!(
+                        first_entry_with_residue(len, want),
+                        scan,
+                        "len={len} n={n} want={want}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Flat fill == scalar `wavelength_search` tables, entry for entry and
+    /// bit for bit, including the generated-in-order heat sequence.
+    #[test]
+    fn flat_tables_match_scalar_search_bitwise() {
+        let mut cfg = SystemConfig::default();
+        cfg.scenario.faults.dead_tone_p = 0.15;
+        cfg.scenario.faults.dark_ring_p = 0.15;
+        let sampler = SystemSampler::new(&cfg, 6, 6, 99);
+        let mut ws = BatchWorkspace::with_chunk(36);
+        for tr in [0.1, 1.0, 6.0, 14.0] {
+            ws.fill(&sampler, tr, 0..sampler.n_trials());
+            let bus = Bus::new(8);
+            for t in 0..sampler.n_trials() {
+                let (laser, rings) = sampler.trial(t);
+                for ring in 0..rings.n_rings() {
+                    let scalar = wavelength_search(laser, rings, ring, tr, &bus);
+                    let flat = ws.table(t, ring);
+                    assert_eq!(flat.heat_nm.len(), scalar.len(), "tr={tr} t={t} ring={ring}");
+                    for (e, se) in scalar.entries.iter().enumerate() {
+                        assert_eq!(flat.heat_nm[e].to_bits(), se.heat_nm.to_bits());
+                        assert_eq!(flat.code[e], se.code);
+                        assert_eq!(flat.tone[e] as usize, se.tone);
+                        assert_eq!(flat.fsr_image[e], se.fsr_image);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Ungated block evaluation reproduces the scalar scheme runner class
+    /// for class per trial (the tally equivalence then follows for free).
+    #[test]
+    fn run_block_matches_scalar_classes() {
+        let mut cfg = SystemConfig::default();
+        cfg.scenario.faults.dead_tone_p = 0.2;
+        cfg.scenario.faults.dark_ring_p = 0.2;
+        let sampler = SystemSampler::new(&cfg, 7, 7, 1234);
+        let order = &cfg.target_order;
+        let mut scalar_ws = Workspace::new();
+        let mut ws = BatchWorkspace::with_chunk(16);
+        for scheme in Scheme::all() {
+            for tr in [2.0, 6.0] {
+                let mut got = Vec::new();
+                ws.run_block(
+                    scheme,
+                    &sampler,
+                    order,
+                    tr,
+                    0..sampler.n_trials(),
+                    None,
+                    &mut |t, ok, class| {
+                        assert!(ok);
+                        got.push((t, class.expect("ungated")));
+                    },
+                );
+                for (t, class) in got {
+                    let (laser, rings) = sampler.trial(t);
+                    let want = run_scheme_with(scheme, laser, rings, order, tr, &mut scalar_ws);
+                    assert_eq!(class, want.class, "{} tr={tr} t={t}", scheme.name());
+                }
+            }
+        }
+    }
+
+    /// Degenerate FSR parity: the flat fill records no peaks, matching the
+    /// guarded scalar search (no hang, no panic).
+    #[test]
+    fn non_positive_fsr_yields_empty_flat_tables() {
+        let laser = MwlSample { tones_nm: vec![0.0, 1.0], grid_offset_nm: 0.0, dead: vec![] };
+        let rings = RingRowSample {
+            resonance_nm: vec![0.2, 0.4],
+            fsr_nm: vec![0.0, -3.0],
+            tr_scale: vec![1.0, 1.0],
+            dark: vec![],
+        };
+        let mut ws = BatchWorkspace::with_chunk(1);
+        // Hand-built row, no sampler: drive the private fill directly.
+        for ring in 0..2 {
+            ws.n_rings = 2;
+            ws.heat.clear();
+            ws.ranges.clear();
+            let start = ws.heat.len() as u32;
+            ws.fill_ring(&laser, &rings, ring, 5.0);
+            assert!(ws.heat.len() as u32 == start, "ring {ring} must record no peaks");
+            assert_eq!(first_visible_peak_masked(&laser, &rings, ring, 5.0, 0), None);
+        }
+    }
+}

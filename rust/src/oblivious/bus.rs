@@ -93,6 +93,11 @@ pub fn aligned_tone(
     }
     let res = rings.resonance_nm[ring];
     let fsr = rings.fsr_nm[ring];
+    // A non-positive FSR (hand-built rows, unvalidated wire input) would
+    // degenerate `rem_euclid(fsr)` below; such a ring aligns with nothing.
+    if !(fsr > 0.0) {
+        return None;
+    }
     for (j, &tone) in laser.tones_nm.iter().enumerate() {
         if laser.tone_dead(j) {
             continue;
@@ -175,6 +180,20 @@ mod tests {
         assert_eq!(aligned_tone(&laser, &rings, 2, 4.48), None);
         // Healthy pairs still work.
         assert_eq!(aligned_tone(&laser, &rings, 1, 4.48), Some(1));
+    }
+
+    /// Regression: `rem_euclid(fsr)` with `fsr <= 0` is degenerate (0 panics
+    /// in debug via `red_shift_distance`, negatives fold wrongly); such a
+    /// ring must simply never align.
+    #[test]
+    fn non_positive_fsr_never_aligns() {
+        let (laser, mut rings) = nominal();
+        for bad_fsr in [0.0, -8.96, f64::NAN] {
+            rings.fsr_nm[0] = bad_fsr;
+            assert_eq!(aligned_tone(&laser, &rings, 0, 4.48), None, "fsr={bad_fsr}");
+            let mut bus = Bus::new(8);
+            assert_eq!(bus.lock(&laser, &rings, 0, 4.48), None);
+        }
     }
 
     #[test]

@@ -19,7 +19,10 @@
 //! * [`sequential`] — the sequential Lock-to-Nearest baseline (§V-D).
 //! * [`outcome`] — final-lock adjudication and failure classification
 //!   (Fig 9(c–f): Success / Dupl-Lock / Zero-Lock / Lane-Order).
+//! * [`batch`] — chunked SoA trial kernel over flat search tables, the
+//!   bit-identical batched twin of [`run_scheme_with`] (§Perf).
 
+pub mod batch;
 pub mod bus;
 pub mod outcome;
 pub mod relation;

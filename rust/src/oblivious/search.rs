@@ -107,7 +107,11 @@ pub fn wavelength_search_into(
     };
     out.ring = ring;
     out.entries.clear();
-    if rings.ring_dark(ring) {
+    // A non-positive FSR is physically meaningless (hand-built rows or wire
+    // inputs that bypassed `SystemConfig::validate`): without this guard the
+    // image loop below never terminates (`h` stops growing), so record no
+    // peaks — same observable as a dark ring. `!(fsr > 0.0)` also catches NaN.
+    if rings.ring_dark(ring) || !(fsr > 0.0) {
         return;
     }
     for tone in 0..n {
@@ -151,6 +155,10 @@ pub fn first_visible_peak(
     let tr = rings.tuning_range_nm(ring, mean_tr_nm);
     let fsr = rings.fsr_nm[ring];
     let res = rings.resonance_nm[ring];
+    // Degenerate FSR: no peaks (see `wavelength_search_into`).
+    if !(fsr > 0.0) {
+        return None;
+    }
     let mut best: Option<f64> = None;
     for tone in 0..laser.n_ch() {
         if laser.tone_dead(tone) || !bus.tone_visible_to(ring, tone) {
@@ -331,6 +339,24 @@ mod tests {
         assert!(healthy.entries.iter().all(|e| e.tone != 3));
         let fast = first_visible_peak(&laser, &rings, 1, 8.96, &bus);
         assert_eq!(fast, healthy.first().map(|e| e.heat_nm));
+    }
+
+    /// Regression: a hand-built row with `fsr_nm <= 0.0` used to hang the
+    /// image loop forever (`base + k·0 = base` never exceeds TR). The guard
+    /// must record no peaks and must fire before any `red_shift_distance`
+    /// call (whose debug_assert would otherwise trip first).
+    #[test]
+    fn non_positive_fsr_records_no_peaks() {
+        let (laser, mut rings) = nominal_sut();
+        let bus = Bus::new(8);
+        for bad_fsr in [0.0, -8.96, f64::NAN] {
+            rings.fsr_nm[2] = bad_fsr;
+            let st = wavelength_search(&laser, &rings, 2, 8.96, &bus);
+            assert!(st.is_empty(), "fsr={bad_fsr}: table must be empty");
+            assert_eq!(first_visible_peak(&laser, &rings, 2, 8.96, &bus), None);
+            // Healthy rings on the same row are unaffected.
+            assert_eq!(wavelength_search(&laser, &rings, 1, 8.96, &bus).len(), 8);
+        }
     }
 
     #[test]

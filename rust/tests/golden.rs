@@ -218,6 +218,22 @@ fn golden_panel_digests() {
         "batched RustIdeal drifted from the scalar trial-at-a-time oracle"
     );
 
+    // Same bargain for the oblivious kernel: the sequential digests above
+    // evaluated the fig14 CAFP panels through the batched SoA kernel
+    // (`oblivious::batch`); recompute every panel through the scalar
+    // per-trial oracle (`run_scheme_with`) and require identity — the full
+    // tally breakdown is in the digest, so one bit of drift in any scheme's
+    // record/match/classify path trips this before the pins are consulted.
+    let scalar_oblivious = compute_digests(|spec| {
+        let ideal = RustIdeal { threads: 1 };
+        let engine = TrialEngine::new(&ideal, 1).with_scalar_oblivious();
+        spec.run(&engine, &opts(1))
+    });
+    assert_eq!(
+        scalar_oblivious, sequential,
+        "batched oblivious kernel drifted from the scalar run_scheme_with oracle"
+    );
+
     // Scheduler agreement at every thread count (incl. the CI matrix's).
     let mut threads = vec![1, 2, 8];
     if let Ok(v) = std::env::var("WDM_TEST_THREADS") {

@@ -1,0 +1,177 @@
+//! Batched-vs-scalar bit-identity for the **oblivious** kernel: the SoA
+//! trial kernel (`oblivious::batch` via `batched_cafp_tally` /
+//! `RustOblivious::tally`) must reproduce the per-trial oracle
+//! (`run_scheme_with` via `RustOblivious::tally_scalar`) **bit for bit** —
+//! per scheme, under every scenario family (including dead tones / dark
+//! rings / weak rings), and for any chunk-size / thread-count combination.
+//! The ideal-model twin of this contract lives in
+//! `tests/batched_equivalence.rs`; together they let both hot paths change
+//! shape without moving a single golden digest.
+
+use wdm_arbiter::arbiter::Policy;
+use wdm_arbiter::config::SystemConfig;
+use wdm_arbiter::model::system::SystemSampler;
+use wdm_arbiter::model::{CorrelationConfig, Distribution, FaultsConfig};
+use wdm_arbiter::montecarlo::{
+    batched_cafp_tally, Population, RustIdeal, RustOblivious, TrialEngine,
+};
+use wdm_arbiter::oblivious::batch::BatchWorkspace;
+use wdm_arbiter::oblivious::{run_scheme_with, Scheme, Workspace};
+
+/// One representative config per scenario family (mirrors
+/// `tests/batched_equivalence.rs`): the oblivious pipeline branches
+/// differently under faults (empty tables, Null relations, φ-clusters),
+/// correlation (shared structure) and non-uniform draws.
+fn scenario_configs() -> Vec<(&'static str, SystemConfig)> {
+    let mut out = vec![("default", SystemConfig::default())];
+    let mut gauss = SystemConfig::default();
+    gauss.scenario.distribution = Distribution::by_name("trimmed-gaussian").unwrap();
+    out.push(("trimmed-gaussian", gauss));
+    let mut bimodal = SystemConfig::default();
+    bimodal.scenario.distribution = Distribution::by_name("bimodal").unwrap();
+    out.push(("bimodal", bimodal));
+    let mut corr = SystemConfig::default();
+    corr.scenario.correlation = CorrelationConfig { gradient_nm: 2.0, corr_len: 3.0 };
+    out.push(("correlated", corr));
+    let mut faulty = SystemConfig::default();
+    faulty.scenario.faults = FaultsConfig {
+        dead_tone_p: 0.2,
+        dark_ring_p: 0.2,
+        weak_ring_p: 0.2,
+        weak_tr_factor: 0.5,
+    };
+    out.push(("faulty", faulty));
+    out
+}
+
+fn population(cfg: &SystemConfig, n_lasers: usize, n_rows: usize, seed: u64) -> Population {
+    let ideal = RustIdeal { threads: 1 };
+    let engine = TrialEngine::new(&ideal, 1);
+    (*engine.population(cfg, n_lasers, n_rows, seed, &[Policy::LtC])).clone()
+}
+
+/// The full contract: scheme × scenario × chunk {1, 7, 64, 4096} ×
+/// threads {1, 2, 5}, batched CAFP tally equal to the scalar oracle's.
+/// Tallies are plain counters, so equality here means every per-trial
+/// (gate, class) pair agreed (the per-trial check below pins the classes
+/// themselves).
+#[test]
+fn batched_tally_matches_scalar_across_scenarios_chunks_threads() {
+    for (name, cfg) in scenario_configs() {
+        let pop = population(&cfg, 9, 11, 2024); // 99 trials: chunks 1/7/64 all refill
+        for scheme in Scheme::all() {
+            for tr in [2.0, 6.0, 9.0] {
+                let scalar = RustOblivious { scheme, threads: 1 }.tally_scalar(&pop, tr);
+                for chunk in [1usize, 7, 64, 4096] {
+                    for threads in [1usize, 2, 5] {
+                        let batched = batched_cafp_tally(&pop, scheme, tr, threads, chunk);
+                        assert_eq!(
+                            batched,
+                            scalar,
+                            "{name}/{} tr={tr} chunk={chunk} threads={threads}",
+                            scheme.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Per-trial classes (ungated, every trial simulated): the batched block
+/// runner must classify each trial exactly like the scalar scheme runner —
+/// a stronger statement than tally equality, pinned per scenario family.
+#[test]
+fn run_block_classes_match_scalar_per_trial() {
+    for (name, cfg) in scenario_configs() {
+        let sampler = SystemSampler::new(&cfg, 7, 8, 31); // 56 trials
+        let mut scalar_ws = Workspace::new();
+        for scheme in Scheme::all() {
+            for tr in [2.0, 6.0] {
+                let mut ws = BatchWorkspace::with_chunk(13); // uneven chunking
+                let mut got = Vec::new();
+                ws.run_block(
+                    scheme,
+                    &sampler,
+                    &cfg.target_order,
+                    tr,
+                    0..sampler.n_trials(),
+                    None,
+                    &mut |t, ideal_ok, class| {
+                        assert!(ideal_ok, "no gate: every trial runs");
+                        got.push((t, class));
+                    },
+                );
+                assert_eq!(got.len(), sampler.n_trials());
+                for (t, class) in got {
+                    let (laser, rings) = sampler.trial(t);
+                    let want =
+                        run_scheme_with(scheme, laser, rings, &cfg.target_order, tr, &mut scalar_ws)
+                            .class;
+                    assert_eq!(
+                        class,
+                        Some(want),
+                        "{name}/{} tr={tr} trial {t}",
+                        scheme.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The scalar oracle itself must not depend on its worker count, otherwise
+/// the equivalences above would compare against a moving target.
+#[test]
+fn scalar_tally_is_thread_invariant() {
+    let pop = population(&SystemConfig::default(), 8, 8, 7);
+    for scheme in Scheme::all() {
+        let one = RustOblivious { scheme, threads: 1 }.tally_scalar(&pop, 6.0);
+        let four = RustOblivious { scheme, threads: 4 }.tally_scalar(&pop, 6.0);
+        assert_eq!(one, four, "{} scalar threads=4 vs 1", scheme.name());
+    }
+}
+
+/// Near-certain faults: empty search tables, Null relations everywhere,
+/// φ-cluster paths, zero-lock adjudication — the batched kernel's trickiest
+/// regime must still be bit-exact, and the gate vector is mostly infinite
+/// (so most trials skip the oblivious simulation entirely).
+#[test]
+fn heavy_fault_populations_stay_exact() {
+    let mut cfg = SystemConfig::default();
+    cfg.scenario.faults = FaultsConfig {
+        dead_tone_p: 0.6,
+        dark_ring_p: 0.6,
+        weak_ring_p: 0.3,
+        weak_tr_factor: 0.5,
+    };
+    let pop = population(&cfg, 12, 12, 555);
+    assert!(
+        pop.ideal_ltc().iter().any(|v| v.is_infinite()),
+        "regime check: some trials should be unarbitrable at any range"
+    );
+    for scheme in Scheme::all() {
+        for tr in [2.0, 6.0, 12.0] {
+            let scalar = RustOblivious { scheme, threads: 2 }.tally_scalar(&pop, tr);
+            for chunk in [1usize, 64] {
+                let batched = batched_cafp_tally(&pop, scheme, tr, 2, chunk);
+                assert_eq!(batched, scalar, "heavy-faults/{} tr={tr} chunk={chunk}", scheme.name());
+            }
+        }
+    }
+}
+
+/// The default evaluator path (`SchemeEvaluator::tally`, what sweeps
+/// actually call) routes through the batched kernel and equals the oracle —
+/// guards the engine wiring, not just the kernel.
+#[test]
+fn evaluator_tally_routes_through_batched_kernel_and_matches() {
+    use wdm_arbiter::montecarlo::SchemeEvaluator;
+    let pop = population(&SystemConfig::default(), 8, 8, 99);
+    for scheme in Scheme::all() {
+        let ev = RustOblivious { scheme, threads: 2 };
+        for tr in [3.0, 6.0, 9.0] {
+            assert_eq!(ev.tally(&pop, tr), ev.tally_scalar(&pop, tr), "{} tr={tr}", scheme.name());
+        }
+    }
+}
