@@ -5,6 +5,11 @@
 //! ```bash
 //! cargo bench --offline -- figures
 //! ```
+//!
+//! Each figure regeneration is also reported through the shared benchkit
+//! JSON schema (`BENCH_figures.json` under `target/` by default;
+//! `WDM_BENCH_OUT` overrides) so figure-level wall times ride the same
+//! machine-readable trajectory as the hot-path cases.
 
 use wdm_arbiter::config::SystemConfig;
 use wdm_arbiter::coordinator::{Backend, RunOptions};
@@ -16,6 +21,12 @@ use wdm_arbiter::oblivious::outcome::classify;
 use wdm_arbiter::oblivious::relation::{full_record_phase, ProbeSet};
 use wdm_arbiter::oblivious::ssm::match_phase;
 use wdm_arbiter::oblivious::Scheme;
+use wdm_arbiter::testkit::benchkit::{write_json_report, BenchResult};
+
+/// Default report location: next to the build artifacts, not the repo root —
+/// figure wall times are informational (one run per figure, no steady-state
+/// sampling), so they never feed the perf gate's committed baseline.
+const DEFAULT_OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../target/BENCH_figures.json");
 
 fn main() {
     let filter = std::env::args().nth(1).unwrap_or_default();
@@ -29,6 +40,7 @@ fn main() {
     };
     std::fs::create_dir_all(&opts.out_dir).ok();
 
+    let mut results: Vec<BenchResult> = Vec::new();
     println!("{:<10} {:>12} {:>16}", "figure", "wall [s]", "trials/point");
     for exp in all_experiments() {
         if !(filter.is_empty() || filter == "--bench" || exp.id().contains(&filter)) {
@@ -38,7 +50,21 @@ fn main() {
         let rep = exp.run(&opts);
         let dt = t0.elapsed().as_secs_f64();
         match rep {
-            Ok(_) => println!("{:<10} {:>12.2} {:>16}", exp.id(), dt, opts.trials_per_point()),
+            Ok(_) => {
+                println!("{:<10} {:>12.2} {:>16}", exp.id(), dt, opts.trials_per_point());
+                // One regeneration per figure: the single wall time stands
+                // in for every percentile of the shared report schema.
+                let ns = dt * 1e9;
+                results.push(BenchResult {
+                    name: format!("figure_{}", exp.id()),
+                    iters: 1,
+                    mean_ns: ns,
+                    median_ns: ns,
+                    p10_ns: ns,
+                    p90_ns: ns,
+                    units_per_iter: opts.trials_per_point() as f64,
+                });
+            }
             Err(e) => println!("{:<10} FAILED: {e:#}", exp.id()),
         }
     }
@@ -48,6 +74,14 @@ fn main() {
         ablation_ssm_anchors();
     }
     std::fs::remove_dir_all(&opts.out_dir).ok();
+
+    if !results.is_empty() {
+        let out = std::env::var("WDM_BENCH_OUT").unwrap_or_else(|_| DEFAULT_OUT.to_string());
+        match write_json_report(std::path::Path::new(&out), "figures", &results) {
+            Ok(()) => println!("wrote {out}"),
+            Err(e) => eprintln!("warning: could not write {out}: {e}"),
+        }
+    }
 }
 
 /// Ablation 1 (DESIGN.md): relation-search probe sets. Compares CAFP of

@@ -31,6 +31,7 @@ use wdm_arbiter::testkit::benchkit::{
     bench, black_box, check_regressions, header, load_report_medians, write_json_report,
     BenchResult,
 };
+use wdm_arbiter::util::simd;
 
 const TARGET_DEFAULT_MS: u64 = 300;
 
@@ -48,6 +49,10 @@ fn main() {
             .ok()
             .and_then(|v| v.parse().ok())
             .unwrap_or(TARGET_DEFAULT_MS),
+    );
+    println!(
+        "simd dispatch: {} (override with WDM_SIMD=auto|avx2|scalar)",
+        simd::dispatch_tier().name()
     );
     let mut results: Vec<BenchResult> = Vec::new();
     // `units` = work items per timed iteration (trials for population cases)
@@ -194,6 +199,61 @@ fn main() {
         }
     }
 
+    // --- paired SIMD-vs-scalar stage cases --------------------------------
+    // Every lane-kernel stage twice over the same 512-trial population:
+    // `_scalar` pins the retained scalar oracle, `_simd` the best tier this
+    // host detects (AVX2 where available). On hosts without AVX2 both names
+    // time the same scalar loops, so the pair reads as ~1.0x rather than
+    // disappearing from the report. Bit-identity between the two is pinned
+    // by tests/batched_equivalence.rs and tests/oblivious_equivalence.rs —
+    // these cases measure the speedup only.
+    {
+        let order = cfg8.target_order.as_slice();
+        let chunk = sampler.n_trials(); // one 512-trial chunk, no refills
+        let best = *simd::available_tiers()
+            .last()
+            .expect("scalar tier is always available");
+        for (suffix, tier) in [("scalar", simd::Tier::Scalar), ("simd", best)] {
+            let mut ws = batch::BatchWorkspace::with_chunk(chunk);
+            ws.set_simd_tier(tier);
+            run(&format!("batched_ideal_fill_512t_n8_{suffix}"), n_tr, &mut || {
+                ws.fill(black_box(&sampler), 0, chunk);
+                black_box(ws.n_filled());
+            });
+            ws.fill(&sampler, 0, chunk);
+            let mut outs = vec![Vec::new()];
+            let stages = [("ltd", Policy::LtD), ("ltc", Policy::LtC), ("lta", Policy::LtA)];
+            for (stage, policy) in stages {
+                run(&format!("batched_ideal_{stage}_512t_n8_{suffix}"), n_tr, &mut || {
+                    outs[0].clear();
+                    ws.eval_into(order, &[policy], &mut outs);
+                    black_box(outs[0].len());
+                });
+            }
+            let mut ows = ObliviousBatchWorkspace::with_chunk(chunk);
+            ows.set_simd_tier(tier);
+            run(&format!("oblivious_search_fill_512t_n8_{suffix}"), n_tr, &mut || {
+                ows.fill(black_box(&sampler), 6.0, 0..chunk);
+                black_box(ows.n_filled());
+            });
+            // Heat-window scan: ungated sequential tuning over the block —
+            // every trial runs the masked first-visible-peak kernel per ring.
+            run(&format!("oblivious_seqscan_512t_n8_{suffix}"), n_tr, &mut || {
+                let mut n = 0usize;
+                ows.run_block(
+                    Scheme::Sequential,
+                    black_box(&sampler),
+                    &cfg8.target_order,
+                    6.0,
+                    0..chunk,
+                    None,
+                    &mut |_, _, _| n += 1,
+                );
+                black_box(n);
+            });
+        }
+    }
+
     // --- fig14-grid ideal workload: scalar vs batched ---------------------
     // The acceptance workload: every σ_rLV column of the fast-preset Fig 14
     // grid evaluated LtC over its own 10x10 population (same samplers, same
@@ -295,16 +355,22 @@ fn main() {
     let median_of = |name: &str| -> Option<f64> {
         results.iter().find(|r| r.name == name).map(|r| r.median_ns)
     };
-    for (scalar, batched) in [
+    for (base, opt) in [
         ("population512_scalar_ltc_n8", "population512_rust_ltc_n8"),
         ("population512_scalar_multi3_n8", "population512_rust_multi3_n8"),
         ("fig14grid_ideal_ltc_scalar", "fig14grid_ideal_ltc_batched"),
         ("oblivious_cafp512_seq-tuning_scalar", "oblivious_cafp512_seq-tuning_batched"),
         ("oblivious_cafp512_rs-ssm_scalar", "oblivious_cafp512_rs-ssm_batched"),
         ("oblivious_cafp512_vt-rs-ssm_scalar", "oblivious_cafp512_vt-rs-ssm_batched"),
+        ("batched_ideal_fill_512t_n8_scalar", "batched_ideal_fill_512t_n8_simd"),
+        ("batched_ideal_ltd_512t_n8_scalar", "batched_ideal_ltd_512t_n8_simd"),
+        ("batched_ideal_ltc_512t_n8_scalar", "batched_ideal_ltc_512t_n8_simd"),
+        ("batched_ideal_lta_512t_n8_scalar", "batched_ideal_lta_512t_n8_simd"),
+        ("oblivious_search_fill_512t_n8_scalar", "oblivious_search_fill_512t_n8_simd"),
+        ("oblivious_seqscan_512t_n8_scalar", "oblivious_seqscan_512t_n8_simd"),
     ] {
-        if let (Some(s), Some(b)) = (median_of(scalar), median_of(batched)) {
-            println!("batched speedup {batched} vs {scalar}: {:.2}x", s / b);
+        if let (Some(s), Some(b)) = (median_of(base), median_of(opt)) {
+            println!("speedup {opt} vs {base}: {:.2}x", s / b);
         }
     }
 

@@ -23,17 +23,21 @@
 //!   [`feasible_at_masked`]; only undecided trials fall back to the scalar
 //!   [`bottleneck_assignment`].
 //!
-//! Every reduction preserves the scalar path's f64 operation order per
-//! trial, so the results are **bit-identical** to
-//! [`crate::arbiter::ideal::min_tuning_range`] — pinned by
+//! The fill and every scan run through the runtime-dispatched lane kernels
+//! in [`crate::util::simd`] (`WDM_SIMD` env override, explicit
+//! [`BatchWorkspace::set_simd_tier`] for tests/benches). Every reduction
+//! preserves the scalar path's f64 operation order per trial, so the
+//! results are **bit-identical** to
+//! [`crate::arbiter::ideal::min_tuning_range`] at every tier — pinned by
 //! `tests/batched_equivalence.rs` and the golden-digest suite.
 
 use std::sync::OnceLock;
 
-use crate::arbiter::distance::append_scaled_distances;
+use crate::arbiter::distance::append_scaled_distances_simd;
 use crate::arbiter::matching::{bottleneck_assignment, feasible_at_masked, MatchScratch};
 use crate::arbiter::Policy;
 use crate::model::system::SystemSampler;
+use crate::util::simd::{self, Tier};
 
 /// Default trials per chunk: at the paper's n = 8 this is 128 · 64 · 8 B =
 /// 64 KiB of distances — resident in L2 while three policy scans revisit it.
@@ -74,8 +78,13 @@ pub struct BatchWorkspace {
     shift_idx: Vec<u32>,
     /// Target ordering the gather map was built for (rebuild detector).
     gather_order: Vec<usize>,
+    /// Per-column running minima for the LtA prefilter's lower bound.
+    colmin: Vec<f64>,
     /// Kuhn matching scratch for the LtA prefilter.
     scratch: MatchScratch,
+    /// SIMD dispatch tier for the fill and the policy scans. Pure
+    /// performance knob — bit-identical results at every tier.
+    tier: Tier,
     prefilter_hits: u64,
     prefilter_total: u64,
 }
@@ -101,7 +110,9 @@ impl BatchWorkspace {
             dist: Vec::new(),
             shift_idx: Vec::new(),
             gather_order: Vec::new(),
+            colmin: Vec::new(),
             scratch: MatchScratch::new(),
+            tier: simd::dispatch_tier(),
             prefilter_hits: 0,
             prefilter_total: 0,
         }
@@ -110,6 +121,17 @@ impl BatchWorkspace {
     /// Trials per chunk this workspace was sized for.
     pub fn chunk(&self) -> usize {
         self.chunk
+    }
+
+    /// SIMD tier the fill and policy scans run at.
+    pub fn simd_tier(&self) -> Tier {
+        self.tier
+    }
+
+    /// Override the SIMD tier (defaults to [`simd::dispatch_tier`]). Tests
+    /// and benches use this to drive every available tier in one process.
+    pub fn set_simd_tier(&mut self, tier: Tier) {
+        self.tier = tier;
     }
 
     /// Trials currently resident in the distance buffer.
@@ -154,7 +176,7 @@ impl BatchWorkspace {
         self.dist.reserve(self.chunk.max(len) * n * n);
         for t in lo..hi {
             let (laser, rings) = sampler.trial(t);
-            append_scaled_distances(laser, rings, &mut self.dist);
+            append_scaled_distances_simd(laser, rings, &mut self.dist, self.tier);
         }
     }
 
@@ -203,7 +225,7 @@ impl BatchWorkspace {
         let nn = self.n * self.n;
         let idx = &self.shift_idx[..self.n];
         for m in self.dist.chunks_exact(nn) {
-            out.push(fold_max_gather(m, idx));
+            out.push(simd::fold_max_gather(m, idx, self.tier));
         }
     }
 
@@ -215,7 +237,7 @@ impl BatchWorkspace {
         for m in self.dist.chunks_exact(nn) {
             let mut best = f64::INFINITY;
             for idx in self.shift_idx.chunks_exact(n) {
-                let mx = fold_max_gather(m, idx);
+                let mx = simd::fold_max_gather(m, idx, self.tier);
                 if mx < best {
                     best = mx;
                 }
@@ -244,22 +266,21 @@ impl BatchWorkspace {
             let mut lb = f64::NEG_INFINITY;
             // Row minima.
             for row in m.chunks_exact(n) {
-                let mn = fold_min(row);
+                let mn = simd::fold_min(row, self.tier);
                 if mn > lb {
                     lb = mn;
                 }
             }
-            // Column minima (stride-n walk over the same window).
-            for j in 0..n {
-                let mut mn = f64::INFINITY;
-                let mut k = j;
-                while k < nn {
-                    let d = m[k];
-                    if d < mn {
-                        mn = d;
-                    }
-                    k += n;
-                }
+            // Column minima: a lane-wide running minimum over the rows in
+            // row order — the same per-column update sequence (`d < mn`,
+            // rows visited top to bottom) as a stride-n column walk, so the
+            // selected bits are identical; then a scalar max over columns.
+            self.colmin.clear();
+            self.colmin.resize(n, f64::INFINITY);
+            for row in m.chunks_exact(n) {
+                simd::min_in_place(&mut self.colmin, row, self.tier);
+            }
+            for &mn in &self.colmin {
                 if mn > lb {
                     lb = mn;
                 }
@@ -273,32 +294,6 @@ impl BatchWorkspace {
             }
         }
     }
-}
-
-/// Branch-predictable max fold over gathered elements (`d > mx` matches the
-/// scalar scans exactly; distances are never NaN — fault masks use `∞`).
-#[inline]
-fn fold_max_gather(m: &[f64], idx: &[u32]) -> f64 {
-    let mut mx = f64::NEG_INFINITY;
-    for &ix in idx {
-        let d = m[ix as usize];
-        if d > mx {
-            mx = d;
-        }
-    }
-    mx
-}
-
-/// Branch-predictable min fold over a contiguous slice.
-#[inline]
-fn fold_min(row: &[f64]) -> f64 {
-    let mut mn = f64::INFINITY;
-    for &d in row {
-        if d < mn {
-            mn = d;
-        }
-    }
-    mn
 }
 
 #[cfg(test)]
@@ -349,12 +344,16 @@ mod tests {
         let cfg = SystemConfig::default();
         let sampler = SystemSampler::new(&cfg, 6, 7, 31);
         let order = cfg.target_order.as_slice();
-        let mut ws = BatchWorkspace::with_chunk(16);
-        let outs = eval_all(&mut ws, &sampler, order, 0, sampler.n_trials());
-        assert_matches_scalar(&outs, &sampler, order, 0);
-        // Sub-range fills are windows of the same trials.
-        let outs = eval_all(&mut ws, &sampler, order, 10, 25);
-        assert_matches_scalar(&outs, &sampler, order, 10);
+        for tier in crate::util::simd::available_tiers() {
+            let mut ws = BatchWorkspace::with_chunk(16);
+            ws.set_simd_tier(tier);
+            assert_eq!(ws.simd_tier(), tier);
+            let outs = eval_all(&mut ws, &sampler, order, 0, sampler.n_trials());
+            assert_matches_scalar(&outs, &sampler, order, 0);
+            // Sub-range fills are windows of the same trials.
+            let outs = eval_all(&mut ws, &sampler, order, 10, 25);
+            assert_matches_scalar(&outs, &sampler, order, 10);
+        }
     }
 
     #[test]

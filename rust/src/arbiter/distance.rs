@@ -10,6 +10,7 @@
 
 use crate::model::ring::red_shift_distance;
 use crate::model::{MwlSample, RingRowSample, SystemUnderTest};
+use crate::util::simd;
 
 /// Row-major `n × n` distance matrix. `mat[i * n + j]` = scaled distance of
 /// physical ring `i` to laser tone `j`.
@@ -98,6 +99,40 @@ pub fn append_scaled_distances(laser: &MwlSample, rings: &RingRowSample, buf: &m
     }
     let base = buf.len() - n * n;
     apply_fault_masks_slice(laser, rings, n, &mut buf[base..]);
+}
+
+/// Lane-kernel variant of [`append_scaled_distances`]: each ring row is one
+/// [`simd::fill_scaled_distances`] call at the requested tier, fault masks
+/// applied to the appended window afterwards exactly like the scalar form.
+/// Bit-identical to [`append_scaled_distances`] at every tier (the lane
+/// fill's range reduction is exact for the deltas that occur and falls back
+/// per lane otherwise — see [`simd`]'s module docs).
+#[inline]
+pub fn append_scaled_distances_simd(
+    laser: &MwlSample,
+    rings: &RingRowSample,
+    buf: &mut Vec<f64>,
+    tier: simd::Tier,
+) {
+    let n = laser.n_ch();
+    debug_assert_eq!(rings.n_rings(), n);
+    let base = buf.len();
+    buf.resize(base + n * n, 0.0);
+    let out = &mut buf[base..];
+    for i in 0..n {
+        let res = rings.resonance_nm[i];
+        let fsr = rings.fsr_nm[i];
+        let inv_scale = 1.0 / rings.tr_scale[i];
+        simd::fill_scaled_distances(
+            &laser.tones_nm,
+            res,
+            fsr,
+            inv_scale,
+            &mut out[i * n..(i + 1) * n],
+            tier,
+        );
+    }
+    apply_fault_masks_slice(laser, rings, n, out);
 }
 
 /// Sentinel distance for assignments invalidated by resonance aliasing:
@@ -265,6 +300,33 @@ mod tests {
             let nn = m.n * m.n;
             for (a, b) in buf[t * nn..(t + 1) * nn].iter().zip(&m.d) {
                 assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn simd_append_is_bitwise_identical_at_every_tier() {
+        // Faulty scenario so dark-ring rows and dead-tone columns exercise
+        // the post-fill masking on the lane path too.
+        let mut cfg = SystemConfig::default();
+        cfg.scenario.faults.dead_tone_p = 0.2;
+        cfg.scenario.faults.dark_ring_p = 0.2;
+        let mut rng = Rng::seed_from(77);
+        for _ in 0..8 {
+            let sut = crate::model::SystemUnderTest::sample(&cfg, &mut rng);
+            let mut want = Vec::new();
+            append_scaled_distances(&sut.laser, &sut.rings, &mut want);
+            for tier in crate::util::simd::available_tiers() {
+                let mut got = vec![f64::NAN; 3]; // non-empty: append must preserve the prefix
+                let prefix = got.clone();
+                append_scaled_distances_simd(&sut.laser, &sut.rings, &mut got, tier);
+                assert_eq!(got.len(), prefix.len() + want.len());
+                for (g, p) in got.iter().zip(&prefix) {
+                    assert_eq!(g.to_bits(), p.to_bits(), "{tier:?} prefix clobbered");
+                }
+                for (g, w) in got[prefix.len()..].iter().zip(&want) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "{tier:?}");
+                }
             }
         }
     }

@@ -74,6 +74,11 @@
 //! println!("this trial needs a {min_tr:.2} nm mean tuning range under LtC");
 //! ```
 
+// `unsafe` is confined to the SIMD lane kernels: `util::simd` re-allows it
+// locally (a `deny`, unlike `forbid`, can be overridden exactly there) and
+// guards every intrinsic with debug assertions on its preconditions.
+#![deny(unsafe_code)]
+
 pub mod api;
 pub mod arbiter;
 pub mod config;

@@ -34,6 +34,7 @@ use crate::metrics::TrialTally;
 use crate::model::system::SystemSampler;
 use crate::montecarlo::{executor, IdealEvaluator};
 use crate::oblivious::{batch, run_scheme_with, Scheme, Workspace};
+use crate::util::simd;
 
 /// One column's sampled population plus its ideal-model evaluation.
 ///
@@ -160,7 +161,8 @@ impl SchemeEvaluator for RustOblivious {
 /// Bit-identical to [`RustOblivious::tally_scalar`] for any `chunk` and
 /// `threads` (tally merging is order-free and per-trial results match to
 /// the bit). Populations wider than [`batch::MAX_MASK_CH`] channels fall
-/// back to the scalar oracle (the kernel's visibility masks are u64).
+/// back to the scalar oracle (the kernel's visibility masks are
+/// [`batch::MASK_WORDS`]-word bitsets — 256 channels covered batched).
 ///
 /// [`BatchWorkspace`]: batch::BatchWorkspace
 pub fn batched_cafp_tally(
@@ -169,6 +171,20 @@ pub fn batched_cafp_tally(
     tr_nm: f64,
     threads: usize,
     chunk: usize,
+) -> TrialTally {
+    batched_cafp_tally_tier(pop, scheme, tr_nm, threads, chunk, simd::dispatch_tier())
+}
+
+/// [`batched_cafp_tally`] at an explicit SIMD tier. The tier is a pure
+/// performance knob — results are bit-identical for every tier (pinned by
+/// `tests/oblivious_equivalence.rs` across `simd::available_tiers()`).
+pub fn batched_cafp_tally_tier(
+    pop: &Population,
+    scheme: Scheme,
+    tr_nm: f64,
+    threads: usize,
+    chunk: usize,
+    tier: simd::Tier,
 ) -> TrialTally {
     if pop.cfg.grid.n_ch > batch::MAX_MASK_CH {
         return RustOblivious { scheme, threads }.tally_scalar(pop, tr_nm);
@@ -179,7 +195,11 @@ pub fn batched_cafp_tally(
         pop.n_trials(),
         threads,
         chunk,
-        || (batch::BatchWorkspace::with_chunk(chunk), TrialTally::default()),
+        || {
+            let mut ws = batch::BatchWorkspace::with_chunk(chunk);
+            ws.set_simd_tier(tier);
+            (ws, TrialTally::default())
+        },
         |acc: &mut (batch::BatchWorkspace, TrialTally), r| {
             let (ws, tally) = acc;
             ws.run_block(

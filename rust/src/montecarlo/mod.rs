@@ -27,8 +27,8 @@ pub mod scheduler;
 pub mod sweep;
 
 pub use engine::{
-    batched_cafp_tally, config_fingerprint, fingerprint_digest, CacheStats, Population,
-    PopulationCache, RustOblivious, SchemeEvaluator, TrialEngine,
+    batched_cafp_tally, batched_cafp_tally_tier, config_fingerprint, fingerprint_digest,
+    CacheStats, Population, PopulationCache, RustOblivious, SchemeEvaluator, TrialEngine,
 };
 pub use executor::{CancelToken, TaskPool};
 pub use scheduler::{
@@ -40,6 +40,7 @@ use crate::config::SystemConfig;
 use crate::metrics::TrialTally;
 use crate::model::system::SystemSampler;
 use crate::oblivious::Scheme;
+use crate::util::simd;
 
 /// Evaluates per-trial ideal-model minimum tuning ranges over a population.
 ///
@@ -157,13 +158,31 @@ pub fn batched_min_trs_multi(
     threads: usize,
     chunk: usize,
 ) -> Vec<Vec<f64>> {
+    batched_min_trs_multi_tier(cfg, sampler, policies, threads, chunk, simd::dispatch_tier())
+}
+
+/// [`batched_min_trs_multi`] at an explicit SIMD tier. The tier is a pure
+/// performance knob — results are bit-identical for every tier (pinned by
+/// `tests/batched_equivalence.rs` across `simd::available_tiers()`).
+pub fn batched_min_trs_multi_tier(
+    cfg: &SystemConfig,
+    sampler: &SystemSampler,
+    policies: &[Policy],
+    threads: usize,
+    chunk: usize,
+    tier: simd::Tier,
+) -> Vec<Vec<f64>> {
     let order = cfg.target_order.as_slice();
     let n_trials = sampler.n_trials();
     let accs = executor::parallel_map_blocked(
         n_trials,
         threads,
         chunk,
-        || (batch::BatchWorkspace::with_chunk(chunk), vec![Vec::new(); policies.len()]),
+        || {
+            let mut ws = batch::BatchWorkspace::with_chunk(chunk);
+            ws.set_simd_tier(tier);
+            (ws, vec![Vec::new(); policies.len()])
+        },
         |(ws, outs): &mut (batch::BatchWorkspace, Vec<Vec<f64>>), r: std::ops::Range<usize>| {
             ws.fill(sampler, r.start, r.end);
             ws.eval_into(order, policies, outs);

@@ -18,23 +18,27 @@
 //!   the lowest tone) emits them directly sorted — replacing the per-trial
 //!   `sort_by` in `wavelength_search_into` while reproducing its stable-sort
 //!   tie-break exactly (entries were pushed tone-major, k-ascending).
-//! * **u64 tone bitmasks** — bus visibility during relation probes and
-//!   sequential tuning is a bit test against the mask of tones locked by
-//!   upstream rings, replacing `Bus::tone_visible_to`'s O(ring) scan.
+//! * **Multi-word tone bitmasks** — bus visibility during sequential tuning
+//!   and adjudication is a bit test against a [`ToneMask`] of tones locked
+//!   by upstream rings ([`MASK_WORDS`] × u64, grids up to [`MAX_MASK_CH`]
+//!   channels), replacing `Bus::tone_visible_to`'s O(ring) scan.
 //! * **O(1) diagonal lookup** — Single-Step Matching's "first table entry
 //!   with LAT row ≡ want (mod N)" scan has a closed form over heat-sorted
 //!   tables (see [`first_entry_with_residue`]), turning the O(n³) residue ×
 //!   chain × entry sweep of `ssm::assign_single_table` into O(n²).
 //!
-//! Every f64 comparison and tie-break mirrors the scalar oracle, so results
-//! are **bit-identical** to `run_scheme_with` for every scheme × scenario ×
-//! chunk size × thread count — pinned by `tests/oblivious_equivalence.rs`
-//! and the golden-digest suite. The chunk size is a pure performance knob
+//! The heat-window scans (table-fill merge, first-visible-peak selection)
+//! run through the runtime-dispatched lane kernels in [`crate::util::simd`]
+//! (`WDM_SIMD` env override, [`BatchWorkspace::set_simd_tier`] for
+//! tests/benches). Every f64 comparison and tie-break mirrors the scalar
+//! oracle, so results are **bit-identical** to `run_scheme_with` for every
+//! scheme × scenario × chunk size × thread count × SIMD tier — pinned by
+//! `tests/oblivious_equivalence.rs` and the golden-digest suite. The chunk
+//! size is a pure performance knob
 //! ([`crate::arbiter::batch::default_chunk`], env `WDM_BATCH_CHUNK`).
 
 use std::ops::Range;
 
-use crate::model::ring::red_shift_distance;
 use crate::model::system::SystemSampler;
 use crate::model::{MwlSample, RingRowSample, SpectralOrdering};
 use crate::oblivious::bus::aligned_tone;
@@ -42,11 +46,65 @@ use crate::oblivious::outcome::OutcomeClass;
 use crate::oblivious::relation::{ProbeSet, RelationOutcome};
 use crate::oblivious::search::TUNER_BITS;
 use crate::oblivious::Scheme;
+use crate::util::simd::{self, Tier};
 
-/// Channel-count ceiling of the batched kernel: bus visibility is a u64
-/// tone bitmask. Drivers fall back to the scalar oracle above this (the
-/// paper's systems use 8–16 channels).
-pub const MAX_MASK_CH: usize = 64;
+/// u64 words per [`ToneMask`].
+pub const MASK_WORDS: usize = 4;
+
+/// Channel-count ceiling of the batched kernel: bus visibility is a
+/// [`MASK_WORDS`]-word tone bitmask. Drivers fall back to the scalar oracle
+/// above this (the paper's systems use 8–16 channels; 256 covers every
+/// plausible wide-grid sweep without the former 64-channel perf cliff).
+pub const MAX_MASK_CH: usize = MASK_WORDS * 64;
+
+/// Fixed-width tone bitmask ([`MASK_WORDS`] × u64): lock visibility and
+/// duplicate detection for grids up to [`MAX_MASK_CH`] channels, with the
+/// same O(1) set/test cost the old single-u64 mask had at n ≤ 64.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ToneMask {
+    words: [u64; MASK_WORDS],
+}
+
+impl ToneMask {
+    /// No tones set.
+    pub const EMPTY: ToneMask = ToneMask { words: [0; MASK_WORDS] };
+
+    /// Mask with exactly tone `t` set.
+    #[inline]
+    pub fn single(t: usize) -> ToneMask {
+        let mut m = ToneMask::EMPTY;
+        m.set(t);
+        m
+    }
+
+    /// Set tone `t`.
+    #[inline]
+    pub fn set(&mut self, t: usize) {
+        debug_assert!(t < MAX_MASK_CH);
+        self.words[t >> 6] |= 1u64 << (t & 63);
+    }
+
+    /// Is tone `t` set?
+    #[inline]
+    pub fn test(&self, t: usize) -> bool {
+        debug_assert!(t < MAX_MASK_CH);
+        self.words[t >> 6] & (1u64 << (t & 63)) != 0
+    }
+
+    /// OR another mask into this one.
+    #[inline]
+    pub fn or_with(&mut self, other: &ToneMask) {
+        for (w, o) in self.words.iter_mut().zip(&other.words) {
+            *w |= o;
+        }
+    }
+
+    /// True when no tone is set.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+}
 
 /// Borrowed view of one flat search table (tests/benches): parallel slices
 /// of the per-entry arrays, ordered by heat exactly like
@@ -94,9 +152,12 @@ pub struct BatchWorkspace {
     heats: Vec<Option<f64>>,
     assignment: Vec<Option<usize>>,
     tones: Vec<usize>,
-    /// Sequential tuning: bit of the tone locked *at* each ring (0 = none);
-    /// visibility to ring r is the OR of `lock_bits[..r]`.
-    lock_bits: Vec<u64>,
+    /// Sequential tuning: mask of the tone locked *at* each ring (empty =
+    /// none); visibility to ring r is the OR of `lock_bits[..r]`.
+    lock_bits: Vec<ToneMask>,
+    /// SIMD dispatch tier for the heat-window scans. Pure performance knob —
+    /// bit-identical results at every tier.
+    tier: Tier,
 }
 
 impl Default for BatchWorkspace {
@@ -137,12 +198,24 @@ impl BatchWorkspace {
             assignment: Vec::new(),
             tones: Vec::new(),
             lock_bits: Vec::new(),
+            tier: simd::dispatch_tier(),
         }
     }
 
     /// Trials per chunk this workspace was sized for.
     pub fn chunk(&self) -> usize {
         self.chunk
+    }
+
+    /// SIMD tier the heat-window scans run at.
+    pub fn simd_tier(&self) -> Tier {
+        self.tier
+    }
+
+    /// Override the SIMD tier (defaults to [`simd::dispatch_tier`]). Tests
+    /// and benches use this to drive every available tier in one process.
+    pub fn set_simd_tier(&mut self, tier: Tier) {
+        self.tier = tier;
     }
 
     /// Trials currently resident in the table store.
@@ -220,42 +293,39 @@ impl BatchWorkspace {
         self.base.clear();
         self.base.resize(n, 0.0);
         self.cur.clear();
-        self.cur.resize(n, 0.0);
+        self.cur.resize(n, f64::INFINITY);
         self.next_k.clear();
         self.next_k.resize(n, 0);
-        let mut active: u64 = 0;
+        // Lane-fill the mod-FSR bases for every tone; dead tones get a
+        // (bit-identical) base too but are filtered below and never enter
+        // the merge. Bit-identical to the scalar `red_shift_distance` at
+        // every tier (see `util::simd`).
+        simd::fill_red_shift(&laser.tones_nm, res, fsr, &mut self.base, self.tier);
+        // Retired/invisible streams hold `INFINITY` in `cur`, so the merge
+        // is a plain argmin over the window — live heats are ≤ tr (finite)
+        // and always beat the sentinel.
+        let mut n_active = 0usize;
         for tone in 0..n {
             // Dead tones emit no light. The bus holds no locks during the
             // initial sweeps, so every live tone is visible.
             if laser.tone_dead(tone) {
                 continue;
             }
-            let b = red_shift_distance(laser.tones_nm[tone] - res, fsr);
             // The k = 0 heat via the scalar's exact expression (`base +
             // k·FSR`, not bare `base`: it folds −0.0 to +0.0).
-            let h0 = b + 0.0 * fsr;
+            let h0 = self.base[tone] + 0.0 * fsr;
             if h0 <= tr {
-                self.base[tone] = b;
                 self.cur[tone] = h0;
-                active |= 1 << tone;
+                n_active += 1;
             }
         }
-        while active != 0 {
-            let mut best_tone = usize::MAX;
-            let mut best_h = f64::INFINITY;
-            let mut m = active;
-            while m != 0 {
-                let t = m.trailing_zeros() as usize;
-                m &= m - 1;
-                let h = self.cur[t];
-                // Strict `<` with ascending tone scan: exact heat ties keep
-                // the lowest tone, matching the scalar stable sort.
-                if h < best_h {
-                    best_h = h;
-                    best_tone = t;
-                }
-            }
-            let t = best_tone;
+        while n_active > 0 {
+            // Lowest current heat; exact heat ties keep the lowest tone
+            // (argmin's first-occurrence contract), matching the scalar
+            // stable sort.
+            let t = simd::argmin(&self.cur[..n], self.tier)
+                .expect("n_active > 0: some stream holds a finite heat");
+            let best_h = self.cur[t];
             let k = self.next_k[t];
             self.heat.push(best_h);
             self.code.push((best_h * code_scale).round() as u16);
@@ -264,7 +334,8 @@ impl BatchWorkspace {
             let k1 = k + 1;
             let h1 = self.base[t] + k1 as f64 * fsr;
             if h1 > tr {
-                active &= !(1 << t);
+                self.cur[t] = f64::INFINITY;
+                n_active -= 1;
             } else {
                 self.next_k[t] = k1;
                 self.cur[t] = h1;
@@ -349,6 +420,43 @@ impl BatchWorkspace {
         )
     }
 
+    /// `search::first_visible_peak` with mask-based visibility: a tone is
+    /// invisible iff its bit is set in `mask` (tones locked upstream).
+    ///
+    /// Runs as a lane kernel over the `base` scratch: fill every tone's
+    /// mod-FSR base, sentinel dead/masked/out-of-range tones to `INFINITY`,
+    /// then one [`simd::argmin`] — whose first-occurrence tie-break is
+    /// exactly the scalar ascending strict-`<` scan (lower tone index wins
+    /// exact ties), so the selected heat is bit-identical at every tier.
+    fn first_visible_peak_masked(
+        &mut self,
+        laser: &MwlSample,
+        rings: &RingRowSample,
+        ring: usize,
+        mean_tr_nm: f64,
+        mask: &ToneMask,
+    ) -> Option<f64> {
+        if rings.ring_dark(ring) {
+            return None;
+        }
+        let tr = rings.tuning_range_nm(ring, mean_tr_nm);
+        let fsr = rings.fsr_nm[ring];
+        let res = rings.resonance_nm[ring];
+        if !(fsr > 0.0) {
+            return None;
+        }
+        let n = laser.n_ch();
+        self.base.clear();
+        self.base.resize(n, 0.0);
+        simd::fill_red_shift(&laser.tones_nm, res, fsr, &mut self.base, self.tier);
+        for tone in 0..n {
+            if laser.tone_dead(tone) || mask.test(tone) || !(self.base[tone] <= tr) {
+                self.base[tone] = f64::INFINITY;
+            }
+        }
+        simd::argmin(&self.base[..n], self.tier).map(|t| self.base[t])
+    }
+
     /// One sequential Lock-to-Nearest trial with mask-based visibility
     /// (no tables needed).
     fn seq_trial(
@@ -360,21 +468,25 @@ impl BatchWorkspace {
     ) -> OutcomeClass {
         let n = rings.n_rings();
         self.lock_bits.clear();
-        self.lock_bits.resize(n, 0);
+        self.lock_bits.resize(n, ToneMask::EMPTY);
         self.heats.clear();
         self.heats.resize(n, None);
         for slot in 0..n {
             let ring = target_order.ring_at_slot(slot);
-            // Prefix OR over locked-tone bits: the O(ring) Option scan of
+            // Prefix OR over locked-tone masks: the O(ring) Option scan of
             // `Bus::tone_visible_to` collapses to word ORs + one bit test
             // per tone below.
-            let mask = self.lock_bits[..ring].iter().fold(0u64, |a, &b| a | b);
-            if let Some(h) = first_visible_peak_masked(laser, rings, ring, mean_tr_nm, mask) {
+            let mut mask = ToneMask::EMPTY;
+            for b in &self.lock_bits[..ring] {
+                mask.or_with(b);
+            }
+            if let Some(h) = self.first_visible_peak_masked(laser, rings, ring, mean_tr_nm, &mask)
+            {
                 // `Bus::lock` semantics: the captured tone must align AND
                 // still be visible at this ring.
                 if let Some(t) = aligned_tone(laser, rings, ring, h) {
-                    if mask & (1u64 << t) == 0 {
-                        self.lock_bits[ring] = 1u64 << t;
+                    if !mask.test(t) {
+                        self.lock_bits[ring] = ToneMask::single(t);
                     }
                 }
                 self.heats[ring] = Some(h);
@@ -453,9 +565,9 @@ impl BatchWorkspace {
 
 /// Unit relation search over flat tables (scalar:
 /// `relation::unit_relation_search_on`). The bus is empty around a unit
-/// probe, so the only lock in play is the aggressor's: the captured tone
-/// becomes a one-bit visibility mask and the victim's masked-entry scan is
-/// a bit test per entry instead of an O(ring) lock walk.
+/// probe, so the only lock in play is the aggressor's: the victim's
+/// masked-entry scan is a tone-equality test per entry instead of an
+/// O(ring) lock walk.
 #[allow(clippy::too_many_arguments)]
 fn unit_relation_flat(
     laser: &MwlSample,
@@ -476,10 +588,11 @@ fn unit_relation_flat(
     // `Bus::lock` on an otherwise-empty bus: the visibility filter is
     // vacuous, so the captured tone is exactly `aligned_tone`.
     let captured = aligned_tone(laser, rings, aggr, heat[a_s as usize + aggr_idx]);
-    let mask = captured.map_or(0u64, |t| 1u64 << t);
-    let masked_idx = tone[v_s as usize..v_e as usize]
-        .iter()
-        .position(|&t| mask & (1u64 << t) != 0);
+    let masked_idx = captured.and_then(|c| {
+        tone[v_s as usize..v_e as usize]
+            .iter()
+            .position(|&t| t as usize == c)
+    });
     Some(masked_idx? as i64 - aggr_idx as i64)
 }
 
@@ -700,45 +813,9 @@ fn chain_offsets_flat(relations: &[RelationOutcome], members: &[usize], out: &mu
     }
 }
 
-/// `search::first_visible_peak` with mask-based visibility: a tone is
-/// invisible iff its bit is set in `mask` (tones locked upstream).
-fn first_visible_peak_masked(
-    laser: &MwlSample,
-    rings: &RingRowSample,
-    ring: usize,
-    mean_tr_nm: f64,
-    mask: u64,
-) -> Option<f64> {
-    if rings.ring_dark(ring) {
-        return None;
-    }
-    let tr = rings.tuning_range_nm(ring, mean_tr_nm);
-    let fsr = rings.fsr_nm[ring];
-    let res = rings.resonance_nm[ring];
-    if !(fsr > 0.0) {
-        return None;
-    }
-    let mut best: Option<f64> = None;
-    for tone in 0..laser.n_ch() {
-        if laser.tone_dead(tone) || mask & (1u64 << tone) != 0 {
-            continue;
-        }
-        let base = red_shift_distance(laser.tones_nm[tone] - res, fsr);
-        // Strict `<`: lower tone index wins exact ties (scalar parity).
-        let better = match best {
-            None => true,
-            Some(b) => base < b,
-        };
-        if base <= tr && better {
-            best = Some(base);
-        }
-    }
-    best
-}
-
 /// Adjudication (scalar: `outcome::classify`) into reused buffers: same
-/// `aligned_tone` assignment, zero/dupl detection via a u64 seen-mask
-/// (n ≤ [`MAX_MASK_CH`]), same cyclic-order check.
+/// `aligned_tone` assignment, zero/dupl detection via a [`ToneMask`]
+/// seen-mask (n ≤ [`MAX_MASK_CH`]), same cyclic-order check.
 fn classify_flat(
     laser: &MwlSample,
     rings: &RingRowSample,
@@ -758,12 +835,12 @@ fn classify_flat(
     }
     tones.clear();
     tones.extend(assignment.iter().map(|a| a.expect("checked above")));
-    let mut seen: u64 = 0;
+    let mut seen = ToneMask::EMPTY;
     for &t in tones.iter() {
-        if seen & (1u64 << t) != 0 {
+        if seen.test(t) {
             return OutcomeClass::DuplLock;
         }
-        seen |= 1u64 << t;
+        seen.set(t);
     }
     if target_order.matches_cyclic(tones).is_some() {
         OutcomeClass::Success
@@ -807,21 +884,28 @@ mod tests {
         cfg.scenario.faults.dead_tone_p = 0.15;
         cfg.scenario.faults.dark_ring_p = 0.15;
         let sampler = SystemSampler::new(&cfg, 6, 6, 99);
-        let mut ws = BatchWorkspace::with_chunk(36);
-        for tr in [0.1, 1.0, 6.0, 14.0] {
-            ws.fill(&sampler, tr, 0..sampler.n_trials());
-            let bus = Bus::new(8);
-            for t in 0..sampler.n_trials() {
-                let (laser, rings) = sampler.trial(t);
-                for ring in 0..rings.n_rings() {
-                    let scalar = wavelength_search(laser, rings, ring, tr, &bus);
-                    let flat = ws.table(t, ring);
-                    assert_eq!(flat.heat_nm.len(), scalar.len(), "tr={tr} t={t} ring={ring}");
-                    for (e, se) in scalar.entries.iter().enumerate() {
-                        assert_eq!(flat.heat_nm[e].to_bits(), se.heat_nm.to_bits());
-                        assert_eq!(flat.code[e], se.code);
-                        assert_eq!(flat.tone[e] as usize, se.tone);
-                        assert_eq!(flat.fsr_image[e], se.fsr_image);
+        for tier in crate::util::simd::available_tiers() {
+            let mut ws = BatchWorkspace::with_chunk(36);
+            ws.set_simd_tier(tier);
+            for tr in [0.1, 1.0, 6.0, 14.0] {
+                ws.fill(&sampler, tr, 0..sampler.n_trials());
+                let bus = Bus::new(8);
+                for t in 0..sampler.n_trials() {
+                    let (laser, rings) = sampler.trial(t);
+                    for ring in 0..rings.n_rings() {
+                        let scalar = wavelength_search(laser, rings, ring, tr, &bus);
+                        let flat = ws.table(t, ring);
+                        assert_eq!(
+                            flat.heat_nm.len(),
+                            scalar.len(),
+                            "{tier:?} tr={tr} t={t} ring={ring}"
+                        );
+                        for (e, se) in scalar.entries.iter().enumerate() {
+                            assert_eq!(flat.heat_nm[e].to_bits(), se.heat_nm.to_bits());
+                            assert_eq!(flat.code[e], se.code);
+                            assert_eq!(flat.tone[e] as usize, se.tone);
+                            assert_eq!(flat.fsr_image[e], se.fsr_image);
+                        }
                     }
                 }
             }
@@ -839,25 +923,33 @@ mod tests {
         let order = &cfg.target_order;
         let mut scalar_ws = Workspace::new();
         let mut ws = BatchWorkspace::with_chunk(16);
-        for scheme in Scheme::all() {
-            for tr in [2.0, 6.0] {
-                let mut got = Vec::new();
-                ws.run_block(
-                    scheme,
-                    &sampler,
-                    order,
-                    tr,
-                    0..sampler.n_trials(),
-                    None,
-                    &mut |t, ok, class| {
-                        assert!(ok);
-                        got.push((t, class.expect("ungated")));
-                    },
-                );
-                for (t, class) in got {
-                    let (laser, rings) = sampler.trial(t);
-                    let want = run_scheme_with(scheme, laser, rings, order, tr, &mut scalar_ws);
-                    assert_eq!(class, want.class, "{} tr={tr} t={t}", scheme.name());
+        for tier in crate::util::simd::available_tiers() {
+            ws.set_simd_tier(tier);
+            for scheme in Scheme::all() {
+                for tr in [2.0, 6.0] {
+                    let mut got = Vec::new();
+                    ws.run_block(
+                        scheme,
+                        &sampler,
+                        order,
+                        tr,
+                        0..sampler.n_trials(),
+                        None,
+                        &mut |t, ok, class| {
+                            assert!(ok);
+                            got.push((t, class.expect("ungated")));
+                        },
+                    );
+                    for (t, class) in got {
+                        let (laser, rings) = sampler.trial(t);
+                        let want =
+                            run_scheme_with(scheme, laser, rings, order, tr, &mut scalar_ws);
+                        assert_eq!(
+                            class, want.class,
+                            "{} {tier:?} tr={tr} t={t}",
+                            scheme.name()
+                        );
+                    }
                 }
             }
         }
@@ -883,7 +975,33 @@ mod tests {
             let start = ws.heat.len() as u32;
             ws.fill_ring(&laser, &rings, ring, 5.0);
             assert!(ws.heat.len() as u32 == start, "ring {ring} must record no peaks");
-            assert_eq!(first_visible_peak_masked(&laser, &rings, ring, 5.0, 0), None);
+            assert_eq!(
+                ws.first_visible_peak_masked(&laser, &rings, ring, 5.0, &ToneMask::EMPTY),
+                None
+            );
         }
+    }
+
+    /// Multi-word mask semantics across the former u64 boundary: set/test/
+    /// or/single behave identically below and above tone 64.
+    #[test]
+    fn tone_mask_words_cover_wide_grids() {
+        assert!(ToneMask::EMPTY.is_empty());
+        for t in [0usize, 1, 63, 64, 65, 127, 128, 200, MAX_MASK_CH - 1] {
+            let m = ToneMask::single(t);
+            assert!(!m.is_empty());
+            assert!(m.test(t), "tone {t}");
+            for other in [0usize, 63, 64, 129, MAX_MASK_CH - 1] {
+                if other != t {
+                    assert!(!m.test(other), "tone {t} vs {other}");
+                }
+            }
+        }
+        let mut acc = ToneMask::EMPTY;
+        acc.or_with(&ToneMask::single(3));
+        acc.or_with(&ToneMask::single(64));
+        acc.or_with(&ToneMask::single(255));
+        assert!(acc.test(3) && acc.test(64) && acc.test(255));
+        assert!(!acc.test(4) && !acc.test(65) && !acc.test(254));
     }
 }

@@ -1,0 +1,738 @@
+//! Runtime-dispatched SIMD lane kernels for the batched SoA hot paths.
+//!
+//! Both batch kernels ([`crate::arbiter::batch`], [`crate::oblivious::batch`])
+//! reduce to a handful of flat-`f64` primitives: the mod-FSR distance fill,
+//! min/max folds (contiguous and gathered), an elementwise running minimum,
+//! and an argmin. This module provides each primitive at two tiers:
+//!
+//! * **Scalar** — the exact loops the scalar oracles run, written so the
+//!   compiler's autovectorizer has a fair shot (branch-predictable compares,
+//!   no early exits).
+//! * **Avx2** — explicit `std::arch` 256-bit lanes ([`LANES`] = 4 × f64),
+//!   selected at runtime via `is_x86_feature_detected!`.
+//!
+//! # Bit-identity contract
+//!
+//! Every primitive returns **bit-identical** results at every tier. The two
+//! hazards, and how they are retired:
+//!
+//! * **`fmod` in the distance fill** — [`red_shift_distance`] reduces
+//!   `delta mod fsr` with libm `%`, which has no lane equivalent. For the
+//!   ranges that actually occur (`delta ∈ (-fsr, 2·fsr)`, excluding
+//!   `delta == -fsr`) the reduction is a *single* rounded add/sub that the
+//!   lanes reproduce exactly (`delta - fsr` is exact by Sterbenz for
+//!   `delta ∈ [fsr, 2·fsr]`; `delta + fsr` is the same one rounding the
+//!   scalar `r + fsr` performs; in-range `delta` passes through untouched,
+//!   `fmod`-style). Out-of-range lanes — and `delta == -fsr`, where scalar
+//!   `fmod` returns `-0.0` — fall back to the scalar function per lane.
+//! * **`±0.0` ties in folds** — the scalar folds keep the *first* extremum
+//!   (`d < mn` / `d > mx`), observable only when `-0.0` and `+0.0` mix.
+//!   In-lane, `_mm256_min_pd(x, acc)` / `_mm256_max_pd(x, acc)` return the
+//!   *second* operand on equal inputs, preserving first-occurrence; across
+//!   lanes the horizontal reduce cannot know which zero came first, so a
+//!   `0.0` result triggers a scalar rescan (rare, and the slices are small).
+//!
+//! Distances are never NaN (fault masks use `INFINITY`), and the ordered-
+//! quiet compares send any NaN lane to the scalar fallback anyway.
+//!
+//! # Dispatch
+//!
+//! [`dispatch_tier`] reads the `WDM_SIMD` environment variable once per
+//! process (`auto` | `avx2` | `scalar`, same `OnceLock` convention as
+//! `WDM_BATCH_CHUNK`), clamping requests to what the CPU supports. The
+//! primitives take an explicit [`Tier`] so tests and benches can drive
+//! every available tier in one process ([`available_tiers`]); the batch
+//! workspaces default to [`dispatch_tier`] and expose `set_simd_tier`.
+//!
+//! This is the **only** module in the crate allowed to contain `unsafe`
+//! (`#![deny(unsafe_code)]` at the crate root, re-allowed for this module
+//! alone); every intrinsic block is guarded by debug assertions on its
+//! slice-length and index preconditions.
+
+use std::sync::OnceLock;
+
+use crate::model::ring::red_shift_distance;
+
+/// f64 lanes per 256-bit vector — the chunking unit of the Avx2 tier and
+/// the edge-case granularity the unit tests sweep around.
+pub const LANES: usize = 4;
+
+/// A SIMD dispatch tier. Obtain via [`dispatch_tier`] / [`available_tiers`];
+/// `Avx2` must only be fed to primitives on hosts where it is listed as
+/// available (the env override clamps, so this holds by construction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Portable scalar loops — the oracle semantics, every platform.
+    Scalar,
+    /// 256-bit `std::arch` lanes (x86-64 with runtime-detected AVX2).
+    Avx2,
+}
+
+impl Tier {
+    /// Stable lowercase name (bench case suffixes, logs, `WDM_SIMD` values).
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Parse a `WDM_SIMD` value: `Some(tier)` for an explicit request, `None`
+/// for auto (unset, empty, `auto`, or anything unrecognized).
+fn parse_tier(v: Option<&str>) -> Option<Tier> {
+    match v.map(str::trim) {
+        Some("scalar") => Some(Tier::Scalar),
+        Some("avx2") => Some(Tier::Avx2),
+        _ => None,
+    }
+}
+
+/// Best tier this CPU supports.
+fn detect_best() -> Tier {
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx2") {
+        return Tier::Avx2;
+    }
+    Tier::Scalar
+}
+
+/// Clamp an explicit request to hardware support; `None` = auto-detect.
+fn resolve(requested: Option<Tier>) -> Tier {
+    match requested {
+        Some(Tier::Scalar) => Tier::Scalar,
+        Some(Tier::Avx2) | None => detect_best(),
+    }
+}
+
+/// The process-wide dispatch tier: `WDM_SIMD` (read once) clamped to what
+/// the CPU supports. Pure performance knob — results are bit-identical at
+/// every tier (see the module docs for why, and the equivalence suites for
+/// the pin).
+pub fn dispatch_tier() -> Tier {
+    static TIER: OnceLock<Tier> = OnceLock::new();
+    *TIER.get_or_init(|| resolve(parse_tier(std::env::var("WDM_SIMD").ok().as_deref())))
+}
+
+/// Every tier runnable on this host, scalar first. Tests iterate this to
+/// pin cross-tier bit-identity in a single process (the `OnceLock` in
+/// [`dispatch_tier`] freezes the env choice, so suites take tiers
+/// explicitly instead).
+pub fn available_tiers() -> Vec<Tier> {
+    let mut tiers = vec![Tier::Scalar];
+    if detect_best() == Tier::Avx2 {
+        tiers.push(Tier::Avx2);
+    }
+    tiers
+}
+
+/// `out[j] = red_shift_distance(tones[j] - res, fsr)` — the mod-FSR heat
+/// base fill ([`crate::oblivious::batch`]'s search-table streams).
+#[inline]
+pub fn fill_red_shift(tones: &[f64], res: f64, fsr: f64, out: &mut [f64], tier: Tier) {
+    debug_assert_eq!(tones.len(), out.len());
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { avx2::fill_red_shift(tones, res, fsr, out) },
+        _ => scalar::fill_red_shift(tones, res, fsr, out),
+    }
+}
+
+/// `out[j] = red_shift_distance(tones[j] - res, fsr) * inv_scale` — one row
+/// of the scaled distance matrix ([`crate::arbiter::distance`]).
+#[inline]
+pub fn fill_scaled_distances(
+    tones: &[f64],
+    res: f64,
+    fsr: f64,
+    inv_scale: f64,
+    out: &mut [f64],
+    tier: Tier,
+) {
+    debug_assert_eq!(tones.len(), out.len());
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { avx2::fill_scaled_distances(tones, res, fsr, inv_scale, out) },
+        _ => scalar::fill_scaled_distances(tones, res, fsr, inv_scale, out),
+    }
+}
+
+/// Min fold over a contiguous slice (`INFINITY` for an empty one), keeping
+/// the bits of the first minimum like the scalar `d < mn` scan.
+#[inline]
+pub fn fold_min(xs: &[f64], tier: Tier) -> f64 {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { avx2::fold_min(xs) },
+        _ => scalar::fold_min(xs),
+    }
+}
+
+/// Max fold over gathered elements `m[idx[k]]` (`NEG_INFINITY` for empty
+/// `idx`), keeping the bits of the first maximum like the scalar `d > mx`
+/// scan — the LtD/LtC shift-scan inner loop.
+#[inline]
+pub fn fold_max_gather(m: &[f64], idx: &[u32], tier: Tier) -> f64 {
+    debug_assert!(idx.iter().all(|&i| (i as usize) < m.len() && i <= i32::MAX as u32));
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { avx2::fold_max_gather(m, idx) },
+        _ => scalar::fold_max_gather(m, idx),
+    }
+}
+
+/// Elementwise running minimum `acc[j] = min(acc[j], xs[j])` under the
+/// scalar `xs[j] < acc[j]` update (ties keep `acc`, bitwise) — the LtA
+/// column-minima accumulator.
+#[inline]
+pub fn min_in_place(acc: &mut [f64], xs: &[f64], tier: Tier) {
+    debug_assert_eq!(acc.len(), xs.len());
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { avx2::min_in_place(acc, xs) },
+        _ => scalar::min_in_place(acc, xs),
+    }
+}
+
+/// Index of the first element attaining the minimum (value equality, so
+/// `-0.0`/`+0.0` tie to the lowest index — exactly the scalar strict-`<`
+/// scan), or `None` when nothing beats `INFINITY` (empty or all-infinite
+/// slices) — the heat-merge / first-visible-peak selector.
+#[inline]
+pub fn argmin(xs: &[f64], tier: Tier) -> Option<usize> {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { avx2::argmin(xs) },
+        _ => scalar::argmin(xs),
+    }
+}
+
+/// Scalar tier: the oracle loops, shared as the fallback/rescan bodies of
+/// the lane tier.
+mod scalar {
+    use super::red_shift_distance;
+
+    pub fn fill_red_shift(tones: &[f64], res: f64, fsr: f64, out: &mut [f64]) {
+        for (o, &t) in out.iter_mut().zip(tones) {
+            *o = red_shift_distance(t - res, fsr);
+        }
+    }
+
+    pub fn fill_scaled_distances(
+        tones: &[f64],
+        res: f64,
+        fsr: f64,
+        inv_scale: f64,
+        out: &mut [f64],
+    ) {
+        for (o, &t) in out.iter_mut().zip(tones) {
+            *o = red_shift_distance(t - res, fsr) * inv_scale;
+        }
+    }
+
+    pub fn fold_min(xs: &[f64]) -> f64 {
+        let mut mn = f64::INFINITY;
+        for &d in xs {
+            if d < mn {
+                mn = d;
+            }
+        }
+        mn
+    }
+
+    pub fn fold_max_gather(m: &[f64], idx: &[u32]) -> f64 {
+        let mut mx = f64::NEG_INFINITY;
+        for &ix in idx {
+            let d = m[ix as usize];
+            if d > mx {
+                mx = d;
+            }
+        }
+        mx
+    }
+
+    pub fn min_in_place(acc: &mut [f64], xs: &[f64]) {
+        for (a, &x) in acc.iter_mut().zip(xs) {
+            if x < *a {
+                *a = x;
+            }
+        }
+    }
+
+    pub fn argmin(xs: &[f64]) -> Option<usize> {
+        let mut best = f64::INFINITY;
+        let mut at = usize::MAX;
+        for (i, &x) in xs.iter().enumerate() {
+            if x < best {
+                best = x;
+                at = i;
+            }
+        }
+        (at != usize::MAX).then_some(at)
+    }
+}
+
+/// Avx2 tier. Every function is `unsafe fn` + `#[target_feature(enable =
+/// "avx2")]`: callers reach them only through the tier dispatch above,
+/// which never yields [`Tier::Avx2`] unless runtime detection succeeded.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use super::{red_shift_distance, scalar, LANES};
+
+    /// Exact lane range-reduction of `red_shift_distance` (see the module
+    /// docs): in-range lanes in one rounded op each, everything else —
+    /// including `delta == -fsr` and non-finite inputs — per-lane scalar.
+    ///
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the dispatch tier).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fill_red_shift(tones: &[f64], res: f64, fsr: f64, out: &mut [f64]) {
+        fill_core::<false>(tones, res, fsr, 1.0, out);
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the dispatch tier).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fill_scaled_distances(
+        tones: &[f64],
+        res: f64,
+        fsr: f64,
+        inv_scale: f64,
+        out: &mut [f64],
+    ) {
+        fill_core::<true>(tones, res, fsr, inv_scale, out);
+    }
+
+    /// Scalar completion for guard/fallback/tail lanes (a plain fn, not a
+    /// closure: closures inside `#[target_feature]` functions are newer
+    /// than this crate's MSRV).
+    #[inline]
+    fn scalar_row<const SCALED: bool>(
+        tones: &[f64],
+        res: f64,
+        fsr: f64,
+        inv_scale: f64,
+        out: &mut [f64],
+    ) {
+        if SCALED {
+            scalar::fill_scaled_distances(tones, res, fsr, inv_scale, out);
+        } else {
+            scalar::fill_red_shift(tones, res, fsr, out);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn fill_core<const SCALED: bool>(
+        tones: &[f64],
+        res: f64,
+        fsr: f64,
+        inv_scale: f64,
+        out: &mut [f64],
+    ) {
+        debug_assert_eq!(tones.len(), out.len());
+        // Range-reduction preconditions: a positive FSR whose double is
+        // finite (physical FSRs are a few nm — anything else goes scalar).
+        if !(fsr > 0.0) || !(fsr + fsr).is_finite() {
+            scalar_row::<SCALED>(tones, res, fsr, inv_scale, out);
+            return;
+        }
+        let n = tones.len();
+        let vres = _mm256_set1_pd(res);
+        let vfsr = _mm256_set1_pd(fsr);
+        let vfsr2 = _mm256_set1_pd(fsr + fsr);
+        let vneg = _mm256_set1_pd(-fsr);
+        let vzero = _mm256_setzero_pd();
+        let vscale = _mm256_set1_pd(inv_scale);
+        let mut j = 0usize;
+        while j + LANES <= n {
+            let d = _mm256_sub_pd(_mm256_loadu_pd(tones.as_ptr().add(j)), vres);
+            // delta ∈ [0, fsr): fmod is the identity (−0.0 included — it
+            // compares ≥ 0 and passes through sign-preserved, like fmod).
+            let in1 = _mm256_and_pd(
+                _mm256_cmp_pd::<_CMP_GE_OQ>(d, vzero),
+                _mm256_cmp_pd::<_CMP_LT_OQ>(d, vfsr),
+            );
+            // delta ∈ [fsr, 2·fsr): fmod = delta − fsr, exact by Sterbenz.
+            let in2 = _mm256_and_pd(
+                _mm256_cmp_pd::<_CMP_GE_OQ>(d, vfsr),
+                _mm256_cmp_pd::<_CMP_LT_OQ>(d, vfsr2),
+            );
+            // delta ∈ (−fsr, 0): fmod is the identity, then the scalar adds
+            // fsr — one rounding there, one rounding here. `delta == −fsr`
+            // is *excluded*: scalar fmod returns −0.0 for it (fallback).
+            let in3 = _mm256_and_pd(
+                _mm256_cmp_pd::<_CMP_GT_OQ>(d, vneg),
+                _mm256_cmp_pd::<_CMP_LT_OQ>(d, vzero),
+            );
+            let mut r = d;
+            r = _mm256_blendv_pd(r, _mm256_sub_pd(d, vfsr), in2);
+            r = _mm256_blendv_pd(r, _mm256_add_pd(d, vfsr), in3);
+            if SCALED {
+                r = _mm256_mul_pd(r, vscale);
+            }
+            _mm256_storeu_pd(out.as_mut_ptr().add(j), r);
+            let covered = _mm256_or_pd(_mm256_or_pd(in1, in2), in3);
+            let cov = _mm256_movemask_pd(covered);
+            if cov != 0xF {
+                // Ordered compares leave NaN lanes uncovered too, so every
+                // exotic input funnels into the true scalar function.
+                for l in 0..LANES {
+                    if cov & (1 << l) == 0 {
+                        scalar_row::<SCALED>(
+                            &tones[j + l..j + l + 1],
+                            res,
+                            fsr,
+                            inv_scale,
+                            &mut out[j + l..j + l + 1],
+                        );
+                    }
+                }
+            }
+            j += LANES;
+        }
+        scalar_row::<SCALED>(&tones[j..], res, fsr, inv_scale, &mut out[j..]);
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the dispatch tier).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fold_min(xs: &[f64]) -> f64 {
+        let n = xs.len();
+        let mut j = 0usize;
+        let mut mn = f64::INFINITY;
+        if n >= LANES {
+            let mut acc = _mm256_set1_pd(f64::INFINITY);
+            while j + LANES <= n {
+                // min_pd returns the second operand on equal inputs, so
+                // in-lane ties keep the earlier element (scalar `d < mn`).
+                acc = _mm256_min_pd(_mm256_loadu_pd(xs.as_ptr().add(j)), acc);
+                j += LANES;
+            }
+            let mut lanes = [0.0f64; LANES];
+            _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+            for &v in &lanes {
+                if v < mn {
+                    mn = v;
+                }
+            }
+        }
+        for &v in &xs[j..] {
+            if v < mn {
+                mn = v;
+            }
+        }
+        if mn == 0.0 {
+            // The horizontal reduce loses which zero sign came first —
+            // the scalar order decides (rare, and the slices are small).
+            return scalar::fold_min(xs);
+        }
+        mn
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the dispatch tier); every index must be
+    /// in-bounds for `m` (debug-asserted at the dispatch wrapper).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fold_max_gather(m: &[f64], idx: &[u32]) -> f64 {
+        let n = idx.len();
+        let mut j = 0usize;
+        let mut mx = f64::NEG_INFINITY;
+        if n >= LANES {
+            let mut acc = _mm256_set1_pd(f64::NEG_INFINITY);
+            while j + LANES <= n {
+                let vi = _mm_loadu_si128(idx.as_ptr().add(j) as *const __m128i);
+                let g = _mm256_i32gather_pd::<8>(m.as_ptr(), vi);
+                acc = _mm256_max_pd(g, acc);
+                j += LANES;
+            }
+            let mut lanes = [0.0f64; LANES];
+            _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+            for &v in &lanes {
+                if v > mx {
+                    mx = v;
+                }
+            }
+        }
+        for &ix in &idx[j..] {
+            let v = m[ix as usize];
+            if v > mx {
+                mx = v;
+            }
+        }
+        if mx == 0.0 {
+            return scalar::fold_max_gather(m, idx);
+        }
+        mx
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the dispatch tier).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn min_in_place(acc: &mut [f64], xs: &[f64]) {
+        debug_assert_eq!(acc.len(), xs.len());
+        let n = acc.len();
+        let mut j = 0usize;
+        while j + LANES <= n {
+            let a = _mm256_loadu_pd(acc.as_ptr().add(j));
+            let x = _mm256_loadu_pd(xs.as_ptr().add(j));
+            // Elementwise, so no cross-lane ambiguity: min_pd's tie → acc
+            // matches the scalar `x < a` update bit for bit.
+            _mm256_storeu_pd(acc.as_mut_ptr().add(j), _mm256_min_pd(x, a));
+            j += LANES;
+        }
+        scalar::min_in_place(&mut acc[j..], &xs[j..]);
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the dispatch tier).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn argmin(xs: &[f64]) -> Option<usize> {
+        let n = xs.len();
+        let mut j = 0usize;
+        let mut best = f64::INFINITY;
+        let mut at = usize::MAX;
+        if n >= LANES {
+            let mut vval = _mm256_set1_pd(f64::INFINITY);
+            let mut vidx = _mm256_set1_pd(-1.0);
+            // Lane indices ride as f64 (exact for any slice that fits in
+            // memory's 2^53 doubles); −1 marks "lane never improved".
+            let mut vcur = _mm256_set_pd(3.0, 2.0, 1.0, 0.0);
+            let vstep = _mm256_set1_pd(LANES as f64);
+            while j + LANES <= n {
+                let v = _mm256_loadu_pd(xs.as_ptr().add(j));
+                let lt = _mm256_cmp_pd::<_CMP_LT_OQ>(v, vval);
+                vval = _mm256_blendv_pd(vval, v, lt);
+                vidx = _mm256_blendv_pd(vidx, vcur, lt);
+                vcur = _mm256_add_pd(vcur, vstep);
+                j += LANES;
+            }
+            let mut vals = [0.0f64; LANES];
+            let mut idxs = [0.0f64; LANES];
+            _mm256_storeu_pd(vals.as_mut_ptr(), vval);
+            _mm256_storeu_pd(idxs.as_mut_ptr(), vidx);
+            for l in 0..LANES {
+                if idxs[l] < 0.0 {
+                    continue;
+                }
+                let (v, i) = (vals[l], idxs[l] as usize);
+                // Equal minima (−0.0 == +0.0 included) tie to the lowest
+                // index — the scalar first-strict-< scan's pick.
+                if v < best || (v == best && i < at) {
+                    best = v;
+                    at = i;
+                }
+            }
+        }
+        // Tail indices all exceed any lane-recorded index, so strict `<`
+        // alone preserves the lowest-index tie-break.
+        for (off, &v) in xs[j..].iter().enumerate() {
+            if v < best {
+                best = v;
+                at = j + off;
+            }
+        }
+        (at != usize::MAX).then_some(at)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random f64s with adversarial values mixed in:
+    /// ±0.0, INFINITY, and exact ties, across lane boundaries.
+    fn adversarial_vec(n: usize, seed: u64) -> Vec<f64> {
+        let mut state = seed | 1;
+        (0..n)
+            .map(|i| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                match state % 7 {
+                    0 => 0.0,
+                    1 => -0.0,
+                    2 => f64::INFINITY,
+                    3 => ((state >> 32) % 5) as f64, // forced exact ties
+                    _ => ((state >> 33) as f64 / (1u64 << 30) as f64) - 2.0 + i as f64 * 1e-9,
+                }
+            })
+            .collect()
+    }
+
+    fn bits(x: f64) -> u64 {
+        x.to_bits()
+    }
+
+    #[test]
+    fn tier_env_parsing_and_resolution() {
+        assert_eq!(parse_tier(None), None);
+        assert_eq!(parse_tier(Some("auto")), None);
+        assert_eq!(parse_tier(Some("")), None);
+        assert_eq!(parse_tier(Some("unknown")), None);
+        assert_eq!(parse_tier(Some("scalar")), Some(Tier::Scalar));
+        assert_eq!(parse_tier(Some(" avx2 ")), Some(Tier::Avx2));
+        // An explicit scalar request always wins; avx2/auto clamp to the
+        // hardware (identical results either way — the point of the tiers).
+        assert_eq!(resolve(Some(Tier::Scalar)), Tier::Scalar);
+        assert_eq!(resolve(Some(Tier::Avx2)), detect_best());
+        assert_eq!(resolve(None), detect_best());
+        let avail = available_tiers();
+        assert_eq!(avail[0], Tier::Scalar);
+        assert!(avail.contains(&dispatch_tier()) || dispatch_tier() == Tier::Scalar);
+    }
+
+    /// Every tier × every lane-edge length (0, 1, LANES−1, LANES, LANES+1,
+    /// …): folds and argmin bit-match the scalar oracle, including the
+    /// padded-tail lengths where a lane kernel could overread or a
+    /// horizontal reduce could include stale lanes.
+    #[test]
+    fn folds_match_scalar_for_all_tiers_and_lengths() {
+        for tier in available_tiers() {
+            for n in 0..=(4 * LANES + 1) {
+                for seed in 1..=5u64 {
+                    let xs = adversarial_vec(n, seed * 97 + n as u64);
+                    assert_eq!(
+                        bits(fold_min(&xs, tier)),
+                        bits(fold_min(&xs, Tier::Scalar)),
+                        "fold_min {tier:?} n={n} seed={seed}"
+                    );
+                    assert_eq!(
+                        argmin(&xs, tier),
+                        argmin(&xs, Tier::Scalar),
+                        "argmin {tier:?} n={n} seed={seed}"
+                    );
+                    let mut acc_a = adversarial_vec(n, seed * 31 + 7);
+                    let mut acc_b = acc_a.clone();
+                    min_in_place(&mut acc_a, &xs, tier);
+                    min_in_place(&mut acc_b, &xs, Tier::Scalar);
+                    for (a, b) in acc_a.iter().zip(&acc_b) {
+                        assert_eq!(bits(*a), bits(*b), "min_in_place {tier:?} n={n}");
+                    }
+                    // Gather fold through a shuffled index map.
+                    let idx: Vec<u32> = (0..n as u32).rev().collect();
+                    assert_eq!(
+                        bits(fold_max_gather(&xs, &idx, tier)),
+                        bits(fold_max_gather(&xs, &idx, Tier::Scalar)),
+                        "fold_max_gather {tier:?} n={n} seed={seed}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The signed-zero regression the rescan exists for: zeros of both
+    /// signs placed in *different* lanes, where a pure horizontal reduce
+    /// would return whichever lane's zero survived.
+    #[test]
+    fn signed_zero_ties_keep_first_occurrence() {
+        for tier in available_tiers() {
+            for (xs, want) in [
+                (vec![1.0, 0.0, 2.0, 3.0, 4.0, -0.0, 5.0, 6.0], 0.0f64),
+                (vec![1.0, -0.0, 2.0, 3.0, 4.0, 0.0, 5.0, 6.0], -0.0f64),
+                (vec![-0.0, 0.0, -0.0, 0.0, 0.0, -0.0, 0.0, -0.0], -0.0f64),
+            ] {
+                assert_eq!(bits(fold_min(&xs, tier)), bits(want), "{tier:?} {xs:?}");
+                assert_eq!(argmin(&xs, tier), argmin(&xs, Tier::Scalar), "{tier:?}");
+                let idx: Vec<u32> = (0..xs.len() as u32).collect();
+                let neg: Vec<f64> = xs.iter().map(|v| -v).collect();
+                assert_eq!(
+                    bits(fold_max_gather(&neg, &idx, tier)),
+                    bits(fold_max_gather(&neg, &idx, Tier::Scalar)),
+                    "{tier:?} gather {neg:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_infinite_rows_reduce_like_scalar() {
+        let xs = vec![f64::INFINITY; 2 * LANES + 3];
+        for tier in available_tiers() {
+            assert!(fold_min(&xs, tier).is_infinite());
+            assert_eq!(argmin(&xs, tier), None, "{tier:?}: nothing beats INFINITY");
+        }
+        assert_eq!(argmin(&[], Tier::Scalar), None);
+    }
+
+    /// The distance fill across every reduction branch: in-range, the two
+    /// exactly-reducible neighbors, and the fallback ranges — including the
+    /// `delta == −fsr` signed-zero pitfall and non-positive FSRs.
+    #[test]
+    fn fill_matches_scalar_across_ranges_and_tiers() {
+        let fsr = 8.96;
+        let deltas: Vec<f64> = vec![
+            0.0,
+            -0.0,
+            1e-12,
+            4.0,
+            fsr - 1e-9,
+            fsr,
+            fsr + 3.0,
+            2.0 * fsr - 1e-9,
+            2.0 * fsr,
+            5.0 * fsr + 1.3,
+            -1e-12,
+            -4.0,
+            -fsr + 1e-9,
+            -fsr, // scalar fmod yields −0.0 here: must take the fallback
+            -3.0 * fsr - 0.7,
+            1e300,
+            -1e300,
+        ];
+        for tier in available_tiers() {
+            // `res = 0` so `tones − res` reproduces each delta exactly.
+            let res = 0.0;
+            for inv_scale in [1.0, 0.8137] {
+                let tones: Vec<f64> = deltas.clone();
+                let mut got = vec![0.0; tones.len()];
+                let mut want = vec![0.0; tones.len()];
+                fill_scaled_distances(&tones, res, fsr, inv_scale, &mut got, tier);
+                scalar::fill_scaled_distances(&tones, res, fsr, inv_scale, &mut want);
+                for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        bits(*g),
+                        bits(*w),
+                        "{tier:?} delta={} inv_scale={inv_scale}: {g} vs {w}",
+                        deltas[j]
+                    );
+                }
+                let mut got_rs = vec![0.0; tones.len()];
+                let mut want_rs = vec![0.0; tones.len()];
+                fill_red_shift(&tones, res, fsr, &mut got_rs, tier);
+                scalar::fill_red_shift(&tones, res, fsr, &mut want_rs);
+                for (g, w) in got_rs.iter().zip(&want_rs) {
+                    assert_eq!(bits(*g), bits(*w), "{tier:?} red_shift");
+                }
+            }
+        }
+    }
+
+    /// Randomized fill parity at lane-edge lengths, with realistic offsets
+    /// (`res` ≠ 0 so the subtraction itself rounds) — n = 1 and the
+    /// not-a-multiple-of-LANES tails included.
+    #[test]
+    fn fill_matches_scalar_randomized() {
+        for tier in available_tiers() {
+            for n in [1usize, 2, 3, 4, 5, 7, 8, 9, 16, 31] {
+                for seed in 1..=4u64 {
+                    let tones = adversarial_vec(n, seed * 13 + n as u64);
+                    // fsr must be positive: callers guard `!(fsr > 0.0)`
+                    // before the fill (and the scalar oracle debug-asserts).
+                    for fsr in [8.96, 0.25] {
+                        let mut got = vec![0.0; n];
+                        let mut want = vec![0.0; n];
+                        fill_scaled_distances(&tones, -3.44, fsr, 0.97, &mut got, tier);
+                        scalar::fill_scaled_distances(&tones, -3.44, fsr, 0.97, &mut want);
+                        for (g, w) in got.iter().zip(&want) {
+                            assert_eq!(
+                                bits(*g),
+                                bits(*w),
+                                "{tier:?} n={n} fsr={fsr} seed={seed}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -9,7 +9,10 @@ use wdm_arbiter::arbiter::Policy;
 use wdm_arbiter::config::SystemConfig;
 use wdm_arbiter::model::system::SystemSampler;
 use wdm_arbiter::model::{CorrelationConfig, Distribution, FaultsConfig};
-use wdm_arbiter::montecarlo::{batched_min_trs_multi, IdealEvaluator, RustIdeal};
+use wdm_arbiter::montecarlo::{
+    batched_min_trs_multi, batched_min_trs_multi_tier, IdealEvaluator, RustIdeal,
+};
+use wdm_arbiter::util::simd;
 
 const ALL: [Policy; 3] = [Policy::LtA, Policy::LtC, Policy::LtD];
 
@@ -84,6 +87,25 @@ fn chunking_and_threading_never_change_results() {
         for threads in [1usize, 2, 5] {
             let got = batched_min_trs_multi(&cfg, &sampler, &ALL, threads, chunk);
             assert_bits_eq(&got, &reference, &format!("chunk={chunk} threads={threads}"));
+        }
+    }
+}
+
+/// Explicit SIMD-tier axis: the batched kernel at every tier this host can
+/// run (scalar always; AVX2 where detected) reproduces the oracle bit for
+/// bit — distance fill, LtD/LtC shift scans and the LtA prefilter all run
+/// through the lane kernels. The CI legs additionally run the whole suite
+/// under `WDM_SIMD=scalar` and `WDM_SIMD=auto` to cover the env dispatch.
+#[test]
+fn simd_tiers_never_change_results() {
+    for (name, cfg) in scenario_configs() {
+        let sampler = SystemSampler::new(&cfg, 8, 9, 909);
+        let reference = RustIdeal { threads: 1 }.min_trs_multi_scalar(&cfg, &sampler, &ALL);
+        for tier in simd::available_tiers() {
+            for chunk in [5usize, 64] {
+                let got = batched_min_trs_multi_tier(&cfg, &sampler, &ALL, 2, chunk, tier);
+                assert_bits_eq(&got, &reference, &format!("{name} tier={tier:?} chunk={chunk}"));
+            }
         }
     }
 }

@@ -161,6 +161,83 @@ fn heavy_fault_populations_stay_exact() {
     }
 }
 
+/// Explicit SIMD-tier axis: the batched tally at every tier this host can
+/// run (scalar always; AVX2 where detected) equals the scalar oracle bit
+/// for bit. This pins cross-tier identity in a *single* process — the CI
+/// legs additionally run the whole suite under `WDM_SIMD=scalar` and
+/// `WDM_SIMD=auto` to cover the env-dispatch path.
+#[test]
+fn batched_tally_matches_scalar_at_every_simd_tier() {
+    use wdm_arbiter::montecarlo::batched_cafp_tally_tier;
+    use wdm_arbiter::util::simd;
+    for (name, cfg) in scenario_configs() {
+        let pop = population(&cfg, 7, 7, 404);
+        for scheme in Scheme::all() {
+            for tr in [2.0, 6.0] {
+                let scalar = RustOblivious { scheme, threads: 1 }.tally_scalar(&pop, tr);
+                for tier in simd::available_tiers() {
+                    let batched = batched_cafp_tally_tier(&pop, scheme, tr, 2, 16, tier);
+                    assert_eq!(
+                        batched,
+                        scalar,
+                        "{name}/{} tr={tr} tier={tier:?}",
+                        scheme.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// >64-channel regression: grids above the former u64 mask ceiling must
+/// stay on the batched path (no silent scalar fallback) and remain
+/// bit-identical to the oracle — the widened multi-word `ToneMask` at work.
+#[test]
+fn wide_grids_stay_on_the_batched_path_and_match() {
+    use wdm_arbiter::model::DwdmGrid;
+    use wdm_arbiter::oblivious::batch::MAX_MASK_CH;
+    let cfg = SystemConfig::table1(DwdmGrid { n_ch: 72, spacing_nm: 1.12 });
+    assert!(cfg.grid.n_ch > 64, "test must exceed the former single-u64 ceiling");
+    assert!(
+        cfg.grid.n_ch <= MAX_MASK_CH,
+        "test must stay on the batched path (no scalar fallback)"
+    );
+    let pop = population(&cfg, 3, 3, 4242);
+    for scheme in Scheme::all() {
+        for tr in [30.0, 60.0] {
+            let scalar = RustOblivious { scheme, threads: 1 }.tally_scalar(&pop, tr);
+            let batched = batched_cafp_tally(&pop, scheme, tr, 2, 4);
+            assert_eq!(batched, scalar, "wide/{} tr={tr}", scheme.name());
+        }
+    }
+    // Per-trial classes too (ungated, every trial simulated): sequential
+    // tuning's prefix lock masks and adjudication's seen-mask both cross
+    // the word boundary at 72 channels.
+    let sampler = SystemSampler::new(&cfg, 2, 2, 77);
+    let mut scalar_ws = Workspace::new();
+    let mut ws = BatchWorkspace::with_chunk(3);
+    for scheme in Scheme::all() {
+        let mut got = Vec::new();
+        ws.run_block(
+            scheme,
+            &sampler,
+            &cfg.target_order,
+            40.0,
+            0..sampler.n_trials(),
+            None,
+            &mut |t, _, class| got.push((t, class.expect("ungated"))),
+        );
+        assert_eq!(got.len(), sampler.n_trials());
+        for (t, class) in got {
+            let (laser, rings) = sampler.trial(t);
+            let want =
+                run_scheme_with(scheme, laser, rings, &cfg.target_order, 40.0, &mut scalar_ws)
+                    .class;
+            assert_eq!(class, want, "wide/{} trial {t}", scheme.name());
+        }
+    }
+}
+
 /// The default evaluator path (`SchemeEvaluator::tally`, what sweeps
 /// actually call) routes through the batched kernel and equals the oracle —
 /// guards the engine wiring, not just the kernel.
