@@ -17,6 +17,7 @@ use wdm_arbiter::experiments::{rlv_sweep, tr_sweep};
 use wdm_arbiter::metrics::TrialTally;
 use wdm_arbiter::model::system::SystemSampler;
 use wdm_arbiter::model::{DwdmGrid, SystemUnderTest};
+use wdm_arbiter::montecarlo::rareevent::{splitting_afp, weighted_afp_cell};
 use wdm_arbiter::montecarlo::{
     batched_cafp_tally, IdealEvaluator, RustIdeal, RustOblivious, TrialEngine,
 };
@@ -286,6 +287,27 @@ fn main() {
             black_box(acc);
         });
     }
+    // --- rare-event estimator stages (montecarlo::rareevent) --------------
+    // The importance path costs two extra stages over a plain sweep: the
+    // tilted population sample/eval (per-device mixture draws) and the
+    // sequential weighted fold (per-trial likelihood-ratio weight +
+    // delta-method tally). The splitting case times one full ladder.
+    {
+        let mut tilted_cfg = cfg8.clone();
+        tilted_cfg.scenario.sampling.tilt = 1.0e4;
+        let tilted = SystemSampler::new(&tilted_cfg, 16, 32, 1234);
+        run("rare_event_tilted_pop512_ltc_n8", n_tr, &mut || {
+            black_box(rust.min_trs(&tilted_cfg, black_box(&tilted), Policy::LtC));
+        });
+        let min_trs = rust.min_trs(&tilted_cfg, &tilted, Policy::LtC);
+        run("rare_event_weighted_fold_512t_n8", n_tr, &mut || {
+            black_box(weighted_afp_cell(black_box(&tilted), &min_trs, 6.0));
+        });
+        run("rare_event_splitting_64p_n8", 64.0, &mut || {
+            black_box(splitting_afp(&cfg8, Policy::LtC, 8.0, 64, 8, 42));
+        });
+    }
+
     // --- batched SoA oblivious kernel stages (oblivious::batch) -----------
     // Same 512-trial population as the ideal cases. Stage cases pin the
     // flat heat-merge fill, the relation probes, and the SSM match; the

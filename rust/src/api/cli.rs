@@ -47,8 +47,8 @@ fn json_safe_seed(seed: u64) -> Result<u64, String> {
 }
 
 /// The shared execution options (`--out --fast --lasers --rows --seed
-/// --threads --backend --ci --min-trials --max-trials --inflight`),
-/// captured only when explicitly given.
+/// --threads --backend --ci --min-trials --max-trials --inflight
+/// --estimator --tilt --levels`), captured only when explicitly given.
 pub fn options_from_args(args: &Args) -> Result<JobOptions, String> {
     let mut o = JobOptions { fast: args.flag("fast"), ..JobOptions::default() };
     o.out = args.get("out").map(str::to_string);
@@ -63,8 +63,12 @@ pub fn options_from_args(args: &Args) -> Result<JobOptions, String> {
     o.min_trials = parse_opt::<usize>(args, "min-trials")?;
     o.max_trials = parse_opt::<usize>(args, "max-trials")?;
     o.inflight = parse_opt::<usize>(args, "inflight")?;
-    // Fail bad adaptive combinations at argv time, not mid-sweep.
+    o.estimator = args.get("estimator").map(str::to_string);
+    o.tilt = parse_opt::<f64>(args, "tilt")?;
+    o.levels = parse_opt::<usize>(args, "levels")?;
+    // Fail bad adaptive/estimator combinations at argv time, not mid-sweep.
     o.adaptive()?;
+    o.estimator_spec()?;
     Ok(o)
 }
 
@@ -93,12 +97,20 @@ fn run_from_args(args: &Args) -> Result<JobRequest, String> {
         .get(1)
         .ok_or_else(|| "run: expected an experiment id (see `list`)".to_string())?;
     let options = options_from_args(args)?;
-    // Adaptive allocation is a sweep knob; paper experiments always
-    // evaluate full populations. Silently ignoring it would mislead.
+    // Adaptive allocation and estimator selection are sweep knobs; paper
+    // experiments always evaluate full plain-sampled populations. Silently
+    // ignoring them would mislead.
     if options.ci.is_some() || options.min_trials.is_some() || options.max_trials.is_some() {
         return Err(
             "run: --ci/--min-trials/--max-trials apply to `sweep` only \
              (experiments always evaluate full populations)"
+                .to_string(),
+        );
+    }
+    if options.estimator.is_some() || options.tilt.is_some() || options.levels.is_some() {
+        return Err(
+            "run: --estimator/--tilt/--levels apply to `sweep` only \
+             (experiments reproduce the paper's plain Monte Carlo draws)"
                 .to_string(),
         );
     }
@@ -252,6 +264,50 @@ mod tests {
             "--min-trials", "100", "--max-trials", "10",
         ]))
         .is_err());
+    }
+
+    #[test]
+    fn estimator_flags_map_and_validate() {
+        let job = job_from_args(&argv(&[
+            "sweep", "--axis", "grid-offset", "--values", "0.5", "--tr", "4.6",
+            "--estimator", "importance", "--tilt", "100000",
+        ]))
+        .unwrap();
+        let JobRequest::Sweep { options, .. } = job else { panic!("expected sweep") };
+        assert_eq!(options.estimator.as_deref(), Some("importance"));
+        assert_eq!(options.tilt, Some(100000.0));
+        assert_eq!(options.levels, None);
+        let job = job_from_args(&argv(&[
+            "sweep", "--axis", "grid-offset", "--values", "0.5", "--tr", "4.6",
+            "--estimator", "splitting", "--levels", "24",
+        ]))
+        .unwrap();
+        let JobRequest::Sweep { options, .. } = job else { panic!("expected sweep") };
+        assert_eq!(options.estimator.as_deref(), Some("splitting"));
+        assert_eq!(options.levels, Some(24));
+        // Bad combinations fail at argv time, not mid-sweep.
+        assert!(job_from_args(&argv(&[
+            "sweep", "--axis", "grid-offset", "--values", "0.5", "--estimator", "warp",
+        ]))
+        .is_err());
+        assert!(job_from_args(&argv(&[
+            "sweep", "--axis", "grid-offset", "--values", "0.5", "--tilt", "8",
+        ]))
+        .is_err());
+        assert!(job_from_args(&argv(&[
+            "sweep", "--axis", "grid-offset", "--values", "0.5",
+            "--estimator", "importance", "--tilt", "0.5",
+        ]))
+        .is_err());
+        assert!(job_from_args(&argv(&[
+            "sweep", "--axis", "grid-offset", "--values", "0.5",
+            "--estimator", "importance", "--ci", "0.05",
+        ]))
+        .is_err());
+        // Estimator knobs are sweep-only, rejected on `run`.
+        assert!(job_from_args(&argv(&["run", "fig4", "--estimator", "importance"])).is_err());
+        assert!(job_from_args(&argv(&["run", "fig4", "--tilt", "8"])).is_err());
+        assert!(job_from_args(&argv(&["run", "fig4", "--levels", "12"])).is_err());
     }
 
     #[test]

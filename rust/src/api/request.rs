@@ -14,6 +14,7 @@ use crate::config::toml::TomlDoc;
 use crate::config::SystemConfig;
 use crate::coordinator::sweep::{ConfigAxis, Measure};
 use crate::coordinator::{AdaptiveCfg, Backend, RunOptions};
+use crate::montecarlo::rareevent::{EstimatorKind, EstimatorSpec, DEFAULT_LEVELS, DEFAULT_TILT};
 use crate::oblivious::Scheme;
 use crate::util::json::Json;
 use crate::util::values::parse_values;
@@ -48,6 +49,16 @@ pub struct JobOptions {
     /// Cap on concurrently in-flight sweep columns (`--inflight`,
     /// 0 = one per worker thread). Bounds resident populations.
     pub inflight: Option<usize>,
+    /// Rare-event estimator (`--estimator`): `fixed | ci | importance |
+    /// stratified | splitting`. Sweep jobs only. Unset means `fixed`,
+    /// except that a bare `--ci` keeps selecting the adaptive allocator.
+    pub estimator: Option<String>,
+    /// Importance-sampling tilt factor τ ≥ 1 (`--tilt`; only with
+    /// `--estimator importance`).
+    pub tilt: Option<f64>,
+    /// Maximum splitting stages (`--levels`; only with
+    /// `--estimator splitting`).
+    pub levels: Option<usize>,
 }
 
 impl JobOptions {
@@ -106,6 +117,72 @@ impl JobOptions {
         Ok(Some(AdaptiveCfg { width, min_trials, max_trials }))
     }
 
+    /// Resolve the estimator selection ([`EstimatorSpec`]). Sweep jobs
+    /// only. Rules:
+    ///
+    /// * unset + `--ci` → the adaptive allocator (backward compatible);
+    ///   unset without `--ci` → `fixed`;
+    /// * `--estimator ci` requires `--ci`; `--estimator fixed` (explicit)
+    ///   conflicts with `--ci`;
+    /// * the rare-event estimators conflict with `--ci` (they carry their
+    ///   own interval machinery);
+    /// * `--tilt` only applies to `importance`, `--levels` only to
+    ///   `splitting`.
+    pub fn estimator_spec(&self) -> Result<EstimatorSpec, String> {
+        let kind = match &self.estimator {
+            None if self.ci.is_some() => EstimatorKind::Ci,
+            None => EstimatorKind::Fixed,
+            Some(name) => EstimatorKind::by_name(name).ok_or_else(|| {
+                format!(
+                    "options.estimator: unknown estimator '{name}' \
+                     (fixed | ci | importance | stratified | splitting)"
+                )
+            })?,
+        };
+        match kind {
+            EstimatorKind::Ci => {
+                if self.ci.is_none() {
+                    return Err(
+                        "options.estimator: 'ci' needs a ci interval width (--ci)".to_string()
+                    );
+                }
+            }
+            EstimatorKind::Fixed => {
+                if self.estimator.is_some() && self.ci.is_some() {
+                    return Err(
+                        "options.estimator: 'fixed' conflicts with --ci (use estimator 'ci')"
+                            .to_string(),
+                    );
+                }
+            }
+            _ => {
+                if self.ci.is_some() {
+                    return Err(format!(
+                        "options.estimator: '{}' conflicts with --ci adaptive allocation",
+                        kind.name()
+                    ));
+                }
+            }
+        }
+        if self.tilt.is_some() && kind != EstimatorKind::Importance {
+            return Err("options.tilt: only applies to estimator 'importance'".to_string());
+        }
+        if self.levels.is_some() && kind != EstimatorKind::Splitting {
+            return Err("options.levels: only applies to estimator 'splitting'".to_string());
+        }
+        let tilt = self.tilt.unwrap_or(DEFAULT_TILT);
+        if !(tilt.is_finite() && tilt >= 1.0) {
+            return Err(format!(
+                "options.tilt: tilt factor must be finite and >= 1, got {tilt}"
+            ));
+        }
+        let levels = self.levels.unwrap_or(DEFAULT_LEVELS);
+        if kind == EstimatorKind::Splitting && levels == 0 {
+            return Err("options.levels: must be at least 1".to_string());
+        }
+        Ok(EstimatorSpec { kind, tilt, levels })
+    }
+
     fn to_json(&self) -> Json {
         let mut pairs: Vec<(&str, Json)> = Vec::new();
         if let Some(out) = &self.out {
@@ -140,6 +217,15 @@ impl JobOptions {
         }
         if let Some(n) = self.inflight {
             pairs.push(("inflight", Json::num(n as f64)));
+        }
+        if let Some(e) = &self.estimator {
+            pairs.push(("estimator", Json::str(e.clone())));
+        }
+        if let Some(t) = self.tilt {
+            pairs.push(("tilt", Json::num(t)));
+        }
+        if let Some(n) = self.levels {
+            pairs.push(("levels", Json::num(n as f64)));
         }
         Json::obj(pairs)
     }
@@ -220,6 +306,25 @@ impl JobOptions {
                             .ok_or_else(|| "options.inflight: expected an integer".to_string())?,
                     )
                 }
+                "estimator" => {
+                    o.estimator = Some(
+                        v.as_str()
+                            .ok_or_else(|| "options.estimator: expected a string".to_string())?
+                            .to_string(),
+                    )
+                }
+                "tilt" => {
+                    o.tilt = Some(
+                        v.as_f64()
+                            .ok_or_else(|| "options.tilt: expected a number".to_string())?,
+                    )
+                }
+                "levels" => {
+                    o.levels = Some(
+                        v.as_usize()
+                            .ok_or_else(|| "options.levels: expected an integer".to_string())?,
+                    )
+                }
                 other => return Err(format!("options: unknown key '{other}'")),
             }
         }
@@ -297,6 +402,25 @@ impl JobOptions {
             o.inflight = Some(
                 v.as_usize()
                     .ok_or_else(|| "options.inflight: expected an integer".to_string())?,
+            );
+        }
+        if let Some(v) = g("estimator") {
+            o.estimator = Some(
+                v.as_str()
+                    .ok_or_else(|| "options.estimator: expected a string".to_string())?
+                    .to_string(),
+            );
+        }
+        if let Some(v) = g("tilt") {
+            o.tilt = Some(
+                v.as_f64()
+                    .ok_or_else(|| "options.tilt: expected a number".to_string())?,
+            );
+        }
+        if let Some(v) = g("levels") {
+            o.levels = Some(
+                v.as_usize()
+                    .ok_or_else(|| "options.levels: expected an integer".to_string())?,
             );
         }
         Ok(o)
@@ -997,6 +1121,30 @@ mod tests {
                 config: ConfigSpec::default(),
                 options: JobOptions::default(),
             },
+            JobRequest::Sweep {
+                axis: ConfigAxis::GridOffsetNm,
+                values: vec![0.5],
+                thresholds: Some(vec![4.0]),
+                measures: vec![Measure::Afp(Policy::LtC)],
+                config: ConfigSpec::default(),
+                options: JobOptions {
+                    estimator: Some("importance".to_string()),
+                    tilt: Some(1e5),
+                    ..JobOptions::default()
+                },
+            },
+            JobRequest::Sweep {
+                axis: ConfigAxis::GridOffsetNm,
+                values: vec![0.5],
+                thresholds: Some(vec![4.0]),
+                measures: vec![Measure::Afp(Policy::LtC)],
+                config: ConfigSpec::default(),
+                options: JobOptions {
+                    estimator: Some("splitting".to_string()),
+                    levels: Some(24),
+                    ..JobOptions::default()
+                },
+            },
             JobRequest::Column {
                 tag: "sweep".to_string(),
                 lane: 2,
@@ -1201,6 +1349,33 @@ id = "table1"
         );
     }
 
+    /// Acceptance: the estimator knobs survive TOML → memory → JSON →
+    /// memory with values intact, and resolve to the right spec.
+    #[test]
+    fn estimator_knobs_round_trip_toml_and_json() {
+        let toml = "[job]\ntype = \"sweep\"\naxis = \"grid-offset\"\n\
+                    values = [0.5]\ntr = [4.6]\nmeasures = \"afp:ltc\"\n\
+                    [job.options]\nestimator = \"importance\"\ntilt = 100000.0\n";
+        let job = JobRequest::from_toml(toml).unwrap();
+        let JobRequest::Sweep { options, .. } = &job else { panic!("sweep") };
+        assert_eq!(options.estimator.as_deref(), Some("importance"));
+        assert_eq!(options.tilt, Some(100000.0));
+        let spec = options.estimator_spec().unwrap();
+        assert_eq!(spec.kind, EstimatorKind::Importance);
+        assert_eq!(spec.tilt, 100000.0);
+        assert_eq!(JobRequest::from_json_str(&job.to_json_string()).unwrap(), job);
+
+        let toml = "[job]\ntype = \"sweep\"\naxis = \"grid-offset\"\n\
+                    values = [0.5]\ntr = [4.6]\nmeasures = \"afp:ltc\"\n\
+                    [job.options]\nestimator = \"splitting\"\nlevels = 16\n";
+        let job = JobRequest::from_toml(toml).unwrap();
+        let JobRequest::Sweep { options, .. } = &job else { panic!("sweep") };
+        let spec = options.estimator_spec().unwrap();
+        assert_eq!(spec.kind, EstimatorKind::Splitting);
+        assert_eq!(spec.levels, 16);
+        assert_eq!(JobRequest::from_json_str(&job.to_json_string()).unwrap(), job);
+    }
+
     #[test]
     fn toml_single_job_and_ordering() {
         let single =
@@ -1249,6 +1424,68 @@ id = "table1"
         // inflight flows into RunOptions.
         let o = JobOptions { inflight: Some(3), ..JobOptions::default() };
         assert_eq!(o.to_run_options().max_inflight, 3);
+    }
+
+    #[test]
+    fn estimator_options_resolve_and_validate() {
+        // Defaults: fixed without --ci, the adaptive allocator with it.
+        assert_eq!(JobOptions::default().estimator_spec().unwrap().kind, EstimatorKind::Fixed);
+        let o = JobOptions { ci: Some(0.01), ..JobOptions::default() };
+        assert_eq!(o.estimator_spec().unwrap().kind, EstimatorKind::Ci);
+
+        let o = JobOptions {
+            estimator: Some("importance".to_string()),
+            tilt: Some(50.0),
+            ..JobOptions::default()
+        };
+        let spec = o.estimator_spec().unwrap();
+        assert_eq!(spec.kind, EstimatorKind::Importance);
+        assert_eq!(spec.tilt, 50.0);
+        let o = JobOptions {
+            estimator: Some("splitting".to_string()),
+            levels: Some(12),
+            ..JobOptions::default()
+        };
+        let spec = o.estimator_spec().unwrap();
+        assert_eq!(spec.kind, EstimatorKind::Splitting);
+        assert_eq!(spec.levels, 12);
+        let o = JobOptions { estimator: Some("stratified".to_string()), ..JobOptions::default() };
+        assert_eq!(o.estimator_spec().unwrap().kind, EstimatorKind::Stratified);
+
+        // Conflicts and bad values.
+        let err = |o: JobOptions| o.estimator_spec().unwrap_err();
+        assert!(err(JobOptions { estimator: Some("bogus".into()), ..Default::default() })
+            .contains("unknown estimator"));
+        assert!(err(JobOptions { estimator: Some("ci".into()), ..Default::default() })
+            .contains("needs a ci interval"));
+        assert!(err(JobOptions {
+            estimator: Some("fixed".into()),
+            ci: Some(0.01),
+            ..Default::default()
+        })
+        .contains("conflicts with --ci"));
+        assert!(err(JobOptions {
+            estimator: Some("importance".into()),
+            ci: Some(0.01),
+            ..Default::default()
+        })
+        .contains("conflicts with --ci"));
+        assert!(err(JobOptions { tilt: Some(4.0), ..Default::default() })
+            .contains("only applies to estimator 'importance'"));
+        assert!(err(JobOptions { levels: Some(8), ..Default::default() })
+            .contains("only applies to estimator 'splitting'"));
+        assert!(err(JobOptions {
+            estimator: Some("importance".into()),
+            tilt: Some(0.5),
+            ..Default::default()
+        })
+        .contains("must be finite and >= 1"));
+        assert!(err(JobOptions {
+            estimator: Some("splitting".into()),
+            levels: Some(0),
+            ..Default::default()
+        })
+        .contains("at least 1"));
     }
 
     #[test]

@@ -27,12 +27,16 @@ use crate::coordinator::{run_experiment_quiet, Backend};
 use crate::experiments::{by_id, tr_sweep};
 use crate::fleet::FleetEvaluator;
 use crate::model::SystemUnderTest;
+use crate::metrics::TrialTally;
+use crate::montecarlo::rareevent::{run_splitting_sweep, EstimatorKind};
 use crate::montecarlo::{
-    self, fingerprint_digest, CancelToken, PopulationCache, SWEEP_CANCELED, TaskPool, TrialEngine,
+    self, fingerprint_digest, CancelToken, GridStats, PopulationCache, SWEEP_CANCELED, TaskPool,
+    TrialEngine,
 };
 use crate::oblivious::{run_scheme, Scheme};
 use crate::rng::Rng;
 use crate::util::json::Json;
+use crate::util::stats::wilson_interval;
 
 /// Long-lived job executor: owns the default backend choice and the
 /// cross-request [`PopulationCache`]. Submit any number of
@@ -271,12 +275,20 @@ impl ServiceCore {
         if cancel.is_canceled() {
             return Err(SWEEP_CANCELED.to_string());
         }
-        // Adaptive allocation is a sweep knob; experiments always evaluate
-        // full populations, so accepting it here would mislead.
+        // Adaptive allocation and estimator selection are sweep knobs;
+        // experiments always evaluate full plain-sampled populations, so
+        // accepting them here would mislead.
         if options.ci.is_some() || options.min_trials.is_some() || options.max_trials.is_some() {
             return Err(
                 "run: ci/min_trials/max_trials apply to sweep jobs only \
                  (experiments always evaluate full populations)"
+                    .to_string(),
+            );
+        }
+        if options.estimator.is_some() || options.tilt.is_some() || options.levels.is_some() {
+            return Err(
+                "run: estimator/tilt/levels apply to sweep jobs only \
+                 (experiments reproduce the paper's plain Monte Carlo draws)"
                     .to_string(),
             );
         }
@@ -320,11 +332,19 @@ impl ServiceCore {
     ) -> Result<JobResponse, String> {
         let mut opts = options.to_run_options();
         opts.ci = options.adaptive()?;
+        let est = options.estimator_spec()?;
+        est.validate_measures(measures)?;
         if options.threads.is_none() {
             // Inherit the service-level worker budget (`serve --threads T`).
             opts.threads = self.threads;
         }
-        let cfg = config.load()?;
+        let mut cfg = config.load()?;
+        // The estimator rides the scenario's sampling design: injected once
+        // into the base config it reaches every column config, the
+        // population-cache key, and the fleet's inline-TOML + fingerprint
+        // handshake without any extra wire fields. `fixed`/`ci`/`splitting`
+        // leave the config untouched.
+        est.apply_to(&mut cfg);
         if values.is_empty() {
             return Err("sweep: needs at least one axis value".to_string());
         }
@@ -390,15 +410,24 @@ impl ServiceCore {
         } else {
             self.fleet.as_ref().map(|f| f as &dyn montecarlo::RemoteColumns)
         };
-        let run = montecarlo::scheduler::run_sweep_dispatched(
-            &spec,
-            &opts,
-            &backend_tag,
-            cache,
-            cancel,
-            remote,
-            &mut on_column,
-        )?;
+        let run = if est.kind == EstimatorKind::Splitting {
+            // The splitting ladder is sequential per cell (each stage's
+            // threshold depends on the previous stage's survivors), so it
+            // runs outside the column scheduler: no population cache (a
+            // particle cloud is not a reusable full population) and no
+            // fleet dispatch.
+            run_splitting_sweep(&spec, &opts, est.levels)?
+        } else {
+            montecarlo::scheduler::run_sweep_dispatched(
+                &spec,
+                &opts,
+                &backend_tag,
+                cache,
+                cancel,
+                remote,
+                &mut on_column,
+            )?
+        };
         let outs = run.outputs;
         let cell_stats = run.stats;
 
@@ -420,7 +449,36 @@ impl ServiceCore {
                     files.push(path.display().to_string());
                     panels.push(Panel::Curve { measure: slug.clone(), x: series.x, y: series.y });
                 }
-                SweepOutput::Grid(shmoo) | SweepOutput::CafpGrid { cafp: shmoo, .. } => {
+                out => {
+                    // Grid panels always carry per-cell stats: the adaptive
+                    // allocator's Wilson freeze intervals when `--ci` ran,
+                    // the estimator's own intervals for weighted/splitting
+                    // grids, and a post-hoc Wilson interval over the full
+                    // population otherwise — no panel is ever published
+                    // without its statistical resolution.
+                    let adaptive_stats = cell_stats.as_ref().and_then(|s| s[mi].clone());
+                    let (shmoo, stats) = match out {
+                        SweepOutput::Grid(shmoo) => {
+                            let stats = adaptive_stats.unwrap_or_else(|| {
+                                wilson_grid_stats(&shmoo.cells, opts.trials_per_point())
+                            });
+                            (shmoo, stats)
+                        }
+                        SweepOutput::CafpGrid { cafp, tallies } => {
+                            let stats =
+                                adaptive_stats.unwrap_or_else(|| wilson_tally_stats(&tallies));
+                            (cafp, stats)
+                        }
+                        SweepOutput::EstGrid { grid, cells } => (
+                            grid,
+                            GridStats {
+                                n_trials: cells.iter().map(|c| c.n_trials).collect(),
+                                ci_lo: cells.iter().map(|c| c.lo).collect(),
+                                ci_hi: cells.iter().map(|c| c.hi).collect(),
+                            },
+                        ),
+                        SweepOutput::Curve(_) => unreachable!("curves handled above"),
+                    };
                     summary.push_str(&format!("== sweep {} over {} x tr\n", slug, axis.name()));
                     summary.push_str(&ascii_heatmap(&shmoo));
                     summary.push('\n');
@@ -433,7 +491,7 @@ impl ServiceCore {
                         x: shmoo.x,
                         tr_nm: shmoo.y,
                         cells: shmoo.cells,
-                        stats: cell_stats.as_ref().and_then(|s| s[mi].clone()),
+                        stats: Some(stats),
                     });
                 }
             }
@@ -464,6 +522,31 @@ impl ServiceCore {
                     ("max_trials", Json::num(ad.max_trials.min(opts.trials_per_point()) as f64)),
                 ]),
             ));
+        }
+        // Rare-event estimators are statistically self-describing in
+        // sweep.json; `fixed` stays keyless so default outputs remain
+        // byte-identical to every earlier release (`ci` already records
+        // its own object above).
+        match est.kind {
+            EstimatorKind::Fixed | EstimatorKind::Ci => {}
+            EstimatorKind::Importance => meta.push((
+                "estimator",
+                Json::obj(vec![
+                    ("kind", Json::str(est.kind.name())),
+                    ("tilt", Json::num(est.tilt)),
+                ]),
+            )),
+            EstimatorKind::Stratified => meta.push((
+                "estimator",
+                Json::obj(vec![("kind", Json::str(est.kind.name()))]),
+            )),
+            EstimatorKind::Splitting => meta.push((
+                "estimator",
+                Json::obj(vec![
+                    ("kind", Json::str(est.kind.name())),
+                    ("levels", Json::num(est.levels as f64)),
+                ]),
+            )),
         }
         let mut file_pairs = meta.clone();
         file_pairs.push(("panels", Json::Arr(panels.iter().map(Panel::to_json).collect())));
@@ -852,6 +935,41 @@ fn rounded(v: &[f64]) -> Vec<f64> {
     v.iter().map(|x| (x * 100.0).round() / 100.0).collect()
 }
 
+/// Post-hoc per-cell Wilson stats for a full-population AFP grid: every
+/// cell evaluated all `n` trials, and the failure count is exactly
+/// recoverable from the recorded rate (cells are multiples of `1/n`).
+fn wilson_grid_stats(cells: &[f64], n: usize) -> GridStats {
+    let mut st = GridStats {
+        n_trials: vec![n; cells.len()],
+        ci_lo: Vec::with_capacity(cells.len()),
+        ci_hi: Vec::with_capacity(cells.len()),
+    };
+    for &p in cells {
+        let k = (p * n as f64).round() as usize;
+        let (lo, hi) = wilson_interval(k, n);
+        st.ci_lo.push(lo);
+        st.ci_hi.push(hi);
+    }
+    st
+}
+
+/// Per-cell Wilson stats for a CAFP grid from its recorded tallies
+/// (conditional failures over the total-trials denominator, matching the
+/// rate the cells report).
+fn wilson_tally_stats(tallies: &[TrialTally]) -> GridStats {
+    let mut st = GridStats {
+        n_trials: tallies.iter().map(|t| t.trials).collect(),
+        ci_lo: Vec::with_capacity(tallies.len()),
+        ci_hi: Vec::with_capacity(tallies.len()),
+    };
+    for t in tallies {
+        let (lo, hi) = wilson_interval(t.conditional_failures, t.trials);
+        st.ci_lo.push(lo);
+        st.ci_hi.push(hi);
+    }
+    st
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -947,6 +1065,88 @@ mod tests {
         assert!(panel.get("n_trials").is_some());
         assert!(panel.get("ci_lo").is_some());
         assert!(panel.get("ci_hi").is_some());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn plain_grid_panels_always_carry_wilson_stats() {
+        let dir = test_dir("svc-stats");
+        let service = ArbiterService::new(Backend::Rust, 2);
+        let resp = service.submit(&tiny_sweep("afp:ltc,cafp:vt-rs-ssm", &dir));
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.panels.len(), 2);
+        for panel in &resp.panels {
+            let Panel::Grid { cells, stats: Some(stats), .. } = panel else {
+                panic!("every grid panel carries per-cell stats")
+            };
+            assert_eq!(stats.n_trials.len(), cells.len());
+            for (i, &p) in cells.iter().enumerate() {
+                assert_eq!(stats.n_trials[i], 9, "3x3 full population");
+                assert!(stats.ci_lo[i] <= p && p <= stats.ci_hi[i]);
+                assert!(stats.ci_hi[i] - stats.ci_lo[i] > 0.0, "non-degenerate interval");
+            }
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn importance_sweep_attaches_estimator_stats_and_meta() {
+        let dir = test_dir("svc-est-is");
+        let service = ArbiterService::new(Backend::Rust, 2);
+        let job = JobRequest::from_json_str(&format!(
+            r#"{{"type":"sweep","axis":"grid-offset","values":[0.5],"tr":[4.0,7.0],
+                "measures":"afp:ltc",
+                "options":{{"fast":true,"lasers":5,"rows":5,"out":"{}",
+                           "estimator":"importance","tilt":5.0}}}}"#,
+            dir.display()
+        ))
+        .unwrap();
+        let resp = service.submit(&job);
+        assert!(resp.ok, "{:?}", resp.error);
+        let Panel::Grid { cells, stats: Some(stats), .. } = &resp.panels[0] else {
+            panic!("weighted sweep must attach estimator stats")
+        };
+        assert_eq!(cells.len(), 2);
+        for (i, &p) in cells.iter().enumerate() {
+            assert_eq!(stats.n_trials[i], 25, "full tilted population per cell");
+            assert!(stats.ci_lo[i] <= p && p <= stats.ci_hi[i]);
+        }
+        let json =
+            Json::parse(&std::fs::read_to_string(dir.join("sweep.json")).unwrap()).unwrap();
+        let est = json.get("estimator").expect("estimator metadata recorded");
+        assert_eq!(est.get("kind").unwrap().as_str(), Some("importance"));
+        assert_eq!(est.get("tilt").unwrap().as_f64(), Some(5.0));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn splitting_sweep_runs_outside_the_scheduler() {
+        let dir = test_dir("svc-est-split");
+        let service = ArbiterService::new(Backend::Rust, 2);
+        let job = JobRequest::from_json_str(&format!(
+            r#"{{"type":"sweep","axis":"ring-local","values":[2.24],"tr":[6.0],
+                "measures":"afp:ltc",
+                "options":{{"fast":true,"lasers":4,"rows":4,"out":"{}",
+                           "estimator":"splitting","levels":4}}}}"#,
+            dir.display()
+        ))
+        .unwrap();
+        let resp = service.submit(&job);
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.backend, "splitting");
+        // The splitting ladder bypasses the population cache entirely.
+        assert_eq!(resp.cache.hits + resp.cache.misses, 0);
+        let Panel::Grid { cells, stats: Some(stats), .. } = &resp.panels[0] else {
+            panic!("splitting sweep must attach estimator stats")
+        };
+        assert!((0.0..=1.0).contains(&cells[0]));
+        assert!(stats.n_trials[0] >= 16, "at least the initial particle cloud");
+        let json =
+            Json::parse(&std::fs::read_to_string(dir.join("sweep.json")).unwrap()).unwrap();
+        assert_eq!(
+            json.get("estimator").unwrap().get("levels").unwrap().as_f64(),
+            Some(4.0)
+        );
         std::fs::remove_dir_all(dir).ok();
     }
 

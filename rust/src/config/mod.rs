@@ -97,7 +97,10 @@ impl SystemConfig {
         // guarantees |draw| ≤ σ; wider-support scenario distributions must
         // satisfy the same invariant at their full support.
         for (name, frac) in [("tr_frac", v.tr_frac), ("fsr_frac", v.fsr_frac)] {
-            let support = self.scenario.distribution.support_nm(frac);
+            // Use the *proposal* support: an importance tilt widens the
+            // trimmed-Gaussian draws, and those tilted draws must respect
+            // the same positivity invariant.
+            let support = self.scenario.proposal_support_nm(frac);
             if support >= 1.0 {
                 return Err(format!(
                     "variation.{name}: the scenario distribution's support \
@@ -180,5 +183,26 @@ mod tests {
         c.variation.fsr_frac = 1.0;
         let err = c.validate().unwrap_err();
         assert!(err.contains("fsr_frac"), "{err}");
+    }
+
+    #[test]
+    fn validate_uses_tilted_proposal_support() {
+        // tr_frac = 0.5 is fine for the nominal trimmed Gaussian (support
+        // ≈ 0.87) but a 2× importance tilt pushes the proposal support to
+        // ≈ 1.73 ≥ 1 — rejected up front instead of producing negative
+        // tuning ranges mid-sweep.
+        let mut c = SystemConfig::default();
+        c.scenario.distribution = Distribution::by_name("trimmed-gaussian").unwrap();
+        c.variation.tr_frac = 0.5;
+        assert!(c.validate().is_ok());
+        c.scenario.sampling.tilt = 2.0;
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("tr_frac"), "{err}");
+        // The uniform shell proposal never widens the support: tilting a
+        // uniform scenario keeps the nominal bound.
+        let mut c = SystemConfig::default();
+        c.variation.tr_frac = 0.5;
+        c.scenario.sampling.tilt = 100.0;
+        assert!(c.validate().is_ok());
     }
 }

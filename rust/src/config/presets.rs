@@ -155,6 +155,16 @@ pub fn system_config_to_toml(cfg: &SystemConfig) -> String {
     t.push_str(&format!("dark_ring_p = {}\n", num(cfg.scenario.faults.dark_ring_p)));
     t.push_str(&format!("weak_ring_p = {}\n", num(cfg.scenario.faults.weak_ring_p)));
     t.push_str(&format!("weak_tr_factor = {}\n", num(cfg.scenario.faults.weak_tr_factor)));
+    // Rare-event sampling design: emitted only when active, so the default
+    // (plain Monte Carlo) config renders byte-identically to every earlier
+    // release. Fleet workers parse these back, which is how an importance /
+    // stratified sweep's estimator reaches remote column jobs.
+    if cfg.scenario.sampling.tilt > 1.0 {
+        t.push_str(&format!("tilt = {}\n", num(cfg.scenario.sampling.tilt)));
+    }
+    if cfg.scenario.sampling.stratified {
+        t.push_str("stratified = true\n");
+    }
     t
 }
 
@@ -189,6 +199,9 @@ fn parse_scenario(doc: &TomlDoc) -> Result<ScenarioConfig, String> {
     scenario.faults.weak_ring_p = doc.get_f64("scenario.weak_ring_p", scenario.faults.weak_ring_p);
     scenario.faults.weak_tr_factor =
         doc.get_f64("scenario.weak_tr_factor", scenario.faults.weak_tr_factor);
+    scenario.sampling.tilt = doc.get_f64("scenario.tilt", scenario.sampling.tilt);
+    scenario.sampling.stratified =
+        doc.get_bool("scenario.stratified", scenario.sampling.stratified);
     Ok(scenario)
 }
 
@@ -267,6 +280,29 @@ target = [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15]
             let back = system_config_from_toml(&text).unwrap();
             assert_eq!(back, cfg, "round-trip drift:\n{text}");
         }
+    }
+
+    #[test]
+    fn sampling_design_round_trips_and_stays_silent_by_default() {
+        // The default (plain Monte Carlo) config must not emit sampling
+        // keys: fleet inline TOML stays byte-identical to earlier releases.
+        let text = system_config_to_toml(&SystemConfig::default());
+        assert!(!text.contains("tilt"), "{text}");
+        assert!(!text.contains("stratified"), "{text}");
+        // An active design round-trips exactly, awkward f64 included.
+        let mut cfg = SystemConfig::default();
+        cfg.scenario.sampling.tilt = 1.0e5 + 1.0 / 3.0;
+        let text = system_config_to_toml(&cfg);
+        let back = system_config_from_toml(&text).unwrap();
+        assert_eq!(back, cfg, "round-trip drift:\n{text}");
+        let cfg = system_config_from_toml("[scenario]\nstratified = true\n").unwrap();
+        assert!(cfg.scenario.sampling.stratified);
+        // Invalid designs are rejected at parse time, not mid-sample.
+        assert!(system_config_from_toml("[scenario]\ntilt = 0.5\n").is_err());
+        assert!(system_config_from_toml(
+            "[scenario]\ndistribution = \"bimodal\"\nseparation_frac = 0.7\ntilt = 4.0\n"
+        )
+        .is_err());
     }
 
     #[test]

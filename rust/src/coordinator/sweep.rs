@@ -24,6 +24,7 @@ use crate::config::SystemConfig;
 use crate::coordinator::RunOptions;
 use crate::metrics::TrialTally;
 use crate::model::{DwdmGrid, SpectralOrdering};
+use crate::montecarlo::rareevent::{weighted_afp_cell, EstCell};
 use crate::montecarlo::sweep::{Series, Shmoo};
 use crate::montecarlo::{afp_at, alias_aware_min_trs, min_tr_complete, Population, TrialEngine};
 use crate::oblivious::Scheme;
@@ -277,6 +278,11 @@ pub enum SweepOutput {
     /// Column × threshold grid with full failure tallies (CAFP). `tallies`
     /// is row-major `[iy * n_columns + ix]`, matching `cafp.cells`.
     CafpGrid { cafp: Shmoo, tallies: Vec<TrialTally> },
+    /// Column × threshold grid evaluated under a weighted rare-event
+    /// estimator (importance sampling / splitting): point estimates in the
+    /// shmoo plus per-cell trial counts and ~95 % intervals. `cells` is
+    /// row-major `[iy * n_columns + ix]`, matching `grid.cells`.
+    EstGrid { grid: Shmoo, cells: Vec<EstCell> },
 }
 
 impl SweepOutput {
@@ -293,7 +299,16 @@ impl SweepOutput {
         match self {
             SweepOutput::Grid(s) => s,
             SweepOutput::CafpGrid { cafp, .. } => cafp,
+            SweepOutput::EstGrid { grid, .. } => grid,
             other => panic!("expected grid sweep output, got {other:?}"),
+        }
+    }
+
+    /// Unwrap an estimator measure's shmoo + per-cell estimates.
+    pub fn into_est(self) -> (Shmoo, Vec<EstCell>) {
+        match self {
+            SweepOutput::EstGrid { grid, cells } => (grid, cells),
+            other => panic!("expected estimator sweep output, got {other:?}"),
         }
     }
 
@@ -361,6 +376,16 @@ impl SweepSpec {
         self
     }
 
+    /// Does this sweep evaluate under importance-sampling weights? True
+    /// exactly when the base scenario's sampling design carries an active
+    /// tilt. No [`ConfigAxis`] touches the sampling design, so the answer
+    /// is identical for every column — [`Self::empty_outputs`],
+    /// [`Self::eval_column`] and [`Self::scatter`] key their estimator
+    /// branches off this one predicate and agree by construction.
+    pub fn weighted(&self) -> bool {
+        self.base.scenario.sampling.tilt > 1.0
+    }
+
     /// Ideal-model policies the engine must evaluate per column: one entry
     /// per distinct AFP/curve policy, plus LtC when any CAFP measure needs
     /// its gate. Public so the column-parallel scheduler
@@ -413,11 +438,27 @@ impl SweepSpec {
                     self.values.clone(),
                     vec![0.0; nx],
                 )),
+                Measure::Afp(p) if self.weighted() => SweepOutput::EstGrid {
+                    grid: Shmoo::new(
+                        format!("{p}"),
+                        self.values.clone(),
+                        self.tr_values.clone(),
+                    ),
+                    cells: vec![EstCell::default(); nx * ny],
+                },
                 Measure::Afp(p) => SweepOutput::Grid(Shmoo::new(
                     format!("{p}"),
                     self.values.clone(),
                     self.tr_values.clone(),
                 )),
+                Measure::Cafp(s) if self.weighted() => SweepOutput::EstGrid {
+                    grid: Shmoo::new(
+                        format!("{} cafp", s.name()),
+                        self.values.clone(),
+                        self.tr_values.clone(),
+                    ),
+                    cells: vec![EstCell::default(); nx * ny],
+                },
                 Measure::Cafp(s) => SweepOutput::CafpGrid {
                     cafp: Shmoo::new(
                         format!("{} cafp", s.name()),
@@ -453,12 +494,29 @@ impl SweepSpec {
                         alias_aware_min_trs(cfg, &pop.sampler, *p, ALIAS_EPS_NM, engine.threads());
                     MeasureColumn::Curve(min_tr_complete(&trs))
                 }
+                Measure::Afp(p) if self.weighted() => {
+                    let trs = pop.min_trs_for(*p).expect("policy evaluated per column");
+                    MeasureColumn::EstGrid(
+                        self.tr_values
+                            .iter()
+                            .map(|&tr| weighted_afp_cell(&pop.sampler, trs, tr))
+                            .collect(),
+                    )
+                }
                 Measure::Afp(p) => {
                     let trs = pop.min_trs_for(*p).expect("policy evaluated per column");
                     MeasureColumn::Grid(
                         self.tr_values.iter().map(|&tr| afp_at(trs, tr)).collect(),
                     )
                 }
+                Measure::Cafp(s) if self.weighted() => MeasureColumn::EstGrid(
+                    self.tr_values
+                        .iter()
+                        .map(|&tr| {
+                            EstCell::from_weighted_cafp(&engine.cafp_weighted(pop, *s, tr))
+                        })
+                        .collect(),
+                ),
                 Measure::Cafp(s) => MeasureColumn::CafpGrid(
                     self.tr_values
                         .iter()
@@ -485,6 +543,12 @@ impl SweepSpec {
                     for (iy, t) in row.into_iter().enumerate() {
                         cafp.set(ix, iy, t.cafp());
                         tallies[iy * nx + ix] = t;
+                    }
+                }
+                (SweepOutput::EstGrid { grid, cells }, MeasureColumn::EstGrid(row)) => {
+                    for (iy, c) in row.into_iter().enumerate() {
+                        grid.set(ix, iy, c.p);
+                        cells[iy * nx + ix] = c;
                     }
                 }
                 _ => unreachable!("sweep output shape mismatch"),
@@ -546,6 +610,28 @@ fn tally_to_json(t: &TrialTally) -> Json {
     ])
 }
 
+fn est_cell_to_json(c: &EstCell) -> Json {
+    Json::obj(vec![
+        ("n", Json::num(c.n_trials as f64)),
+        ("p", f64_to_hex(c.p)),
+        ("lo", f64_to_hex(c.lo)),
+        ("hi", f64_to_hex(c.hi)),
+    ])
+}
+
+fn est_cell_from_json(j: &Json) -> Result<EstCell, String> {
+    let n_trials = j
+        .get("n")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| "column est cell: missing trial count 'n'".to_string())?;
+    let field = |key: &str| {
+        j.get(key)
+            .ok_or_else(|| format!("column est cell: missing '{key}'"))
+            .and_then(f64_from_hex)
+    };
+    Ok(EstCell { n_trials, p: field("p")?, lo: field("lo")?, hi: field("hi")? })
+}
+
 fn tally_from_json(j: &Json) -> Result<TrialTally, String> {
     let field = |key: &str| {
         j.get(key)
@@ -575,6 +661,10 @@ impl MeasureColumn {
                 "cafp",
                 Json::Arr(row.iter().map(tally_to_json).collect()),
             )]),
+            MeasureColumn::EstGrid(row) => Json::obj(vec![(
+                "est",
+                Json::Arr(row.iter().map(est_cell_to_json).collect()),
+            )]),
         }
     }
 
@@ -598,7 +688,15 @@ impl MeasureColumn {
                 items.iter().map(tally_from_json).collect::<Result<_, _>>()?,
             ));
         }
-        Err("column cell: expected 'curve', 'grid' or 'cafp'".to_string())
+        if let Some(v) = j.get("est") {
+            let items = v
+                .as_arr()
+                .ok_or_else(|| "column cell: 'est' must be an array".to_string())?;
+            return Ok(MeasureColumn::EstGrid(
+                items.iter().map(est_cell_from_json).collect::<Result<_, _>>()?,
+            ));
+        }
+        Err("column cell: expected 'curve', 'grid', 'cafp' or 'est'".to_string())
     }
 }
 
@@ -631,6 +729,8 @@ pub enum MeasureColumn {
     Grid(Vec<f64>),
     /// CAFP grids: one full tally per λ̄_TR row.
     CafpGrid(Vec<TrialTally>),
+    /// Weighted-estimator grids: one estimate + CI per λ̄_TR row.
+    EstGrid(Vec<EstCell>),
 }
 
 /// Deterministic per-column seed: bit-identical to
@@ -864,5 +964,59 @@ mod tests {
         }
         assert!(tallies[0].policy_failures >= tallies[1].policy_failures);
         assert!(tallies[1].policy_failures >= tallies[2].policy_failures);
+    }
+
+    #[test]
+    fn est_column_wire_form_is_bit_exact() {
+        let col = ColumnEval {
+            cells: vec![MeasureColumn::EstGrid(vec![
+                EstCell { n_trials: 900, p: 1.25e-7, lo: 0.0, hi: 3.5e-7 },
+                EstCell { n_trials: 900, p: 0.1 + 0.2, lo: f64::MIN_POSITIVE / 2.0, hi: 1.0 },
+            ])],
+        };
+        let text = col.to_json().to_string();
+        let back = ColumnEval::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, col);
+        let MeasureColumn::EstGrid(row) = &back.cells[0] else { panic!("est") };
+        assert_eq!(row[1].p.to_bits(), (0.1 + 0.2).to_bits());
+        assert!(MeasureColumn::from_json(&Json::parse(r#"{"est": [{"p": "0"}]}"#).unwrap())
+            .is_err());
+    }
+
+    /// A tilted base flips every AFP/CAFP output to EstGrid with coherent
+    /// per-cell estimates; stratified sampling alone does not (it is
+    /// unweighted, so plain grids remain correct).
+    #[test]
+    fn weighted_sweep_produces_est_grids() {
+        let mut tilted = SystemConfig::default();
+        tilted.scenario.sampling.tilt = 5.0;
+        let spec = SweepSpec::new("t", tilted, ConfigAxis::RingLocalNm, vec![2.24])
+            .thresholds(vec![4.0, 7.0])
+            .measure(Measure::Afp(Policy::LtC))
+            .measure(Measure::Cafp(Scheme::VtRsSsm));
+        assert!(spec.weighted());
+        let opts = RunOptions { n_lasers: 5, n_rows: 5, ..RunOptions::fast() };
+        let ideal = RustIdeal::default();
+        let engine = TrialEngine::new(&ideal, 0);
+        for out in spec.run(&engine, &opts) {
+            let (grid, cells) = out.into_est();
+            assert_eq!(grid.cells.len(), 2);
+            assert_eq!(cells.len(), 2);
+            for (iy, c) in cells.iter().enumerate() {
+                assert_eq!(c.n_trials, 25);
+                assert!(c.lo <= c.p && c.p <= c.hi, "{c:?}");
+                assert!((0.0..=1.0).contains(&c.p));
+                assert_eq!(grid.at(0, iy), c.p, "shmoo mirrors the estimate");
+            }
+        }
+
+        let mut stratified = SystemConfig::default();
+        stratified.scenario.sampling.stratified = true;
+        let spec = SweepSpec::new("t", stratified, ConfigAxis::RingLocalNm, vec![2.24])
+            .thresholds(vec![4.0])
+            .measure(Measure::Afp(Policy::LtC));
+        assert!(!spec.weighted());
+        let out = spec.run(&engine, &opts).into_iter().next().unwrap();
+        assert!(matches!(out, SweepOutput::Grid(_)));
     }
 }

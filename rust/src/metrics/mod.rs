@@ -89,6 +89,88 @@ impl TrialTally {
     }
 }
 
+/// Weighted tally for importance-sampled experiments: each trial carries a
+/// likelihood-ratio weight `w` from the rare-event proposal, and AFP/CAFP
+/// become weighted means over *all* trials (same total-trials denominator
+/// as [`TrialTally`]). Squared sums feed the delta-method CI in
+/// [`crate::util::stats::delta_interval`]; `sum_w` tracks the mean weight,
+/// which must hover near 1 for an unbiased proposal (diagnostic).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WeightedTally {
+    pub trials: usize,
+    /// Σ w over all trials (E[w] = 1 for a valid proposal).
+    pub sum_w: f64,
+    /// Σ w·1{ideal failed} and Σ (w·1{ideal failed})² — weighted AFP.
+    pub sum_w_policy: f64,
+    pub sum_w2_policy: f64,
+    /// Σ w·1{ideal ok ∧ algorithm failed} and its squared sum — weighted
+    /// CAFP (total-trials denominator, mirroring [`TrialTally::cafp`]).
+    pub sum_w_cond: f64,
+    pub sum_w2_cond: f64,
+}
+
+impl WeightedTally {
+    /// Record one weighted trial.
+    pub fn record(&mut self, weight: f64, ideal_success: bool, algorithm: Option<OutcomeClass>) {
+        self.trials += 1;
+        self.sum_w += weight;
+        if !ideal_success {
+            self.sum_w_policy += weight;
+            self.sum_w2_policy += weight * weight;
+            return;
+        }
+        if let Some(class) = algorithm {
+            if class.is_failure() {
+                self.sum_w_cond += weight;
+                self.sum_w2_cond += weight * weight;
+            }
+        }
+    }
+
+    /// Weighted Arbitration Failure Probability estimate.
+    pub fn afp(&self) -> f64 {
+        fratio(self.sum_w_policy, self.trials)
+    }
+
+    /// Weighted Conditional Arbitration Failure Probability estimate.
+    pub fn cafp(&self) -> f64 {
+        fratio(self.sum_w_cond, self.trials)
+    }
+
+    /// Mean likelihood-ratio weight — a proposal-health diagnostic.
+    pub fn mean_weight(&self) -> f64 {
+        fratio(self.sum_w, self.trials)
+    }
+
+    /// ~95 % delta-method interval on the weighted AFP.
+    pub fn afp_interval(&self) -> (f64, f64) {
+        crate::util::stats::delta_interval(self.trials, self.sum_w_policy, self.sum_w2_policy)
+    }
+
+    /// ~95 % delta-method interval on the weighted CAFP.
+    pub fn cafp_interval(&self) -> (f64, f64) {
+        crate::util::stats::delta_interval(self.trials, self.sum_w_cond, self.sum_w2_cond)
+    }
+
+    /// Merge tallies from parallel workers.
+    pub fn merge(&mut self, other: &WeightedTally) {
+        self.trials += other.trials;
+        self.sum_w += other.sum_w;
+        self.sum_w_policy += other.sum_w_policy;
+        self.sum_w2_policy += other.sum_w2_policy;
+        self.sum_w_cond += other.sum_w_cond;
+        self.sum_w2_cond += other.sum_w2_cond;
+    }
+}
+
+fn fratio(num: f64, den: usize) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num / den as f64
+    }
+}
+
 fn ratio(num: usize, den: usize) -> f64 {
     if den == 0 {
         0.0
@@ -149,6 +231,42 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.trials, 2);
         assert_eq!(a.policy_failures, 1);
+    }
+
+    #[test]
+    fn weighted_tally_reduces_to_plain_tally_at_unit_weights() {
+        let mut w = WeightedTally::default();
+        let mut t = TrialTally::default();
+        for i in 0..40 {
+            let (ideal, class) = match i % 4 {
+                0 => (false, None),
+                1 => (true, Some(OutcomeClass::DuplLock)),
+                _ => (true, Some(OutcomeClass::Success)),
+            };
+            w.record(1.0, ideal, class);
+            t.record(ideal, class);
+        }
+        assert!((w.afp() - t.afp()).abs() < 1e-12);
+        assert!((w.cafp() - t.cafp()).abs() < 1e-12);
+        assert!((w.mean_weight() - 1.0).abs() < 1e-12);
+        let (lo, hi) = w.afp_interval();
+        assert!(lo < t.afp() && t.afp() < hi);
+    }
+
+    #[test]
+    fn weighted_tally_merge_matches_single_pass() {
+        let mut a = WeightedTally::default();
+        let mut b = WeightedTally::default();
+        let mut all = WeightedTally::default();
+        for i in 0..20 {
+            let w = 0.1 + 0.05 * i as f64;
+            let ideal = i % 3 != 0;
+            let class = if i % 5 == 0 { Some(OutcomeClass::ZeroLock) } else { Some(OutcomeClass::Success) };
+            if i < 10 { a.record(w, ideal, class) } else { b.record(w, ideal, class) }
+            all.record(w, ideal, class);
+        }
+        a.merge(&b);
+        assert_eq!(a, all);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Multi-wavelength-laser (MWL) model (paper Eq. (1) and (3)).
 
+use crate::model::scenario::DeviceSampling;
 use crate::model::{DwdmGrid, ScenarioConfig, VariationConfig};
 use crate::rng::Rng;
 
@@ -31,11 +32,26 @@ impl MwlSample {
         scenario: &ScenarioConfig,
         rng: &mut Rng,
     ) -> Self {
+        Self::sample_with(grid, var, scenario, rng, &mut DeviceSampling::Nominal)
+    }
+
+    /// [`Self::sample`] with an explicit per-device [`DeviceSampling`]
+    /// controller (rare-event estimators). With `DeviceSampling::Nominal`
+    /// the draws — and the RNG stream — are bit-identical to
+    /// [`Self::sample`]. The leading draw is the grid offset Δ_gO (the
+    /// stratified lead); fault draws always stay nominal.
+    pub fn sample_with(
+        grid: &DwdmGrid,
+        var: &VariationConfig,
+        scenario: &ScenarioConfig,
+        rng: &mut Rng,
+        draws: &mut DeviceSampling,
+    ) -> Self {
         let dist = scenario.distribution;
-        let offset = dist.sample(var.grid_offset_nm, rng);
+        let offset = draws.draw(&dist, var.grid_offset_nm, rng);
         let local_half = var.laser_local_frac * grid.spacing_nm;
         let tones_nm = (0..grid.n_ch)
-            .map(|i| grid.slot_nm(i) + offset + dist.sample(local_half, rng))
+            .map(|i| grid.slot_nm(i) + offset + draws.draw(&dist, local_half, rng))
             .collect();
         let dead = scenario.faults.sample_dead_tones(grid.n_ch, rng);
         Self { tones_nm, grid_offset_nm: offset, dead }

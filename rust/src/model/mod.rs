@@ -16,6 +16,9 @@ pub use grid::DwdmGrid;
 pub use laser::MwlSample;
 pub use ordering::SpectralOrdering;
 pub use ring::RingRowSample;
-pub use scenario::{CorrelationConfig, Distribution, FaultsConfig, ScenarioConfig};
+pub use scenario::{
+    defensive_log_weight, CorrelationConfig, DeviceSampling, Distribution, FaultsConfig,
+    SamplingDesign, ScenarioConfig,
+};
 pub use system::SystemUnderTest;
 pub use variation::VariationConfig;

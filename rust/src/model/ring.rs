@@ -1,5 +1,6 @@
 //! Microring-resonator row model (paper Eq. (2), (4), (5)).
 
+use crate::model::scenario::DeviceSampling;
 use crate::model::{DwdmGrid, ScenarioConfig, SpectralOrdering, VariationConfig};
 use crate::rng::Rng;
 
@@ -47,6 +48,35 @@ impl RingRowSample {
         scenario: &ScenarioConfig,
         rng: &mut Rng,
     ) -> Self {
+        Self::sample_with(
+            grid,
+            pre_fab_order,
+            ring_bias_nm,
+            fsr_mean_nm,
+            var,
+            scenario,
+            rng,
+            &mut DeviceSampling::Nominal,
+        )
+    }
+
+    /// [`Self::sample`] with an explicit per-device [`DeviceSampling`]
+    /// controller (rare-event estimators). With `DeviceSampling::Nominal`
+    /// the draws — and the RNG stream — are bit-identical to
+    /// [`Self::sample`]. The leading draw is ring 0's local offset (the
+    /// stratified lead); the gradient-slope and fault draws always stay
+    /// nominal.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sample_with(
+        grid: &DwdmGrid,
+        pre_fab_order: &SpectralOrdering,
+        ring_bias_nm: f64,
+        fsr_mean_nm: f64,
+        var: &VariationConfig,
+        scenario: &ScenarioConfig,
+        rng: &mut Rng,
+        draws: &mut DeviceSampling,
+    ) -> Self {
         let n = grid.n_ch;
         assert_eq!(pre_fab_order.len(), n, "ordering must cover all rings");
         let dist = scenario.distribution;
@@ -65,7 +95,7 @@ impl RingRowSample {
         let mut tr_scale = Vec::with_capacity(n);
         for i in 0..n {
             let slot = grid.slot_nm(pre_fab_order.slot_of(i));
-            let z = dist.sample(var.ring_local_nm, rng);
+            let z = draws.draw(&dist, var.ring_local_nm, rng);
             // AR(1) neighbor correlation; ρ = 0 passes the i.i.d. draw
             // through untouched (bit-identical default path). The chain
             // starts stationary (e_0 = z_0), so every ring — edge rings
@@ -78,8 +108,8 @@ impl RingRowSample {
             } else {
                 base + slope * (i as f64 / (n - 1).max(1) as f64 - 0.5)
             });
-            fsr_nm.push(fsr_mean_nm * (1.0 + dist.sample(var.fsr_frac, rng)));
-            tr_scale.push(1.0 + dist.sample(var.tr_frac, rng));
+            fsr_nm.push(fsr_mean_nm * (1.0 + draws.draw(&dist, var.fsr_frac, rng)));
+            tr_scale.push(1.0 + draws.draw(&dist, var.tr_frac, rng));
         }
         let dark = scenario.faults.sample_dark_rings(n, rng);
         scenario.faults.apply_weak_rings(&mut tr_scale, rng);

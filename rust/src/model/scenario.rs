@@ -90,6 +90,85 @@ impl Distribution {
         }
     }
 
+    /// Draw one variation from the **tilted proposal** used by the
+    /// importance-sampling estimator (`tilt` = τ > 1):
+    ///
+    /// * `Uniform` — uniform over the *outer shell*
+    ///   `±[σ(1−1/τ), σ]` (density `τ/(2σ)` there, 0 inside): all proposal
+    ///   mass sits at the large-|x| excursions that drive tail failures,
+    ///   while the support never exceeds the nominal ±σ.
+    /// * `TrimmedGaussian` — the nominal shape with its standard deviation
+    ///   scaled by τ (same ±clip rejection in z units, so the support grows
+    ///   to `±clip·sigma_frac·τ·σ`).
+    /// * `Bimodal` — no tilt defined (mass already sits at the modes);
+    ///   `validate` rejects the combination, and this falls back to the
+    ///   nominal draw.
+    ///
+    /// The matching log density ratio is [`Self::tilt_log_ratio`].
+    #[inline]
+    pub fn sample_tilted(&self, sigma: f64, tilt: f64, rng: &mut Rng) -> f64 {
+        match *self {
+            Distribution::Uniform => {
+                let v = 2.0 * rng.uniform01() - 1.0; // sign + shell position
+                let mag = sigma * (1.0 - v.abs() / tilt);
+                if v < 0.0 {
+                    -mag
+                } else {
+                    mag
+                }
+            }
+            Distribution::TrimmedGaussian { sigma_frac, clip } => {
+                let z = loop {
+                    let z = gaussian01(rng);
+                    if z.abs() <= clip {
+                        break z;
+                    }
+                };
+                z * sigma_frac * tilt * sigma
+            }
+            Distribution::Bimodal { .. } => self.sample(sigma, rng),
+        }
+    }
+
+    /// `ln q_τ(x) − ln p(x)` for the tilted proposal of
+    /// [`Self::sample_tilted`] at an observed draw `x`: the per-draw term
+    /// the importance weights accumulate. Degenerate scales (σ = 0) carry
+    /// no information and return 0. `−∞` encodes `q_τ(x) = 0` (x inside
+    /// the uniform shell's hole) and `+∞` encodes `p(x) = 0` (a tilted
+    /// Gaussian draw beyond the nominal support — the trial's weight is 0).
+    #[inline]
+    pub fn tilt_log_ratio(&self, sigma: f64, tilt: f64, x: f64) -> f64 {
+        if tilt <= 1.0 {
+            return 0.0;
+        }
+        match *self {
+            Distribution::Uniform => {
+                if sigma <= 0.0 {
+                    0.0
+                } else if x.abs() >= sigma * (1.0 - 1.0 / tilt) {
+                    tilt.ln()
+                } else {
+                    f64::NEG_INFINITY
+                }
+            }
+            Distribution::TrimmedGaussian { sigma_frac, clip } => {
+                let s = sigma_frac * sigma;
+                if s <= 0.0 {
+                    return 0.0;
+                }
+                let z = x / s;
+                if z.abs() <= clip {
+                    // Truncation normalizers share the same clip in z units
+                    // under p and q_τ, so they cancel exactly.
+                    0.5 * z * z * (1.0 - 1.0 / (tilt * tilt)) - tilt.ln()
+                } else {
+                    f64::INFINITY
+                }
+            }
+            Distribution::Bimodal { .. } => 0.0,
+        }
+    }
+
     /// Draw one variation of scale `sigma` (σ = half-range under the
     /// paper's uniform model). The single sampling entry point every model
     /// component goes through.
@@ -300,6 +379,141 @@ impl FaultsConfig {
     }
 }
 
+/// Sampling design for the rare-event estimators
+/// ([`crate::montecarlo::rareevent`]): how the variation draws themselves
+/// are generated. The default (`tilt = 1`, `stratified = false`) is the
+/// plain Monte-Carlo stream — bit-identical to the paper path and to every
+/// golden digest.
+///
+/// Part of [`ScenarioConfig`], so it is covered by the population-cache
+/// fingerprint and the fleet config handshake automatically: a tilted and
+/// an untilted column can never alias.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingDesign {
+    /// Importance-sampling tilt factor τ ≥ 1 (1 = off). When active, each
+    /// *device* flips one fair coin between the nominal distribution and
+    /// the tilted proposal ([`Distribution::sample_tilted`]) — a defensive
+    /// mixture whose likelihood-ratio weights are bounded by 2.
+    pub tilt: f64,
+    /// Replace each device's *leading* variation draw with a deterministic
+    /// low-discrepancy (Kronecker) point scaled to ±σ. Uniform
+    /// distribution only; prefix-exact under population doubling because
+    /// point `i` depends only on `(i, seed)`.
+    pub stratified: bool,
+}
+
+impl Default for SamplingDesign {
+    fn default() -> Self {
+        Self { tilt: 1.0, stratified: false }
+    }
+}
+
+impl SamplingDesign {
+    /// True when any estimator machinery deviates from plain Monte-Carlo.
+    pub fn active(&self) -> bool {
+        self.tilt > 1.0 || self.stratified
+    }
+
+    fn validate(&self, dist: &Distribution) -> Result<(), String> {
+        if !(self.tilt >= 1.0) || !self.tilt.is_finite() {
+            return Err(format!("scenario.tilt: must be a finite value >= 1, got {}", self.tilt));
+        }
+        if self.tilt > 1.0 && self.stratified {
+            return Err("scenario: tilt and stratified are mutually exclusive \
+                        (pick one estimator per population)"
+                .to_string());
+        }
+        if self.tilt > 1.0 && matches!(dist, Distribution::Bimodal { .. }) {
+            return Err("scenario.tilt: no tilted proposal is defined for the bimodal \
+                        family (its mass already sits at the modes)"
+                .to_string());
+        }
+        if self.stratified && *dist != Distribution::Uniform {
+            return Err("scenario.stratified: stratified/quasi-MC draws require the \
+                        uniform distribution (the Kronecker points are uniform)"
+                .to_string());
+        }
+        Ok(())
+    }
+}
+
+/// ln of the defensive-mixture importance weight for one device:
+/// `w = p / (½p + ½q) = 2 / (1 + e^S)` with `S = Σ ln q(x) − ln p(x)`
+/// over the device's draws. Stable at both tails (S = ±∞ ⇒ w = 2 / 0).
+#[inline]
+pub fn defensive_log_weight(s: f64) -> f64 {
+    if s > 0.0 {
+        std::f64::consts::LN_2 - s - (-s).exp().ln_1p()
+    } else {
+        std::f64::consts::LN_2 - s.exp().ln_1p()
+    }
+}
+
+/// Per-device draw controller threading a [`SamplingDesign`] through the
+/// laser/ring samplers. `Nominal` is the paper path and produces exactly
+/// the historical RNG stream; the other variants implement the
+/// importance-sampling defensive mixture and the stratified leading draw.
+#[derive(Debug)]
+pub enum DeviceSampling {
+    /// Plain Monte-Carlo: every draw is `Distribution::sample`.
+    Nominal,
+    /// Defensive importance mixture: the whole device draws either
+    /// nominally or from the tilted proposal (one fair coin), while `S`
+    /// accumulates the per-draw log density ratios for the weight.
+    Importance { tilt: f64, tilted: bool, log_ratio_sum: f64 },
+    /// Stratified lead: the first variation draw is the precomputed
+    /// Kronecker point (scaled to ±σ, consuming no RNG); the rest are
+    /// nominal.
+    Stratified { lead: Option<f64> },
+}
+
+impl DeviceSampling {
+    /// Build the per-device controller. For an active tilt this consumes
+    /// exactly one `uniform01` for the mixture coin; `lead` is the
+    /// device's Kronecker point in `[0, 1)` when stratifying.
+    pub fn for_device(design: &SamplingDesign, lead: Option<f64>, rng: &mut Rng) -> DeviceSampling {
+        if design.tilt > 1.0 {
+            let tilted = rng.uniform01() < 0.5;
+            DeviceSampling::Importance { tilt: design.tilt, tilted, log_ratio_sum: 0.0 }
+        } else if design.stratified {
+            DeviceSampling::Stratified { lead }
+        } else {
+            DeviceSampling::Nominal
+        }
+    }
+
+    /// One variation draw of scale `sigma` through this device's design.
+    #[inline]
+    pub fn draw(&mut self, dist: &Distribution, sigma: f64, rng: &mut Rng) -> f64 {
+        match self {
+            DeviceSampling::Nominal => dist.sample(sigma, rng),
+            DeviceSampling::Importance { tilt, tilted, log_ratio_sum } => {
+                let x = if *tilted {
+                    dist.sample_tilted(sigma, *tilt, rng)
+                } else {
+                    dist.sample(sigma, rng)
+                };
+                *log_ratio_sum += dist.tilt_log_ratio(sigma, *tilt, x);
+                x
+            }
+            DeviceSampling::Stratified { lead } => match lead.take() {
+                Some(u) => (2.0 * u - 1.0) * sigma,
+                None => dist.sample(sigma, rng),
+            },
+        }
+    }
+
+    /// ln of the device's likelihood-ratio weight (0 ⇒ weight 1).
+    pub fn log_weight(&self) -> f64 {
+        match self {
+            DeviceSampling::Importance { log_ratio_sum, .. } => {
+                defensive_log_weight(*log_ratio_sum)
+            }
+            _ => 0.0,
+        }
+    }
+}
+
 /// The full scenario: distribution family + correlated/systematic
 /// components + fault injection. Part of
 /// [`crate::config::SystemConfig`], hashed into the population-cache
@@ -313,6 +527,9 @@ pub struct ScenarioConfig {
     pub distribution: Distribution,
     pub correlation: CorrelationConfig,
     pub faults: FaultsConfig,
+    /// Rare-event sampling design (importance tilt / stratified draws);
+    /// default is plain Monte-Carlo.
+    pub sampling: SamplingDesign,
 }
 
 impl ScenarioConfig {
@@ -326,6 +543,21 @@ impl ScenarioConfig {
         self.distribution != Distribution::Uniform
             || self.correlation.enabled()
             || self.faults.enabled()
+            || self.sampling.active()
+    }
+
+    /// Support half-width of the *sampling proposal* at scale `sigma`:
+    /// the nominal support, except for a tilted trimmed Gaussian whose
+    /// proposal support grows by the tilt factor. Config validation uses
+    /// this so tilted multiplicative draws cannot go non-positive.
+    pub fn proposal_support_nm(&self, sigma: f64) -> f64 {
+        let base = self.distribution.support_nm(sigma);
+        match self.distribution {
+            Distribution::TrimmedGaussian { .. } if self.sampling.tilt > 1.0 => {
+                base * self.sampling.tilt
+            }
+            _ => base,
+        }
     }
 
     /// Structured validation of every scenario knob — called at config
@@ -335,7 +567,8 @@ impl ScenarioConfig {
     pub fn validate(&self) -> Result<(), String> {
         self.distribution.validate()?;
         self.correlation.validate()?;
-        self.faults.validate()
+        self.faults.validate()?;
+        self.sampling.validate(&self.distribution)
     }
 }
 
@@ -524,5 +757,136 @@ mod tests {
         assert!(with_corr(CorrelationConfig { gradient_nm: 0.0, corr_len: 2.0 })
             .is_generalized());
         assert!(with_dist(Distribution::by_name("bimodal").unwrap()).is_generalized());
+        let tilted = ScenarioConfig {
+            sampling: SamplingDesign { tilt: 4.0, stratified: false },
+            ..ScenarioConfig::default()
+        };
+        assert!(tilted.is_generalized());
+    }
+
+    #[test]
+    fn tilted_uniform_samples_the_outer_shell() {
+        let tau = 10.0;
+        let mut rng = Rng::seed_from(21);
+        let inner = 2.0 * (1.0 - 1.0 / tau);
+        let mut pos = 0usize;
+        for _ in 0..N {
+            let x = Distribution::Uniform.sample_tilted(2.0, tau, &mut rng);
+            assert!(x.abs() <= 2.0 && x.abs() >= inner - 1e-12, "{x}");
+            assert_eq!(Distribution::Uniform.tilt_log_ratio(2.0, tau, x), tau.ln());
+            pos += (x > 0.0) as usize;
+        }
+        let frac = pos as f64 / N as f64;
+        assert!((frac - 0.5).abs() < 0.05, "positive fraction {frac}");
+        // Inside the hole the proposal has zero density.
+        assert_eq!(
+            Distribution::Uniform.tilt_log_ratio(2.0, tau, 0.3),
+            f64::NEG_INFINITY
+        );
+        // Degenerate scale carries no weight information.
+        assert_eq!(Distribution::Uniform.tilt_log_ratio(0.0, tau, 0.0), 0.0);
+    }
+
+    #[test]
+    fn tilted_gaussian_scales_sigma_and_ratio_matches() {
+        let dist = Distribution::by_name("trimmed-gaussian").unwrap();
+        let tau = 3.0;
+        let mut rng = Rng::seed_from(22);
+        let xs: Vec<f64> = (0..N).map(|_| dist.sample_tilted(2.0, tau, &mut rng)).collect();
+        let want = tau * 2.0 * UNIFORM_EQUIV_SIGMA_FRAC;
+        assert!((stddev(&xs) - want).abs() < 0.2, "stddev {}", stddev(&xs));
+        assert!(xs.iter().all(|x| x.abs() <= dist.support_nm(2.0) * tau + 1e-9));
+        // Beyond the nominal support the nominal density is 0 ⇒ +∞ ratio
+        // ⇒ trial weight 0.
+        let beyond = dist.support_nm(2.0) * 1.5;
+        assert_eq!(dist.tilt_log_ratio(2.0, tau, beyond), f64::INFINITY);
+        // At x = 0 the ratio is exactly −ln τ.
+        assert!((dist.tilt_log_ratio(2.0, tau, 0.0) + tau.ln()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn defensive_weight_is_bounded_and_unbiased() {
+        use std::f64::consts::LN_2;
+        assert_eq!(defensive_log_weight(0.0), 0.0);
+        assert!((defensive_log_weight(f64::NEG_INFINITY) - LN_2).abs() < 1e-15);
+        assert_eq!(defensive_log_weight(f64::INFINITY), f64::NEG_INFINITY);
+        assert!(defensive_log_weight(1e3).exp() > 0.0 || defensive_log_weight(1e3) < -500.0);
+        // Empirical unbiasedness on the uniform shell proposal: the
+        // defensive-mixture weight integrates to 1 over the mixture.
+        let tau = 8.0;
+        let design = SamplingDesign { tilt: tau, stratified: false };
+        let dist = Distribution::Uniform;
+        let mut rng = Rng::seed_from(23);
+        let mut sum_w = 0.0;
+        for _ in 0..N {
+            let mut ctx = DeviceSampling::for_device(&design, None, &mut rng);
+            let _x = ctx.draw(&dist, 2.0, &mut rng);
+            let w = ctx.log_weight().exp();
+            assert!((0.0..=2.0 + 1e-12).contains(&w), "weight {w}");
+            sum_w += w;
+        }
+        let mean_w = sum_w / N as f64;
+        assert!((mean_w - 1.0).abs() < 0.05, "E[w] = {mean_w}");
+    }
+
+    #[test]
+    fn stratified_lead_replaces_first_draw_only() {
+        let design = SamplingDesign { tilt: 1.0, stratified: true };
+        let mut rng = Rng::seed_from(24);
+        let mut ctx = DeviceSampling::for_device(&design, Some(0.75), &mut rng);
+        let lead = ctx.draw(&Distribution::Uniform, 2.0, &mut rng);
+        assert_eq!(lead, (2.0 * 0.75 - 1.0) * 2.0);
+        // Lead consumed no RNG: the next nominal draw matches a fresh
+        // stream.
+        let mut fresh = Rng::seed_from(24);
+        let next = ctx.draw(&Distribution::Uniform, 2.0, &mut rng);
+        assert_eq!(next.to_bits(), fresh.half_range(2.0).to_bits());
+        assert_eq!(ctx.log_weight(), 0.0);
+    }
+
+    #[test]
+    fn nominal_device_sampling_is_bit_identical() {
+        let design = SamplingDesign::default();
+        let mut a = Rng::seed_from(25);
+        let mut b = Rng::seed_from(25);
+        let mut ctx = DeviceSampling::for_device(&design, None, &mut a);
+        for _ in 0..100 {
+            let x = ctx.draw(&Distribution::Uniform, 1.5, &mut a);
+            assert_eq!(x.to_bits(), b.half_range(1.5).to_bits());
+        }
+    }
+
+    #[test]
+    fn sampling_design_validation() {
+        let ok = |tilt, stratified, dist: &str| {
+            ScenarioConfig {
+                distribution: Distribution::by_name(dist).unwrap(),
+                sampling: SamplingDesign { tilt, stratified },
+                ..ScenarioConfig::default()
+            }
+            .validate()
+        };
+        assert!(ok(1.0, false, "uniform").is_ok());
+        assert!(ok(400.0, false, "uniform").is_ok());
+        assert!(ok(4.0, false, "trimmed-gaussian").is_ok());
+        assert!(ok(1.0, true, "uniform").is_ok());
+        assert!(ok(0.5, false, "uniform").unwrap_err().contains("tilt"));
+        assert!(ok(f64::NAN, false, "uniform").unwrap_err().contains("tilt"));
+        assert!(ok(f64::INFINITY, false, "uniform").unwrap_err().contains("tilt"));
+        assert!(ok(4.0, true, "uniform").unwrap_err().contains("mutually exclusive"));
+        assert!(ok(4.0, false, "bimodal").unwrap_err().contains("bimodal"));
+        assert!(ok(1.0, true, "trimmed-gaussian").unwrap_err().contains("stratified"));
+    }
+
+    #[test]
+    fn proposal_support_scales_with_gaussian_tilt() {
+        let mut s = ScenarioConfig::default();
+        assert_eq!(s.proposal_support_nm(2.0), 2.0);
+        s.sampling.tilt = 5.0;
+        // Uniform shell stays inside ±σ even when tilted.
+        assert_eq!(s.proposal_support_nm(2.0), 2.0);
+        s.distribution = Distribution::by_name("trimmed-gaussian").unwrap();
+        let base = s.distribution.support_nm(2.0);
+        assert!((s.proposal_support_nm(2.0) - 5.0 * base).abs() < 1e-12);
     }
 }

@@ -9,8 +9,32 @@
 //! dumb data.
 
 use crate::config::SystemConfig;
+use crate::model::scenario::DeviceSampling;
 use crate::model::{MwlSample, RingRowSample};
 use crate::rng::{derive_seed, Rng};
+
+/// Kronecker low-discrepancy stride for laser devices: frac(φ), the
+/// golden-ratio sequence (optimal one-dimensional discrepancy).
+pub const STRATIFY_LASER_STRIDE: f64 = 0.618_033_988_749_894_9;
+
+/// Kronecker stride for ring-row devices: √2 − 1, algebraically
+/// independent of the laser stride so the two device axes never resonate.
+pub const STRATIFY_ROW_STRIDE: f64 = 0.414_213_562_373_095_05;
+
+/// `i`-th point of the shifted Kronecker sequence
+/// `u_i = frac(shift + (i+1)·stride)`. Depends only on `(shift, i)`, which
+/// is what makes stratified populations prefix-exact under doubling.
+#[inline]
+pub fn kronecker_point(shift: f64, stride: f64, i: usize) -> f64 {
+    (shift + (i as f64 + 1.0) * stride).fract()
+}
+
+/// Seed-derived Cranley–Patterson rotation for the stratified sequence
+/// (`lane` 0 = lasers, 1 = rows): different base seeds shift the whole
+/// lattice, keeping replicated sweeps independent.
+pub fn stratify_shift(seed: u64, lane: u64) -> f64 {
+    Rng::seed_from(derive_seed(seed, &[0x9C, lane])).uniform01()
+}
 
 /// One arbitration trial's physical inputs.
 #[derive(Debug, Clone, PartialEq)]
@@ -50,20 +74,67 @@ impl SystemUnderTest {
 pub struct SystemSampler {
     pub lasers: Vec<MwlSample>,
     pub rows: Vec<RingRowSample>,
+    /// Per-laser ln importance weight; empty unless the scenario's
+    /// sampling design has an active tilt (so the plain path allocates
+    /// nothing).
+    pub laser_log_w: Vec<f64>,
+    /// Per-row ln importance weight; empty unless tilted.
+    pub row_log_w: Vec<f64>,
 }
 
 impl SystemSampler {
     pub fn new(cfg: &SystemConfig, n_lasers: usize, n_rows: usize, seed: u64) -> Self {
+        let design = cfg.scenario.sampling;
+        let tilted = design.tilt > 1.0;
+        let (laser_shift, row_shift) = if design.stratified {
+            (stratify_shift(seed, 0), stratify_shift(seed, 1))
+        } else {
+            (0.0, 0.0)
+        };
+        let mut laser_log_w = Vec::with_capacity(if tilted { n_lasers } else { 0 });
         let lasers = (0..n_lasers)
             .map(|i| {
                 let mut rng = Rng::seed_from(derive_seed(seed, &[0xA5, i as u64]));
-                MwlSample::sample(&cfg.grid, &cfg.variation, &cfg.scenario, &mut rng)
+                if !design.active() {
+                    return MwlSample::sample(&cfg.grid, &cfg.variation, &cfg.scenario, &mut rng);
+                }
+                let lead = design
+                    .stratified
+                    .then(|| kronecker_point(laser_shift, STRATIFY_LASER_STRIDE, i));
+                let mut draws = DeviceSampling::for_device(&design, lead, &mut rng);
+                let s = MwlSample::sample_with(
+                    &cfg.grid,
+                    &cfg.variation,
+                    &cfg.scenario,
+                    &mut rng,
+                    &mut draws,
+                );
+                if tilted {
+                    laser_log_w.push(draws.log_weight());
+                }
+                s
             })
             .collect();
+        let mut row_log_w = Vec::with_capacity(if tilted { n_rows } else { 0 });
         let rows = (0..n_rows)
             .map(|j| {
                 let mut rng = Rng::seed_from(derive_seed(seed, &[0x5A, j as u64]));
-                RingRowSample::sample(
+                if !design.active() {
+                    return RingRowSample::sample(
+                        &cfg.grid,
+                        &cfg.pre_fab_order,
+                        cfg.ring_bias_nm,
+                        cfg.fsr_mean_nm,
+                        &cfg.variation,
+                        &cfg.scenario,
+                        &mut rng,
+                    );
+                }
+                let lead = design
+                    .stratified
+                    .then(|| kronecker_point(row_shift, STRATIFY_ROW_STRIDE, j));
+                let mut draws = DeviceSampling::for_device(&design, lead, &mut rng);
+                let s = RingRowSample::sample_with(
                     &cfg.grid,
                     &cfg.pre_fab_order,
                     cfg.ring_bias_nm,
@@ -71,10 +142,40 @@ impl SystemSampler {
                     &cfg.variation,
                     &cfg.scenario,
                     &mut rng,
-                )
+                    &mut draws,
+                );
+                if tilted {
+                    row_log_w.push(draws.log_weight());
+                }
+                s
             })
             .collect();
-        Self { lasers, rows }
+        Self { lasers, rows, laser_log_w, row_log_w }
+    }
+
+    /// Is this a weighted (importance-tilted) population?
+    #[inline]
+    pub fn is_weighted(&self) -> bool {
+        !self.laser_log_w.is_empty() || !self.row_log_w.is_empty()
+    }
+
+    /// ln importance weight of trial `t` (0 ⇒ weight 1 — every untilted
+    /// population).
+    #[inline]
+    pub fn trial_log_weight(&self, t: usize) -> f64 {
+        if !self.is_weighted() {
+            return 0.0;
+        }
+        let rows = self.rows.len();
+        let lw = self.laser_log_w.get(t / rows).copied().unwrap_or(0.0);
+        let rw = self.row_log_w.get(t % rows).copied().unwrap_or(0.0);
+        lw + rw
+    }
+
+    /// Importance weight of trial `t` (1 for untilted populations).
+    #[inline]
+    pub fn trial_weight(&self, t: usize) -> f64 {
+        self.trial_log_weight(t).exp()
     }
 
     #[inline]
@@ -112,6 +213,12 @@ impl SystemSampler {
         SystemSampler {
             lasers: self.lasers[lo..hi].to_vec(),
             rows: self.rows.clone(),
+            laser_log_w: if self.laser_log_w.is_empty() {
+                Vec::new()
+            } else {
+                self.laser_log_w[lo..hi].to_vec()
+            },
+            row_log_w: self.row_log_w.clone(),
         }
     }
 }
@@ -221,6 +328,68 @@ mod tests {
                 assert_eq!(r, fr, "{name}: slice trial {t}");
             }
         }
+    }
+
+    #[test]
+    fn tilted_population_carries_bounded_weights_and_is_prefix_exact() {
+        let mut cfg = SystemConfig::default();
+        cfg.scenario.sampling.tilt = 8.0;
+        let s = SystemSampler::new(&cfg, 6, 4, 31);
+        assert!(s.is_weighted());
+        assert_eq!(s.laser_log_w.len(), 6);
+        assert_eq!(s.row_log_w.len(), 4);
+        for t in 0..s.n_trials() {
+            let w = s.trial_weight(t);
+            assert!((0.0..=4.0 + 1e-9).contains(&w), "trial weight {w}");
+        }
+        // Prefix exactness: devices AND weights are stable under growth.
+        let big = SystemSampler::new(&cfg, 12, 8, 31);
+        assert_eq!(s.lasers[..], big.lasers[..6]);
+        assert_eq!(s.laser_log_w[..], big.laser_log_w[..6]);
+        assert_eq!(s.row_log_w[..], big.row_log_w[..4]);
+        // slice_lasers slices the weights alongside the devices.
+        let slice = big.slice_lasers(3, 9);
+        for t in 0..slice.n_trials() {
+            assert_eq!(
+                slice.trial_log_weight(t).to_bits(),
+                big.trial_log_weight(3 * 8 + t).to_bits(),
+                "slice weight {t}"
+            );
+        }
+    }
+
+    #[test]
+    fn untilted_population_has_unit_weights_and_no_weight_storage() {
+        let s = SystemSampler::new(&SystemConfig::default(), 3, 3, 9);
+        assert!(!s.is_weighted());
+        assert!(s.laser_log_w.is_empty() && s.row_log_w.is_empty());
+        assert_eq!(s.trial_weight(4), 1.0);
+    }
+
+    #[test]
+    fn stratified_population_is_deterministic_and_prefix_exact() {
+        let mut cfg = SystemConfig::default();
+        cfg.scenario.sampling.stratified = true;
+        let a = SystemSampler::new(&cfg, 8, 6, 55);
+        let b = SystemSampler::new(&cfg, 8, 6, 55);
+        assert_eq!(a.lasers, b.lasers);
+        assert_eq!(a.rows, b.rows);
+        assert!(!a.is_weighted(), "stratified draws carry no weights");
+        // Doubling the population leaves every existing device untouched
+        // (the Kronecker point depends only on the device index + seed).
+        let big = SystemSampler::new(&cfg, 16, 12, 55);
+        assert_eq!(a.lasers[..], big.lasers[..8]);
+        assert_eq!(a.rows[..], big.rows[..6]);
+        // The leading draw really is the Kronecker point: grid offsets are
+        // the scaled sequence, and distinct from the plain-MC population.
+        let shift = stratify_shift(55, 0);
+        for (i, l) in a.lasers.iter().enumerate() {
+            let u = kronecker_point(shift, STRATIFY_LASER_STRIDE, i);
+            let want = (2.0 * u - 1.0) * cfg.variation.grid_offset_nm;
+            assert_eq!(l.grid_offset_nm.to_bits(), want.to_bits(), "laser {i}");
+        }
+        let plain = SystemSampler::new(&SystemConfig::default(), 8, 6, 55);
+        assert_ne!(a.lasers, plain.lasers);
     }
 
     #[test]

@@ -30,9 +30,10 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use crate::arbiter::Policy;
 use crate::config::SystemConfig;
-use crate::metrics::TrialTally;
+use crate::metrics::{TrialTally, WeightedTally};
 use crate::model::system::SystemSampler;
 use crate::montecarlo::{executor, IdealEvaluator};
+use crate::oblivious::outcome::OutcomeClass;
 use crate::oblivious::{batch, run_scheme_with, Scheme, Workspace};
 use crate::util::simd;
 
@@ -218,6 +219,54 @@ pub fn batched_cafp_tally_tier(
         total.merge(t);
     }
     total
+}
+
+/// Weighted CAFP tally for importance-sampled populations: every trial
+/// contributes its likelihood-ratio weight (`pop.sampler.trial_weight`)
+/// instead of a unit count, yielding the rare-event estimator
+/// `p̂ = Σ wₜ·1{fail} / n` with delta-method intervals
+/// ([`WeightedTally`]).
+///
+/// The oblivious simulations run in parallel exactly like the scalar
+/// oracle, but their outcome classes are scattered back by trial index and
+/// the *weighted fold is sequential in trial order* — f64 addition is not
+/// associative, and fixing the accumulation order makes the sums (and the
+/// reported CI endpoints) bit-identical for every thread count, matching
+/// the determinism contract of the unweighted paths.
+pub fn weighted_cafp_tally(
+    pop: &Population,
+    scheme: Scheme,
+    tr_nm: f64,
+    threads: usize,
+) -> WeightedTally {
+    let gate = pop.ideal_ltc();
+    let order = &pop.cfg.target_order;
+    let chunks = executor::parallel_map_chunked(
+        pop.n_trials(),
+        threads,
+        || (Workspace::new(), Vec::new()),
+        |(ws, out): &mut (Workspace, Vec<(usize, Option<OutcomeClass>)>), t: usize| {
+            let ideal_ok = gate[t] <= tr_nm;
+            let class = if ideal_ok {
+                let (laser, rings) = pop.sampler.trial(t);
+                Some(run_scheme_with(scheme, laser, rings, order, tr_nm, ws).class)
+            } else {
+                None
+            };
+            out.push((t, class));
+        },
+    );
+    let mut classes: Vec<Option<OutcomeClass>> = vec![None; pop.n_trials()];
+    for (_, chunk) in &chunks {
+        for &(t, class) in chunk {
+            classes[t] = class;
+        }
+    }
+    let mut tally = WeightedTally::default();
+    for (t, &class) in classes.iter().enumerate() {
+        tally.record(pop.sampler.trial_weight(t), gate[t] <= tr_nm, class);
+    }
+    tally
 }
 
 /// Population-cache hit/miss counters (cumulative since construction).
@@ -623,6 +672,13 @@ impl<'a> TrialEngine<'a> {
             ev.tally(pop, tr_nm)
         }
     }
+
+    /// Weighted CAFP tally over an importance-sampled population
+    /// ([`weighted_cafp_tally`]): thread-count invariant by a sequential
+    /// trial-order weighted fold.
+    pub fn cafp_weighted(&self, pop: &Population, scheme: Scheme, tr_nm: f64) -> WeightedTally {
+        weighted_cafp_tally(pop, scheme, tr_nm, self.threads)
+    }
 }
 
 #[cfg(test)]
@@ -683,6 +739,48 @@ mod tests {
             assert_eq!(a, b, "{}", scheme.name());
             assert_eq!(a, c, "{}", scheme.name());
         }
+    }
+
+    /// On an untilted population every weight is exactly 1, so the weighted
+    /// estimator must agree with the plain tally to the bit.
+    #[test]
+    fn weighted_cafp_reduces_to_plain_at_unit_weights() {
+        let ideal_eval = RustIdeal::default();
+        let engine = TrialEngine::new(&ideal_eval, 2);
+        let cfg = SystemConfig::default();
+        let pop = engine.population(&cfg, 8, 8, 42, &[Policy::LtC]);
+        for tr in [4.0, 6.0] {
+            let plain = engine.cafp(&pop, Scheme::VtRsSsm, tr);
+            let weighted = engine.cafp_weighted(&pop, Scheme::VtRsSsm, tr);
+            assert_eq!(weighted.trials, plain.trials);
+            assert_eq!(weighted.sum_w, plain.trials as f64);
+            assert_eq!(weighted.afp(), plain.afp(), "tr={tr}");
+            assert_eq!(weighted.cafp(), plain.cafp(), "tr={tr}");
+        }
+    }
+
+    /// The weighted fold is sequential in trial order, so the f64 sums are
+    /// bit-identical across thread counts even on a tilted population with
+    /// genuinely non-unit weights.
+    #[test]
+    fn weighted_cafp_bit_identical_across_thread_counts() {
+        let ideal_eval = RustIdeal::default();
+        let mut cfg = SystemConfig::default();
+        cfg.scenario.sampling.tilt = 10.0;
+        let mut tallies = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let engine = TrialEngine::new(&ideal_eval, threads);
+            let pop = engine.population(&cfg, 8, 8, 42, &[Policy::LtC]);
+            tallies.push(engine.cafp_weighted(&pop, Scheme::VtRsSsm, 5.0));
+        }
+        assert_eq!(tallies[0], tallies[1]);
+        assert_eq!(tallies[0], tallies[2]);
+        assert!(tallies[0].sum_w > 0.0);
+        // Defensive-mixture weights are bounded by 2 per device (laser ×
+        // row ⇒ 4 per trial); the sample mean must stay inside that
+        // support and finite.
+        let mw = tallies[0].mean_weight();
+        assert!(mw.is_finite() && mw > 0.0 && mw <= 4.0, "mean weight {mw}");
     }
 
     /// CAFP of the near-ideal scheme over the *same* population shrinks as

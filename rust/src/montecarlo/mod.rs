@@ -23,14 +23,17 @@
 
 pub mod engine;
 pub mod executor;
+pub mod rareevent;
 pub mod scheduler;
 pub mod sweep;
 
 pub use engine::{
     batched_cafp_tally, batched_cafp_tally_tier, config_fingerprint, fingerprint_digest,
-    CacheStats, Population, PopulationCache, RustOblivious, SchemeEvaluator, TrialEngine,
+    weighted_cafp_tally, CacheStats, Population, PopulationCache, RustOblivious,
+    SchemeEvaluator, TrialEngine,
 };
 pub use executor::{CancelToken, TaskPool};
+pub use rareevent::{EstCell, EstimatorKind, EstimatorSpec};
 pub use scheduler::{
     ColumnProgress, EvalFactory, GridStats, RemoteColumns, SWEEP_CANCELED, SweepRun,
 };

@@ -1,0 +1,535 @@
+//! Rare-event estimation engine: importance sampling, stratified/quasi-MC
+//! draws, and adaptive multilevel splitting for deep-tail (1e-6..1e-9)
+//! AFP/CAFP estimation.
+//!
+//! The paper evaluates failure probabilities by plain Monte-Carlo over
+//! 10⁴ trials, which bottoms out around 10⁻³–10⁻⁴. Production DWDM links
+//! need failure-probability estimates orders of magnitude deeper; this
+//! module adds the three standard rare-event tools on top of the existing
+//! column/population machinery, selected per job with
+//! `--estimator {fixed,ci,importance,stratified,splitting}`:
+//!
+//! * **Importance sampling** ([`EstimatorKind::Importance`]) — variation
+//!   draws are tilted toward large-σ excursions through the scenario's
+//!   [`SamplingDesign`] (a per-device defensive mixture between the nominal
+//!   distribution and an outer-shell / σ-scaled proposal; see
+//!   [`crate::model::scenario`]). Each trial carries a likelihood-ratio
+//!   weight and AFP/CAFP become weighted means with a delta-method CI
+//!   ([`crate::util::stats::delta_interval`]).
+//! * **Stratified / quasi-MC** ([`EstimatorKind::Stratified`]) — each
+//!   device's leading variation draw is replaced by a deterministic
+//!   low-discrepancy Kronecker point (Cranley–Patterson-rotated by the
+//!   seed), layered on the per-device derived RNG streams so populations
+//!   stay prefix-exact under `slice_lasers`. Estimates stay unweighted;
+//!   only their variance shrinks.
+//! * **Adaptive splitting** ([`EstimatorKind::Splitting`], AFP only) — a
+//!   multilevel-splitting ladder over the ideal model's per-trial minimum
+//!   tuning range: particles that reach intermediate near-failure levels
+//!   are cloned and mutated (Gibbs redraw of one device from a fresh
+//!   derived stream), so the estimator walks into tails plain sampling
+//!   cannot reach. `P̂ = Π p_k` with a log-normal CI from
+//!   `var(ln P̂) ≈ Σ (1−p_k)/(N·p_k)`.
+//!
+//! The default estimator is `fixed` — plain Monte-Carlo, draw-for-draw
+//! bit-identical to the historical stream (golden digests unchanged); `ci`
+//! names the existing adaptive Wilson allocator (`--ci`).
+//!
+//! [`SamplingDesign`]: crate::model::scenario::SamplingDesign
+
+use crate::arbiter::distance::{scaled_distance_into, DistanceMatrix};
+use crate::arbiter::{ideal, Policy};
+use crate::config::SystemConfig;
+use crate::coordinator::sweep::{column_seed, Measure, SweepOutput, SweepSpec};
+use crate::coordinator::RunOptions;
+use crate::metrics::WeightedTally;
+use crate::model::system::SystemSampler;
+use crate::model::{MwlSample, RingRowSample};
+use crate::montecarlo::scheduler::SweepRun;
+use crate::montecarlo::sweep::Shmoo;
+use crate::rng::{derive_seed, Rng};
+
+/// Default importance-sampling tilt factor τ (σ-scale / shell sharpness).
+pub const DEFAULT_TILT: f64 = 4.0;
+
+/// Default maximum number of splitting stages. At the ladder's ~½ survival
+/// fraction per stage, 20 stages reach tails around 2⁻²⁰ ≈ 10⁻⁶.
+pub const DEFAULT_LEVELS: usize = 20;
+
+/// Which estimator a job runs. `Fixed` and `Ci` are the pre-existing
+/// paths (full population / adaptive Wilson allocation); the other three
+/// are the rare-event engines of this module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EstimatorKind {
+    /// Plain Monte-Carlo over the full population (the default;
+    /// bit-identical to the historical stream).
+    Fixed,
+    /// Adaptive Wilson-interval trial allocation (the `--ci` scheduler).
+    Ci,
+    /// Importance sampling with per-trial likelihood-ratio weights.
+    Importance,
+    /// Stratified / quasi-MC leading draws (unweighted, variance-reduced).
+    Stratified,
+    /// Adaptive multilevel splitting over the ideal margin (AFP only).
+    Splitting,
+}
+
+impl EstimatorKind {
+    pub fn all() -> [EstimatorKind; 5] {
+        [
+            EstimatorKind::Fixed,
+            EstimatorKind::Ci,
+            EstimatorKind::Importance,
+            EstimatorKind::Stratified,
+            EstimatorKind::Splitting,
+        ]
+    }
+
+    /// Canonical name (`by_name` inverse) — the `--estimator` vocabulary.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EstimatorKind::Fixed => "fixed",
+            EstimatorKind::Ci => "ci",
+            EstimatorKind::Importance => "importance",
+            EstimatorKind::Stratified => "stratified",
+            EstimatorKind::Splitting => "splitting",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<EstimatorKind> {
+        EstimatorKind::all().into_iter().find(|k| k.name() == name)
+    }
+}
+
+/// A resolved estimator selection: the kind plus its knobs. Built by
+/// [`crate::api::request::JobOptions::estimator_spec`] from the
+/// `estimator`/`tilt`/`levels` options.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EstimatorSpec {
+    pub kind: EstimatorKind,
+    /// Importance tilt factor τ ≥ 1 ([`EstimatorKind::Importance`] only).
+    pub tilt: f64,
+    /// Maximum splitting stages ([`EstimatorKind::Splitting`] only).
+    pub levels: usize,
+}
+
+impl Default for EstimatorSpec {
+    fn default() -> Self {
+        Self { kind: EstimatorKind::Fixed, tilt: DEFAULT_TILT, levels: DEFAULT_LEVELS }
+    }
+}
+
+impl EstimatorSpec {
+    /// Inject this estimator's sampling design into a base config. The
+    /// design rides `cfg.scenario.sampling`, so the population-cache
+    /// fingerprint and the fleet config handshake cover it with no extra
+    /// wire fields, and a tilted column can never alias an untilted one.
+    pub fn apply_to(&self, cfg: &mut SystemConfig) {
+        match self.kind {
+            EstimatorKind::Importance => cfg.scenario.sampling.tilt = self.tilt,
+            EstimatorKind::Stratified => cfg.scenario.sampling.stratified = true,
+            _ => {}
+        }
+    }
+
+    /// Measure compatibility: importance weights reweight *probabilities*,
+    /// not population maxima, so curve measures (min-tr) are rejected;
+    /// splitting ladders climb the ideal AFP margin only.
+    pub fn validate_measures(&self, measures: &[Measure]) -> Result<(), String> {
+        match self.kind {
+            EstimatorKind::Importance => {
+                if measures
+                    .iter()
+                    .any(|m| matches!(m, Measure::MinTrComplete(_) | Measure::MinTrAliasAware(_)))
+                {
+                    return Err("estimator importance: applies to afp/cafp measures only \
+                                (a weighted population maximum has no unbiased reweighting)"
+                        .to_string());
+                }
+                Ok(())
+            }
+            EstimatorKind::Splitting => {
+                if measures.is_empty() || measures.iter().any(|m| !matches!(m, Measure::Afp(_))) {
+                    return Err("estimator splitting: applies to afp measures only \
+                                (the ladder climbs the ideal-model margin)"
+                        .to_string());
+                }
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+/// One estimator-evaluated grid cell: trial count, point estimate, and the
+/// estimator-appropriate ~95 % interval (delta-method for weighted sums,
+/// log-normal for splitting ladders).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct EstCell {
+    /// Trials (importance) or margin evaluations (splitting) spent.
+    pub n_trials: usize,
+    pub p: f64,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl EstCell {
+    /// Cell for a weighted AFP estimate.
+    pub fn from_weighted_afp(t: &WeightedTally) -> EstCell {
+        let (lo, hi) = t.afp_interval();
+        EstCell { n_trials: t.trials, p: t.afp(), lo, hi }
+    }
+
+    /// Cell for a weighted CAFP estimate.
+    pub fn from_weighted_cafp(t: &WeightedTally) -> EstCell {
+        let (lo, hi) = t.cafp_interval();
+        EstCell { n_trials: t.trials, p: t.cafp(), lo, hi }
+    }
+}
+
+/// Weighted AFP over a tilted population: the importance-sampling
+/// estimator `p̂ = Σ wₜ·1{mₜ > tr} / n` with its delta-method interval.
+/// Accumulates in trial order (a plain sequential fold — the ideal-model
+/// vector `min_trs` already absorbed the parallel work), so the result is
+/// bit-identical for every thread count.
+pub fn weighted_afp_cell(sampler: &SystemSampler, min_trs: &[f64], tr_nm: f64) -> EstCell {
+    let mut tally = WeightedTally::default();
+    for (t, &m) in min_trs.iter().enumerate() {
+        tally.record(sampler.trial_weight(t), m <= tr_nm, None);
+    }
+    EstCell::from_weighted_afp(&tally)
+}
+
+/// One splitting particle: a sampled laser/row pair and its cached ideal
+/// margin (minimum mean tuning range).
+#[derive(Clone)]
+struct Particle {
+    laser: MwlSample,
+    rings: RingRowSample,
+    margin: f64,
+}
+
+/// Seed-derived device factory for the splitting ladder: every fresh laser
+/// or ring row draws from its own derived stream keyed by a monotone
+/// counter, so the whole ladder is a pure function of `(cfg, seed)`.
+struct DeviceWell<'a> {
+    cfg: &'a SystemConfig,
+    seed: u64,
+    counter: u64,
+}
+
+impl DeviceWell<'_> {
+    fn laser(&mut self) -> MwlSample {
+        self.counter += 1;
+        let mut rng = Rng::seed_from(derive_seed(self.seed, &[0xE1, self.counter]));
+        MwlSample::sample(&self.cfg.grid, &self.cfg.variation, &self.cfg.scenario, &mut rng)
+    }
+
+    fn rings(&mut self) -> RingRowSample {
+        self.counter += 1;
+        let mut rng = Rng::seed_from(derive_seed(self.seed, &[0xE2, self.counter]));
+        RingRowSample::sample(
+            &self.cfg.grid,
+            &self.cfg.pre_fab_order,
+            self.cfg.ring_bias_nm,
+            self.cfg.fsr_mean_nm,
+            &self.cfg.variation,
+            &self.cfg.scenario,
+            &mut rng,
+        )
+    }
+}
+
+/// Adaptive multilevel splitting estimate of `AFP(tr) = P(margin > tr)`
+/// under `policy`, where `margin` is the ideal model's per-trial minimum
+/// mean tuning range.
+///
+/// The ladder keeps `n_particles` particles; each stage sets the next
+/// level at the current *median* margin (≈½ survival per stage), clones
+/// survivors over the dead slots, and decorrelates every clone with one
+/// Gibbs sweep (redraw the laser, then the row, from fresh derived
+/// streams, accepting only margin-preserving moves). It terminates when
+/// the level reaches `tr_nm` or after `max_stages` stages, folding in the
+/// final Bernoulli stage either way; `P̂ = Π p_k` with a log-normal CI
+/// from the independent-stages variance `Σ (1−p_k)/(N·p_k)`.
+///
+/// Fully deterministic in `(cfg, seed)`: every random choice flows from
+/// derived streams, and the ladder is sequential (no thread dependence).
+pub fn splitting_afp(
+    cfg: &SystemConfig,
+    policy: Policy,
+    tr_nm: f64,
+    n_particles: usize,
+    max_stages: usize,
+    seed: u64,
+) -> EstCell {
+    let n = n_particles.max(2);
+    let order = cfg.target_order.as_slice();
+    let mut scratch = DistanceMatrix { n: 0, d: Vec::new() };
+    let mut margin = |laser: &MwlSample, rings: &RingRowSample, evals: &mut usize| -> f64 {
+        scaled_distance_into(laser, rings, &mut scratch);
+        *evals += 1;
+        ideal::min_tuning_range(policy, &scratch, order)
+    };
+
+    let mut well = DeviceWell { cfg, seed, counter: 0 };
+    let mut sel = Rng::seed_from(derive_seed(seed, &[0xE3]));
+    let mut evals = 0usize;
+    let mut particles: Vec<Particle> = (0..n)
+        .map(|_| {
+            let laser = well.laser();
+            let rings = well.rings();
+            let m = margin(&laser, &rings, &mut evals);
+            Particle { laser, rings, margin: m }
+        })
+        .collect();
+
+    let mut log_p = 0.0f64;
+    let mut var_ln = 0.0f64;
+    let zero_cell = |log_p: f64, evals: usize| {
+        // The ladder ran dry before reaching tr: the tail beyond the last
+        // level is unresolved, so report 0 with the running product as a
+        // conservative upper bound (the event needs *at least* that much
+        // probability decay to occur).
+        EstCell { n_trials: evals, p: 0.0, lo: 0.0, hi: log_p.exp().clamp(0.0, 1.0) }
+    };
+
+    for _stage in 0..max_stages {
+        let mut ms: Vec<f64> = particles.iter().map(|p| p.margin).collect();
+        ms.sort_by(f64::total_cmp);
+        let level = ms[n / 2];
+        if level >= tr_nm {
+            break;
+        }
+        let p_k = particles.iter().filter(|p| p.margin > level).count() as f64 / n as f64;
+        if p_k == 0.0 {
+            // Degenerate cloud (all margins tied): no particle clears the
+            // median, so the ladder cannot climb further.
+            return zero_cell(log_p, evals);
+        }
+        log_p += p_k.ln();
+        var_ln += (1.0 - p_k) / (n as f64 * p_k);
+        let survivors: Vec<usize> =
+            (0..n).filter(|&i| particles[i].margin > level).collect();
+        for i in 0..n {
+            if particles[i].margin > level {
+                continue;
+            }
+            let pick = ((sel.uniform01() * survivors.len() as f64) as usize)
+                .min(survivors.len() - 1);
+            particles[i] = particles[survivors[pick]].clone();
+            // One Gibbs sweep: component-wise redraw, keep only moves that
+            // stay above the level (the conditional distribution given
+            // survival is exactly the restricted prior).
+            let laser = well.laser();
+            let m = margin(&laser, &particles[i].rings, &mut evals);
+            if m > level {
+                particles[i].laser = laser;
+                particles[i].margin = m;
+            }
+            let rings = well.rings();
+            let m = margin(&particles[i].laser, &rings, &mut evals);
+            if m > level {
+                particles[i].rings = rings;
+                particles[i].margin = m;
+            }
+        }
+    }
+
+    // Final Bernoulli stage at the target threshold itself.
+    let k = particles.iter().filter(|p| p.margin > tr_nm).count();
+    if k == 0 {
+        return zero_cell(log_p, evals);
+    }
+    let p_final = k as f64 / n as f64;
+    log_p += p_final.ln();
+    if p_final < 1.0 {
+        var_ln += (1.0 - p_final) / (n as f64 * p_final);
+    }
+    let sd = var_ln.sqrt();
+    EstCell {
+        n_trials: evals,
+        p: log_p.exp().clamp(0.0, 1.0),
+        lo: (log_p - 1.96 * sd).exp().clamp(0.0, 1.0),
+        hi: (log_p + 1.96 * sd).exp().clamp(0.0, 1.0),
+    }
+}
+
+/// Run a whole sweep under the splitting estimator: one ladder per
+/// (column, λ̄_TR row) cell, `n_lasers × n_rows` particles each, sequential
+/// per column — thread-count invariant by construction. Splitting bypasses
+/// the population machinery entirely (it resamples devices adaptively), so
+/// it always runs locally; the service never dispatches it to a fleet.
+pub fn run_splitting_sweep(
+    spec: &SweepSpec,
+    opts: &RunOptions,
+    max_stages: usize,
+) -> Result<SweepRun, String> {
+    EstimatorSpec {
+        kind: EstimatorKind::Splitting,
+        tilt: DEFAULT_TILT,
+        levels: max_stages,
+    }
+    .validate_measures(&spec.measures)?;
+    if spec.base.scenario.sampling.active() {
+        return Err("estimator splitting: the base scenario must use plain sampling \
+                    (no tilt, no stratified draws)"
+            .to_string());
+    }
+    if spec.tr_values.is_empty() {
+        return Err("estimator splitting: sweep needs tr threshold rows".to_string());
+    }
+    if max_stages == 0 {
+        return Err("estimator splitting: levels must be at least 1".to_string());
+    }
+    let nx = spec.values.len();
+    let ny = spec.tr_values.len();
+    let n_particles = opts.n_lasers.max(1) * opts.n_rows.max(1);
+    let mut outputs = Vec::new();
+    for m in &spec.measures {
+        let Measure::Afp(policy) = m else {
+            unreachable!("validated: splitting sweeps carry afp measures only")
+        };
+        let mut grid =
+            Shmoo::new(format!("{policy}"), spec.values.clone(), spec.tr_values.clone());
+        let mut cells = vec![EstCell::default(); nx * ny];
+        for (ix, &v) in spec.values.iter().enumerate() {
+            let cfg = spec.axis.apply(&spec.base, v);
+            let seed = column_seed(opts.seed, &spec.tag, spec.lane, ix);
+            for (iy, &tr) in spec.tr_values.iter().enumerate() {
+                let cell = splitting_afp(
+                    &cfg,
+                    *policy,
+                    tr,
+                    n_particles,
+                    max_stages,
+                    derive_seed(seed, &[0xEC, iy as u64]),
+                );
+                grid.set(ix, iy, cell.p);
+                cells[iy * nx + ix] = cell;
+            }
+        }
+        outputs.push(SweepOutput::EstGrid { grid, cells });
+    }
+    Ok(SweepRun { outputs, backend: "splitting", stats: None })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sweep::ConfigAxis;
+
+    #[test]
+    fn estimator_names_round_trip() {
+        for k in EstimatorKind::all() {
+            assert_eq!(EstimatorKind::by_name(k.name()), Some(k));
+        }
+        assert_eq!(EstimatorKind::by_name("bogus"), None);
+    }
+
+    #[test]
+    fn apply_to_injects_sampling_design() {
+        let spec = EstimatorSpec {
+            kind: EstimatorKind::Importance,
+            tilt: 7.0,
+            levels: DEFAULT_LEVELS,
+        };
+        let mut cfg = SystemConfig::default();
+        spec.apply_to(&mut cfg);
+        assert_eq!(cfg.scenario.sampling.tilt, 7.0);
+        assert!(!cfg.scenario.sampling.stratified);
+
+        let mut cfg = SystemConfig::default();
+        EstimatorSpec { kind: EstimatorKind::Stratified, ..EstimatorSpec::default() }
+            .apply_to(&mut cfg);
+        assert!(cfg.scenario.sampling.stratified);
+        assert_eq!(cfg.scenario.sampling.tilt, 1.0);
+
+        // Fixed / Ci / Splitting leave the paper's plain sampling intact.
+        for kind in [EstimatorKind::Fixed, EstimatorKind::Ci, EstimatorKind::Splitting] {
+            let mut cfg = SystemConfig::default();
+            EstimatorSpec { kind, ..EstimatorSpec::default() }.apply_to(&mut cfg);
+            assert!(!cfg.scenario.sampling.active(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn measure_validation_gates_estimators() {
+        use crate::arbiter::Policy;
+        use crate::oblivious::Scheme;
+        let afp = Measure::Afp(Policy::LtC);
+        let cafp = Measure::Cafp(Scheme::VtRsSsm);
+        let curve = Measure::MinTrComplete(Policy::LtC);
+        let is = EstimatorSpec { kind: EstimatorKind::Importance, ..EstimatorSpec::default() };
+        assert!(is.validate_measures(&[afp, cafp]).is_ok());
+        assert!(is.validate_measures(&[afp, curve]).is_err());
+        let sp = EstimatorSpec { kind: EstimatorKind::Splitting, ..EstimatorSpec::default() };
+        assert!(sp.validate_measures(&[afp]).is_ok());
+        assert!(sp.validate_measures(&[afp, cafp]).is_err());
+        assert!(sp.validate_measures(&[]).is_err());
+        let fixed = EstimatorSpec::default();
+        assert!(fixed.validate_measures(&[afp, cafp, curve]).is_ok());
+    }
+
+    #[test]
+    fn weighted_afp_cell_reduces_to_plain_afp_at_unit_weights() {
+        let cfg = SystemConfig::default();
+        let sampler = SystemSampler::new(&cfg, 4, 4, 9);
+        let min_trs: Vec<f64> = (0..16).map(|t| t as f64).collect();
+        let cell = weighted_afp_cell(&sampler, &min_trs, 7.5);
+        assert_eq!(cell.n_trials, 16);
+        assert!((cell.p - 0.5).abs() < 1e-12);
+        assert!(cell.lo <= cell.p && cell.p <= cell.hi);
+    }
+
+    #[test]
+    fn splitting_is_deterministic_and_sane_on_a_moderate_tail() {
+        // Default Table-I config, LtC margin. tr = 6 nm sits in a tail
+        // plain MC sees easily, so the ladder's very first level check
+        // exercises both the direct and the multi-stage path.
+        let cfg = SystemConfig::default();
+        let a = splitting_afp(&cfg, Policy::LtC, 6.0, 200, 10, 77);
+        let b = splitting_afp(&cfg, Policy::LtC, 6.0, 200, 10, 77);
+        assert_eq!(a, b, "ladder is a pure function of (cfg, seed)");
+        assert!(a.lo <= a.p && a.p <= a.hi);
+        assert!((0.0..=1.0).contains(&a.p));
+        assert!(a.n_trials >= 200, "at least the initial cloud was evaluated");
+        // A deeper threshold estimates a smaller (or equal) tail.
+        let deep = splitting_afp(&cfg, Policy::LtC, 8.0, 200, 10, 77);
+        assert!(deep.p <= a.p + 1e-12, "deep {} vs {}", deep.p, a.p);
+    }
+
+    #[test]
+    fn splitting_sweep_rejects_bad_specs() {
+        let base = SystemConfig::default();
+        let opts = RunOptions { n_lasers: 5, n_rows: 5, ..RunOptions::fast() };
+        let spec = SweepSpec::new("t", base.clone(), ConfigAxis::RingLocalNm, vec![2.24])
+            .thresholds(vec![6.0])
+            .measure(Measure::Cafp(crate::oblivious::Scheme::VtRsSsm));
+        assert!(run_splitting_sweep(&spec, &opts, 10).is_err(), "cafp rejected");
+
+        let spec = SweepSpec::new("t", base.clone(), ConfigAxis::RingLocalNm, vec![2.24])
+            .measure(Measure::Afp(Policy::LtC));
+        assert!(run_splitting_sweep(&spec, &opts, 10).is_err(), "no tr rows");
+
+        let mut tilted = base.clone();
+        tilted.scenario.sampling.tilt = 4.0;
+        let spec = SweepSpec::new("t", tilted, ConfigAxis::RingLocalNm, vec![2.24])
+            .thresholds(vec![6.0])
+            .measure(Measure::Afp(Policy::LtC));
+        assert!(run_splitting_sweep(&spec, &opts, 10).is_err(), "tilted base rejected");
+
+        let spec = SweepSpec::new("t", base, ConfigAxis::RingLocalNm, vec![2.24])
+            .thresholds(vec![6.0])
+            .measure(Measure::Afp(Policy::LtC));
+        assert!(run_splitting_sweep(&spec, &opts, 0).is_err(), "zero levels rejected");
+        let run = run_splitting_sweep(&spec, &opts, 10).unwrap();
+        assert_eq!(run.backend, "splitting");
+        assert_eq!(run.outputs.len(), 1);
+        let SweepOutput::EstGrid { grid, cells } = &run.outputs[0] else {
+            panic!("splitting produces estimator grids")
+        };
+        assert_eq!(grid.cells.len(), 1);
+        assert_eq!(cells.len(), 1);
+        assert_eq!(grid.cells[0], cells[0].p);
+    }
+}

@@ -334,6 +334,14 @@ fn validate_adaptive(spec: &SweepSpec, ad: &AdaptiveCfg) -> Result<(), String> {
                 .to_string(),
         );
     }
+    if spec.weighted() {
+        return Err(
+            "adaptive sweep (--ci) needs plain (untilted) sampling: its Wilson freeze \
+             criterion assumes unit-weight binomial counts — use --estimator importance \
+             without --ci for weighted populations"
+                .to_string(),
+        );
+    }
     Ok(())
 }
 

@@ -16,6 +16,23 @@ pub fn wilson_interval(successes: usize, trials: usize) -> (f64, f64) {
     ((center - half).max(0.0), (center + half).min(1.0))
 }
 
+/// Delta-method ~95 % interval (z = 1.96) for a weighted-mean estimator
+/// `p̂ = Σ wᵢ·fᵢ / n` — the importance-sampling analogue of the Wilson
+/// interval. `sum_wf` is Σ wᵢ·fᵢ and `sum_wf2` is Σ (wᵢ·fᵢ)², both over
+/// all `trials` draws (including the ones where fᵢ = 0). The sample
+/// variance of the per-trial terms drives the half-width; the result is
+/// clamped to [0, 1] because the estimand is a probability.
+pub fn delta_interval(trials: usize, sum_wf: f64, sum_wf2: f64) -> (f64, f64) {
+    if trials == 0 {
+        return (0.0, 1.0);
+    }
+    let n = trials as f64;
+    let p = sum_wf / n;
+    let var = ((sum_wf2 / n) - p * p).max(0.0) / n;
+    let half = 1.96 * var.sqrt();
+    ((p - half).max(0.0), (p + half).min(1.0))
+}
+
 /// Mean of a slice (0 for empty).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -59,6 +76,67 @@ mod tests {
         assert_eq!(lo, 0.0);
         assert!(hi < 0.05);
         assert_eq!(wilson_interval(0, 0), (0.0, 1.0));
+    }
+
+    #[test]
+    fn wilson_edge_cases() {
+        // n = 0 is the "no information" interval.
+        assert_eq!(wilson_interval(0, 0), (0.0, 1.0));
+        // k = 0 pins the lower bound to exactly 0; k = n pins the upper
+        // bound to exactly 1 (the Wilson endpoints are algebraically exact
+        // there, not just clamped).
+        let (lo, hi) = wilson_interval(0, 7);
+        assert_eq!(lo, 0.0);
+        assert!(hi > 0.0 && hi < 1.0);
+        let (lo, hi) = wilson_interval(7, 7);
+        assert!(lo > 0.0 && lo < 1.0);
+        assert!((hi - 1.0).abs() < 1e-12);
+        // Huge n: the interval collapses onto p̂ without under/overflow.
+        let n = 1_000_000_000_000usize;
+        let (lo, hi) = wilson_interval(n / 2, n);
+        assert!(lo < 0.5 && hi > 0.5);
+        assert!(hi - lo < 1e-5);
+    }
+
+    #[test]
+    fn delta_interval_degenerate_and_unweighted() {
+        assert_eq!(delta_interval(0, 0.0, 0.0), (0.0, 1.0));
+        // All-zero terms: a point interval at 0.
+        assert_eq!(delta_interval(100, 0.0, 0.0), (0.0, 0.0));
+        // Unit weights reduce to the normal-approximation binomial CI,
+        // which must agree with Wilson to first order at moderate p.
+        let (k, n) = (300usize, 1000usize);
+        let (dlo, dhi) = delta_interval(n, k as f64, k as f64);
+        let (wlo, whi) = wilson_interval(k, n);
+        assert!((dlo - wlo).abs() < 5e-3 && (dhi - whi).abs() < 5e-3);
+    }
+
+    #[test]
+    fn weighted_is_ci_covers_known_tail_probability() {
+        // Synthetic importance sampler with an analytically known answer:
+        // f = 1{x < p} for x ~ U(0,1), proposal q = U(0, 0.1) (a 10× tilt
+        // toward the tail), weight = 1/10 on the proposal's support. The
+        // delta CI must cover the true p in the vast majority of seeds.
+        let p = 0.02f64;
+        let n = 2000usize;
+        let mut covered = 0;
+        for seed in 0..50u64 {
+            let mut rng = crate::rng::Rng::seed_from(seed);
+            let (mut s1, mut s2) = (0.0f64, 0.0f64);
+            for _ in 0..n {
+                let x = 0.1 * rng.uniform01();
+                let wf = if x < p { 0.1 } else { 0.0 };
+                s1 += wf;
+                s2 += wf * wf;
+            }
+            let (lo, hi) = delta_interval(n, s1, s2);
+            assert!(hi > lo);
+            if lo <= p && p <= hi {
+                covered += 1;
+            }
+        }
+        // Nominal coverage is 95 %; allow slack for the normal approx.
+        assert!(covered >= 45, "delta CI covered truth in only {covered}/50 seeds");
     }
 
     #[test]

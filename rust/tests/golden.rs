@@ -89,6 +89,16 @@ fn output_digest(out: &SweepOutput) -> String {
                 h.u64(t.lane_order_errors as u64);
             }
         }
+        SweepOutput::EstGrid { grid, cells } => {
+            h.u64(4);
+            h.f64s(&grid.x);
+            h.f64s(&grid.y);
+            h.f64s(&grid.cells);
+            for c in cells {
+                h.u64(c.n_trials as u64);
+                h.f64s(&[c.p, c.lo, c.hi]);
+            }
+        }
     }
     h.hex()
 }

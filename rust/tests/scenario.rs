@@ -76,6 +76,8 @@ fn field_mutations() -> Vec<(&'static str, SystemConfig)> {
     push("scenario.faults.dark_ring_p", &|c| c.scenario.faults.dark_ring_p = 0.01);
     push("scenario.faults.weak_ring_p", &|c| c.scenario.faults.weak_ring_p = 0.01);
     push("scenario.faults.weak_tr_factor", &|c| c.scenario.faults.weak_tr_factor = 0.25);
+    push("scenario.sampling.tilt", &|c| c.scenario.sampling.tilt = 4.0);
+    push("scenario.sampling.stratified", &|c| c.scenario.sampling.stratified = true);
     out
 }
 
